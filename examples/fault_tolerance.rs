@@ -1,0 +1,58 @@
+//! Fault tolerance demo (the paper's Experiment 2 setting): 12 clients,
+//! n/3 = 4 crash mid-run at staggered rounds; the survivors detect the
+//! crashes by timeout, keep aggregating, and still terminate adaptively.
+//!
+//!     make artifacts && cargo run --release --example fault_tolerance
+
+use anyhow::Result;
+use dfl::coordinator::fault::proportional_schedule;
+use dfl::coordinator::termination::TerminationCause;
+use dfl::runtime::{SharedEngine, Trainer};
+use dfl::sim::{self, Partition, SimConfig};
+use dfl::util::Rng;
+
+fn main() -> Result<()> {
+    let engine = SharedEngine::load(std::path::Path::new("artifacts/tiny"))?;
+    let meta = engine.meta().clone();
+
+    let n = 12;
+    let mut cfg = SimConfig::for_meta(n, &meta);
+    cfg.partition = Partition::Dirichlet(0.6);
+    cfg.machines = 3; // spread over the three virtual machines
+    cfg.protocol.max_rounds = 70;
+    cfg.seed = 99;
+    let mut rng = Rng::new(cfg.seed);
+    cfg.faults = proportional_schedule(n, cfg.protocol.max_rounds, &mut rng);
+    let planned: Vec<usize> =
+        cfg.faults.iter().enumerate().filter(|(_, f)| f.crash.is_some()).map(|(i, _)| i).collect();
+    println!("12 clients, scheduled mid-run crashes for clients {planned:?}");
+
+    let res = sim::run(&engine, &cfg)?;
+
+    let mut crashed = 0;
+    for r in &res.reports {
+        match r.cause {
+            TerminationCause::Crashed => {
+                crashed += 1;
+                println!("client {:>2}: CRASHED at round {}", r.id, r.rounds_completed);
+            }
+            cause => println!(
+                "client {:>2}: {:?} rounds={} acc={:.1}% detected_crashes={}",
+                r.id,
+                cause,
+                r.rounds_completed,
+                r.final_accuracy.unwrap_or(0.0) * 100.0,
+                r.history.iter().map(|h| h.crashes_detected.len()).sum::<usize>(),
+            ),
+        }
+    }
+    println!(
+        "\n{} crashed / {} survived | survivor mean accuracy {:.1}% | wall {:.1}s",
+        crashed,
+        n - crashed,
+        res.mean_accuracy().unwrap_or(0.0) * 100.0,
+        res.wall.as_secs_f64()
+    );
+    assert_eq!(crashed, 4, "expected exactly n/3 crashes");
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Termination trace: watch CCC fire on one client and the CRT flag flood
+//! the network.  Prints, per client, who initiated (source=None) and who
+//! was signalled by whom, plus the convergence-counter trajectory of the
+//! initiator.
+//!
+//!     make artifacts && cargo run --release --example termination_trace
+
+use anyhow::Result;
+use dfl::coordinator::termination::TerminationCause;
+use dfl::runtime::{SharedEngine, Trainer};
+use dfl::sim::{self, Partition, SimConfig};
+
+fn main() -> Result<()> {
+    let engine = SharedEngine::load(std::path::Path::new("artifacts/tiny"))?;
+    let meta = engine.meta().clone();
+
+    let mut cfg = SimConfig::for_meta(6, &meta);
+    cfg.partition = Partition::Iid; // IID converges fastest -> clean trace
+    cfg.protocol.max_rounds = 70;
+    cfg.protocol.count_threshold = 3;
+    cfg.seed = 4;
+
+    let res = sim::run(&engine, &cfg)?;
+
+    println!("=== termination provenance ===");
+    for r in &res.reports {
+        match (r.cause, r.signal_source) {
+            (TerminationCause::Converged, _) => println!(
+                "client {} INITIATED termination (CCC) at round {}",
+                r.id, r.rounds_completed
+            ),
+            (TerminationCause::Signaled, Some(src)) => println!(
+                "client {} terminated via CRT flag first heard from client {} (round {})",
+                r.id, src, r.rounds_completed
+            ),
+            (cause, _) => println!("client {} ended with {:?}", r.id, cause),
+        }
+    }
+
+    if let Some(initiator) =
+        res.reports.iter().find(|r| r.cause == TerminationCause::Converged)
+    {
+        println!("\n=== initiator (client {}) convergence trajectory ===", initiator.id);
+        println!("round | delta_rel | counter | alive_peers");
+        for h in &initiator.history {
+            println!(
+                "{:>5} | {:>9.5} | {:>7} | {}",
+                h.round,
+                if h.delta_rel.is_finite() { h.delta_rel } else { 9.9 },
+                h.conv_counter,
+                h.alive_peers
+            );
+        }
+    }
+    println!(
+        "\nall clients terminated adaptively: {}",
+        res.all_terminated_adaptively()
+    );
+    Ok(())
+}

@@ -1,0 +1,129 @@
+"""AOT pipeline: lower every L2 graph to HLO **text** artifacts.
+
+Run once at build time (`make artifacts`); the rust runtime loads the text
+with `HloModuleProto::from_text_file`, compiles on the PJRT CPU client and
+executes -- python never appears on the request path.
+
+HLO *text* (not a serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--configs paper,fast]
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .config import CONFIGS, ModelConfig
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """jax Lowered -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def artifact_specs(cfg: ModelConfig) -> dict:
+    """name -> (callable, example arg specs).  The full AOT surface."""
+    p, b, e = cfg.n_params, cfg.batch, cfg.img
+    img = (b, e, e, cfg.channels)
+    fns = model.jitted(cfg)
+    return {
+        "init": (fns["init"], [_spec((), jnp.uint32)]),
+        "train_step": (
+            fns["train_step"],
+            [_spec((p,)), _spec(img), _spec((b,), jnp.int32), _spec(())],
+        ),
+        "train_epoch": (
+            fns["train_epoch"],
+            [
+                _spec((p,)),
+                _spec((cfg.nb_train,) + img),
+                _spec((cfg.nb_train, b), jnp.int32),
+                _spec(()),
+            ],
+        ),
+        "eval_round": (
+            fns["evaluate"],
+            [
+                _spec((p,)),
+                _spec((cfg.nb_eval_round,) + img),
+                _spec((cfg.nb_eval_round, b), jnp.int32),
+            ],
+        ),
+        "eval_full": (
+            fns["evaluate"],
+            [
+                _spec((p,)),
+                _spec((cfg.nb_eval_full,) + img),
+                _spec((cfg.nb_eval_full, b), jnp.int32),
+            ],
+        ),
+        "aggregate": (
+            fns["aggregate"],
+            [_spec((cfg.k_max, p)), _spec((cfg.k_max,))],
+        ),
+    }
+
+
+def write_meta(cfg: ModelConfig, out_dir: str) -> None:
+    """key=value metadata the rust runtime parses (shapes it must feed)."""
+    lines = [
+        f"config={cfg.name}",
+        f"n_params={cfg.n_params}",
+        f"img={cfg.img}",
+        f"channels={cfg.channels}",
+        f"classes={cfg.classes}",
+        f"batch={cfg.batch}",
+        f"nb_train={cfg.nb_train}",
+        f"nb_eval_round={cfg.nb_eval_round}",
+        f"nb_eval_full={cfg.nb_eval_full}",
+        f"k_max={cfg.k_max}",
+    ]
+    with open(os.path.join(out_dir, "meta.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def build_config(cfg: ModelConfig, root: str) -> None:
+    out_dir = os.path.join(root, cfg.name)
+    os.makedirs(out_dir, exist_ok=True)
+    specs = artifact_specs(cfg)
+    for name, (fn, args) in specs.items():
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        text = to_hlo_text(fn.lower(*args))
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  {cfg.name}/{name}.hlo.txt  ({len(text)} chars)")
+    write_meta(cfg, out_dir)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,fast,paper")
+    args = ap.parse_args()
+    for name in args.configs.split(","):
+        cfg = CONFIGS.get(name.strip())
+        if cfg is None:
+            sys.exit(f"unknown config {name!r}; have {sorted(CONFIGS)}")
+        print(f"[aot] lowering config {cfg.name} (P={cfg.n_params})")
+        build_config(cfg, args.out_dir)
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""Model / artifact shape configurations shared by model.py, aot.py, tests.
+
+Two configs are AOT-compiled:
+
+* ``paper`` -- the paper's CNN: 32x32x3 inputs, conv(3->16,5x5) ->
+  conv(16->32,5x5) -> fc(2048->100) -> fc(100->10) = 219,958 parameters
+  (paper reports "approximately 225,034"; see DESIGN.md SS7).
+* ``fast``  -- same architecture on 16x16x3 inputs (66,358 params), used by
+  the large experiment sweeps so the full fault grids fit the single-core
+  CPU budget of this environment.
+
+All request-path shapes are fixed at lower time (PJRT executables are
+static-shape); variable peer count is handled by masking in the aggregate
+artifact (weights of absent peers = 0) and variable local-data size by a
+fixed number of local minibatches per round (sampled by the rust side).
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class LayerDims:
+    """Derived per-layer parameter slicing of the flat vector."""
+
+    name: str
+    shape: tuple
+    offset: int
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    img: int = 32          # square image edge
+    channels: int = 3
+    classes: int = 10
+    c1: int = 16            # conv1 out channels
+    c2: int = 32            # conv2 out channels
+    k: int = 5              # conv kernel edge
+    hidden: int = 100       # fc1 width
+    batch: int = 32         # minibatch size B
+    nb_train: int = 8       # minibatches per local round (train_epoch scan)
+    nb_eval_round: int = 8  # minibatches for the per-round accuracy probe
+    nb_eval_full: int = 32  # minibatches for the final full evaluation
+    k_max: int = 16         # max peers in the aggregate artifact
+
+    @property
+    def flat_after_pool(self) -> int:
+        # two stride-2 2x2 max pools on SAME convs: img -> img/2 -> img/4
+        e = self.img // 4
+        return e * e * self.c2
+
+    def layers(self) -> list:
+        """Flat-vector layout: [w1, b1, w2, b2, w3, b3, w4, b4]."""
+        dims = [
+            ("conv1_w", (self.k, self.k, self.channels, self.c1)),
+            ("conv1_b", (self.c1,)),
+            ("conv2_w", (self.k, self.k, self.c1, self.c2)),
+            ("conv2_b", (self.c2,)),
+            ("fc1_w", (self.flat_after_pool, self.hidden)),
+            ("fc1_b", (self.hidden,)),
+            ("fc2_w", (self.hidden, self.classes)),
+            ("fc2_b", (self.classes,)),
+        ]
+        out, off = [], 0
+        for name, shape in dims:
+            ld = LayerDims(name, shape, off)
+            out.append(ld)
+            off += ld.size
+        return out
+
+    @property
+    def n_params(self) -> int:
+        return sum(l.size for l in self.layers())
+
+
+PAPER = ModelConfig(name="paper", img=32, nb_train=8)
+FAST = ModelConfig(name="fast", img=16, nb_train=4)
+# `tiny` keeps the full 36-run fault grids affordable on one CPU core.
+TINY = ModelConfig(
+    name="tiny",
+    img=8,
+    c1=8,
+    c2=16,
+    k=3,
+    hidden=64,
+    batch=16,
+    nb_train=6,
+    nb_eval_round=8,
+    nb_eval_full=32,
+)
+
+CONFIGS = {"paper": PAPER, "fast": FAST, "tiny": TINY}

@@ -1,0 +1,22 @@
+"""Layer-1 Pallas kernels (build-time only).
+
+Every kernel here is authored as a TPU-shaped Pallas kernel and executed with
+``interpret=True`` so it lowers to plain HLO that the rust PJRT CPU client can
+run (real-TPU lowering emits Mosaic custom-calls the CPU plugin cannot
+execute; see /opt/xla-example/README.md).
+
+Public surface:
+  matmul      -- tiled matmul with custom VJP (both bwd matmuls also Pallas)
+  conv2d      -- SAME conv via patch extraction + Pallas matmul
+  dense       -- fully-connected layer on the Pallas matmul
+  fedavg      -- masked weighted model averaging (the FL aggregation hot spot)
+  sgd_update  -- fused axpy parameter update
+Correctness oracles live in ``ref.py`` and are enforced by python/tests.
+"""
+
+from .matmul import matmul
+from .conv2d import conv2d, dense
+from .fedavg import fedavg
+from .sgd import sgd_update
+
+__all__ = ["matmul", "conv2d", "dense", "fedavg", "sgd_update"]

@@ -1,0 +1,48 @@
+"""SAME-padded 2-D convolution and dense layer on the Pallas matmul.
+
+The conv is expressed as patch extraction (im2col) followed by the L1 tiled
+Pallas matmul -- the standard way to feed a convolution to a systolic matmul
+unit (MXU).  Patch extraction / fold-back are cheap data movement handled by
+XLA; every FLOP-heavy contraction (forward, dW, dX) runs through
+``kernels.matmul``'s custom-VJP Pallas kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul
+
+
+def _extract_patches(x: jax.Array, kh: int, kw: int) -> jax.Array:
+    """im2col for stride-1 SAME conv.
+
+    x: (B, H, W, C)  ->  (B*H*W, kh*kw*C), patch center at each pixel.
+    Built from static rolls so it lowers to pad+slice HLO (pure data
+    movement) and is trivially differentiable (the transpose is col2im).
+    """
+    b, h, w, c = x.shape
+    ph, pw = kh // 2, kw // 2
+    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+    rows = []
+    for di in range(kh):
+        for dj in range(kw):
+            rows.append(xp[:, di : di + h, dj : dj + w, :])
+    # (B, H, W, kh*kw, C) -> (B*H*W, kh*kw*C)
+    patches = jnp.stack(rows, axis=3)
+    return patches.reshape(b * h * w, kh * kw * c)
+
+
+def conv2d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """stride-1 SAME conv.  x: (B,H,W,Cin), w: (KH,KW,Cin,Cout), b: (Cout,)."""
+    bs, h, wd, cin = x.shape
+    kh, kw, cin2, cout = w.shape
+    assert cin == cin2, f"conv channel mismatch {x.shape} vs {w.shape}"
+    patches = _extract_patches(x, kh, kw)            # (B*H*W, KH*KW*Cin)
+    wmat = w.reshape(kh * kw * cin, cout)            # (KH*KW*Cin, Cout)
+    out = matmul(patches, wmat) + b                  # Pallas matmul
+    return out.reshape(bs, h, wd, cout)
+
+
+def dense(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Fully connected layer: (B, Din) @ (Din, Dout) + b, on the L1 matmul."""
+    return matmul(x, w) + b

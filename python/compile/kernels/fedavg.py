@@ -1,0 +1,58 @@
+"""Masked weighted FedAvg aggregation as a tiled Pallas reduction.
+
+This is the FL aggregation hot spot: given a stack of K_MAX flat model
+vectors (rows for absent/crashed peers are garbage) and a weight vector
+(0 for absent peers), produce the weighted average model.
+
+TPU shaping: the parameter axis is tiled into (1, BP) VMEM-resident blocks;
+each grid step streams a (K_MAX, BP) slab HBM->VMEM and reduces over K on
+the VPU.  K_MAX is small (16) so the slab is ~64 KiB at BP=1024 -- well
+under VMEM.  Weights are pre-normalized host-side (a K_MAX-length op, not
+worth a kernel) so the kernel is a pure weighted sum.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Parameter-axis block. (K_MAX, BP) f32 slab at BP=4096 is ~256 KiB — still
+# comfortably VMEM-resident, and 4x fewer grid steps than BP=1024 cuts the
+# per-step loop overhead of the interpret-mode lowering (EXPERIMENTS.md
+# §Perf: aggregate_8 9.8ms → re-measured after this change).
+BP = 4096
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _fedavg_kernel(s_ref, w_ref, o_ref):
+    # s_ref: (K, BP) slab, w_ref: (K, 1) normalized weights -> o_ref: (1, BP)
+    o_ref[...] = jnp.sum(s_ref[...] * w_ref[...], axis=0, keepdims=True)
+
+
+def fedavg(stack: jax.Array, weights: jax.Array) -> jax.Array:
+    """Weighted average of model rows.
+
+    stack: (K, P) f32, weights: (K,) f32 (>= 0, not necessarily normalized;
+    all-zero weights yield the zero model rather than NaN).
+    Returns (P,) f32 = sum_k w_k * stack[k] / max(sum_k w_k, eps).
+    """
+    k, p = stack.shape
+    wn = weights / jnp.maximum(weights.sum(), 1e-12)
+    bp = min(BP, _round_up(p, 8))
+    pp = _round_up(p, bp)
+    sp = jnp.pad(stack, ((0, 0), (0, pp - p))) if pp != p else stack
+
+    out = pl.pallas_call(
+        _fedavg_kernel,
+        grid=(pp // bp,),
+        in_specs=[
+            pl.BlockSpec((k, bp), lambda i: (0, i)),
+            pl.BlockSpec((k, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bp), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, pp), jnp.float32),
+        interpret=True,
+    )(sp, wn.reshape(k, 1))
+    return out[0, :p]

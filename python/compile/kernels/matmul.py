@@ -1,0 +1,93 @@
+"""Tiled Pallas matmul with a custom VJP.
+
+This is the single compute primitive every layer of the model routes through
+(conv2d goes patches -> matmul, dense is matmul + bias), so the whole
+fwd+bwd graph bottoms out in this kernel -- including the backward pass,
+whose two gradient matmuls are themselves Pallas calls.
+
+TPU shaping: blocks are capped at 128x128x128 (MXU systolic tile multiples)
+with an output accumulator kept resident in VMEM across the K grid dimension
+(`o_ref[...] +=` under sequential K semantics).  On this CPU substrate the
+kernel runs under interpret=True; tile caps adapt downward to the actual
+(padded) problem so small model layers do not pay 8-16x zero-padding FLOPs.
+See DESIGN.md SSPerf for the VMEM / MXU-utilization estimates.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-friendly ceiling for block edges; actual blocks shrink to the padded
+# problem dims so tiny layers aren't padded up to 128.
+MAX_BLOCK = 128
+# Pad every dim to a multiple of this (VPU lane-friendly, keeps index maps
+# exact without masking).
+ALIGN = 8
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _block(dim: int) -> int:
+    return min(MAX_BLOCK, _round_up(dim, ALIGN))
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    # Zero the VMEM accumulator on the first K step, then accumulate one
+    # (bm, bk) @ (bk, bn) product per K step.  f32 accumulation regardless of
+    # input dtype (preferred_element_type) -- the MXU-native discipline.
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _matmul_pallas(x: jax.Array, y: jax.Array) -> jax.Array:
+    """(M, K) @ (K, N) -> (M, N) via the tiled Pallas kernel."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"matmul inner dims mismatch: {x.shape} @ {y.shape}"
+    bm, bk, bn = _block(m), _block(k), _block(n)
+    pm, pk, pn = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = jnp.pad(x, ((0, pm - m), (0, pk - k))) if (pm, pk) != (m, k) else x
+    yp = jnp.pad(y, ((0, pk - k), (0, pn - n))) if (pk, pn) != (k, n) else y
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(pm // bm, pn // bn, pk // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pm, pn), jnp.float32),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n] if (pm, pn) != (m, n) else out
+
+
+@jax.custom_vjp
+def matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Pallas matmul; differentiable (both grads are Pallas matmuls too)."""
+    return _matmul_pallas(x, y)
+
+
+def _matmul_fwd(x, y):
+    return _matmul_pallas(x, y), (x, y)
+
+
+def _matmul_bwd(res, g):
+    x, y = res
+    # dX = g @ Y^T, dY = X^T @ g -- both through the same Pallas kernel so
+    # the AOT-lowered backward pass stays on the L1 path.
+    return _matmul_pallas(g, y.T), _matmul_pallas(x.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the ground truth the pytest suite checks the kernels against
+(`assert_allclose`).  They intentionally use a *different* lowering path
+(lax.conv_general_dilated, plain jnp reductions) so agreement is meaningful.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.matmul(x, y)
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """stride-1 SAME conv via lax.conv_general_dilated (NHWC / HWIO)."""
+    out = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out + b
+
+
+def dense_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.matmul(x, w) + b
+
+
+def fedavg_ref(stack: jax.Array, weights: jax.Array) -> jax.Array:
+    wn = weights / jnp.maximum(weights.sum(), 1e-12)
+    return jnp.sum(stack * wn[:, None], axis=0)
+
+
+def sgd_update_ref(params: jax.Array, grads: jax.Array, lr) -> jax.Array:
+    return params - jnp.asarray(lr, jnp.float32) * grads

@@ -1,0 +1,48 @@
+"""Fused SGD parameter update as a 1-D tiled Pallas kernel.
+
+p' = p - lr * g over the flat parameter vector.  A single fused axpy pass:
+one HBM read per operand, one write, no intermediate allocation -- the
+update the optimizer applies after every local minibatch.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BP = 2048  # block along the (reshaped) parameter axis
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _sgd_kernel(p_ref, g_ref, lr_ref, o_ref):
+    o_ref[...] = p_ref[...] - lr_ref[0, 0] * g_ref[...]
+
+
+def sgd_update(params: jax.Array, grads: jax.Array, lr: jax.Array) -> jax.Array:
+    """params, grads: (P,) f32; lr: scalar f32.  Returns params - lr*grads."""
+    (p,) = params.shape
+    bp = min(BP, _round_up(p, 8))
+    pp = _round_up(p, bp)
+    pad = pp - p
+    pv = jnp.pad(params, (0, pad)) if pad else params
+    gv = jnp.pad(grads, (0, pad)) if pad else grads
+    # 2-D shaping (rows of BP) keeps the BlockSpec index map trivial.
+    pv2 = pv.reshape(pp // bp, bp)
+    gv2 = gv.reshape(pp // bp, bp)
+    lr2 = jnp.asarray(lr, jnp.float32).reshape(1, 1)
+
+    out = pl.pallas_call(
+        _sgd_kernel,
+        grid=(pp // bp,),
+        in_specs=[
+            pl.BlockSpec((1, bp), lambda i: (i, 0)),
+            pl.BlockSpec((1, bp), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((pp // bp, bp), jnp.float32),
+        interpret=True,
+    )(pv2, gv2, lr2)
+    return out.reshape(pp)[:p]

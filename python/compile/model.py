@@ -1,0 +1,161 @@
+"""Layer-2 JAX model: the paper's CNN, train/eval/aggregate compute graphs.
+
+Everything here is build-time Python: `aot.py` lowers these jitted functions
+once to HLO text; the rust coordinator executes the artifacts via PJRT and
+never imports this module.
+
+The architecture follows SS4 of the paper: two SAME 5x5 convolutions with
+2x2 max pooling, then two fully-connected layers; ~220k parameters at 32x32
+(paper: "approximately 225,034").  All FLOP-heavy contractions (conv fwd/bwd,
+dense fwd/bwd, SGD update, FedAvg aggregation) run through the L1 Pallas
+kernels in ``kernels/``.
+
+Parameters travel as ONE flat f32 vector -- that is also the wire format the
+rust P2P layer broadcasts, and the representation the Client-Confident
+Convergence test measures L2 distance on.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels import conv2d, dense, fedavg, sgd_update
+
+
+# --------------------------------------------------------------------------
+# Parameter (un)flattening
+# --------------------------------------------------------------------------
+
+def unflatten(cfg: ModelConfig, flat: jax.Array) -> dict:
+    """Slice the flat (P,) vector into named layer tensors."""
+    out = {}
+    for layer in cfg.layers():
+        out[layer.name] = jax.lax.dynamic_slice(
+            flat, (layer.offset,), (layer.size,)
+        ).reshape(layer.shape)
+    return out
+
+
+def init_params(cfg: ModelConfig, seed: jax.Array) -> jax.Array:
+    """He-init each layer from a u32 seed; returns the flat (P,) vector.
+
+    Deterministic in `seed`, so every client derives the identical model-0
+    without any coordination round (the paper assumes a common init).
+    """
+    key = jax.random.key(seed.astype(jnp.uint32))
+    parts = []
+    for layer in cfg.layers():
+        key, sub = jax.random.split(key)
+        if layer.name.endswith("_b"):
+            parts.append(jnp.zeros((layer.size,), jnp.float32))
+        else:
+            fan_in = layer.size // layer.shape[-1]
+            std = jnp.sqrt(2.0 / fan_in)
+            parts.append(
+                jax.random.normal(sub, (layer.size,), jnp.float32) * std
+            )
+    return jnp.concatenate(parts)
+
+
+# --------------------------------------------------------------------------
+# Forward / loss
+# --------------------------------------------------------------------------
+
+def _maxpool2(x: jax.Array) -> jax.Array:
+    """2x2 stride-2 max pool via reshape (B, H, W, C) -> (B, H/2, W/2, C)."""
+    b, h, w, c = x.shape
+    return x.reshape(b, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
+
+
+def forward(cfg: ModelConfig, flat: jax.Array, x: jax.Array) -> jax.Array:
+    """CNN forward: x (B, img, img, 3) -> logits (B, classes)."""
+    p = unflatten(cfg, flat)
+    h = conv2d(x, p["conv1_w"], p["conv1_b"])
+    h = _maxpool2(jax.nn.relu(h))
+    h = conv2d(h, p["conv2_w"], p["conv2_b"])
+    h = _maxpool2(jax.nn.relu(h))
+    h = h.reshape(x.shape[0], -1)
+    h = jax.nn.relu(dense(h, p["fc1_w"], p["fc1_b"]))
+    return dense(h, p["fc2_w"], p["fc2_b"])
+
+
+def loss_fn(cfg: ModelConfig, flat: jax.Array, x: jax.Array, y: jax.Array):
+    """Mean softmax cross-entropy; y is int32 class labels (B,)."""
+    logits = forward(cfg, flat, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=1)
+    return nll.mean()
+
+
+# --------------------------------------------------------------------------
+# Train / eval / aggregate graphs (the AOT surface)
+# --------------------------------------------------------------------------
+
+def train_step(cfg: ModelConfig, flat, x, y, lr):
+    """One SGD minibatch step: returns (params', loss)."""
+    loss, grads = jax.value_and_grad(lambda f: loss_fn(cfg, f, x, y))(flat)
+    return sgd_update(flat, grads, lr), loss
+
+
+def train_epoch(cfg: ModelConfig, flat, xs, ys, lr):
+    """`nb` sequential minibatch steps via lax.scan.
+
+    xs: (nb, B, img, img, 3), ys: (nb, B) i32.  Returns (params', mean_loss).
+    Scan (not unroll) keeps the lowered HLO one kernel-body long regardless
+    of nb -- see DESIGN.md SSPerf (L2).
+    """
+
+    def body(f, xy):
+        x, y = xy
+        f2, loss = train_step(cfg, f, x, y, lr)
+        return f2, loss
+
+    flat2, losses = jax.lax.scan(body, flat, (xs, ys))
+    return flat2, losses.mean()
+
+
+def evaluate(cfg: ModelConfig, flat, xs, ys):
+    """Scan over eval minibatches -> (correct_count i32, mean_loss f32)."""
+
+    def body(carry, xy):
+        x, y = xy
+        logits = forward(cfg, flat, x)
+        pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        correct = jnp.sum((pred == y.astype(jnp.int32)).astype(jnp.int32))
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=1)
+        return (carry[0] + correct, carry[1] + nll.mean()), None
+
+    (correct, loss_sum), _ = jax.lax.scan(
+        body, (jnp.int32(0), jnp.float32(0.0)), (xs, ys)
+    )
+    return correct, loss_sum / xs.shape[0]
+
+
+def aggregate(cfg: ModelConfig, stack, weights):
+    """Masked FedAvg over the K_MAX x P stack (L1 fedavg kernel)."""
+    return fedavg(stack, weights)
+
+
+# --------------------------------------------------------------------------
+# Jitted entry points (shape-specialized per config)
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def jitted(cfg: ModelConfig) -> dict:
+    """Shape-specialized jitted callables for `cfg` (used by tests + aot)."""
+    return {
+        "init": jax.jit(lambda seed: (init_params(cfg, seed),)),
+        "train_step": jax.jit(
+            lambda f, x, y, lr: train_step(cfg, f, x, y, lr),
+            donate_argnums=(0,),
+        ),
+        "train_epoch": jax.jit(
+            lambda f, xs, ys, lr: train_epoch(cfg, f, xs, ys, lr),
+            donate_argnums=(0,),
+        ),
+        "evaluate": jax.jit(lambda f, xs, ys: evaluate(cfg, f, xs, ys)),
+        "aggregate": jax.jit(lambda s, w: (aggregate(cfg, s, w),)),
+    }

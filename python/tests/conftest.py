@@ -1,0 +1,16 @@
+"""Shared pytest fixtures/settings for the build-time python suite."""
+
+import os
+import sys
+
+# Allow `pytest python/tests` from the repo root as well as `cd python`.
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_PYROOT = os.path.dirname(_HERE)
+if _PYROOT not in sys.path:
+    sys.path.insert(0, _PYROOT)
+
+from hypothesis import settings
+
+# Pallas interpret mode is slow; keep sweeps bounded but meaningful.
+settings.register_profile("dfl", max_examples=20, deadline=None)
+settings.load_profile("dfl")

@@ -1,0 +1,82 @@
+"""conv2d / dense (patches + Pallas matmul) vs lax.conv oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import conv2d, dense
+from compile.kernels import ref
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.key(key), shape, jnp.float32)
+
+
+@given(
+    b=st.integers(1, 4),
+    hw=st.sampled_from([4, 8, 12, 16]),
+    cin=st.integers(1, 4),
+    cout=st.integers(1, 8),
+    k=st.sampled_from([1, 3, 5]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_matches_lax(b, hw, cin, cout, k, seed):
+    x = _rand(seed, (b, hw, hw, cin))
+    w = _rand(seed + 1, (k, k, cin, cout)) * 0.2
+    bias = _rand(seed + 2, (cout,))
+    np.testing.assert_allclose(
+        conv2d(x, w, bias), ref.conv2d_ref(x, w, bias), rtol=1e-3, atol=1e-4
+    )
+
+
+def test_conv2d_paper_shapes():
+    # The two convs of the paper CNN at 32x32.
+    x = _rand(0, (2, 32, 32, 3))
+    w1 = _rand(1, (5, 5, 3, 16)) * 0.1
+    b1 = jnp.zeros(16)
+    out1 = conv2d(x, w1, b1)
+    assert out1.shape == (2, 32, 32, 16)
+    np.testing.assert_allclose(
+        out1, ref.conv2d_ref(x, w1, b1), rtol=1e-3, atol=1e-4
+    )
+
+
+def test_conv2d_gradients_match_lax():
+    x = _rand(2, (2, 8, 8, 3))
+    w = _rand(3, (3, 3, 3, 4)) * 0.3
+    b = _rand(4, (4,))
+
+    def f_pallas(x, w, b):
+        return jnp.sum(jax.nn.relu(conv2d(x, w, b)))
+
+    def f_ref(x, w, b):
+        return jnp.sum(jax.nn.relu(ref.conv2d_ref(x, w, b)))
+
+    gp = jax.grad(f_pallas, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, r in zip(gp, gr):
+        np.testing.assert_allclose(a, r, rtol=1e-3, atol=1e-4)
+
+
+@given(
+    b=st.integers(1, 8),
+    din=st.integers(1, 64),
+    dout=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_matches_ref(b, din, dout, seed):
+    x = _rand(seed, (b, din))
+    w = _rand(seed + 1, (din, dout))
+    bias = _rand(seed + 2, (dout,))
+    np.testing.assert_allclose(
+        dense(x, w, bias), ref.dense_ref(x, w, bias), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_conv2d_channel_mismatch_raises():
+    x = _rand(0, (1, 8, 8, 3))
+    w = _rand(1, (3, 3, 4, 4))  # wrong Cin
+    with pytest.raises(AssertionError):
+        conv2d(x, w, jnp.zeros(4))

@@ -1,0 +1,74 @@
+"""FedAvg aggregation kernel: oracle agreement + masking invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile.kernels import fedavg
+from compile.kernels import ref
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.key(key), shape, jnp.float32)
+
+
+@given(
+    k=st.integers(1, 16),
+    p=st.sampled_from([1, 7, 1024, 1025, 4000]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fedavg_matches_ref(k, p, seed):
+    stack = _rand(seed, (k, p))
+    w = jnp.abs(_rand(seed + 1, (k,)))
+    np.testing.assert_allclose(
+        fedavg(stack, w), ref.fedavg_ref(stack, w), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_fedavg_mask_ignores_garbage_rows():
+    # Rows with weight 0 (crashed/absent peers) must not affect the result,
+    # even if they contain huge garbage -- the coordinator relies on this.
+    stack = _rand(0, (8, 500))
+    garbage = stack.at[3].set(1e30).at[6].set(-1e30)
+    w = jnp.array([1, 1, 1, 0, 1, 1, 0, 1], jnp.float32)
+    np.testing.assert_allclose(
+        fedavg(garbage, w), ref.fedavg_ref(stack, w), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_fedavg_single_survivor_is_identity():
+    stack = _rand(1, (16, 777))
+    w = jnp.zeros(16).at[5].set(3.0)
+    np.testing.assert_allclose(fedavg(stack, w), stack[5], rtol=1e-5, atol=1e-6)
+
+
+def test_fedavg_identical_rows_fixed_point():
+    row = _rand(2, (600,))
+    stack = jnp.tile(row, (10, 1))
+    w = jnp.abs(_rand(3, (10,))) + 0.1
+    np.testing.assert_allclose(fedavg(stack, w), row, rtol=1e-5, atol=1e-5)
+
+
+def test_fedavg_all_zero_weights_is_zero_not_nan():
+    stack = _rand(4, (4, 100))
+    out = fedavg(stack, jnp.zeros(4))
+    assert np.all(np.isfinite(np.asarray(out)))
+    np.testing.assert_allclose(out, jnp.zeros(100), atol=1e-6)
+
+
+def test_fedavg_weight_scale_invariance():
+    stack = _rand(5, (6, 333))
+    w = jnp.abs(_rand(6, (6,))) + 0.01
+    a = fedavg(stack, w)
+    b = fedavg(stack, w * 17.0)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_fedavg_convexity_bounds():
+    # Output of an average must lie within [min, max] per coordinate.
+    stack = _rand(7, (5, 256))
+    w = jnp.abs(_rand(8, (5,))) + 0.1
+    out = np.asarray(fedavg(stack, w))
+    lo, hi = np.min(np.asarray(stack), 0), np.max(np.asarray(stack), 0)
+    assert np.all(out >= lo - 1e-5) and np.all(out <= hi + 1e-5)

@@ -1,0 +1,139 @@
+"""L2 model graph tests: shapes, determinism, learning, aggregation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.config import CONFIGS, TINY, FAST, PAPER
+
+
+def _data(cfg, nb, seed=0):
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    xs = jax.random.normal(
+        k1, (nb, cfg.batch, cfg.img, cfg.img, cfg.channels), jnp.float32
+    )
+    ys = jax.random.randint(k2, (nb, cfg.batch), 0, cfg.classes, jnp.int32)
+    return xs, ys
+
+
+def test_param_counts():
+    # DESIGN.md SS7: paper CNN = 219,958 params (paper reports ~225,034).
+    assert PAPER.n_params == 219_958
+    assert FAST.n_params == 66_358
+    assert TINY.n_params == 6_202
+
+
+def test_layer_layout_is_contiguous():
+    for cfg in CONFIGS.values():
+        off = 0
+        for layer in cfg.layers():
+            assert layer.offset == off
+            off += layer.size
+        assert off == cfg.n_params
+
+
+def test_init_deterministic_in_seed():
+    fns = model.jitted(TINY)
+    (a,) = fns["init"](jnp.uint32(7))
+    (b,) = fns["init"](jnp.uint32(7))
+    (c,) = fns["init"](jnp.uint32(8))
+    np.testing.assert_array_equal(a, b)
+    assert float(jnp.abs(a - c).max()) > 0
+
+
+def test_init_bias_zero_weights_scaled():
+    (params,) = model.jitted(TINY)["init"](jnp.uint32(0))
+    p = model.unflatten(TINY, params)
+    np.testing.assert_array_equal(p["conv1_b"], jnp.zeros_like(p["conv1_b"]))
+    np.testing.assert_array_equal(p["fc2_b"], jnp.zeros_like(p["fc2_b"]))
+    assert float(jnp.std(p["fc1_w"])) > 0
+
+
+def test_forward_shape_and_finiteness():
+    (params,) = model.jitted(TINY)["init"](jnp.uint32(1))
+    xs, _ = _data(TINY, 1)
+    logits = model.forward(TINY, params, xs[0])
+    assert logits.shape == (TINY.batch, TINY.classes)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_train_epoch_reduces_loss():
+    fns = model.jitted(TINY)
+    (params,) = fns["init"](jnp.uint32(2))
+    xs, ys = _data(TINY, TINY.nb_train, seed=3)
+    losses = []
+    for _ in range(6):
+        params, loss = fns["train_epoch"](params, xs, ys, jnp.float32(0.05))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.8, f"no learning: {losses}"
+
+
+def test_train_step_equals_epoch_of_one():
+    # train_epoch with nb=1 must equal a single train_step.
+    cfg = TINY
+    (params,) = model.jitted(cfg)["init"](jnp.uint32(4))
+    xs, ys = _data(cfg, 1, seed=5)
+    p_step, l_step = model.train_step(cfg, params, xs[0], ys[0], 0.05)
+    p_ep, l_ep = model.train_epoch(cfg, params, xs, ys, 0.05)
+    np.testing.assert_allclose(p_step, p_ep, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(l_step), float(l_ep), rtol=1e-5)
+
+
+def test_evaluate_counts_correct():
+    cfg = TINY
+    (params,) = model.jitted(cfg)["init"](jnp.uint32(6))
+    xs, ys = _data(cfg, cfg.nb_eval_round, seed=7)
+    correct, loss = model.jitted(cfg)["evaluate"](params, xs, ys)
+    total = cfg.nb_eval_round * cfg.batch
+    assert 0 <= int(correct) <= total
+    assert float(loss) > 0
+
+    # Oracle: recompute argmax outside the scan.
+    preds = jnp.stack([
+        jnp.argmax(model.forward(cfg, params, xs[i]), -1) for i in range(xs.shape[0])
+    ]).astype(jnp.int32)
+    assert int(correct) == int((preds == ys).sum())
+
+
+def test_aggregate_identical_models_fixed_point():
+    cfg = TINY
+    (params,) = model.jitted(cfg)["init"](jnp.uint32(8))
+    stack = jnp.tile(params, (cfg.k_max, 1))
+    w = jnp.ones(cfg.k_max).at[3:].set(0.0)  # only 3 peers alive
+    (out,) = model.jitted(cfg)["aggregate"](stack, w)
+    np.testing.assert_allclose(out, params, rtol=1e-5, atol=1e-6)
+
+
+def test_aggregate_masks_crashed_peers():
+    cfg = TINY
+    fns = model.jitted(cfg)
+    (a,) = fns["init"](jnp.uint32(9))
+    (b,) = fns["init"](jnp.uint32(10))
+    stack = jnp.zeros((cfg.k_max, cfg.n_params))
+    stack = stack.at[0].set(a).at[1].set(b).at[2].set(1e30)  # row 2 = garbage
+    w = jnp.zeros(cfg.k_max).at[0].set(1.0).at[1].set(1.0)
+    (out,) = fns["aggregate"](stack, w)
+    np.testing.assert_allclose(out, (a + b) / 2, rtol=1e-4, atol=1e-5)
+
+
+def test_federated_round_improves_over_isolated():
+    """Mini 2-client FedAvg sanity: averaging two locally-trained models on
+    split data is finite & stays in the convex hull (smoke of the FL loop)."""
+    cfg = TINY
+    fns = model.jitted(cfg)
+    (p0,) = fns["init"](jnp.uint32(11))
+    xs, ys = _data(cfg, 2 * cfg.nb_train, seed=12)
+    # train_epoch donates its params argument -> pass fresh copies.
+    pa, _ = fns["train_epoch"](
+        jnp.array(p0, copy=True), xs[: cfg.nb_train], ys[: cfg.nb_train], jnp.float32(0.05)
+    )
+    pb, _ = fns["train_epoch"](
+        jnp.array(p0, copy=True), xs[cfg.nb_train :], ys[cfg.nb_train :], jnp.float32(0.05)
+    )
+    stack = jnp.zeros((cfg.k_max, cfg.n_params)).at[0].set(pa).at[1].set(pb)
+    w = jnp.zeros(cfg.k_max).at[:2].set(1.0)
+    (avg,) = fns["aggregate"](stack, w)
+    assert bool(jnp.all(jnp.isfinite(avg)))
+    np.testing.assert_allclose(avg, (pa + pb) / 2, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,48 @@
+"""Fused SGD update kernel vs oracle + algebraic invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile.kernels import sgd_update
+from compile.kernels import ref
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.key(key), shape, jnp.float32)
+
+
+@given(
+    p=st.sampled_from([1, 5, 2048, 2049, 66358, 219958]),
+    lr=st.floats(0.0, 1.0, allow_nan=False, width=32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sgd_matches_ref(p, lr, seed):
+    params = _rand(seed, (p,))
+    grads = _rand(seed + 1, (p,))
+    np.testing.assert_allclose(
+        sgd_update(params, grads, lr),
+        ref.sgd_update_ref(params, grads, lr),
+        rtol=1e-5,
+        atol=1e-6,
+    )
+
+
+def test_sgd_zero_lr_is_identity():
+    p = _rand(0, (5000,))
+    g = _rand(1, (5000,))
+    np.testing.assert_allclose(sgd_update(p, g, 0.0), p, atol=0)
+
+
+def test_sgd_zero_grad_is_identity():
+    p = _rand(2, (321,))
+    np.testing.assert_allclose(sgd_update(p, jnp.zeros(321), 0.5), p, atol=0)
+
+
+def test_sgd_linearity_in_lr():
+    p = _rand(3, (1000,))
+    g = _rand(4, (1000,))
+    step1 = np.asarray(p) - np.asarray(sgd_update(p, g, 0.1))
+    step2 = np.asarray(p) - np.asarray(sgd_update(p, g, 0.2))
+    np.testing.assert_allclose(step2, 2 * step1, rtol=1e-4, atol=1e-6)

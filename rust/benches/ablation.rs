@@ -1,0 +1,98 @@
+//! Ablation benches for the design choices DESIGN.md §5 calls out:
+//!
+//! 1. **CRT on/off** — without Client-Responsive Termination every client
+//!    must reach CCC alone: measures the wasted training rounds CRT saves.
+//! 2. **early_window_exit on/off** — the fixed-TIMEOUT pseudocode vs the
+//!    all-peers-heard early exit: wallclock per run.
+//! 3. **COUNT_THRESHOLD sweep** — stability window vs rounds-to-terminate.
+//!
+//! Runs on the MockTrainer (protocol behaviour, not ML quality).
+
+mod common;
+
+use std::time::Duration;
+
+use dfl::coordinator::termination::TerminationCause;
+use dfl::coordinator::ProtocolConfig;
+use dfl::net::NetworkModel;
+use dfl::runtime::{MockTrainer, Trainer};
+use dfl::sim::{self, Partition, SimConfig};
+use dfl::util::benchkit::Table;
+
+fn cfg(n: usize, seed: u64) -> SimConfig {
+    let trainer = MockTrainer::tiny();
+    let mut cfg = SimConfig::for_meta(n, trainer.meta());
+    cfg.protocol = ProtocolConfig {
+        timeout: Duration::from_millis(120),
+        min_rounds: 4,
+        count_threshold: 2,
+        conv_threshold_rel: 0.3,
+        max_rounds: 40,
+        lr: 0.08,
+        ..ProtocolConfig::default()
+    };
+    cfg.partition = Partition::Dirichlet(0.6);
+    cfg.train_n = 60 * n;
+    cfg.net = NetworkModel::lan(seed);
+    cfg.seed = seed;
+    cfg
+}
+
+fn total_rounds(res: &dfl::sim::SimResult) -> u32 {
+    res.reports.iter().map(|r| r.rounds_completed).sum()
+}
+
+fn main() {
+    let trainer = MockTrainer::tiny();
+    let mut table = Table::new(&["Ablation", "Setting", "Total client-rounds", "Wall (s)", "Adaptive (%)"]);
+
+    // 1. CRT on/off — heterogeneous data means clients' own CCC fire at
+    //    very different rounds; CRT lets the first trigger stop everyone.
+    for (name, crt) in [("CRT on (paper)", true), ("CRT off", false)] {
+        let mut c = cfg(8, 11);
+        c.protocol.crt_enabled = crt;
+        let res = sim::run(&trainer, &c).expect("run");
+        let adaptive = res
+            .reports
+            .iter()
+            .filter(|r| matches!(r.cause, TerminationCause::Converged | TerminationCause::Signaled))
+            .count();
+        table.row(&[
+            "1 termination".into(),
+            name.into(),
+            total_rounds(&res).to_string(),
+            format!("{:.2}", res.wall.as_secs_f64()),
+            format!("{:.0}", 100.0 * adaptive as f32 / 8.0),
+        ]);
+    }
+
+    // 2. early window exit on/off
+    for (name, early) in [("early-exit (impl)", true), ("fixed TIMEOUT (pseudocode)", false)] {
+        let mut c = cfg(6, 13);
+        c.protocol.early_window_exit = early;
+        let res = sim::run(&trainer, &c).expect("run");
+        table.row(&[
+            "2 wait window".into(),
+            name.into(),
+            total_rounds(&res).to_string(),
+            format!("{:.2}", res.wall.as_secs_f64()),
+            "-".into(),
+        ]);
+    }
+
+    // 3. COUNT_THRESHOLD sweep
+    for ct in [1u32, 2, 4, 8] {
+        let mut c = cfg(6, 17);
+        c.protocol.count_threshold = ct;
+        let res = sim::run(&trainer, &c).expect("run");
+        table.row(&[
+            "3 COUNT_THRESHOLD".into(),
+            format!("x = {ct}"),
+            total_rounds(&res).to_string(),
+            format!("{:.2}", res.wall.as_secs_f64()),
+            "-".into(),
+        ]);
+    }
+
+    table.print("Ablations (mock trainer, protocol-level)");
+}

@@ -1,0 +1,30 @@
+//! Shared bench bootstrap: locate artifacts, load the engine, pick scale.
+//!
+//! Benches run the real PJRT engine on the `tiny` artifact config by
+//! default; set `DFL_BENCH_CONFIG=fast` (or `paper`) and `DFL_BENCH_FULL=1`
+//! for the bigger grids.
+
+use std::path::PathBuf;
+
+use dfl::exp::ExpScale;
+use dfl::runtime::SharedEngine;
+
+pub fn artifacts_root() -> PathBuf {
+    // benches run from the crate root; honor the same env override as main
+    std::env::var("DFL_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+pub fn engine() -> SharedEngine {
+    let config = std::env::var("DFL_BENCH_CONFIG").unwrap_or_else(|_| "tiny".into());
+    let dir = artifacts_root().join(&config);
+    SharedEngine::load(&dir)
+        .unwrap_or_else(|e| panic!("loading artifacts {}: {e}\nrun `make artifacts`", dir.display()))
+}
+
+pub fn scale() -> ExpScale {
+    if std::env::var("DFL_BENCH_FULL").is_ok_and(|v| v == "1") {
+        ExpScale::full()
+    } else {
+        ExpScale::default()
+    }
+}

@@ -1,0 +1,12 @@
+//! Bench: regenerate Figures 3 & 4 (Experiment 1 — variable crash, 12
+//! clients, 0..11 faults, 1/2/3-machine deployments).
+//! Paper shape: graceful accuracy decline with faults; 1-machine slowest at
+//! zero faults (contention).
+
+mod common;
+
+fn main() {
+    let engine = common::engine();
+    let table = dfl::exp::fig3_4(&engine, common::scale());
+    table.print("Fig 3+4 — 12 clients under variable fault conditions");
+}

@@ -1,0 +1,12 @@
+//! Bench: regenerate Figures 5 & 6 (Experiment 2 — n/3 proportional faults
+//! vs fault-free ⌊2n/3⌋ baseline).
+//! Paper shape: faulty accuracy ≈ baseline; multi-machine faulty runs can
+//! beat the baseline's time.
+
+mod common;
+
+fn main() {
+    let engine = common::engine();
+    let table = dfl::exp::fig5_6(&engine, common::scale());
+    table.print("Fig 5+6 — N/3 faults vs ⌊2N/3⌋ fault-free baseline");
+}

@@ -1,0 +1,12 @@
+//! Bench: regenerate Figures 7 & 8 (Experiment 3 — maximum faults, n−1
+//! crash, single survivor).
+//! Paper shape: survivor accuracy below fault-free federation but above the
+//! isolated non-IID single-client baseline (Table 2); time shrinks.
+
+mod common;
+
+fn main() {
+    let engine = common::engine();
+    let table = dfl::exp::fig7_8(&engine, common::scale());
+    table.print("Fig 7+8 — N-1 faults (single survivor)");
+}

@@ -1,0 +1,80 @@
+//! Micro-benchmarks of the hot path (DESIGN.md §Perf, L3 targets):
+//! PJRT call latencies (train/eval/aggregate), codec encode/decode at model
+//! size, in-proc broadcast fan-out, and one full protocol round. These are
+//! the numbers the §Perf iteration log in EXPERIMENTS.md tracks.
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use dfl::model::ParamVector;
+use dfl::net::{InProcHub, Msg, ModelUpdate, NetworkModel, Transport};
+use dfl::runtime::Trainer;
+use dfl::util::benchkit::{bench_for, black_box};
+use dfl::util::Rng;
+
+fn main() {
+    let engine = common::engine();
+    let meta = engine.meta().clone();
+    let mut rng = Rng::new(1);
+    let budget = Duration::from_secs(2);
+
+    // --- PJRT request-path calls -------------------------------------------
+    let params = engine.init(42).expect("init");
+    let xs: Vec<f32> = (0..meta.train_x_len()).map(|_| rng.normal()).collect();
+    let ys: Vec<i32> = (0..meta.train_y_len()).map(|_| rng.below(10) as i32).collect();
+    bench_for("pjrt/train_round", budget, || {
+        black_box(engine.train_round(&params, &xs, &ys, 0.05).unwrap());
+    });
+
+    let exs: Vec<f32> = (0..meta.eval_x_len(false)).map(|_| rng.normal()).collect();
+    let eys: Vec<i32> = (0..meta.eval_y_len(false)).map(|_| rng.below(10) as i32).collect();
+    bench_for("pjrt/eval_round", budget, || {
+        black_box(engine.eval(&params, &exs, &eys, false).unwrap());
+    });
+
+    let rows: Vec<(&[f32], f32)> = (0..8).map(|_| (params.as_slice(), 1.0)).collect();
+    bench_for("pjrt/aggregate_8", budget, || {
+        black_box(engine.aggregate(&rows).unwrap());
+    });
+
+    // --- codec at model size -------------------------------------------------
+    let update = Msg::Update(ModelUpdate {
+        sender: 1,
+        round: 7,
+        terminate: false,
+        weight: 1.0,
+        params: ParamVector(params.clone()),
+    });
+    bench_for("codec/encode_model", budget, || {
+        black_box(update.encode());
+    });
+    let bytes = update.encode();
+    bench_for("codec/decode_model", budget, || {
+        black_box(Msg::decode(&bytes).unwrap());
+    });
+
+    // --- broadcast fan-out (12 peers, ideal network) ------------------------
+    let hub = InProcHub::new(12, NetworkModel::ideal());
+    let eps: Vec<_> = (0..12).map(|i| hub.endpoint(i)).collect();
+    bench_for("net/broadcast_12", budget, || {
+        eps[0].broadcast(&update).unwrap();
+        // drain receivers so queues don't grow unboundedly
+        for ep in &eps[1..] {
+            while ep.try_recv().is_some() {}
+        }
+    });
+
+    // --- one full protocol round (4 clients, mock-speed network) ------------
+    let mut cfg = dfl::sim::SimConfig::for_meta(4, &meta);
+    cfg.protocol.max_rounds = 1;
+    cfg.protocol.min_rounds = 5;
+    cfg.train_n = 400;
+    let engine_ref = &engine;
+    bench_for("e2e/one_round_4_clients", Duration::from_secs(4), || {
+        black_box(dfl::sim::run(engine_ref, &cfg).unwrap());
+    });
+
+    let _ = Arc::new(());
+}

@@ -1,0 +1,10 @@
+//! Bench: regenerate Table 2 (single-client baselines).
+//! Paper reference rows: Non-IID 26.23% < IID 37.48% < Full 70.82%.
+
+mod common;
+
+fn main() {
+    let engine = common::engine();
+    let table = dfl::exp::table2(&engine, common::scale());
+    table.print("Table 2 — Baseline Performance Results (paper: 26.23 / 37.48 / 70.82)");
+}

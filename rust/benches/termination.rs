@@ -1,0 +1,11 @@
+//! Bench: termination-detection reliability under crashes and message loss
+//! (the §3 protocol claims: all survivors terminate adaptively via CCC/CRT,
+//! none prematurely, none stuck at the round cap).
+
+mod common;
+
+fn main() {
+    let engine = common::engine();
+    let table = dfl::exp::termination_reliability(&engine, common::scale());
+    table.print("Termination reliability under faults");
+}

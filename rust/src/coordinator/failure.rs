@@ -1,0 +1,191 @@
+//! Peer status tracking + timeout-based crash detection.
+//!
+//! The paper's Phase-2 rule (§3.2): a client waits `TIMEOUT` for a message
+//! from each peer; silence ⇒ mark crashed and proceed.  A later message
+//! from a "crashed" peer flips it back to alive ("if the message m is
+//! delayed then C_i will consider m in whatever round it receives and
+//! change the status of C_j as alive") — this is what distinguishes *slow*
+//! from *failed* clients.  Peers that announced termination are *not*
+//! treated as crashed when they fall silent; that disambiguation is the
+//! point of the Client-Responsive Termination protocol.
+
+use std::collections::BTreeMap;
+
+use crate::net::ClientId;
+
+/// Liveness knowledge about one peer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PeerStatus {
+    Alive,
+    /// Missed a full wait window and has not been heard since.
+    Crashed,
+    /// Sent (or relayed) the termination flag; silence is expected.
+    Terminated,
+}
+
+/// One crash/revival event (for logs and the figures' crash accounting).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PeerEvent {
+    Crashed { round: u32, peer: ClientId },
+    Revived { round: u32, peer: ClientId },
+}
+
+/// Per-client view of every peer's liveness.
+#[derive(Clone, Debug)]
+pub struct PeerTable {
+    status: BTreeMap<ClientId, PeerStatus>,
+    /// Round at which we last heard each peer (our local round counter).
+    last_heard: BTreeMap<ClientId, Option<u32>>,
+    events: Vec<PeerEvent>,
+}
+
+impl PeerTable {
+    pub fn new(peers: &[ClientId]) -> Self {
+        PeerTable {
+            status: peers.iter().map(|&p| (p, PeerStatus::Alive)).collect(),
+            last_heard: peers.iter().map(|&p| (p, None)).collect(),
+            events: Vec::new(),
+        }
+    }
+
+    pub fn status(&self, peer: ClientId) -> Option<PeerStatus> {
+        self.status.get(&peer).copied()
+    }
+
+    /// Record receipt of any message from `peer` during our `round`.
+    /// Returns true if this revived a previously-crashed peer.
+    pub fn record_message(&mut self, peer: ClientId, round: u32, terminated: bool) -> bool {
+        let mut revived = false;
+        if let Some(s) = self.status.get_mut(&peer) {
+            if *s == PeerStatus::Crashed {
+                revived = true;
+                self.events.push(PeerEvent::Revived { round, peer });
+            }
+            // A terminate flag pins the peer to Terminated; otherwise alive.
+            *s = if terminated { PeerStatus::Terminated } else { PeerStatus::Alive };
+            self.last_heard.insert(peer, Some(round));
+        }
+        revived
+    }
+
+    /// End-of-window sweep: every peer still `Alive` that was *not* heard
+    /// during `round` is marked crashed.  Returns the newly-crashed ids.
+    pub fn mark_missing(&mut self, round: u32, heard: &[ClientId]) -> Vec<ClientId> {
+        let mut newly = Vec::new();
+        for (&peer, s) in self.status.iter_mut() {
+            if *s == PeerStatus::Alive && !heard.contains(&peer) {
+                *s = PeerStatus::Crashed;
+                self.events.push(PeerEvent::Crashed { round, peer });
+                newly.push(peer);
+            }
+        }
+        newly
+    }
+
+    /// Peers currently believed alive (participating in aggregation).
+    pub fn alive(&self) -> Vec<ClientId> {
+        self.status
+            .iter()
+            .filter(|(_, &s)| s == PeerStatus::Alive)
+            .map(|(&p, _)| p)
+            .collect()
+    }
+
+    pub fn crashed(&self) -> Vec<ClientId> {
+        self.status
+            .iter()
+            .filter(|(_, &s)| s == PeerStatus::Crashed)
+            .map(|(&p, _)| p)
+            .collect()
+    }
+
+    pub fn terminated(&self) -> Vec<ClientId> {
+        self.status
+            .iter()
+            .filter(|(_, &s)| s == PeerStatus::Terminated)
+            .map(|(&p, _)| p)
+            .collect()
+    }
+
+    pub fn events(&self) -> &[PeerEvent] {
+        &self.events
+    }
+
+    /// Did any crash event land within the last `window` rounds
+    /// (relative to `current_round`)?  This is CCC condition (a):
+    /// "x consecutive rounds without any detected crashes".
+    pub fn recent_crash(&self, current_round: u32, window: u32) -> bool {
+        self.events.iter().any(|e| match e {
+            PeerEvent::Crashed { round, .. } => {
+                current_round.saturating_sub(*round) < window
+            }
+            _ => false,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn silence_marks_crash() {
+        let mut t = PeerTable::new(&[1, 2, 3]);
+        t.record_message(1, 0, false);
+        let newly = t.mark_missing(0, &[1]);
+        assert_eq!(newly, vec![2, 3]);
+        assert_eq!(t.status(1), Some(PeerStatus::Alive));
+        assert_eq!(t.status(2), Some(PeerStatus::Crashed));
+        assert_eq!(t.alive(), vec![1]);
+    }
+
+    #[test]
+    fn late_message_revives() {
+        let mut t = PeerTable::new(&[1]);
+        t.mark_missing(0, &[]);
+        assert_eq!(t.status(1), Some(PeerStatus::Crashed));
+        let revived = t.record_message(1, 3, false);
+        assert!(revived);
+        assert_eq!(t.status(1), Some(PeerStatus::Alive));
+        assert!(t
+            .events()
+            .contains(&PeerEvent::Revived { round: 3, peer: 1 }));
+    }
+
+    #[test]
+    fn terminated_peers_not_marked_crashed() {
+        let mut t = PeerTable::new(&[1, 2]);
+        t.record_message(1, 0, true); // peer 1 announced termination
+        let newly = t.mark_missing(1, &[]); // silence from both
+        assert_eq!(newly, vec![2]); // only 2 is a crash
+        assert_eq!(t.status(1), Some(PeerStatus::Terminated));
+        assert_eq!(t.terminated(), vec![1]);
+    }
+
+    #[test]
+    fn recent_crash_window() {
+        let mut t = PeerTable::new(&[1, 2]);
+        t.mark_missing(5, &[2]); // 1 crashes at round 5
+        assert!(t.recent_crash(5, 3));
+        assert!(t.recent_crash(7, 3));
+        assert!(!t.recent_crash(8, 3));
+        assert!(!t.recent_crash(20, 3));
+    }
+
+    #[test]
+    fn unknown_peer_ignored() {
+        let mut t = PeerTable::new(&[1]);
+        assert!(!t.record_message(99, 0, false));
+        assert_eq!(t.status(99), None);
+    }
+
+    #[test]
+    fn crash_then_terminate_flag_pins_terminated() {
+        let mut t = PeerTable::new(&[1]);
+        t.mark_missing(0, &[]);
+        // peer was slow, not dead, and meanwhile learned of termination
+        t.record_message(1, 4, true);
+        assert_eq!(t.status(1), Some(PeerStatus::Terminated));
+        assert_eq!(t.mark_missing(5, &[]), Vec::<ClientId>::new());
+    }
+}

@@ -1,0 +1,179 @@
+//! Crash schedules + fault injection for the three fault experiments.
+//!
+//! A crashed client goes *silent* (benign crash model §3.1): its thread
+//! stops broadcasting and receiving; it never sends wrong data.  Schedules
+//! reproduce the paper's setups:
+//!
+//! * **Experiment 1** (variable crash): `k` of `n` clients crash, staggered
+//!   through the run.
+//! * **Experiment 2** (proportional): ⌊n/3⌋ clients "fail during the system
+//!   execution at regular intervals" around the middle of the run.
+//! * **Experiment 3** (maximum fault): n−1 crash, one survivor.
+
+use std::time::{Duration, Instant};
+
+use crate::util::Rng;
+
+/// When (if ever) a client is scheduled to crash.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CrashPoint {
+    Never,
+    /// Crash at the start of the given local round.
+    AtRound(u32),
+    /// Crash once this much wallclock has elapsed since client start.
+    AtElapsed(Duration),
+}
+
+/// Per-client fault plan: a benign crash point, optionally *transient*
+/// (§3.1: "supports temporary and intermittent failures, allowing clients
+/// to rejoin after transient faults") — with `rejoin_after` set, the
+/// client goes silent for that long and then resumes; peers mark it
+/// crashed by timeout and revive it on its first post-outage message.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultPlan {
+    pub crash: Option<CrashPoint>,
+    /// None = permanent crash; Some(d) = transient outage of length d.
+    pub rejoin_after: Option<Duration>,
+}
+
+impl FaultPlan {
+    pub fn none() -> Self {
+        FaultPlan::default()
+    }
+
+    pub fn at_round(round: u32) -> Self {
+        FaultPlan { crash: Some(CrashPoint::AtRound(round)), rejoin_after: None }
+    }
+
+    pub fn at_elapsed(d: Duration) -> Self {
+        FaultPlan { crash: Some(CrashPoint::AtElapsed(d)), rejoin_after: None }
+    }
+
+    /// Transient outage: silent from `round` for `downtime`, then rejoin.
+    pub fn transient(round: u32, downtime: Duration) -> Self {
+        FaultPlan { crash: Some(CrashPoint::AtRound(round)), rejoin_after: Some(downtime) }
+    }
+
+    /// Checked at the top of every client round.
+    pub fn should_crash(&self, round: u32, started: Instant) -> bool {
+        match self.crash {
+            None => false,
+            Some(CrashPoint::Never) => false,
+            Some(CrashPoint::AtRound(r)) => round >= r,
+            Some(CrashPoint::AtElapsed(d)) => started.elapsed() >= d,
+        }
+    }
+}
+
+/// Experiment 1 — crash `k` of `n` clients, staggered uniformly across
+/// rounds `[min_round, max_round)`.  Which clients crash is seeded.
+pub fn variable_crash_schedule(
+    n: usize,
+    k: usize,
+    min_round: u32,
+    max_round: u32,
+    rng: &mut Rng,
+) -> Vec<FaultPlan> {
+    assert!(k <= n, "cannot crash {k} of {n}");
+    let mut ids: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut ids);
+    let mut plans = vec![FaultPlan::none(); n];
+    let span = max_round.saturating_sub(min_round).max(1);
+    for (j, &id) in ids.iter().take(k).enumerate() {
+        // evenly staggered crash rounds so faults arrive throughout the run
+        let round = min_round + (j as u32 * span) / k.max(1) as u32;
+        plans[id] = FaultPlan::at_round(round.max(1)); // never before round 1
+    }
+    plans
+}
+
+/// Experiment 2 — ⌊n/3⌋ crashes at regular intervals mid-run.
+pub fn proportional_schedule(n: usize, max_rounds: u32, rng: &mut Rng) -> Vec<FaultPlan> {
+    let k = n / 3;
+    // "sometime in the middle of the system execution"
+    let lo = max_rounds / 3;
+    let hi = (2 * max_rounds) / 3;
+    variable_crash_schedule(n, k, lo.max(1), hi.max(2), rng)
+}
+
+/// Experiment 3 — n−1 crash staggered through the run; `survivor` stays.
+pub fn max_fault_schedule(n: usize, survivor: usize, max_rounds: u32) -> Vec<FaultPlan> {
+    assert!(survivor < n);
+    let mut plans = Vec::with_capacity(n);
+    let k = (n - 1).max(1) as u32;
+    let span = max_rounds.max(2) / 2;
+    let mut j = 0u32;
+    for id in 0..n {
+        if id == survivor {
+            plans.push(FaultPlan::none());
+        } else {
+            // staggered in the first half so the survivor runs alone after
+            let round = 1 + (j * span) / k;
+            plans.push(FaultPlan::at_round(round));
+            j += 1;
+        }
+    }
+    plans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_round_trigger() {
+        let p = FaultPlan::at_round(5);
+        let t0 = Instant::now();
+        assert!(!p.should_crash(4, t0));
+        assert!(p.should_crash(5, t0));
+        assert!(p.should_crash(9, t0));
+        assert!(!FaultPlan::none().should_crash(100, t0));
+    }
+
+    #[test]
+    fn plan_elapsed_trigger() {
+        let p = FaultPlan::at_elapsed(Duration::from_millis(1));
+        let t0 = Instant::now() - Duration::from_millis(5);
+        assert!(p.should_crash(0, t0));
+        let fresh = FaultPlan::at_elapsed(Duration::from_secs(3600));
+        assert!(!fresh.should_crash(0, Instant::now()));
+    }
+
+    #[test]
+    fn variable_schedule_counts() {
+        let mut rng = Rng::new(1);
+        for k in 0..=12 {
+            let plans = variable_crash_schedule(12, k, 2, 20, &mut rng);
+            let crashing = plans.iter().filter(|p| p.crash.is_some()).count();
+            assert_eq!(crashing, k);
+        }
+    }
+
+    #[test]
+    fn variable_schedule_rounds_in_range() {
+        let mut rng = Rng::new(2);
+        let plans = variable_crash_schedule(12, 6, 5, 25, &mut rng);
+        for p in plans.iter().filter(|p| p.crash.is_some()) {
+            match p.crash.unwrap() {
+                CrashPoint::AtRound(r) => assert!((5..25).contains(&r), "round {r}"),
+                _ => panic!("wrong crash kind"),
+            }
+        }
+    }
+
+    #[test]
+    fn proportional_schedule_is_third() {
+        let mut rng = Rng::new(3);
+        for n in [4, 6, 9, 12] {
+            let plans = proportional_schedule(n, 30, &mut rng);
+            assert_eq!(plans.iter().filter(|p| p.crash.is_some()).count(), n / 3);
+        }
+    }
+
+    #[test]
+    fn max_fault_spares_survivor() {
+        let plans = max_fault_schedule(8, 3, 30);
+        assert!(plans[3].crash.is_none());
+        assert_eq!(plans.iter().filter(|p| p.crash.is_some()).count(), 7);
+    }
+}

@@ -1,0 +1,28 @@
+//! L3 coordinator — the paper's contribution.
+//!
+//! * [`sync`] — Phase 1: round-based synchronization over an asynchronous
+//!   network (Algorithm 1).
+//! * [`async_client`] — Phase 2: fully asynchronous client with
+//!   timeout-based crash detection (Algorithm 2).
+//! * [`failure`] — peer status table: Alive/Crashed/Terminated with
+//!   late-message revival ("slow ≠ crashed").
+//! * [`termination`] — Client-Confident Convergence (CCC) monitor and the
+//!   Client-Responsive Termination (CRT) flag state.
+//! * [`fault`] — crash schedules and fault injection used by the
+//!   experiments (Experiments 1–3).
+//! * [`config`] — protocol constants (TIMEOUT, MINIMUM_ROUNDS,
+//!   COUNT_THRESHOLD, convergence threshold, R_PRIME, learning rate).
+
+pub mod async_client;
+pub mod config;
+pub mod failure;
+pub mod fault;
+pub mod sync;
+pub mod termination;
+
+pub use async_client::{AsyncClient, ClientData};
+pub use config::ProtocolConfig;
+pub use failure::{PeerStatus, PeerTable};
+pub use fault::{CrashPoint, FaultPlan};
+pub use sync::SyncClient;
+pub use termination::{ConvergenceMonitor, TerminationCause, TerminationState};

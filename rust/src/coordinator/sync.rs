@@ -1,0 +1,210 @@
+//! Phase 1 — round-based synchronization over an asynchronous network
+//! (Algorithm 1).
+//!
+//! Each round every client trains locally, broadcasts ⟨M_i, round⟩, then
+//! *blocks* until models from all other clients for the same round have
+//! arrived, aggregates the average, and advances.  No crash tolerance:
+//! Phase 1 assumes a fault-free system (the paper's baseline), so a peer
+//! that never reports is a deployment error, surfaced after a liberal
+//! grace period rather than masked.
+//!
+//! Termination mirrors the paper's "mutual agreement": any client whose
+//! convergence monitor fires broadcasts its round-tagged model with the
+//! terminate flag; every client finishes that same round and stops — all
+//! clients therefore complete an identical number of rounds.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use super::async_client::ClientData;
+use super::config::ProtocolConfig;
+use super::termination::{ConvergenceMonitor, TerminationCause};
+use crate::metrics::{ClientReport, RoundRecord};
+use crate::model::ParamVector;
+use crate::net::{ClientId, ModelUpdate, Msg, Transport};
+use crate::runtime::Trainer;
+use crate::util::Rng;
+
+/// Hard cap on how long a Phase-1 client waits for one round's peers.
+const SYNC_GRACE: Duration = Duration::from_secs(120);
+
+/// One Phase-1 participant.
+pub struct SyncClient<'a> {
+    pub id: ClientId,
+    pub trainer: &'a dyn Trainer,
+    pub transport: Box<dyn Transport + 'a>,
+    pub cfg: ProtocolConfig,
+    pub data: ClientData,
+    pub rng: Rng,
+    pub slowdown: f32,
+}
+
+impl<'a> SyncClient<'a> {
+    /// Block until an update from every peer tagged with `round` arrived.
+    /// Early/late messages are buffered (`pending`) — the paper's round tag
+    /// exists precisely to tolerate out-of-order arrival.
+    fn collect_round(
+        &self,
+        round: u32,
+        pending: &mut Vec<ModelUpdate>,
+        terminate_seen: &mut bool,
+    ) -> Result<BTreeMap<ClientId, ModelUpdate>> {
+        let peers = self.transport.peers();
+        let mut got: BTreeMap<ClientId, ModelUpdate> = BTreeMap::new();
+        // pull matching updates already buffered
+        pending.retain(|u| {
+            if u.round == round {
+                if u.terminate {
+                    *terminate_seen = true;
+                }
+                got.insert(u.sender, u.clone());
+                false
+            } else {
+                u.round > round // drop stale rounds, keep future ones
+            }
+        });
+        let deadline = Instant::now() + SYNC_GRACE;
+        while got.len() < peers.len() {
+            let now = Instant::now();
+            if now >= deadline {
+                bail!(
+                    "sync client {}: round {round} incomplete after {:?} \
+                     ({}/{} peers) — Phase 1 assumes a fault-free system",
+                    self.id,
+                    SYNC_GRACE,
+                    got.len(),
+                    peers.len()
+                );
+            }
+            let Some(msg) = self.transport.recv_timeout(deadline - now) else {
+                continue;
+            };
+            if let Msg::Update(u) = msg {
+                match u.round.cmp(&round) {
+                    std::cmp::Ordering::Equal => {
+                        // The terminate flag only counts for the round it is
+                        // tagged with: honoring a *future* round's flag here
+                        // would stop this client one round before its peers
+                        // and deadlock their barrier (they wait on us).
+                        if u.terminate {
+                            *terminate_seen = true;
+                        }
+                        got.insert(u.sender, u);
+                    }
+                    std::cmp::Ordering::Greater => pending.push(u),
+                    std::cmp::Ordering::Less => {} // stale duplicate
+                }
+            }
+        }
+        Ok(got)
+    }
+
+    /// Run Algorithm 1 to completion.
+    pub fn run(mut self) -> Result<ClientReport> {
+        let meta = self.trainer.meta().clone();
+        let started = Instant::now();
+        let mut params = self.trainer.init(self.cfg.model_seed)?;
+        let mut monitor =
+            ConvergenceMonitor::new(self.cfg.count_threshold, self.cfg.conv_threshold_rel);
+        let mut history = Vec::new();
+        let mut pending: Vec<ModelUpdate> = Vec::new();
+        let n_peers = self.transport.peers().len();
+        let my_weight = if self.cfg.weight_by_samples {
+            self.data.indices.len() as f32
+        } else {
+            1.0
+        };
+
+        let mut cause = TerminationCause::MaxRounds;
+        let mut round: u32 = 0;
+        let mut want_terminate = false; // set when our CCC fires
+        while round < self.cfg.max_rounds {
+            // local update
+            let t_train = Instant::now();
+            let (xs, ys) = self.data.train.gather_round(
+                &self.data.indices,
+                meta.nb_train * meta.batch,
+                &mut self.rng,
+            );
+            let (new_params, train_loss) =
+                self.trainer.train_round(&params, &xs, &ys, self.cfg.lr)?;
+            params = new_params;
+            if self.slowdown > 0.0 {
+                std::thread::sleep(t_train.elapsed().mul_f32(self.slowdown));
+            }
+
+            // broadcast ⟨M_i, round⟩ (terminate flag set if our CCC fired
+            // last round — the "mutual agreement" carrier)
+            let msg = Msg::Update(ModelUpdate {
+                sender: self.id,
+                round,
+                terminate: want_terminate,
+                weight: my_weight,
+                params: ParamVector(params.clone()),
+            });
+            let _ = self.transport.broadcast(&msg);
+
+            // barrier: wait for all peers' round-tagged models
+            let mut terminate_seen = want_terminate;
+            let got = self.collect_round(round, &mut pending, &mut terminate_seen)?;
+
+            // aggregate own + all peers (Algorithm 1 line 12)
+            let mut rows: Vec<(&[f32], f32)> = vec![(&params, my_weight)];
+            for u in got.values().take(meta.k_max - 1) {
+                rows.push((u.params.as_slice(), u.weight.max(0.0)));
+            }
+            let aggregated = rows.len();
+            params = self.trainer.aggregate(&rows)?;
+
+            let (correct, _) =
+                self.trainer
+                    .eval(&params, &self.data.eval_xs, &self.data.eval_ys, false)?;
+            let probe_acc = correct as f32 / self.data.eval_ys.len() as f32;
+
+            let ccc = monitor.observe(&ParamVector(params.clone()), true, aggregated);
+            history.push(RoundRecord {
+                round,
+                train_loss,
+                probe_acc,
+                alive_peers: n_peers,
+                aggregated,
+                delta_rel: monitor.last_delta_rel,
+                conv_counter: monitor.counter(),
+                crashes_detected: Vec::new(),
+            });
+            round += 1;
+
+            // mutual-agreement termination: if anyone (us included) carried
+            // the flag this round, every client stops at this same boundary.
+            if terminate_seen {
+                cause = if want_terminate {
+                    TerminationCause::Converged
+                } else {
+                    TerminationCause::Signaled
+                };
+                break;
+            }
+            if round >= self.cfg.min_rounds && ccc {
+                // fire our flag next round so all peers see the same tag
+                want_terminate = true;
+            }
+        }
+
+        let (correct, loss) =
+            self.trainer
+                .eval(&params, &self.data.full_xs, &self.data.full_ys, true)?;
+        Ok(ClientReport {
+            id: self.id,
+            cause,
+            rounds_completed: round,
+            final_accuracy: Some(correct as f32 / self.data.full_ys.len() as f32),
+            final_loss: Some(loss),
+            wall: started.elapsed(),
+            history,
+            signal_source: None,
+            final_params: Some(params),
+        })
+    }
+}

@@ -1,0 +1,210 @@
+//! Adaptive termination detection: the paper's two central mechanisms.
+//!
+//! **Client-Confident Convergence (CCC)** — every client independently
+//! monitors (a) crash-free stability and (b) diminishing model change
+//! ‖avg_t − avg_{t−1}‖; after `COUNT_THRESHOLD` consecutive stable rounds
+//! it broadcasts a terminate flag.  (Algorithm 2 line 24 compares
+//! `curr_weight − prev_weight > threshold` to *increment* the counter —
+//! read in context of §3.2 "falls below a predefined threshold", that is a
+//! pseudocode typo; we implement the §3.2 semantics: increment when the
+//! delta is *below* threshold.)
+//!
+//! **Client-Responsive Termination (CRT)** — receiving a terminate flag
+//! sets the local flag; every subsequent broadcast carries it, flooding the
+//! signal through delays and intermittent disconnects.
+
+use crate::model::ParamVector;
+use crate::net::ClientId;
+
+/// Why a client's main loop ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TerminationCause {
+    /// CCC triggered locally: this client initiated termination.
+    Converged,
+    /// CRT: terminate flag received from a peer.
+    Signaled,
+    /// Hit `R_PRIME` (the hard round cap).
+    MaxRounds,
+    /// Injected crash (the client fell silent mid-run).
+    Crashed,
+}
+
+/// Local termination flag + bookkeeping (who/when), per client.
+#[derive(Clone, Debug, Default)]
+pub struct TerminationState {
+    flag: bool,
+    /// Peer that first delivered the flag to us (None if self-triggered).
+    pub source: Option<ClientId>,
+    /// Our local round when the flag was set.
+    pub at_round: Option<u32>,
+}
+
+impl TerminationState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn is_set(&self) -> bool {
+        self.flag
+    }
+
+    /// CRT receive path: adopt the flag (first writer wins for provenance).
+    pub fn signal_from(&mut self, peer: ClientId, round: u32) {
+        if !self.flag {
+            self.flag = true;
+            self.source = Some(peer);
+            self.at_round = Some(round);
+        }
+    }
+
+    /// CCC local-trigger path.
+    pub fn self_trigger(&mut self, round: u32) {
+        if !self.flag {
+            self.flag = true;
+            self.source = None;
+            self.at_round = Some(round);
+        }
+    }
+}
+
+/// The CCC stability monitor over successive aggregated (global-average)
+/// models.
+#[derive(Clone, Debug)]
+pub struct ConvergenceMonitor {
+    prev: Option<ParamVector>,
+    counter: u32,
+    count_threshold: u32,
+    conv_threshold_rel: f32,
+    /// Most recent relative delta (diagnostics / logging).
+    pub last_delta_rel: f32,
+}
+
+impl ConvergenceMonitor {
+    pub fn new(count_threshold: u32, conv_threshold_rel: f32) -> Self {
+        ConvergenceMonitor {
+            prev: None,
+            counter: 0,
+            count_threshold,
+            conv_threshold_rel,
+            last_delta_rel: f32::INFINITY,
+        }
+    }
+
+    pub fn counter(&self) -> u32 {
+        self.counter
+    }
+
+    /// Feed the round's aggregated model. `crash_free` is CCC condition (a)
+    /// for this round; `participants` is how many models entered this
+    /// round's average (self included).  Returns true when the monitor has
+    /// seen `count_threshold` consecutive stable, crash-free rounds.
+    ///
+    /// The stability test normalizes the threshold by `participants`:
+    /// averaging n locally-trained models dilutes each round's movement
+    /// (empirically ≈1/√n once gradient noise partially cancels), so a
+    /// fixed threshold fires prematurely at large n and never at small n.
+    /// `conv_threshold_rel` is calibrated at 2 participants.
+    pub fn observe(&mut self, avg: &ParamVector, crash_free: bool, participants: usize) -> bool {
+        let eff_threshold =
+            self.conv_threshold_rel * (2.0 / participants.max(1) as f32).sqrt();
+        let stable = match &self.prev {
+            None => false,
+            Some(prev) => {
+                let delta = avg.l2_distance(prev);
+                let scale = avg.l2_norm().max(1.0);
+                self.last_delta_rel = delta / scale;
+                self.last_delta_rel < eff_threshold
+            }
+        };
+        if stable && crash_free {
+            self.counter += 1;
+        } else {
+            self.counter = 0; // any instability or crash resets (Alg. 2 l.27)
+        }
+        self.prev = Some(avg.clone());
+        self.counter >= self.count_threshold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pv(v: &[f32]) -> ParamVector {
+        ParamVector(v.to_vec())
+    }
+
+    #[test]
+    fn triggers_after_consecutive_stable_rounds() {
+        let mut m = ConvergenceMonitor::new(3, 0.01);
+        let base = pv(&[10.0, 10.0, 10.0]);
+        assert!(!m.observe(&base, true, 2)); // first round: no prev
+        assert!(!m.observe(&base, true, 2)); // counter 1
+        assert!(!m.observe(&base, true, 2)); // counter 2
+        assert!(m.observe(&base, true, 2)); // counter 3 -> trigger
+    }
+
+    #[test]
+    fn movement_resets_counter() {
+        let mut m = ConvergenceMonitor::new(2, 0.01);
+        let a = pv(&[10.0, 0.0]);
+        let b = pv(&[0.0, 10.0]); // big jump
+        assert!(!m.observe(&a, true, 2));
+        assert!(!m.observe(&a, true, 2)); // counter 1
+        assert!(!m.observe(&b, true, 2)); // reset
+        assert!(!m.observe(&b, true, 2)); // counter 1
+        assert!(m.observe(&b, true, 2)); // counter 2 -> trigger
+    }
+
+    #[test]
+    fn crash_resets_counter() {
+        let mut m = ConvergenceMonitor::new(2, 0.01);
+        let a = pv(&[5.0; 10]);
+        assert!(!m.observe(&a, true, 2));
+        assert!(!m.observe(&a, true, 2)); // counter 1
+        assert!(!m.observe(&a, false, 2)); // crash round: reset
+        assert!(!m.observe(&a, true, 2)); // counter 1
+        assert!(m.observe(&a, true, 2)); // trigger
+    }
+
+    #[test]
+    fn threshold_is_relative() {
+        let mut m = ConvergenceMonitor::new(1, 0.01);
+        // ~0.1% movement on a large-norm model: stable
+        let a = pv(&[1000.0, 0.0]);
+        let b = pv(&[1001.0, 0.0]);
+        assert!(!m.observe(&a, true, 2));
+        assert!(m.observe(&b, true, 2));
+        // same absolute movement on a tiny model: not stable
+        let mut m2 = ConvergenceMonitor::new(1, 0.01);
+        let c = pv(&[1.0, 0.0]);
+        let d = pv(&[2.0, 0.0]);
+        assert!(!m2.observe(&c, true, 2));
+        assert!(!m2.observe(&d, true, 2));
+    }
+
+    #[test]
+    fn termination_state_provenance() {
+        let mut t = TerminationState::new();
+        assert!(!t.is_set());
+        t.signal_from(7, 12);
+        assert!(t.is_set());
+        assert_eq!(t.source, Some(7));
+        assert_eq!(t.at_round, Some(12));
+        // later signals do not overwrite provenance
+        t.signal_from(9, 15);
+        assert_eq!(t.source, Some(7));
+        // nor does a self trigger
+        t.self_trigger(20);
+        assert_eq!(t.at_round, Some(12));
+    }
+
+    #[test]
+    fn self_trigger_provenance() {
+        let mut t = TerminationState::new();
+        t.self_trigger(4);
+        assert!(t.is_set());
+        assert_eq!(t.source, None);
+        assert_eq!(t.at_round, Some(4));
+    }
+}

@@ -1,0 +1,106 @@
+//! Optional real CIFAR-10 loader (binary version, `data_batch_*.bin`).
+//!
+//! The environment cannot download CIFAR-10, so all recorded experiments run
+//! on the synthetic distribution ([`super::SynthSpec`]).  If a user drops the
+//! standard binary files into a directory, `load_cifar10` gives the paper's
+//! exact dataset for the `paper` artifact config (32×32×3, 10 classes).
+//!
+//! Binary record format: 1 label byte + 3072 pixel bytes (R, G, B planes).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Dataset;
+
+const REC_LEN: usize = 1 + 3072;
+
+fn load_file(path: &Path, xs: &mut Vec<f32>, ys: &mut Vec<i32>) -> Result<()> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() % REC_LEN != 0 {
+        bail!("{}: size {} not a multiple of {REC_LEN}", path.display(), bytes.len());
+    }
+    for rec in bytes.chunks_exact(REC_LEN) {
+        let label = rec[0];
+        if label > 9 {
+            bail!("{}: bad label {label}", path.display());
+        }
+        ys.push(label as i32);
+        // planes (R,G,B) -> interleaved NHWC, normalized to [-1, 1]
+        let px = &rec[1..];
+        for i in 0..1024 {
+            for c in 0..3 {
+                xs.push(px[c * 1024 + i] as f32 / 127.5 - 1.0);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Load CIFAR-10 train+test sets from a directory holding the standard
+/// binary batches. Returns `Ok(None)` when the files are absent (callers
+/// then fall back to the synthetic distribution).
+pub fn load_cifar10(dir: &Path) -> Result<Option<(Dataset, Dataset)>> {
+    let train_files: Vec<_> = (1..=5).map(|i| dir.join(format!("data_batch_{i}.bin"))).collect();
+    let test_file = dir.join("test_batch.bin");
+    if !test_file.exists() || train_files.iter().any(|f| !f.exists()) {
+        return Ok(None);
+    }
+    let mut train = Dataset { img: 32, channels: 3, classes: 10, xs: Vec::new(), ys: Vec::new() };
+    for f in &train_files {
+        load_file(f, &mut train.xs, &mut train.ys)?;
+    }
+    let mut test = Dataset { img: 32, channels: 3, classes: 10, xs: Vec::new(), ys: Vec::new() };
+    load_file(&test_file, &mut test.xs, &mut test.ys)?;
+    Ok(Some((train, test)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_dir_returns_none() {
+        let out = load_cifar10(Path::new("/nonexistent/cifar")).unwrap();
+        assert!(out.is_none());
+    }
+
+    #[test]
+    fn parses_synthetic_binary_batches() {
+        // Write a miniature fake CIFAR binary set and load it back.
+        let dir = std::env::temp_dir().join(format!("dfl_cifar_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mk = |n: usize, seed: u8| {
+            let mut v = Vec::with_capacity(n * REC_LEN);
+            for i in 0..n {
+                v.push(((i as u8).wrapping_add(seed)) % 10); // label
+                v.extend(std::iter::repeat_n((i % 256) as u8, 3072));
+            }
+            v
+        };
+        for i in 1..=5 {
+            std::fs::write(dir.join(format!("data_batch_{i}.bin")), mk(4, i as u8)).unwrap();
+        }
+        std::fs::write(dir.join("test_batch.bin"), mk(3, 0)).unwrap();
+        let (train, test) = load_cifar10(&dir).unwrap().unwrap();
+        assert_eq!(train.len(), 20);
+        assert_eq!(test.len(), 3);
+        assert_eq!(train.img_len(), 3072);
+        assert!(train.xs.iter().all(|&x| (-1.0..=1.0).contains(&x)));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_label() {
+        let dir = std::env::temp_dir().join(format!("dfl_cifar_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rec = vec![0u8; REC_LEN];
+        rec[0] = 77; // invalid label
+        for i in 1..=5 {
+            std::fs::write(dir.join(format!("data_batch_{i}.bin")), &rec).unwrap();
+        }
+        std::fs::write(dir.join("test_batch.bin"), &rec).unwrap();
+        assert!(load_cifar10(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

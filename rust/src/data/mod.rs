@@ -1,0 +1,161 @@
+//! Dataset substrate: synthetic CIFAR-10-like image generation, the paper's
+//! Dirichlet(α = 0.6) non-IID partitioner, IID/fixed-chunk splits (Table 2
+//! baselines), round-batch sampling, and an optional real CIFAR-10 binary
+//! loader (auto-used when the files are on disk; see DESIGN.md §3).
+
+mod cifar;
+mod partition;
+mod synth;
+
+pub use cifar::load_cifar10;
+pub use partition::{
+    dirichlet_partition, fixed_chunk, iid_partition, label_histogram, skewed_chunk,
+};
+pub use synth::SynthSpec;
+
+use crate::runtime::Meta;
+use crate::util::Rng;
+
+/// An in-memory labelled image set (row-major `(n, img, img, channels)`).
+#[derive(Clone)]
+pub struct Dataset {
+    pub img: usize,
+    pub channels: usize,
+    pub classes: usize,
+    /// Flat pixels, `n * img * img * channels` f32 in [-1, 1]-ish range.
+    pub xs: Vec<f32>,
+    pub ys: Vec<i32>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.ys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ys.is_empty()
+    }
+
+    pub fn img_len(&self) -> usize {
+        self.img * self.img * self.channels
+    }
+
+    pub fn image(&self, i: usize) -> &[f32] {
+        let l = self.img_len();
+        &self.xs[i * l..(i + 1) * l]
+    }
+
+    /// Generate the default train+test synthetic sets for an artifact config.
+    /// Deterministic in `seed`; train/test are disjoint draws of the same
+    /// class-conditional distribution.
+    pub fn synthetic_pair(meta: &Meta, train_n: usize, test_n: usize, seed: u64)
+        -> (Dataset, Dataset) {
+        let spec = SynthSpec::for_meta(meta);
+        let mut rng = Rng::new(seed);
+        let templates = spec.class_templates(&mut rng);
+        let train = spec.sample(&templates, train_n, &mut rng.fork(1));
+        let test = spec.sample(&templates, test_n, &mut rng.fork(2));
+        (train, test)
+    }
+
+    /// Gather `count` samples by index list into flat (xs, ys) buffers,
+    /// cycling (with reshuffle) when the index list is shorter than `count`.
+    /// This is how a client materializes the fixed-shape train tensor each
+    /// round from its (variable-size) local partition.
+    pub fn gather_round(
+        &self,
+        indices: &[usize],
+        count: usize,
+        rng: &mut Rng,
+    ) -> (Vec<f32>, Vec<i32>) {
+        assert!(!indices.is_empty(), "empty partition");
+        let l = self.img_len();
+        let mut xs = Vec::with_capacity(count * l);
+        let mut ys = Vec::with_capacity(count);
+        let mut order: Vec<usize> = indices.to_vec();
+        rng.shuffle(&mut order);
+        let mut pos = 0;
+        for _ in 0..count {
+            if pos == order.len() {
+                rng.shuffle(&mut order);
+                pos = 0;
+            }
+            let idx = order[pos];
+            pos += 1;
+            xs.extend_from_slice(self.image(idx));
+            ys.push(self.ys[idx]);
+        }
+        (xs, ys)
+    }
+
+    /// First `count` examples as flat buffers (deterministic eval tensors).
+    pub fn take_flat(&self, count: usize) -> (Vec<f32>, Vec<i32>) {
+        assert!(count <= self.len(), "dataset too small: {} < {count}", self.len());
+        let l = self.img_len();
+        (self.xs[..count * l].to_vec(), self.ys[..count].to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> Meta {
+        Meta {
+            config: "tiny".into(),
+            n_params: 6202,
+            img: 8,
+            channels: 3,
+            classes: 10,
+            batch: 16,
+            nb_train: 2,
+            nb_eval_round: 4,
+            nb_eval_full: 8,
+            k_max: 16,
+        }
+    }
+
+    #[test]
+    fn synthetic_pair_shapes() {
+        let m = meta();
+        let (train, test) = Dataset::synthetic_pair(&m, 500, 200, 42);
+        assert_eq!(train.len(), 500);
+        assert_eq!(test.len(), 200);
+        assert_eq!(train.xs.len(), 500 * m.img * m.img * m.channels);
+        assert!(train.ys.iter().all(|&y| (0..10).contains(&y)));
+    }
+
+    #[test]
+    fn synthetic_deterministic_in_seed() {
+        let m = meta();
+        let (a, _) = Dataset::synthetic_pair(&m, 100, 10, 7);
+        let (b, _) = Dataset::synthetic_pair(&m, 100, 10, 7);
+        let (c, _) = Dataset::synthetic_pair(&m, 100, 10, 8);
+        assert_eq!(a.xs, b.xs);
+        assert_eq!(a.ys, b.ys);
+        assert_ne!(a.xs, c.xs);
+    }
+
+    #[test]
+    fn gather_round_cycles_small_partitions() {
+        let m = meta();
+        let (train, _) = Dataset::synthetic_pair(&m, 50, 10, 1);
+        let mut rng = Rng::new(2);
+        let indices = vec![3, 4, 5]; // only 3 samples, ask for 32
+        let (xs, ys) = train.gather_round(&indices, 32, &mut rng);
+        assert_eq!(ys.len(), 32);
+        assert_eq!(xs.len(), 32 * train.img_len());
+        // all labels must come from the partition
+        let allowed: Vec<i32> = indices.iter().map(|&i| train.ys[i]).collect();
+        assert!(ys.iter().all(|y| allowed.contains(y)));
+    }
+
+    #[test]
+    fn take_flat_bounds() {
+        let m = meta();
+        let (_, test) = Dataset::synthetic_pair(&m, 10, 64, 3);
+        let (xs, ys) = test.take_flat(64);
+        assert_eq!(ys.len(), 64);
+        assert_eq!(xs.len(), 64 * test.img_len());
+    }
+}

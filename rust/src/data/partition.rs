@@ -1,0 +1,282 @@
+//! Client data partitioners.
+//!
+//! * [`dirichlet_partition`] — the paper's non-IID split: for each class,
+//!   proportions over clients are drawn from Dirichlet(α); α = 0.6 in the
+//!   paper's experiments.  Low α ⇒ heavy class skew per client.
+//! * [`iid_partition`] — shuffled equal split (the paper's IID setting).
+//! * [`fixed_chunk`] — fixed-size random chunk per client (Table 2 baseline:
+//!   "fixed chunk of 5000 data points").
+
+use super::Dataset;
+use crate::util::Rng;
+
+/// Non-IID Dirichlet(α) split: returns per-client index lists covering the
+/// dataset exactly once (a partition).  Every client is guaranteed at least
+/// one sample (paper's clients all train every round).
+pub fn dirichlet_partition(
+    ds: &Dataset,
+    n_clients: usize,
+    alpha: f64,
+    rng: &mut Rng,
+) -> Vec<Vec<usize>> {
+    assert!(n_clients > 0);
+    // indices per class
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); ds.classes];
+    for (i, &y) in ds.ys.iter().enumerate() {
+        by_class[y as usize].push(i);
+    }
+    let mut parts: Vec<Vec<usize>> = vec![Vec::new(); n_clients];
+    for idxs in by_class.iter_mut() {
+        rng.shuffle(idxs);
+        let props = rng.dirichlet(alpha, n_clients);
+        // convert proportions to integer cut points (largest remainder)
+        let n = idxs.len();
+        let mut counts: Vec<usize> = props.iter().map(|p| (p * n as f64) as usize).collect();
+        let mut assigned: usize = counts.iter().sum();
+        // distribute the remainder to the largest fractional parts
+        let mut order: Vec<usize> = (0..n_clients).collect();
+        order.sort_by(|&a, &b| {
+            let fa = props[a] * n as f64 - counts[a] as f64;
+            let fb = props[b] * n as f64 - counts[b] as f64;
+            fb.partial_cmp(&fa).unwrap()
+        });
+        let mut k = 0;
+        while assigned < n {
+            counts[order[k % n_clients]] += 1;
+            assigned += 1;
+            k += 1;
+        }
+        let mut pos = 0;
+        for (c, &cnt) in counts.iter().enumerate() {
+            parts[c].extend_from_slice(&idxs[pos..pos + cnt]);
+            pos += cnt;
+        }
+    }
+    // guarantee non-empty partitions: steal one sample from the largest
+    for c in 0..n_clients {
+        if parts[c].is_empty() {
+            let donor = (0..n_clients).max_by_key(|&i| parts[i].len()).unwrap();
+            assert!(parts[donor].len() > 1, "dataset too small for {n_clients} clients");
+            let moved = parts[donor].pop().unwrap();
+            parts[c].push(moved);
+        }
+    }
+    for p in &mut parts {
+        rng.shuffle(p);
+    }
+    parts
+}
+
+/// IID split: global shuffle then equal contiguous chunks (remainder spread
+/// over the first clients).
+pub fn iid_partition(ds: &Dataset, n_clients: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+    assert!(n_clients > 0);
+    let mut all: Vec<usize> = (0..ds.len()).collect();
+    rng.shuffle(&mut all);
+    let base = ds.len() / n_clients;
+    let rem = ds.len() % n_clients;
+    let mut parts = Vec::with_capacity(n_clients);
+    let mut pos = 0;
+    for c in 0..n_clients {
+        let take = base + usize::from(c < rem);
+        parts.push(all[pos..pos + take].to_vec());
+        pos += take;
+    }
+    parts
+}
+
+/// A fixed-size chunk with Dirichlet(α)-skewed class proportions — the
+/// "fixed chunk drawn from a highly Non-IID distribution" of the Table 2
+/// baseline. Falls back to whatever is available when a class runs short.
+pub fn skewed_chunk(ds: &Dataset, size: usize, alpha: f64, rng: &mut Rng) -> Vec<usize> {
+    let props = rng.dirichlet(alpha, ds.classes);
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); ds.classes];
+    for (i, &y) in ds.ys.iter().enumerate() {
+        by_class[y as usize].push(i);
+    }
+    for idxs in by_class.iter_mut() {
+        rng.shuffle(idxs);
+    }
+    let size = size.min(ds.len());
+    let mut out = Vec::with_capacity(size);
+    // first pass: proportional draw
+    for (c, idxs) in by_class.iter_mut().enumerate() {
+        let want = ((props[c] * size as f64).round() as usize).min(idxs.len());
+        out.extend(idxs.drain(..want));
+    }
+    // top up from remaining pools (largest first) to hit the exact size
+    while out.len() < size {
+        let donor = (0..ds.classes).max_by_key(|&c| by_class[c].len()).unwrap();
+        match by_class[donor].pop() {
+            Some(i) => out.push(i),
+            None => break,
+        }
+    }
+    out.truncate(size);
+    rng.shuffle(&mut out);
+    out
+}
+
+/// A fixed-size random chunk (Table 2 single-client baselines).
+pub fn fixed_chunk(ds: &Dataset, size: usize, rng: &mut Rng) -> Vec<usize> {
+    let mut all: Vec<usize> = (0..ds.len()).collect();
+    rng.shuffle(&mut all);
+    all.truncate(size.min(ds.len()));
+    all
+}
+
+/// Per-class sample counts of an index list (skew diagnostics / tests).
+pub fn label_histogram(ds: &Dataset, indices: &[usize]) -> Vec<usize> {
+    let mut hist = vec![0usize; ds.classes];
+    for &i in indices {
+        hist[ds.ys[i] as usize] += 1;
+    }
+    hist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Meta;
+    use crate::util::quickcheck::forall;
+
+    fn dataset(n: usize, seed: u64) -> Dataset {
+        let meta = Meta {
+            config: "t".into(),
+            n_params: 0,
+            img: 4,
+            channels: 1,
+            classes: 10,
+            batch: 4,
+            nb_train: 1,
+            nb_eval_round: 1,
+            nb_eval_full: 1,
+            k_max: 16,
+        };
+        Dataset::synthetic_pair(&meta, n, 1, seed).0
+    }
+
+    fn is_exact_partition(n: usize, parts: &[Vec<usize>]) -> bool {
+        let mut seen = vec![false; n];
+        for p in parts {
+            for &i in p {
+                if seen[i] {
+                    return false;
+                }
+                seen[i] = true;
+            }
+        }
+        seen.iter().all(|&s| s)
+    }
+
+    #[test]
+    fn dirichlet_is_exact_partition_property() {
+        forall(
+            0xA11A,
+            25,
+            |r| {
+                let n = 200 + r.below(400);
+                let clients = 2 + r.below(11);
+                let alpha = [0.1, 0.3, 0.6, 1.0, 10.0][r.below(5)];
+                (n, clients, alpha, r.next_u64())
+            },
+            |&(n, clients, alpha, seed)| {
+                let ds = dataset(n, seed);
+                let mut rng = Rng::new(seed ^ 1);
+                let parts = dirichlet_partition(&ds, clients, alpha, &mut rng);
+                if parts.len() != clients {
+                    return Err("wrong client count".into());
+                }
+                if !is_exact_partition(ds.len(), &parts) {
+                    return Err("not an exact partition".into());
+                }
+                if parts.iter().any(|p| p.is_empty()) {
+                    return Err("empty partition".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn low_alpha_skews_more_than_high_alpha() {
+        let ds = dataset(4000, 9);
+        let skew = |alpha: f64| {
+            // average over several seeds: max class share within a client
+            let mut total = 0.0;
+            for seed in 0..5u64 {
+                let mut rng = Rng::new(100 + seed);
+                let parts = dirichlet_partition(&ds, 8, alpha, &mut rng);
+                let mut m = 0.0f64;
+                let mut cnt = 0.0f64;
+                for p in &parts {
+                    let h = label_histogram(&ds, p);
+                    let n: usize = h.iter().sum();
+                    if n >= 20 {
+                        m += *h.iter().max().unwrap() as f64 / n as f64;
+                        cnt += 1.0;
+                    }
+                }
+                total += m / cnt.max(1.0);
+            }
+            total / 5.0
+        };
+        let s_low = skew(0.1);
+        let s_high = skew(100.0);
+        assert!(
+            s_low > s_high + 0.1,
+            "alpha ordering violated: skew(0.1)={s_low:.3} vs skew(100)={s_high:.3}"
+        );
+    }
+
+    #[test]
+    fn iid_partition_is_balanced_exact() {
+        let ds = dataset(1003, 11);
+        let mut rng = Rng::new(12);
+        let parts = iid_partition(&ds, 7, &mut rng);
+        assert!(is_exact_partition(ds.len(), &parts));
+        let sizes: Vec<usize> = parts.iter().map(Vec::len).collect();
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1, "{sizes:?}");
+    }
+
+    #[test]
+    fn fixed_chunk_size_and_uniqueness() {
+        let ds = dataset(300, 13);
+        let mut rng = Rng::new(14);
+        let chunk = fixed_chunk(&ds, 100, &mut rng);
+        assert_eq!(chunk.len(), 100);
+        let mut sorted = chunk.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 100);
+    }
+
+    #[test]
+    fn skewed_chunk_is_skewed_and_sized() {
+        let ds = dataset(3000, 21);
+        let mut rng = Rng::new(22);
+        // average over seeds: skewed chunks should concentrate mass vs IID
+        let mut skew_max = 0.0f64;
+        for _ in 0..5 {
+            let chunk = skewed_chunk(&ds, 300, 0.1, &mut rng);
+            assert_eq!(chunk.len(), 300);
+            let h = label_histogram(&ds, &chunk);
+            skew_max += *h.iter().max().unwrap() as f64 / 300.0 / 5.0;
+        }
+        let uniform_share = 1.0 / ds.classes as f64;
+        assert!(skew_max > 2.0 * uniform_share, "not skewed: {skew_max}");
+        // indices unique
+        let chunk = skewed_chunk(&ds, 500, 0.1, &mut rng);
+        let mut s = chunk.clone();
+        s.sort();
+        s.dedup();
+        assert_eq!(s.len(), chunk.len());
+    }
+
+    #[test]
+    fn fixed_chunk_caps_at_dataset_size() {
+        let ds = dataset(50, 15);
+        let mut rng = Rng::new(16);
+        assert_eq!(fixed_chunk(&ds, 100, &mut rng).len(), 50);
+    }
+}

@@ -1,0 +1,70 @@
+//! Experiment 2 (Figures 5 & 6) — proportional fault analysis.
+//!
+//! n ∈ {4..12}: ⌊n/3⌋ clients crash at regular intervals mid-run; compared
+//! against the fault-free *baseline* running with ⌊2n/3⌋ clients under
+//! Phase 1.  Paper shape: faulty-run accuracy ≈ baseline accuracy (crashed
+//! clients still helped before dying), and on 2–3 machines the faulty run
+//! can beat the baseline's time.
+
+use super::{pct, secs, ExpScale};
+use crate::coordinator::fault::proportional_schedule;
+use crate::runtime::Trainer;
+use crate::sim::{self, Partition, SimConfig};
+use crate::util::benchkit::Table;
+use crate::util::Rng;
+
+pub fn fig5_6(trainer: &(dyn Trainer + Sync), scale: ExpScale) -> Table {
+    let meta = trainer.meta().clone();
+    let counts: Vec<usize> = if scale.quick { vec![6, 12] } else { vec![4, 6, 8, 10, 12] };
+    let machine_setups: &[usize] = if scale.quick { &[2] } else { &[1, 2, 3] };
+    let mut table = Table::new(&[
+        "Clients",
+        "Setup",
+        "Faults",
+        "Accuracy (%)",
+        "Time (s)",
+        "Rounds",
+    ]);
+    for &n in &counts {
+        // --- baseline: fault-free ⌊2n/3⌋ clients, Phase-1 learning ---------
+        let nb = (2 * n) / 3;
+        let mut base = SimConfig::for_meta(nb, &meta);
+        base.sync = true;
+        base.machines = 2;
+        base.partition = Partition::Dirichlet(0.6);
+        base.protocol = scale.protocol(nb);
+        base.train_n = scale.train_n(nb);
+        base.seed = scale.seed + 31 * n as u64;
+        let res = sim::run(trainer, &base).expect("exp2 baseline");
+        table.row(&[
+            n.to_string(),
+            "baseline(2n/3)".into(),
+            "0".to_string(),
+            pct(res.mean_accuracy()),
+            secs(res.wall),
+            res.rounds().to_string(),
+        ]);
+
+        // --- faulty runs: n clients, n/3 mid-run crashes --------------------
+        for &machines in machine_setups {
+            let mut cfg = SimConfig::for_meta(n, &meta);
+            cfg.machines = machines;
+            cfg.partition = Partition::Dirichlet(0.6);
+            cfg.protocol = scale.protocol(n);
+            cfg.train_n = scale.train_n(n);
+            cfg.seed = scale.seed + 37 * n as u64 + machines as u64;
+            let mut rng = Rng::new(cfg.seed ^ 0xE2);
+            cfg.faults = proportional_schedule(n, cfg.protocol.max_rounds, &mut rng);
+            let res = sim::run(trainer, &cfg).expect("exp2 faulty");
+            table.row(&[
+                n.to_string(),
+                format!("{machines}-machine"),
+                (n / 3).to_string(),
+                pct(res.mean_accuracy()),
+                secs(res.wall),
+                res.rounds().to_string(),
+            ]);
+        }
+    }
+    table
+}

@@ -1,0 +1,42 @@
+//! Experiment 3 (Figures 7 & 8) — maximum fault analysis (n−1 crashes).
+//!
+//! Only one client survives.  Paper shape: accuracy well below the
+//! fault-free system but *above* the isolated non-IID single-client
+//! baseline of Table 2 (the survivor benefited from early collaboration);
+//! time drops with fewer effective participants.
+
+use super::{pct, secs, ExpScale};
+use crate::coordinator::fault::max_fault_schedule;
+use crate::runtime::Trainer;
+use crate::sim::{self, Partition, SimConfig};
+use crate::util::benchkit::Table;
+
+pub fn fig7_8(trainer: &(dyn Trainer + Sync), scale: ExpScale) -> Table {
+    let meta = trainer.meta().clone();
+    let counts: Vec<usize> = if scale.quick { vec![4, 12] } else { vec![4, 6, 8, 10, 12] };
+    let mut table = Table::new(&[
+        "Clients",
+        "Faults",
+        "Survivor Acc (%)",
+        "Time (s)",
+        "Rounds",
+    ]);
+    for &n in &counts {
+        let mut cfg = SimConfig::for_meta(n, &meta);
+        cfg.machines = 2;
+        cfg.partition = Partition::Dirichlet(0.6);
+        cfg.protocol = scale.protocol(n);
+        cfg.train_n = scale.train_n(n);
+        cfg.seed = scale.seed + 41 * n as u64;
+        cfg.faults = max_fault_schedule(n, 0, cfg.protocol.max_rounds);
+        let res = sim::run(trainer, &cfg).expect("exp3 run");
+        table.row(&[
+            n.to_string(),
+            (n - 1).to_string(),
+            pct(res.mean_accuracy()),
+            secs(res.wall),
+            res.rounds().to_string(),
+        ]);
+    }
+    table
+}

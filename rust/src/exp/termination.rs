@@ -1,0 +1,91 @@
+//! Protocol-level termination metric (not a numbered figure, but the
+//! paper's §3 claims): under crashes, delays and message loss, every
+//! surviving client must terminate *adaptively* (CCC or CRT) — no client
+//! stuck at the round cap, no premature stop before `MINIMUM_ROUNDS`.
+
+use super::ExpScale;
+use crate::coordinator::fault::variable_crash_schedule;
+use crate::coordinator::termination::TerminationCause;
+use crate::net::NetworkModel;
+use crate::runtime::Trainer;
+use crate::sim::{self, Partition, SimConfig};
+use crate::util::benchkit::Table;
+use crate::util::Rng;
+
+pub fn termination_reliability(trainer: &(dyn Trainer + Sync), scale: ExpScale) -> Table {
+    let meta = trainer.meta().clone();
+    let n = 8;
+    let scenarios: Vec<(&str, f64, usize)> = if scale.quick {
+        vec![("no faults", 0.0, 0), ("2 crashes + 5% loss", 0.05, 2)]
+    } else {
+        vec![
+            ("no faults", 0.0, 0),
+            ("2 crashes", 0.0, 2),
+            ("5% message loss", 0.05, 0),
+            ("2 crashes + 5% loss", 0.05, 2),
+            ("4 crashes + 10% loss", 0.10, 4),
+        ]
+    };
+    let mut table = Table::new(&[
+        "Scenario",
+        "Adaptive Term. (%)",
+        "CCC initiators",
+        "CRT signaled",
+        "Hit round cap",
+        "Premature (<min rounds)",
+    ]);
+    for (name, drop_prob, crashes) in scenarios {
+        let mut cfg = SimConfig::for_meta(n, &meta);
+        cfg.partition = Partition::Dirichlet(0.6);
+        cfg.protocol = scale.protocol(n);
+        if scale.max_rounds.is_none() {
+            // This experiment specifically measures *termination*: give the
+            // CNN a horizon long enough to actually plateau (the table/figure
+            // grids cap rounds for wallclock and often end at R_PRIME).
+            cfg.protocol.max_rounds = 160;
+        }
+        cfg.train_n = scale.train_n(n);
+        cfg.net = NetworkModel::lossy(drop_prob, scale.seed);
+        cfg.seed = scale.seed ^ 0x7E21;
+        let mut rng = Rng::new(cfg.seed);
+        cfg.faults =
+            variable_crash_schedule(n, crashes, 3, cfg.protocol.max_rounds / 2, &mut rng);
+        let res = sim::run(trainer, &cfg).expect("termination run");
+        let finished: Vec<_> = res
+            .reports
+            .iter()
+            .filter(|r| r.cause != TerminationCause::Crashed)
+            .collect();
+        let adaptive = finished
+            .iter()
+            .filter(|r| {
+                matches!(r.cause, TerminationCause::Converged | TerminationCause::Signaled)
+            })
+            .count();
+        let ccc = finished
+            .iter()
+            .filter(|r| r.cause == TerminationCause::Converged)
+            .count();
+        let crt = finished
+            .iter()
+            .filter(|r| r.cause == TerminationCause::Signaled)
+            .count();
+        let capped = finished
+            .iter()
+            .filter(|r| r.cause == TerminationCause::MaxRounds)
+            .count();
+        let premature = finished
+            .iter()
+            .filter(|r| r.rounds_completed < cfg.protocol.min_rounds)
+            .count();
+        table.row(&[
+            name.to_string(),
+            format!("{:.0}", 100.0 * adaptive as f32 / finished.len().max(1) as f32),
+            ccc.to_string(),
+            crt.to_string(),
+            capped.to_string(),
+            premature.to_string(),
+        ]);
+    }
+    table
+}

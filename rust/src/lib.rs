@@ -1,0 +1,36 @@
+//! # dfl — Fault-Tolerant Decentralized Asynchronous Federated Learning
+//!
+//! Reproduction of *"Fault-Tolerant Decentralized Distributed Asynchronous
+//! Federated Learning with Adaptive Termination Detection"* (CS.DC 2025) as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's contribution: a decentralized
+//!   peer-to-peer FL coordinator with round-based ([`coordinator::sync`]) and
+//!   fully asynchronous ([`coordinator::async_client`]) protocols,
+//!   timeout-based crash detection ([`coordinator::failure`]), and the
+//!   *Client-Confident Convergence* / *Client-Responsive Termination*
+//!   mechanisms ([`coordinator::termination`]).
+//! * **L2/L1 (build-time python)** — the CNN fwd/bwd, FedAvg aggregation and
+//!   SGD update, authored in JAX on Pallas kernels and AOT-lowered to HLO
+//!   text in `artifacts/` (`make artifacts`).
+//! * **Runtime bridge** — [`runtime`] loads the artifacts once per process
+//!   via the PJRT CPU client and executes them on the request path; python is
+//!   never imported at runtime.
+//!
+//! Entry points: [`sim::run`] (in-process N-client deployments used by the
+//! experiment harness), the `dfl` binary (CLI + real TCP clients), and the
+//! `examples/` directory.
+
+pub mod coordinator;
+pub mod data;
+pub mod exp;
+pub mod metrics;
+pub mod model;
+pub mod net;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use coordinator::config::ProtocolConfig;
+pub use model::ParamVector;
+pub use runtime::{Engine, Meta, MockTrainer, SharedEngine, Trainer};

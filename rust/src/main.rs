@@ -1,0 +1,297 @@
+//! `dfl` — CLI for the decentralized asynchronous FL runtime.
+//!
+//! Subcommands:
+//! * `sim`        — run an in-process N-client deployment (both phases)
+//! * `client`     — run one real TCP client process (multi-machine mode)
+//! * `reproduce`  — regenerate a paper table/figure (or `all`)
+//! * `info`       — print artifact metadata and platform info
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use dfl::coordinator::async_client::{AsyncClient, ClientData};
+use dfl::coordinator::fault::variable_crash_schedule;
+use dfl::coordinator::ProtocolConfig;
+use dfl::data::Dataset;
+use dfl::exp::{self, ExpScale};
+use dfl::net::TcpTransport;
+use dfl::runtime::{SharedEngine, Trainer};
+use dfl::sim::{self, Partition, SimConfig};
+use dfl::util::cli::Flags;
+use dfl::util::Rng;
+
+fn artifacts_dir(config: &str) -> PathBuf {
+    // honor DFL_ARTIFACTS for non-repo-root invocations
+    let root = std::env::var("DFL_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    Path::new(&root).join(config)
+}
+
+fn load_engine(config: &str) -> Result<SharedEngine> {
+    let dir = artifacts_dir(config);
+    SharedEngine::load(&dir).with_context(|| {
+        format!(
+            "loading artifacts from {} — run `make artifacts` first",
+            dir.display()
+        )
+    })
+}
+
+fn cmd_info(args: Vec<String>) -> Result<()> {
+    let flags = Flags::new("dfl info", "print artifact + platform info")
+        .opt("config", Some("tiny"), "artifact config (tiny|fast|paper)");
+    let a = flags.parse(args)?;
+    let engine = load_engine(a.str("config"))?;
+    let m = engine.meta();
+    println!("config       : {}", m.config);
+    println!("n_params     : {}", m.n_params);
+    println!("image        : {}x{}x{}", m.img, m.img, m.channels);
+    println!("batch        : {} x {} train minibatches/round", m.batch, m.nb_train);
+    println!("eval tensors : probe {} samples, full {} samples", m.eval_y_len(false), m.eval_y_len(true));
+    println!("k_max        : {}", m.k_max);
+    Ok(())
+}
+
+fn cmd_sim(args: Vec<String>) -> Result<()> {
+    let flags = Flags::new("dfl sim", "in-process N-client deployment")
+        .opt("config", Some("tiny"), "artifact config (tiny|fast|paper)")
+        .opt("clients", Some("4"), "number of clients")
+        .opt("machines", Some("1"), "virtual machines (1-3)")
+        .opt("alpha", Some("0.6"), "dirichlet alpha (non-IID skew)")
+        .opt("crashes", Some("0"), "clients to crash mid-run")
+        .opt("rounds", Some("20"), "max rounds (R_PRIME)")
+        .opt("timeout-ms", Some("500"), "phase-2 wait window")
+        .opt("seed", Some("7"), "experiment seed")
+        .opt("lr", Some("0.05"), "local SGD learning rate")
+        .opt("min-rounds", Some("5"), "MINIMUM_ROUNDS before CCC")
+        .opt("threshold", Some("0.015"), "CCC relative convergence threshold")
+        .opt("train-n", Some("0"), "global train set size (0 = auto)")
+        .switch("iid", "IID split instead of Dirichlet")
+        .switch("verbose", "print per-round mean loss/accuracy")
+        .switch("sync", "Phase 1 (synchronous rounds) instead of Phase 2");
+    let a = flags.parse(args)?;
+    let engine = load_engine(a.str("config"))?;
+    let n = a.usize("clients")?;
+    let mut cfg = SimConfig::for_meta(n, engine.meta());
+    cfg.machines = a.usize("machines")?.clamp(1, 3);
+    cfg.sync = a.bool("sync");
+    cfg.partition =
+        if a.bool("iid") { Partition::Iid } else { Partition::Dirichlet(a.f64("alpha")?) };
+    cfg.protocol = ProtocolConfig {
+        max_rounds: a.usize("rounds")? as u32,
+        timeout: std::time::Duration::from_millis(a.u64("timeout-ms")?),
+        lr: a.f32("lr")?,
+        min_rounds: a.usize("min-rounds")? as u32,
+        conv_threshold_rel: a.f32("threshold")?,
+        ..ProtocolConfig::default()
+    };
+    cfg.seed = a.u64("seed")?;
+    if a.usize("train-n")? > 0 {
+        cfg.train_n = a.usize("train-n")?;
+    }
+    let crashes = a.usize("crashes")?;
+    if crashes > 0 {
+        let mut rng = Rng::new(cfg.seed ^ 0xFA17);
+        cfg.faults = variable_crash_schedule(
+            n,
+            crashes,
+            2,
+            cfg.protocol.max_rounds.saturating_sub(2),
+            &mut rng,
+        );
+    }
+    println!(
+        "running {} clients ({}), {} machines, {} crashes, seed {}",
+        n,
+        if cfg.sync { "phase 1 sync" } else { "phase 2 async" },
+        cfg.machines,
+        crashes,
+        cfg.seed
+    );
+    let res = sim::run(&engine, &cfg)?;
+    if a.bool("verbose") {
+        let max_r = res.reports.iter().map(|r| r.history.len()).max().unwrap_or(0);
+        println!("round | mean loss | mean probe acc | mean delta_rel");
+        for round in 0..max_r {
+            let rows: Vec<_> =
+                res.reports.iter().filter_map(|r| r.history.get(round)).collect();
+            let n = rows.len().max(1) as f32;
+            println!(
+                "{:>5} | {:>9.4} | {:>13.1}% | {:.5}",
+                round,
+                rows.iter().map(|h| h.train_loss).sum::<f32>() / n,
+                rows.iter().map(|h| h.probe_acc).sum::<f32>() / n * 100.0,
+                rows.iter().map(|h| h.delta_rel.min(9.9)).sum::<f32>() / n,
+            );
+        }
+    }
+    for r in &res.reports {
+        println!(
+            "  client {:>2}: cause={:?} rounds={} acc={} wall={:.2}s{}",
+            r.id,
+            r.cause,
+            r.rounds_completed,
+            r.final_accuracy.map(|a| format!("{:.2}%", a * 100.0)).unwrap_or("-".into()),
+            r.wall.as_secs_f64(),
+            r.signal_source.map(|s| format!(" (signaled by {s})")).unwrap_or_default()
+        );
+    }
+    println!(
+        "mean accuracy {} | rounds {} | wall {:.2}s | machine times {:?}",
+        res.mean_accuracy().map(|a| format!("{:.2}%", a * 100.0)).unwrap_or("-".into()),
+        res.rounds(),
+        res.wall.as_secs_f64(),
+        res.machine_times().iter().map(|t| format!("{:.2}s", t.as_secs_f64())).collect::<Vec<_>>(),
+    );
+    Ok(())
+}
+
+/// Parse `id=host:port,id=host:port,...`.
+fn parse_peers(spec: &str) -> Result<BTreeMap<u32, std::net::SocketAddr>> {
+    let mut out = BTreeMap::new();
+    for part in spec.split(',').filter(|s| !s.is_empty()) {
+        let (id, addr) = part
+            .split_once('=')
+            .with_context(|| format!("bad peer spec {part:?} (want id=host:port)"))?;
+        out.insert(
+            id.trim().parse::<u32>().context("peer id")?,
+            addr.trim().parse().context("peer addr")?,
+        );
+    }
+    Ok(out)
+}
+
+fn cmd_client(args: Vec<String>) -> Result<()> {
+    let flags = Flags::new("dfl client", "one real TCP client (multi-process deployment)")
+        .opt("config", Some("tiny"), "artifact config")
+        .opt("id", None, "this client's id")
+        .opt("listen", None, "listen address host:port")
+        .opt("peers", None, "comma list id=host:port for all other clients")
+        .opt("clients", Some("0"), "total client count (0 = peers+1)")
+        .opt("rounds", Some("20"), "max rounds")
+        .opt("timeout-ms", Some("1000"), "phase-2 wait window")
+        .opt("alpha", Some("0.6"), "dirichlet alpha")
+        .opt("train-n", Some("2000"), "global synthetic train set size")
+        .opt("seed", Some("7"), "shared experiment seed (must match peers)")
+        .opt("crash-at-round", Some("0"), "inject a crash at this round (0 = never)");
+    let a = flags.parse(args)?;
+    let engine = load_engine(a.str("config"))?;
+    let meta = engine.meta().clone();
+    let id = a.usize("id")? as u32;
+    let peers = parse_peers(a.str("peers"))?;
+    let n_clients = match a.usize("clients")? {
+        0 => peers.len() + 1,
+        n => n,
+    };
+    let listen: std::net::SocketAddr = a.str("listen").parse().context("listen addr")?;
+    let transport = TcpTransport::bind(id, listen, peers)?;
+
+    // All processes derive the same data + partition from the shared seed.
+    let seed = a.u64("seed")?;
+    let (train, test) =
+        Dataset::synthetic_pair(&meta, a.usize("train-n")?, meta.nb_eval_full * meta.batch, seed);
+    let mut rng = Rng::new(seed ^ 0x5EED);
+    let parts = dfl::data::dirichlet_partition(&train, n_clients, a.f64("alpha")?, &mut rng);
+    let data = ClientData::new(
+        Arc::new(train),
+        parts.get(id as usize).cloned().unwrap_or_default(),
+        &test,
+        &meta,
+    );
+
+    let crash_round = a.usize("crash-at-round")? as u32;
+    let client = AsyncClient {
+        id,
+        trainer: &engine,
+        transport: Box::new(transport),
+        cfg: ProtocolConfig {
+            max_rounds: a.usize("rounds")? as u32,
+            timeout: std::time::Duration::from_millis(a.u64("timeout-ms")?),
+            ..ProtocolConfig::default()
+        },
+        data,
+        fault: if crash_round > 0 {
+            dfl::coordinator::FaultPlan::at_round(crash_round)
+        } else {
+            dfl::coordinator::FaultPlan::none()
+        },
+        rng: Rng::new(seed ^ (0xC11E << 8) ^ id as u64),
+        slowdown: 0.0,
+    };
+    let report = client.run()?;
+    println!(
+        "client {id}: cause={:?} rounds={} acc={} wall={:.2}s",
+        report.cause,
+        report.rounds_completed,
+        report.final_accuracy.map(|x| format!("{:.2}%", x * 100.0)).unwrap_or("-".into()),
+        report.wall.as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_reproduce(args: Vec<String>) -> Result<()> {
+    let flags = Flags::new("dfl reproduce", "regenerate a paper table/figure")
+        .opt("config", Some("tiny"), "artifact config (tiny|fast|paper)")
+        .opt("out", Some(""), "append markdown to this file")
+        .switch("full", "full grids (slower) instead of quick mode");
+    let a = flags.parse(args)?;
+    let what = a.positional.first().map(String::as_str).unwrap_or("all");
+    let engine = load_engine(a.str("config"))?;
+    let scale = if a.bool("full") { ExpScale::full() } else { ExpScale::default() };
+
+    let runs: Vec<(String, dfl::util::benchkit::Table)> = match what {
+        "all" => exp::run_all(&engine, scale),
+        "table2" => vec![("Table 2".into(), exp::table2(&engine, scale))],
+        "table3" | "fig2-noniid" => vec![("Table 3".into(), exp::table3(&engine, scale))],
+        "table4" | "fig2-iid" => vec![("Table 4".into(), exp::table4(&engine, scale))],
+        "fig3" | "fig4" | "fig3_4" | "exp1" => {
+            vec![("Fig 3+4".into(), exp::fig3_4(&engine, scale))]
+        }
+        "fig5" | "fig6" | "fig5_6" | "exp2" => {
+            vec![("Fig 5+6".into(), exp::fig5_6(&engine, scale))]
+        }
+        "fig7" | "fig8" | "fig7_8" | "exp3" => {
+            vec![("Fig 7+8".into(), exp::fig7_8(&engine, scale))]
+        }
+        "termination" => {
+            vec![("Termination".into(), exp::termination_reliability(&engine, scale))]
+        }
+        other => bail!(
+            "unknown experiment {other:?}; want all|table2|table3|table4|fig3_4|fig5_6|fig7_8|termination"
+        ),
+    };
+    let mut md = String::new();
+    for (title, table) in &runs {
+        table.print(title);
+        md.push_str(&format!("\n### {title}\n\n{}\n", table.markdown()));
+    }
+    let out = a.str("out");
+    if !out.is_empty() {
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(out)?;
+        f.write_all(md.as_bytes())?;
+        println!("appended markdown to {out}");
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        eprintln!(
+            "usage: dfl <sim|client|reproduce|info> [flags]\n\
+             try `dfl sim --help`"
+        );
+        std::process::exit(2);
+    }
+    let cmd = args.remove(0);
+    match cmd.as_str() {
+        "sim" => cmd_sim(args),
+        "client" => cmd_client(args),
+        "reproduce" => cmd_reproduce(args),
+        "info" => cmd_info(args),
+        other => bail!("unknown subcommand {other:?} (want sim|client|reproduce|info)"),
+    }
+}

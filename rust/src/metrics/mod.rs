@@ -1,0 +1,129 @@
+//! Per-round metrics, client reports and CSV emission.
+
+use std::io::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::termination::TerminationCause;
+use crate::net::ClientId;
+
+/// One row of a client's training log.
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: u32,
+    /// Mean local training loss this round.
+    pub train_loss: f32,
+    /// Probe accuracy after aggregation (eval_round artifact), in [0, 1].
+    pub probe_acc: f32,
+    /// Peers believed alive after this round's sweep.
+    pub alive_peers: usize,
+    /// Models aggregated this round (self + received).
+    pub aggregated: usize,
+    /// Convergence-monitor relative delta after this round.
+    pub delta_rel: f32,
+    /// CCC stability counter after this round.
+    pub conv_counter: u32,
+    /// Crashes detected this round.
+    pub crashes_detected: Vec<ClientId>,
+}
+
+/// Everything a finished (or crashed) client hands back to the harness.
+#[derive(Clone, Debug)]
+pub struct ClientReport {
+    pub id: ClientId,
+    pub cause: TerminationCause,
+    pub rounds_completed: u32,
+    /// Full-test-set accuracy of the final model, in [0, 1]
+    /// (None for crashed clients — they never finalize).
+    pub final_accuracy: Option<f32>,
+    pub final_loss: Option<f32>,
+    pub wall: std::time::Duration,
+    pub history: Vec<RoundRecord>,
+    /// Who signalled us (CRT provenance), if terminated by signal.
+    pub signal_source: Option<ClientId>,
+    pub final_params: Option<Vec<f32>>,
+}
+
+impl ClientReport {
+    /// Write the per-round history as CSV.
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        writeln!(
+            f,
+            "round,train_loss,probe_acc,alive_peers,aggregated,delta_rel,conv_counter,crashes"
+        )?;
+        for r in &self.history {
+            writeln!(
+                f,
+                "{},{},{},{},{},{},{},{}",
+                r.round,
+                r.train_loss,
+                r.probe_acc,
+                r.alive_peers,
+                r.aggregated,
+                r.delta_rel,
+                r.conv_counter,
+                r.crashes_detected
+                    .iter()
+                    .map(|c| c.to_string())
+                    .collect::<Vec<_>>()
+                    .join(";")
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Mean of an f32 iterator (None when empty) — small shared helper.
+pub fn mean<I: IntoIterator<Item = f32>>(xs: I) -> Option<f32> {
+    let mut sum = 0.0f64;
+    let mut n = 0usize;
+    for x in xs {
+        sum += x as f64;
+        n += 1;
+    }
+    (n > 0).then(|| (sum / n as f64) as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_works() {
+        assert_eq!(mean([1.0, 2.0, 3.0]), Some(2.0));
+        assert_eq!(mean([]), None);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let rep = ClientReport {
+            id: 0,
+            cause: TerminationCause::Converged,
+            rounds_completed: 2,
+            final_accuracy: Some(0.5),
+            final_loss: Some(1.0),
+            wall: std::time::Duration::from_millis(10),
+            history: vec![RoundRecord {
+                round: 0,
+                train_loss: 2.0,
+                probe_acc: 0.1,
+                alive_peers: 3,
+                aggregated: 4,
+                delta_rel: 0.5,
+                conv_counter: 0,
+                crashes_detected: vec![2, 5],
+            }],
+            signal_source: None,
+            final_params: None,
+        };
+        let path = std::env::temp_dir().join(format!("dfl_csv_{}.csv", std::process::id()));
+        rep.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("round,"));
+        assert!(text.contains("2;5"));
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,181 @@
+//! Flat model-parameter vector: the unit the P2P layer broadcasts, the
+//! aggregate artifact averages, and the quantity the Client-Confident
+//! Convergence test measures distances on.
+
+use crate::util::codec::{Reader, Writer};
+use anyhow::Result;
+
+/// A model as one flat `f32` vector (layer layout defined by the L2 config;
+/// the rust side never needs to know the per-layer shapes).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamVector(pub Vec<f32>);
+
+impl ParamVector {
+    pub fn zeros(n: usize) -> Self {
+        ParamVector(vec![0.0; n])
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.0
+    }
+
+    /// Euclidean distance to another model — the convergence metric of the
+    /// paper's CCC check (‖avg_t − avg_{t−1}‖).
+    pub fn l2_distance(&self, other: &ParamVector) -> f32 {
+        debug_assert_eq!(self.len(), other.len());
+        self.0
+            .iter()
+            .zip(&other.0)
+            .map(|(a, b)| {
+                let d = a - b;
+                (d * d) as f64
+            })
+            .sum::<f64>()
+            .sqrt() as f32
+    }
+
+    pub fn l2_norm(&self) -> f32 {
+        self.0.iter().map(|a| (a * a) as f64).sum::<f64>().sqrt() as f32
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.0.iter().all(|x| x.is_finite())
+    }
+
+    /// In-place unweighted mean of several models (CPU fallback used by the
+    /// MockTrainer and as a cross-check of the PJRT aggregate artifact).
+    pub fn mean_of(models: &[&ParamVector]) -> ParamVector {
+        assert!(!models.is_empty());
+        let n = models[0].len();
+        let mut out = vec![0.0f32; n];
+        for m in models {
+            debug_assert_eq!(m.len(), n);
+            for (o, x) in out.iter_mut().zip(&m.0) {
+                *o += x;
+            }
+        }
+        let k = models.len() as f32;
+        for o in &mut out {
+            *o /= k;
+        }
+        ParamVector(out)
+    }
+
+    pub fn encode(&self, w: &mut Writer) {
+        w.f32_slice(&self.0);
+    }
+
+    pub fn decode(r: &mut Reader) -> Result<Self> {
+        Ok(ParamVector(r.f32_vec()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::forall;
+
+    #[test]
+    fn l2_distance_basic() {
+        let a = ParamVector(vec![0.0, 3.0]);
+        let b = ParamVector(vec![4.0, 0.0]);
+        assert!((a.l2_distance(&b) - 5.0).abs() < 1e-6);
+        assert_eq!(a.l2_distance(&a), 0.0);
+    }
+
+    #[test]
+    fn mean_of_identical_is_identity() {
+        let a = ParamVector(vec![1.0, -2.0, 3.5]);
+        let m = ParamVector::mean_of(&[&a, &a, &a]);
+        assert_eq!(m, a);
+    }
+
+    #[test]
+    fn mean_of_two() {
+        let a = ParamVector(vec![1.0, 2.0]);
+        let b = ParamVector(vec![3.0, 6.0]);
+        assert_eq!(ParamVector::mean_of(&[&a, &b]).0, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn codec_roundtrip_property() {
+        forall(
+            0xD1F7,
+            50,
+            |r| {
+                let n = r.below(2000);
+                ParamVector((0..n).map(|_| r.normal()).collect())
+            },
+            |pv| {
+                let mut w = Writer::new();
+                pv.encode(&mut w);
+                let bytes = w.into_bytes();
+                let got = ParamVector::decode(&mut Reader::new(&bytes))
+                    .map_err(|e| e.to_string())?;
+                if &got == pv {
+                    Ok(())
+                } else {
+                    Err("roundtrip mismatch".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn distance_symmetry_property() {
+        forall(
+            0xD157,
+            30,
+            |r| {
+                let n = 1 + r.below(500);
+                let a = ParamVector((0..n).map(|_| r.normal()).collect());
+                let b = ParamVector((0..n).map(|_| r.normal()).collect());
+                (a, b)
+            },
+            |(a, b)| {
+                let ab = a.l2_distance(b);
+                let ba = b.l2_distance(a);
+                if (ab - ba).abs() < 1e-4 && ab >= 0.0 {
+                    Ok(())
+                } else {
+                    Err(format!("asymmetric: {ab} vs {ba}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn mean_within_bounds_property() {
+        forall(
+            0x3EA7,
+            30,
+            |r| {
+                let n = 1 + r.below(100);
+                let k = 1 + r.below(8);
+                (0..k)
+                    .map(|_| ParamVector((0..n).map(|_| r.normal()).collect()))
+                    .collect::<Vec<_>>()
+            },
+            |models| {
+                let refs: Vec<&ParamVector> = models.iter().collect();
+                let m = ParamVector::mean_of(&refs);
+                for i in 0..m.len() {
+                    let lo = models.iter().map(|p| p.0[i]).fold(f32::MAX, f32::min);
+                    let hi = models.iter().map(|p| p.0[i]).fold(f32::MIN, f32::max);
+                    if m.0[i] < lo - 1e-4 || m.0[i] > hi + 1e-4 {
+                        return Err(format!("coord {i} out of hull"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,372 @@
+//! In-process transport: per-client channels behind a seeded network model
+//! (per-message latency, jitter, probabilistic drops, and per-link blocks
+//! for failure injection).  Every message round-trips through the binary
+//! codec so tests exercise the real wire format.
+//!
+//! A single timer thread owns delayed deliveries, keeping the whole network
+//! deterministic under a fixed seed (modulo OS scheduling of the client
+//! threads themselves, which is exactly the asynchrony under test).
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashSet};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::message::{ClientId, Msg};
+use super::Transport;
+use crate::util::Rng;
+
+/// Link behaviour of the simulated network.
+#[derive(Clone, Debug)]
+pub struct NetworkModel {
+    /// Minimum one-way latency applied to every message.
+    pub base_delay: Duration,
+    /// Extra uniform jitter in [0, jitter].
+    pub jitter: Duration,
+    /// Per-message drop probability (0 = reliable, the paper's default
+    /// assumption; raised for the message-loss robustness experiments).
+    pub drop_prob: f64,
+    /// RNG seed for delays/drops (reproducible network schedules).
+    pub seed: u64,
+}
+
+impl NetworkModel {
+    /// No delay, no loss (unit tests).
+    pub fn ideal() -> Self {
+        NetworkModel { base_delay: Duration::ZERO, jitter: Duration::ZERO, drop_prob: 0.0, seed: 0 }
+    }
+
+    /// LAN-like: small base latency with jitter (the paper's testbed).
+    pub fn lan(seed: u64) -> Self {
+        NetworkModel {
+            base_delay: Duration::from_micros(200),
+            jitter: Duration::from_millis(2),
+            drop_prob: 0.0,
+            seed,
+        }
+    }
+
+    /// Lossy variant for fault-injection tests.
+    pub fn lossy(drop_prob: f64, seed: u64) -> Self {
+        NetworkModel { drop_prob, ..NetworkModel::lan(seed) }
+    }
+}
+
+struct Scheduled {
+    due: Instant,
+    seq: u64,
+    to: usize,
+    msg: Msg,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.due == other.due && self.seq == other.seq
+    }
+}
+impl Eq for Scheduled {}
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.due, self.seq).cmp(&(other.due, other.seq))
+    }
+}
+
+struct HubShared {
+    inboxes: Vec<Sender<Msg>>,
+    queue: Mutex<BinaryHeap<Reverse<Scheduled>>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    model: NetworkModel,
+    rng: Mutex<Rng>,
+    seq: Mutex<u64>,
+    blocked: Mutex<HashSet<(ClientId, ClientId)>>,
+}
+
+impl HubShared {
+    fn deliver(&self, to: usize, msg: Msg) {
+        // Receiver may be gone (crashed client dropped its endpoint) — the
+        // crash model says sends to dead peers vanish silently.
+        let _ = self.inboxes[to].send(msg);
+    }
+}
+
+/// The simulated network; create once, then [`InProcHub::endpoint`] per
+/// client. Dropping the hub stops the timer thread.
+pub struct InProcHub {
+    shared: Arc<HubShared>,
+    timer: Option<JoinHandle<()>>,
+    receivers: Mutex<Vec<Option<Receiver<Msg>>>>,
+    n: usize,
+}
+
+impl InProcHub {
+    pub fn new(n: usize, model: NetworkModel) -> Self {
+        let mut inboxes = Vec::with_capacity(n);
+        let mut receivers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = mpsc::channel();
+            inboxes.push(tx);
+            receivers.push(Some(rx));
+        }
+        let seed = model.seed;
+        let shared = Arc::new(HubShared {
+            inboxes,
+            queue: Mutex::new(BinaryHeap::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            model,
+            rng: Mutex::new(Rng::new(seed ^ 0x1E7_0000)),
+            seq: Mutex::new(0),
+            blocked: Mutex::new(HashSet::new()),
+        });
+        let timer = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("inproc-timer".into())
+                .spawn(move || timer_loop(&shared))
+                .expect("spawn timer")
+        };
+        InProcHub { shared, timer: Some(timer), receivers: Mutex::new(receivers), n }
+    }
+
+    /// Claim the endpoint for client `id` (each id claimable once).
+    pub fn endpoint(&self, id: ClientId) -> Endpoint {
+        let rx = self.receivers.lock().unwrap()[id as usize]
+            .take()
+            .expect("endpoint already claimed");
+        Endpoint { id, n: self.n, shared: Arc::clone(&self.shared), rx }
+    }
+
+    /// Block/unblock a directed link (failure injection: lost messages
+    /// between a specific pair, e.g. to test CRT flag re-propagation).
+    pub fn set_link_blocked(&self, from: ClientId, to: ClientId, blocked: bool) {
+        let mut set = self.shared.blocked.lock().unwrap();
+        if blocked {
+            set.insert((from, to));
+        } else {
+            set.remove(&(from, to));
+        }
+    }
+}
+
+impl Drop for InProcHub {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        if let Some(t) = self.timer.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn timer_loop(shared: &HubShared) {
+    let mut queue = shared.queue.lock().unwrap();
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let now = Instant::now();
+        if let Some(Reverse(front)) = queue.peek() {
+            if front.due <= now {
+                let Reverse(item) = queue.pop().unwrap();
+                // deliver outside the lock to avoid holding it during send
+                drop(queue);
+                shared.deliver(item.to, item.msg);
+                queue = shared.queue.lock().unwrap();
+            } else {
+                let wait = front.due - now;
+                let (q, _) = shared.cv.wait_timeout(queue, wait).unwrap();
+                queue = q;
+            }
+        } else {
+            queue = shared.cv.wait(queue).unwrap();
+        }
+    }
+}
+
+/// One client's handle onto the in-process network.
+pub struct Endpoint {
+    id: ClientId,
+    n: usize,
+    shared: Arc<HubShared>,
+    rx: Receiver<Msg>,
+}
+
+impl Transport for Endpoint {
+    fn id(&self) -> ClientId {
+        self.id
+    }
+
+    fn peers(&self) -> Vec<ClientId> {
+        (0..self.n as ClientId).filter(|&p| p != self.id).collect()
+    }
+
+    fn send(&self, to: ClientId, msg: &Msg) -> Result<()> {
+        if self.shared.blocked.lock().unwrap().contains(&(self.id, to)) {
+            return Ok(()); // injected link failure: message lost
+        }
+        // Exercise the wire format on every in-proc message.
+        let decoded = Msg::decode(&msg.encode())?;
+        let (delay, dropped) = {
+            let mut rng = self.shared.rng.lock().unwrap();
+            let m = &self.shared.model;
+            let dropped = m.drop_prob > 0.0 && rng.f64() < m.drop_prob;
+            let jitter = m.jitter.mul_f64(rng.f64());
+            (m.base_delay + jitter, dropped)
+        };
+        if dropped {
+            return Ok(());
+        }
+        if delay.is_zero() {
+            self.shared.deliver(to as usize, decoded);
+        } else {
+            let seq = {
+                let mut s = self.shared.seq.lock().unwrap();
+                *s += 1;
+                *s
+            };
+            self.shared.queue.lock().unwrap().push(Reverse(Scheduled {
+                due: Instant::now() + delay,
+                seq,
+                to: to as usize,
+                msg: decoded,
+            }));
+            self.shared.cv.notify_all();
+        }
+        Ok(())
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Option<Msg> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(m) => Some(m),
+            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => None,
+        }
+    }
+
+    fn try_recv(&self) -> Option<Msg> {
+        self.rx.try_recv().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::message::ModelUpdate;
+    use crate::model::ParamVector;
+
+    fn update(sender: ClientId, round: u32) -> Msg {
+        Msg::Update(ModelUpdate {
+            sender,
+            round,
+            terminate: false,
+            weight: 1.0,
+            params: ParamVector(vec![sender as f32, round as f32]),
+        })
+    }
+
+    #[test]
+    fn direct_delivery_no_delay() {
+        let hub = InProcHub::new(3, NetworkModel::ideal());
+        let a = hub.endpoint(0);
+        let b = hub.endpoint(1);
+        a.send(1, &update(0, 5)).unwrap();
+        let got = b.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(got, update(0, 5));
+    }
+
+    #[test]
+    fn broadcast_reaches_all_peers() {
+        let hub = InProcHub::new(4, NetworkModel::ideal());
+        let eps: Vec<Endpoint> = (0..4).map(|i| hub.endpoint(i)).collect();
+        eps[2].broadcast(&update(2, 1)).unwrap();
+        for (i, ep) in eps.iter().enumerate() {
+            if i == 2 {
+                assert!(ep.try_recv().is_none());
+            } else {
+                assert_eq!(ep.recv_timeout(Duration::from_secs(1)), Some(update(2, 1)));
+            }
+        }
+    }
+
+    #[test]
+    fn delayed_delivery_respects_latency() {
+        let model = NetworkModel {
+            base_delay: Duration::from_millis(30),
+            jitter: Duration::ZERO,
+            drop_prob: 0.0,
+            seed: 1,
+        };
+        let hub = InProcHub::new(2, model);
+        let a = hub.endpoint(0);
+        let b = hub.endpoint(1);
+        let t0 = Instant::now();
+        a.send(1, &update(0, 1)).unwrap();
+        assert!(b.try_recv().is_none(), "arrived too early");
+        let got = b.recv_timeout(Duration::from_secs(1));
+        assert!(got.is_some());
+        assert!(t0.elapsed() >= Duration::from_millis(25), "{:?}", t0.elapsed());
+    }
+
+    #[test]
+    fn drops_lose_messages() {
+        let hub = InProcHub::new(2, NetworkModel::lossy(1.0, 2)); // drop all
+        let a = hub.endpoint(0);
+        let b = hub.endpoint(1);
+        for r in 0..10 {
+            a.send(1, &update(0, r)).unwrap();
+        }
+        assert!(b.recv_timeout(Duration::from_millis(50)).is_none());
+    }
+
+    #[test]
+    fn blocked_link_is_one_directional() {
+        let hub = InProcHub::new(2, NetworkModel::ideal());
+        let a = hub.endpoint(0);
+        let b = hub.endpoint(1);
+        hub.set_link_blocked(0, 1, true);
+        a.send(1, &update(0, 1)).unwrap();
+        assert!(b.recv_timeout(Duration::from_millis(50)).is_none());
+        b.send(0, &update(1, 2)).unwrap();
+        assert_eq!(a.recv_timeout(Duration::from_secs(1)), Some(update(1, 2)));
+        hub.set_link_blocked(0, 1, false);
+        a.send(1, &update(0, 3)).unwrap();
+        assert_eq!(b.recv_timeout(Duration::from_secs(1)), Some(update(0, 3)));
+    }
+
+    #[test]
+    fn send_to_dropped_endpoint_is_silent() {
+        let hub = InProcHub::new(2, NetworkModel::ideal());
+        let a = hub.endpoint(0);
+        {
+            let _b = hub.endpoint(1);
+        } // b crashes
+        assert!(a.send(1, &update(0, 1)).is_ok());
+    }
+
+    #[test]
+    fn ordering_preserved_per_link_without_jitter() {
+        let hub = InProcHub::new(2, NetworkModel::ideal());
+        let a = hub.endpoint(0);
+        let b = hub.endpoint(1);
+        for r in 0..20 {
+            a.send(1, &update(0, r)).unwrap();
+        }
+        for r in 0..20 {
+            let got = b.recv_timeout(Duration::from_secs(1)).unwrap();
+            match got {
+                Msg::Update(u) => assert_eq!(u.round, r),
+                _ => panic!("wrong kind"),
+            }
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! Wire messages exchanged between clients.
+//!
+//! The protocol needs exactly what Algorithm 2 carries: model parameters
+//! tagged with sender, round number, aggregation weight, and the
+//! Client-Responsive Termination flag that piggybacks on every broadcast
+//! after a client learns of termination.
+
+use anyhow::{bail, Result};
+
+use crate::model::ParamVector;
+use crate::util::codec::{Reader, Writer};
+
+pub type ClientId = u32;
+
+/// A model broadcast (the paper's ⟨M_i, round, terminate⟩ message).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelUpdate {
+    pub sender: ClientId,
+    pub round: u32,
+    /// Client-Responsive Termination flag: set once the sender has either
+    /// triggered Client-Confident Convergence itself or heard the flag from
+    /// any peer; propagated on every subsequent broadcast.
+    pub terminate: bool,
+    /// Aggregation weight (local sample count; 1.0 = plain FedAvg).
+    pub weight: f32,
+    pub params: ParamVector,
+}
+
+/// All message kinds on the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    Update(ModelUpdate),
+    /// Join/identify (TCP connection handshake).
+    Hello { sender: ClientId },
+    /// Graceful leave (distinct from a crash, which is silence).
+    Bye { sender: ClientId },
+}
+
+const TAG_UPDATE: u8 = 1;
+const TAG_HELLO: u8 = 2;
+const TAG_BYE: u8 = 3;
+
+impl Msg {
+    pub fn sender(&self) -> ClientId {
+        match self {
+            Msg::Update(u) => u.sender,
+            Msg::Hello { sender } | Msg::Bye { sender } => *sender,
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::with_capacity(match self {
+            Msg::Update(u) => u.params.len() * 4 + 32,
+            _ => 16,
+        });
+        match self {
+            Msg::Update(u) => {
+                w.u8(TAG_UPDATE);
+                w.u32(u.sender);
+                w.u32(u.round);
+                w.bool(u.terminate);
+                w.f32(u.weight);
+                u.params.encode(&mut w);
+            }
+            Msg::Hello { sender } => {
+                w.u8(TAG_HELLO);
+                w.u32(*sender);
+            }
+            Msg::Bye { sender } => {
+                w.u8(TAG_BYE);
+                w.u32(*sender);
+            }
+        }
+        w.into_bytes()
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<Msg> {
+        let mut r = Reader::new(bytes);
+        let tag = r.u8()?;
+        let msg = match tag {
+            TAG_UPDATE => Msg::Update(ModelUpdate {
+                sender: r.u32()?,
+                round: r.u32()?,
+                terminate: r.bool()?,
+                weight: r.f32()?,
+                params: ParamVector::decode(&mut r)?,
+            }),
+            TAG_HELLO => Msg::Hello { sender: r.u32()? },
+            TAG_BYE => Msg::Bye { sender: r.u32()? },
+            t => bail!("unknown message tag {t}"),
+        };
+        if r.remaining() != 0 {
+            bail!("trailing bytes after message ({} left)", r.remaining());
+        }
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::forall;
+
+    #[test]
+    fn update_roundtrip() {
+        let msg = Msg::Update(ModelUpdate {
+            sender: 3,
+            round: 17,
+            terminate: true,
+            weight: 2.5,
+            params: ParamVector(vec![1.0, -2.0, 0.5]),
+        });
+        assert_eq!(Msg::decode(&msg.encode()).unwrap(), msg);
+    }
+
+    #[test]
+    fn hello_bye_roundtrip() {
+        for msg in [Msg::Hello { sender: 9 }, Msg::Bye { sender: 0 }] {
+            assert_eq!(Msg::decode(&msg.encode()).unwrap(), msg);
+        }
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(Msg::decode(&[]).is_err());
+        assert!(Msg::decode(&[99, 0, 0]).is_err());
+        // trailing bytes
+        let mut bytes = Msg::Hello { sender: 1 }.encode();
+        bytes.push(0);
+        assert!(Msg::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        forall(
+            0x4E55,
+            40,
+            |r| {
+                let n = r.below(1000);
+                Msg::Update(ModelUpdate {
+                    sender: r.next_u32() % 64,
+                    round: r.next_u32() % 10_000,
+                    terminate: r.below(2) == 1,
+                    weight: r.f32() * 100.0,
+                    params: ParamVector((0..n).map(|_| r.normal()).collect()),
+                })
+            },
+            |msg| {
+                let got = Msg::decode(&msg.encode()).map_err(|e| e.to_string())?;
+                if &got == msg {
+                    Ok(())
+                } else {
+                    Err("roundtrip mismatch".into())
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,62 @@
+//! P2P messaging substrate.
+//!
+//! Two interchangeable transports implement [`Transport`]:
+//!
+//! * [`inproc::InProcHub`] — in-process channels with a seeded network model
+//!   (per-link delay, jitter, drops) used by the simulator, tests, and the
+//!   experiment harness.  Messages still round-trip through the binary wire
+//!   codec so the encoding is exercised everywhere.
+//! * [`tcp::TcpTransport`] — real sockets (std::net) with length-prefixed
+//!   frames for multi-process / multi-machine deployments, matching the
+//!   paper's thread+socket implementation.
+
+pub mod inproc;
+pub mod message;
+pub mod tcp;
+
+pub use inproc::{InProcHub, NetworkModel};
+pub use message::{ClientId, ModelUpdate, Msg};
+pub use tcp::TcpTransport;
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+/// Peer-to-peer endpoint owned by one client.
+///
+/// Send operations are best-effort (the failure model allows peers to be
+/// gone); receipt ordering between different senders is not guaranteed
+/// (asynchronous network).
+pub trait Transport: Send {
+    fn id(&self) -> ClientId;
+
+    /// All peers this endpoint can address (excluding itself).
+    fn peers(&self) -> Vec<ClientId>;
+
+    /// Send to one peer. Returns Ok even if the peer never receives it
+    /// (crash model); hard local errors (e.g. serialization) are Err.
+    fn send(&self, to: ClientId, msg: &Msg) -> Result<()>;
+
+    /// Broadcast to every peer (best effort, independent per peer).
+    fn broadcast(&self, msg: &Msg) -> Result<()> {
+        for p in self.peers() {
+            self.send(p, msg)?;
+        }
+        Ok(())
+    }
+
+    /// Blocking receive with timeout; None on timeout or hub shutdown.
+    fn recv_timeout(&self, timeout: Duration) -> Option<Msg>;
+
+    /// Non-blocking receive.
+    fn try_recv(&self) -> Option<Msg>;
+
+    /// Drain everything currently queued.
+    fn drain(&self) -> Vec<Msg> {
+        let mut out = Vec::new();
+        while let Some(m) = self.try_recv() {
+            out.push(m);
+        }
+        out
+    }
+}

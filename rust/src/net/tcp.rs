@@ -1,0 +1,294 @@
+//! Real-socket transport (std::net TCP) for multi-process / multi-machine
+//! deployments — the configuration the paper actually ran (threads +
+//! sockets on three LAN machines).
+//!
+//! Frames use the codec's `[magic][version][len][payload][crc]` layout.
+//! Outgoing connections are created lazily and cached; a send to a dead
+//! peer fails silently after one reconnect attempt (crash model: silence,
+//! not errors). Incoming connections are accepted on a background thread,
+//! one reader thread per connection feeding a shared inbox.
+
+use std::collections::{BTreeMap, HashMap};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::message::{ClientId, Msg};
+use super::Transport;
+use crate::util::codec;
+
+const CONNECT_TIMEOUT: Duration = Duration::from_millis(500);
+const CONNECT_RETRIES: usize = 20;
+const RETRY_BACKOFF: Duration = Duration::from_millis(100);
+
+/// TCP endpoint for one client process.
+pub struct TcpTransport {
+    id: ClientId,
+    peer_addrs: BTreeMap<ClientId, SocketAddr>,
+    conns: Mutex<HashMap<ClientId, TcpStream>>,
+    /// Peers we have successfully dialed at least once: startup races get
+    /// the patient retry loop; once a peer has been up, refusal means crash
+    /// and deserves only one quick re-dial (silence, not stalling).
+    ever_connected: Mutex<std::collections::HashSet<ClientId>>,
+    inbox: Mutex<Receiver<Msg>>,
+    shutdown: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl TcpTransport {
+    /// Bind `listen` and prepare lazy connections to `peers`
+    /// (id → address, excluding our own id).
+    pub fn bind(
+        id: ClientId,
+        listen: SocketAddr,
+        peers: BTreeMap<ClientId, SocketAddr>,
+    ) -> Result<TcpTransport> {
+        let listener =
+            TcpListener::bind(listen).with_context(|| format!("binding {listen}"))?;
+        listener.set_nonblocking(true)?;
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let accept_thread = {
+            let shutdown = Arc::clone(&shutdown);
+            std::thread::Builder::new()
+                .name(format!("tcp-accept-{id}"))
+                .spawn(move || accept_loop(&listener, &tx, &shutdown))
+                .expect("spawn accept thread")
+        };
+        Ok(TcpTransport {
+            id,
+            peer_addrs: peers,
+            conns: Mutex::new(HashMap::new()),
+            ever_connected: Mutex::new(std::collections::HashSet::new()),
+            inbox: Mutex::new(rx),
+            shutdown,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    fn connect(&self, to: ClientId) -> Option<TcpStream> {
+        let addr = self.peer_addrs.get(&to)?;
+        let retries = if self.ever_connected.lock().unwrap().contains(&to) {
+            1 // previously-live peer refusing = crashed; don't stall the round
+        } else {
+            CONNECT_RETRIES // startup race: peer may not have bound yet
+        };
+        for attempt in 0..retries {
+            match TcpStream::connect_timeout(addr, CONNECT_TIMEOUT) {
+                Ok(s) => {
+                    let _ = s.set_nodelay(true);
+                    self.ever_connected.lock().unwrap().insert(to);
+                    return Some(s);
+                }
+                Err(_) if attempt + 1 < retries => std::thread::sleep(RETRY_BACKOFF),
+                Err(_) => return None,
+            }
+        }
+        None
+    }
+
+    fn write_frame(stream: &mut TcpStream, bytes: &[u8]) -> std::io::Result<()> {
+        stream.write_all(bytes)?;
+        stream.flush()
+    }
+}
+
+fn accept_loop(listener: &TcpListener, tx: &Sender<Msg>, shutdown: &Arc<AtomicBool>) {
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let tx = tx.clone();
+                let shutdown = Arc::clone(shutdown);
+                let _ = std::thread::Builder::new()
+                    .name("tcp-reader".into())
+                    .spawn(move || reader_loop(stream, &tx, &shutdown));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+}
+
+fn reader_loop(mut stream: TcpStream, tx: &Sender<Msg>, shutdown: &Arc<AtomicBool>) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    let mut buf = Vec::with_capacity(64 * 1024);
+    let mut chunk = [0u8; 64 * 1024];
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => return, // peer closed
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                // parse every complete frame in the buffer
+                loop {
+                    match codec::deframe(&buf) {
+                        Ok(Some((payload, used))) => {
+                            if let Ok(msg) = Msg::decode(payload) {
+                                if tx.send(msg).is_err() {
+                                    return; // transport dropped
+                                }
+                            }
+                            buf.drain(..used);
+                        }
+                        Ok(None) => break,
+                        Err(_) => return, // corrupt stream: drop connection
+                    }
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn id(&self) -> ClientId {
+        self.id
+    }
+
+    fn peers(&self) -> Vec<ClientId> {
+        self.peer_addrs.keys().copied().collect()
+    }
+
+    fn send(&self, to: ClientId, msg: &Msg) -> Result<()> {
+        let bytes = codec::frame(&msg.encode());
+        let mut conns = self.conns.lock().unwrap();
+        // reuse the cached connection, else dial
+        if let Some(stream) = conns.get_mut(&to) {
+            if Self::write_frame(stream, &bytes).is_ok() {
+                return Ok(());
+            }
+            conns.remove(&to); // stale — reconnect below
+        }
+        if let Some(mut stream) = self.connect(to) {
+            if Self::write_frame(&mut stream, &bytes).is_ok() {
+                conns.insert(to, stream);
+            }
+        }
+        // Unreachable peer == crashed peer: silence, not an error.
+        Ok(())
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Option<Msg> {
+        match self.inbox.lock().unwrap().recv_timeout(timeout) {
+            Ok(m) => Some(m),
+            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => None,
+        }
+    }
+
+    fn try_recv(&self) -> Option<Msg> {
+        self.inbox.lock().unwrap().try_recv().ok()
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ParamVector;
+    use crate::net::message::ModelUpdate;
+    use std::net::{IpAddr, Ipv4Addr};
+
+    fn addr(port: u16) -> SocketAddr {
+        SocketAddr::new(IpAddr::V4(Ipv4Addr::LOCALHOST), port)
+    }
+
+    /// Find a free port by binding port 0.
+    fn free_addr() -> SocketAddr {
+        TcpListener::bind(addr(0)).unwrap().local_addr().unwrap()
+    }
+
+    fn update(sender: ClientId, round: u32, n: usize) -> Msg {
+        Msg::Update(ModelUpdate {
+            sender,
+            round,
+            terminate: false,
+            weight: 1.0,
+            params: ParamVector((0..n).map(|i| i as f32).collect()),
+        })
+    }
+
+    #[test]
+    fn two_endpoints_roundtrip() {
+        let a_addr = free_addr();
+        let b_addr = free_addr();
+        let a = TcpTransport::bind(0, a_addr, BTreeMap::from([(1, b_addr)])).unwrap();
+        let b = TcpTransport::bind(1, b_addr, BTreeMap::from([(0, a_addr)])).unwrap();
+        a.send(1, &update(0, 3, 100)).unwrap();
+        let got = b.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(got, update(0, 3, 100));
+        // reply over the reverse direction
+        b.send(0, &update(1, 4, 10)).unwrap();
+        assert_eq!(a.recv_timeout(Duration::from_secs(5)).unwrap(), update(1, 4, 10));
+    }
+
+    #[test]
+    fn large_model_crosses_stream_chunks() {
+        let a_addr = free_addr();
+        let b_addr = free_addr();
+        let a = TcpTransport::bind(0, a_addr, BTreeMap::from([(1, b_addr)])).unwrap();
+        let b = TcpTransport::bind(1, b_addr, BTreeMap::from([(0, a_addr)])).unwrap();
+        // ~880 KB message forces multiple reads on the receiver.
+        let msg = update(0, 1, 220_000);
+        a.send(1, &msg).unwrap();
+        let got = b.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(got, msg);
+    }
+
+    #[test]
+    fn send_to_dead_peer_is_silent() {
+        let a_addr = free_addr();
+        let dead = free_addr(); // nothing listens here
+        let a = TcpTransport::bind(0, a_addr, BTreeMap::from([(1, dead)])).unwrap();
+        // must not error or hang forever
+        let t0 = std::time::Instant::now();
+        a.send(1, &update(0, 1, 10)).unwrap();
+        assert!(t0.elapsed() < Duration::from_secs(30));
+    }
+
+    #[test]
+    fn reconnects_after_peer_restart() {
+        let a_addr = free_addr();
+        let b_addr = free_addr();
+        let a = TcpTransport::bind(0, a_addr, BTreeMap::from([(1, b_addr)])).unwrap();
+        {
+            let b1 = TcpTransport::bind(1, b_addr, BTreeMap::from([(0, a_addr)])).unwrap();
+            a.send(1, &update(0, 1, 5)).unwrap();
+            assert!(b1.recv_timeout(Duration::from_secs(5)).is_some());
+        } // b crashes
+        std::thread::sleep(Duration::from_millis(100));
+        a.send(1, &update(0, 2, 5)).unwrap(); // drops silently
+        // b rejoins on the same address (transient-failure model)
+        let b2 = TcpTransport::bind(1, b_addr, BTreeMap::from([(0, a_addr)])).unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+        a.send(1, &update(0, 3, 5)).unwrap();
+        let got = b2.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(got, update(0, 3, 5));
+    }
+}

@@ -1,0 +1,305 @@
+//! PJRT-backed [`Trainer`]: loads HLO-text artifacts, compiles each once on
+//! the CPU client, and executes them on the request path.
+//!
+//! Pattern from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.  All entry computations were lowered with
+//! `return_tuple=True`, so every result is a (possibly 1-element) tuple.
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Result};
+use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
+
+use super::{check_aggregate_rows, Meta, Trainer};
+
+/// One compiled artifact set (init/train/eval/aggregate) on a PJRT client.
+pub struct Engine {
+    meta: Meta,
+    dir: PathBuf,
+    client: PjRtClient,
+    init: PjRtLoadedExecutable,
+    train_step: PjRtLoadedExecutable,
+    train_epoch: PjRtLoadedExecutable,
+    eval_round: PjRtLoadedExecutable,
+    eval_full: PjRtLoadedExecutable,
+    aggregate: PjRtLoadedExecutable,
+    /// Reused (k_max × P) staging buffer for aggregate calls — at the paper
+    /// config this is 14 MB; re-zeroing only the dirty rows instead of
+    /// reallocating each round keeps the hot loop allocation-free
+    /// (EXPERIMENTS.md §Perf).
+    agg_scratch: Mutex<Vec<f32>>,
+}
+
+fn compile(client: &PjRtClient, dir: &Path, name: &str) -> Result<PjRtLoadedExecutable> {
+    let path = dir.join(format!("{name}.hlo.txt"));
+    let proto = xla::HloModuleProto::from_text_file(&path)
+        .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow!("compiling {}: {e}", path.display()))
+}
+
+/// f32 slice → PJRT literal of the given logical dims (zero-copy view of the
+/// host bytes at literal-creation time).
+fn lit_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        bail!("literal shape {:?} wants {n} elements, got {}", dims, data.len());
+    }
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Literal::create_from_shape_and_untyped_data(ElementType::F32, dims, bytes)
+        .map_err(|e| anyhow!("creating f32 literal: {e}"))
+}
+
+fn lit_i32(data: &[i32], dims: &[usize]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        bail!("literal shape {:?} wants {n} elements, got {}", dims, data.len());
+    }
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Literal::create_from_shape_and_untyped_data(ElementType::S32, dims, bytes)
+        .map_err(|e| anyhow!("creating i32 literal: {e}"))
+}
+
+fn run(exe: &PjRtLoadedExecutable, args: &[Literal]) -> Result<Vec<Literal>> {
+    let result = exe
+        .execute::<Literal>(args)
+        .map_err(|e| anyhow!("pjrt execute: {e}"))?;
+    let buf = result
+        .first()
+        .and_then(|d| d.first())
+        .ok_or_else(|| anyhow!("pjrt execute returned no buffers"))?;
+    let lit = buf
+        .to_literal_sync()
+        .map_err(|e| anyhow!("fetching result literal: {e}"))?;
+    lit.to_tuple().map_err(|e| anyhow!("untupling result: {e}"))
+}
+
+impl Engine {
+    /// Load and compile every artifact under `dir` (e.g. `artifacts/fast`).
+    /// Compilation happens once here; calls afterwards only execute.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let meta = Meta::load(dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        let agg_scratch = Mutex::new(vec![0.0f32; meta.k_max * meta.n_params]);
+        Ok(Engine {
+            init: compile(&client, dir, "init")?,
+            train_step: compile(&client, dir, "train_step")?,
+            train_epoch: compile(&client, dir, "train_epoch")?,
+            eval_round: compile(&client, dir, "eval_round")?,
+            eval_full: compile(&client, dir, "eval_full")?,
+            aggregate: compile(&client, dir, "aggregate")?,
+            meta,
+            dir: dir.to_path_buf(),
+            client,
+            agg_scratch,
+        })
+    }
+
+    /// Artifact directory this engine was loaded from.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn meta(&self) -> &Meta {
+        &self.meta
+    }
+
+    /// Single-minibatch SGD step (tests/micro-benches; the request path uses
+    /// `train_round`). `xs`: (B, img, img, C) flat.
+    pub fn train_step(
+        &self,
+        params: &[f32],
+        xs: &[f32],
+        ys: &[i32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        let m = &self.meta;
+        let args = [
+            lit_f32(params, &[m.n_params])?,
+            lit_f32(xs, &[m.batch, m.img, m.img, m.channels])?,
+            lit_i32(ys, &[m.batch])?,
+            Literal::scalar(lr),
+        ];
+        let out = run(&self.train_step, &args)?;
+        let [p, loss]: [Literal; 2] = out
+            .try_into()
+            .map_err(|_| anyhow!("train_step: expected 2 outputs"))?;
+        Ok((
+            p.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?,
+            loss.get_first_element::<f32>().map_err(|e| anyhow!("{e}"))?,
+        ))
+    }
+}
+
+/// Inherent request-path calls (the thread-shareable [`SharedEngine`] is the
+/// [`Trainer`] implementor; `Engine` itself holds non-`Send` PJRT handles).
+impl Engine {
+    pub fn init(&self, seed: u32) -> Result<Vec<f32>> {
+        let seed_lit = Literal::scalar(seed);
+        let out = run(&self.init, &[seed_lit])?;
+        let p = out
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("init: no output"))?;
+        p.to_vec::<f32>().map_err(|e| anyhow!("{e}"))
+    }
+
+    pub fn train_round(
+        &self,
+        params: &[f32],
+        xs: &[f32],
+        ys: &[i32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        let m = &self.meta;
+        if xs.len() != m.train_x_len() || ys.len() != m.train_y_len() {
+            bail!(
+                "train_round shapes: xs {} (want {}), ys {} (want {})",
+                xs.len(),
+                m.train_x_len(),
+                ys.len(),
+                m.train_y_len()
+            );
+        }
+        let args = [
+            lit_f32(params, &[m.n_params])?,
+            lit_f32(xs, &[m.nb_train, m.batch, m.img, m.img, m.channels])?,
+            lit_i32(ys, &[m.nb_train, m.batch])?,
+            Literal::scalar(lr),
+        ];
+        let out = run(&self.train_epoch, &args)?;
+        let [p, loss]: [Literal; 2] = out
+            .try_into()
+            .map_err(|_| anyhow!("train_epoch: expected 2 outputs"))?;
+        Ok((
+            p.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?,
+            loss.get_first_element::<f32>().map_err(|e| anyhow!("{e}"))?,
+        ))
+    }
+
+    pub fn eval(&self, params: &[f32], xs: &[f32], ys: &[i32], full: bool) -> Result<(u32, f32)> {
+        let m = &self.meta;
+        let nb = if full { m.nb_eval_full } else { m.nb_eval_round };
+        if xs.len() != m.eval_x_len(full) || ys.len() != m.eval_y_len(full) {
+            bail!(
+                "eval shapes: xs {} (want {}), ys {} (want {})",
+                xs.len(),
+                m.eval_x_len(full),
+                ys.len(),
+                m.eval_y_len(full)
+            );
+        }
+        let exe = if full { &self.eval_full } else { &self.eval_round };
+        let args = [
+            lit_f32(params, &[m.n_params])?,
+            lit_f32(xs, &[nb, m.batch, m.img, m.img, m.channels])?,
+            lit_i32(ys, &[nb, m.batch])?,
+        ];
+        let out = run(exe, &args)?;
+        let [correct, loss]: [Literal; 2] = out
+            .try_into()
+            .map_err(|_| anyhow!("eval: expected 2 outputs"))?;
+        let c = correct.get_first_element::<i32>().map_err(|e| anyhow!("{e}"))?;
+        Ok((
+            c.max(0) as u32,
+            loss.get_first_element::<f32>().map_err(|e| anyhow!("{e}"))?,
+        ))
+    }
+
+    pub fn aggregate(&self, rows: &[(&[f32], f32)]) -> Result<Vec<f32>> {
+        let m = &self.meta;
+        check_aggregate_rows(m, rows)?;
+        // Pack rows into the fixed (k_max, P) staging buffer; absent rows
+        // keep weight 0 so their (stale) contents are masked out by the
+        // kernel. The buffer is reused across calls — no per-round 14 MB
+        // allocation at paper scale.
+        let mut stack = self.agg_scratch.lock().unwrap_or_else(|p| p.into_inner());
+        let mut weights = vec![0.0f32; m.k_max];
+        for (i, (p, w)) in rows.iter().enumerate() {
+            stack[i * m.n_params..(i + 1) * m.n_params].copy_from_slice(p);
+            weights[i] = *w;
+        }
+        let args = [
+            lit_f32(&stack, &[m.k_max, m.n_params])?,
+            lit_f32(&weights, &[m.k_max])?,
+        ];
+        let out = run(&self.aggregate, &args)?;
+        let p = out
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("aggregate: no output"))?;
+        p.to_vec::<f32>().map_err(|e| anyhow!("{e}"))
+    }
+}
+
+/// Thread-shareable engine. The `xla` wrapper types hold raw C pointers and
+/// are not `Send`/`Sync` by default; the PJRT CPU client itself is
+/// thread-safe, and we additionally serialize calls behind a mutex so one
+/// process-wide compile cache serves all simulated clients.
+pub struct SharedEngine {
+    inner: Mutex<Engine>,
+    meta: Meta,
+}
+
+// SAFETY: all access to the inner Engine (and thus to the PJRT C API) is
+// serialized through the Mutex; PJRT CPU objects may be used from any thread
+// as long as calls do not race.
+unsafe impl Send for SharedEngine {}
+unsafe impl Sync for SharedEngine {}
+
+impl SharedEngine {
+    pub fn load(dir: &Path) -> Result<SharedEngine> {
+        let engine = Engine::load(dir)?;
+        let meta = engine.meta.clone();
+        Ok(SharedEngine { inner: Mutex::new(engine), meta })
+    }
+
+    pub fn from_engine(engine: Engine) -> SharedEngine {
+        let meta = engine.meta.clone();
+        SharedEngine { inner: Mutex::new(engine), meta }
+    }
+
+    fn locked(&self) -> std::sync::MutexGuard<'_, Engine> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+impl Trainer for SharedEngine {
+    fn meta(&self) -> &Meta {
+        &self.meta
+    }
+
+    fn init(&self, seed: u32) -> Result<Vec<f32>> {
+        self.locked().init(seed)
+    }
+
+    fn train_round(
+        &self,
+        params: &[f32],
+        xs: &[f32],
+        ys: &[i32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        self.locked().train_round(params, xs, ys, lr)
+    }
+
+    fn eval(&self, params: &[f32], xs: &[f32], ys: &[i32], full: bool) -> Result<(u32, f32)> {
+        self.locked().eval(params, xs, ys, full)
+    }
+
+    fn aggregate(&self, rows: &[(&[f32], f32)]) -> Result<Vec<f32>> {
+        self.locked().aggregate(rows)
+    }
+}

@@ -1,0 +1,241 @@
+//! Deterministic CPU-only [`Trainer`] used by unit/property tests and the
+//! protocol-level benches: exercises every coordinator code path (including
+//! convergence: repeated rounds genuinely contract toward a data-dependent
+//! fixed point) without paying PJRT costs.
+//!
+//! The "model" is a linear scorer over downsampled pixels trained with a
+//! perceptron-style update — real enough that accuracy moves with data
+//! quality and rounds, tiny enough to run thousands of simulated rounds.
+
+use anyhow::Result;
+
+use super::{check_aggregate_rows, Meta, Trainer};
+
+/// Mock trainer with the same static-shape discipline as the PJRT engine.
+pub struct MockTrainer {
+    meta: Meta,
+    /// Convergence contraction per round (params drift toward batch mean).
+    pub lr_scale: f32,
+}
+
+impl MockTrainer {
+    pub fn new(meta: Meta) -> Self {
+        MockTrainer { meta, lr_scale: 1.0 }
+    }
+
+    /// A small default meta (decoupled from artifact files on disk).
+    pub fn tiny() -> Self {
+        MockTrainer::new(Meta {
+            config: "mock".into(),
+            n_params: 330, // classes * (features=32) + classes*... see below
+            img: 8,
+            channels: 3,
+            classes: 10,
+            batch: 16,
+            nb_train: 2,
+            nb_eval_round: 4,
+            nb_eval_full: 8,
+            k_max: 16,
+        })
+    }
+
+    /// Feature count: mean-pooled channels (img*img*C -> 32 buckets).
+    fn n_features(&self) -> usize {
+        32
+    }
+
+    /// (weights per class, bias per class) flattened = classes*(feat+1).
+    fn check_params(&self) -> usize {
+        self.meta.classes * (self.n_features() + 1)
+    }
+
+    fn featurize(&self, img: &[f32]) -> Vec<f32> {
+        let f = self.n_features();
+        let mut out = vec![0.0f32; f];
+        let chunk = img.len().div_ceil(f);
+        for (i, v) in img.iter().enumerate() {
+            out[(i / chunk).min(f - 1)] += v;
+        }
+        let norm = (chunk as f32).max(1.0);
+        for o in &mut out {
+            *o /= norm;
+        }
+        out
+    }
+
+    fn scores(&self, params: &[f32], feat: &[f32]) -> Vec<f32> {
+        let f = self.n_features();
+        (0..self.meta.classes)
+            .map(|c| {
+                let base = c * (f + 1);
+                let w = &params[base..base + f];
+                let b = params[base + f];
+                w.iter().zip(feat).map(|(a, x)| a * x).sum::<f32>() + b
+            })
+            .collect()
+    }
+}
+
+impl Trainer for MockTrainer {
+    fn meta(&self) -> &Meta {
+        &self.meta
+    }
+
+    fn init(&self, seed: u32) -> Result<Vec<f32>> {
+        // Deterministic tiny init from the seed (same seed -> same model).
+        let n = self.check_params();
+        let mut rng = crate::util::Rng::new(seed as u64 ^ 0xC0FF_EE00);
+        Ok((0..n).map(|_| rng.normal() * 0.01).collect())
+    }
+
+    fn train_round(
+        &self,
+        params: &[f32],
+        xs: &[f32],
+        ys: &[i32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        let m = &self.meta;
+        anyhow::ensure!(params.len() == self.check_params(), "mock param len");
+        anyhow::ensure!(xs.len() == m.train_x_len(), "mock xs len");
+        anyhow::ensure!(ys.len() == m.train_y_len(), "mock ys len");
+        let img_len = m.img * m.img * m.channels;
+        let f = self.n_features();
+        let mut p = params.to_vec();
+        let mut loss_sum = 0.0f64;
+        let n = ys.len();
+        for (i, &label) in ys.iter().enumerate() {
+            let feat = self.featurize(&xs[i * img_len..(i + 1) * img_len]);
+            let s = self.scores(&p, &feat);
+            // softmax xent + gradient step on the one example
+            let mx = s.iter().cloned().fold(f32::MIN, f32::max);
+            let exps: Vec<f32> = s.iter().map(|v| (v - mx).exp()).collect();
+            let z: f32 = exps.iter().sum();
+            let label = label as usize % m.classes;
+            loss_sum += -((exps[label] / z).max(1e-9).ln()) as f64;
+            for c in 0..m.classes {
+                let prob = exps[c] / z;
+                let g = prob - if c == label { 1.0 } else { 0.0 };
+                let base = c * (f + 1);
+                for (j, x) in feat.iter().enumerate() {
+                    p[base + j] -= lr * self.lr_scale * g * x;
+                }
+                p[base + f] -= lr * self.lr_scale * g;
+            }
+        }
+        Ok((p, (loss_sum / n as f64) as f32))
+    }
+
+    fn eval(&self, params: &[f32], xs: &[f32], ys: &[i32], full: bool) -> Result<(u32, f32)> {
+        let m = &self.meta;
+        anyhow::ensure!(xs.len() == m.eval_x_len(full), "mock eval xs len");
+        anyhow::ensure!(ys.len() == m.eval_y_len(full), "mock eval ys len");
+        let img_len = m.img * m.img * m.channels;
+        let mut correct = 0u32;
+        let mut loss_sum = 0.0f64;
+        for (i, &label) in ys.iter().enumerate() {
+            let feat = self.featurize(&xs[i * img_len..(i + 1) * img_len]);
+            let s = self.scores(params, &feat);
+            let pred = s
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            let label = label as usize % m.classes;
+            if pred == label {
+                correct += 1;
+            }
+            let mx = s.iter().cloned().fold(f32::MIN, f32::max);
+            let z: f32 = s.iter().map(|v| (v - mx).exp()).sum();
+            loss_sum += -((((s[label] - mx).exp()) / z).max(1e-9).ln()) as f64;
+        }
+        Ok((correct, (loss_sum / ys.len() as f64) as f32))
+    }
+
+    fn aggregate(&self, rows: &[(&[f32], f32)]) -> Result<Vec<f32>> {
+        // The mock bypasses the n_params check of the real meta (its param
+        // count is check_params()), but keeps weight/row-count validation.
+        let mut meta = self.meta.clone();
+        meta.n_params = self.check_params();
+        check_aggregate_rows(&meta, rows)?;
+        let n = rows[0].0.len();
+        let wsum: f32 = rows.iter().map(|(_, w)| w).sum();
+        let mut out = vec![0.0f32; n];
+        if wsum <= 0.0 {
+            return Ok(out);
+        }
+        for (p, w) in rows {
+            for (o, x) in out.iter_mut().zip(*p) {
+                *o += w / wsum * x;
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn data(m: &Meta, rng: &mut Rng, n: usize) -> (Vec<f32>, Vec<i32>) {
+        // class-dependent mean so the linear mock can actually learn
+        let img_len = m.img * m.img * m.channels;
+        let mut xs = Vec::with_capacity(n * img_len);
+        let mut ys = Vec::with_capacity(n);
+        for _ in 0..n {
+            let c = rng.below(m.classes) as i32;
+            for j in 0..img_len {
+                let base = if (j / 16) % m.classes == c as usize { 1.0 } else { 0.0 };
+                xs.push(base + 0.3 * rng.normal());
+            }
+            ys.push(c);
+        }
+        (xs, ys)
+    }
+
+    #[test]
+    fn mock_learns() {
+        let t = MockTrainer::tiny();
+        let m = t.meta().clone();
+        let mut rng = Rng::new(5);
+        let mut p = t.init(0).unwrap();
+        let (exs, eys) = data(&m, &mut rng, m.nb_eval_round * m.batch);
+        let (c0, _) = t.eval(&p, &exs, &eys, false).unwrap();
+        for _ in 0..10 {
+            let (xs, ys) = data(&m, &mut rng, m.nb_train * m.batch);
+            let (p2, _) = t.train_round(&p, &xs, &ys, 0.1).unwrap();
+            p = p2;
+        }
+        let (c1, _) = t.eval(&p, &exs, &eys, false).unwrap();
+        assert!(c1 > c0, "no learning: {c0} -> {c1}");
+    }
+
+    #[test]
+    fn mock_init_deterministic() {
+        let t = MockTrainer::tiny();
+        assert_eq!(t.init(3).unwrap(), t.init(3).unwrap());
+        assert_ne!(t.init(3).unwrap(), t.init(4).unwrap());
+    }
+
+    #[test]
+    fn mock_aggregate_is_weighted_mean() {
+        let t = MockTrainer::tiny();
+        let n = t.check_params();
+        let a = vec![1.0f32; n];
+        let b = vec![3.0f32; n];
+        let out = t.aggregate(&[(&a, 1.0), (&b, 1.0)]).unwrap();
+        assert!(out.iter().all(|&x| (x - 2.0).abs() < 1e-6));
+        let out = t.aggregate(&[(&a, 3.0), (&b, 1.0)]).unwrap();
+        assert!(out.iter().all(|&x| (x - 1.5).abs() < 1e-6));
+    }
+
+    #[test]
+    fn mock_rejects_bad_shapes() {
+        let t = MockTrainer::tiny();
+        let p = t.init(0).unwrap();
+        assert!(t.train_round(&p, &[0.0; 3], &[0; 3], 0.1).is_err());
+        assert!(t.eval(&p, &[0.0; 3], &[0; 3], false).is_err());
+    }
+}

@@ -1,0 +1,179 @@
+//! Runtime bridge: load the AOT artifacts (`artifacts/<cfg>/*.hlo.txt`)
+//! once per process via the PJRT CPU client and execute them on the hot
+//! path.  Python never runs at request time.
+//!
+//! The coordinator is written against the [`Trainer`] trait so protocol
+//! logic can be unit/property-tested with the deterministic [`MockTrainer`]
+//! while deployments use the PJRT-backed [`Engine`] / [`SharedEngine`].
+
+mod engine;
+mod mock;
+
+pub use engine::{Engine, SharedEngine};
+pub use mock::MockTrainer;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Artifact metadata emitted by `python -m compile.aot` (`meta.txt`):
+/// the exact static shapes every request-path call must feed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Meta {
+    pub config: String,
+    pub n_params: usize,
+    pub img: usize,
+    pub channels: usize,
+    pub classes: usize,
+    pub batch: usize,
+    pub nb_train: usize,
+    pub nb_eval_round: usize,
+    pub nb_eval_full: usize,
+    pub k_max: usize,
+}
+
+impl Meta {
+    pub fn parse(text: &str) -> Result<Meta> {
+        let mut kv = BTreeMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("bad meta line {line:?}"))?;
+            kv.insert(k.to_string(), v.to_string());
+        }
+        let get = |k: &str| -> Result<usize> {
+            kv.get(k)
+                .with_context(|| format!("meta missing key {k}"))?
+                .parse::<usize>()
+                .with_context(|| format!("meta key {k} not an integer"))
+        };
+        Ok(Meta {
+            config: kv.get("config").cloned().unwrap_or_default(),
+            n_params: get("n_params")?,
+            img: get("img")?,
+            channels: get("channels")?,
+            classes: get("classes")?,
+            batch: get("batch")?,
+            nb_train: get("nb_train")?,
+            nb_eval_round: get("nb_eval_round")?,
+            nb_eval_full: get("nb_eval_full")?,
+            k_max: get("k_max")?,
+        })
+    }
+
+    pub fn load(dir: &Path) -> Result<Meta> {
+        let path = dir.join("meta.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Meta::parse(&text)
+    }
+
+    /// Element count of one training-round image tensor (nb, B, img, img, C).
+    pub fn train_x_len(&self) -> usize {
+        self.nb_train * self.batch * self.img * self.img * self.channels
+    }
+
+    pub fn train_y_len(&self) -> usize {
+        self.nb_train * self.batch
+    }
+
+    pub fn eval_x_len(&self, full: bool) -> usize {
+        let nb = if full { self.nb_eval_full } else { self.nb_eval_round };
+        nb * self.batch * self.img * self.img * self.channels
+    }
+
+    pub fn eval_y_len(&self, full: bool) -> usize {
+        (if full { self.nb_eval_full } else { self.nb_eval_round }) * self.batch
+    }
+}
+
+/// The compute interface the coordinator drives.  One local round of
+/// Algorithm 2 is exactly: `train_round` → broadcast → collect →
+/// `aggregate` → `eval_round`.
+pub trait Trainer: Send + Sync {
+    fn meta(&self) -> &Meta;
+
+    /// Derive the common model-0 from a seed (all clients call this with the
+    /// same seed; the paper assumes a shared initialization).
+    fn init(&self, seed: u32) -> Result<Vec<f32>>;
+
+    /// One local training round over `nb_train` minibatches.
+    /// `xs`: flat (nb, B, img, img, C) f32, `ys`: flat (nb, B) i32 labels.
+    /// Returns (updated params, mean loss).
+    fn train_round(&self, params: &[f32], xs: &[f32], ys: &[i32], lr: f32)
+        -> Result<(Vec<f32>, f32)>;
+
+    /// Evaluate on a probe (`full = false`) or the full test tensor
+    /// (`full = true`).  Returns (correct count, mean loss).
+    fn eval(&self, params: &[f32], xs: &[f32], ys: &[i32], full: bool) -> Result<(u32, f32)>;
+
+    /// Masked FedAvg: `rows` are (model, weight) pairs; at most
+    /// `meta().k_max` rows participate (the caller enforces this).
+    fn aggregate(&self, rows: &[(&[f32], f32)]) -> Result<Vec<f32>>;
+}
+
+/// Validate row shapes shared by both Trainer impls.
+pub(crate) fn check_aggregate_rows(meta: &Meta, rows: &[(&[f32], f32)]) -> Result<()> {
+    if rows.is_empty() {
+        bail!("aggregate called with zero rows");
+    }
+    if rows.len() > meta.k_max {
+        bail!("aggregate rows {} exceed k_max {}", rows.len(), meta.k_max);
+    }
+    for (i, (p, w)) in rows.iter().enumerate() {
+        if p.len() != meta.n_params {
+            bail!("aggregate row {i} has {} params, want {}", p.len(), meta.n_params);
+        }
+        if !w.is_finite() || *w < 0.0 {
+            bail!("aggregate row {i} has invalid weight {w}");
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const META_TEXT: &str = "config=tiny\nn_params=6202\nimg=8\nchannels=3\nclasses=10\nbatch=16\nnb_train=2\nnb_eval_round=4\nnb_eval_full=8\nk_max=16\n";
+
+    #[test]
+    fn meta_parses() {
+        let m = Meta::parse(META_TEXT).unwrap();
+        assert_eq!(m.config, "tiny");
+        assert_eq!(m.n_params, 6202);
+        assert_eq!(m.train_x_len(), 2 * 16 * 8 * 8 * 3);
+        assert_eq!(m.train_y_len(), 32);
+        assert_eq!(m.eval_x_len(false), 4 * 16 * 8 * 8 * 3);
+        assert_eq!(m.eval_y_len(true), 8 * 16);
+    }
+
+    #[test]
+    fn meta_missing_key_errors() {
+        assert!(Meta::parse("config=x\nn_params=10\n").is_err());
+    }
+
+    #[test]
+    fn meta_bad_value_errors() {
+        assert!(Meta::parse(&META_TEXT.replace("6202", "abc")).is_err());
+    }
+
+    #[test]
+    fn aggregate_row_validation() {
+        let m = Meta::parse(META_TEXT).unwrap();
+        let good = vec![1.0f32; m.n_params];
+        assert!(check_aggregate_rows(&m, &[]).is_err());
+        assert!(check_aggregate_rows(&m, &[(&good, 1.0)]).is_ok());
+        let bad = vec![1.0f32; 3];
+        assert!(check_aggregate_rows(&m, &[(&bad, 1.0)]).is_err());
+        assert!(check_aggregate_rows(&m, &[(&good, f32::NAN)]).is_err());
+        assert!(check_aggregate_rows(&m, &[(&good, -1.0)]).is_err());
+        let many: Vec<(&[f32], f32)> = (0..17).map(|_| (good.as_slice(), 1.0)).collect();
+        assert!(check_aggregate_rows(&m, &many).is_err());
+    }
+}

@@ -1,0 +1,242 @@
+//! Deterministic in-process N-client deployments.
+//!
+//! Spawns one OS thread per client over an [`InProcHub`] network, with a
+//! machine-contention model standing in for the paper's 1/2/3-machine LAN
+//! testbed (DESIGN.md §3): clients are round-robined onto `machines`
+//! virtual hosts whose relative clock speeds follow Table 1
+//! (4.0 / 2.0 / 3.5 GHz) and whose per-host contention grows with
+//! co-located client count — exactly the effect the paper observes when
+//! all 12 clients share one box.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::async_client::{AsyncClient, ClientData};
+use crate::coordinator::config::ProtocolConfig;
+use crate::coordinator::fault::FaultPlan;
+use crate::coordinator::sync::SyncClient;
+use crate::coordinator::termination::TerminationCause;
+use crate::data::{dirichlet_partition, fixed_chunk, iid_partition, skewed_chunk, Dataset};
+use crate::metrics::ClientReport;
+use crate::net::{InProcHub, NetworkModel};
+use crate::runtime::Trainer;
+use crate::util::Rng;
+
+/// How client data is split (paper settings).
+#[derive(Clone, Copy, Debug)]
+pub enum Partition {
+    Iid,
+    /// Dirichlet(α) non-IID (paper: α = 0.6).
+    Dirichlet(f64),
+    /// Every client draws an independent fixed-size chunk (Table 2).
+    FixedChunk(usize),
+    /// Fixed-size chunk with Dirichlet(α)-skewed class mix (Table 2 non-IID
+    /// single-client baseline).
+    SkewedChunk { size: usize, alpha: f64 },
+    /// Everyone trains on the whole dataset (Table 2 "full" baseline).
+    Full,
+}
+
+/// Relative clock-speed factors of the paper's machines (Table 1):
+/// M1 4.0 GHz, M2 2.0 GHz, M3 3.5 GHz → slowdown = 4.0/GHz − 1.
+const MACHINE_SLOWDOWN: [f32; 3] = [0.0, 1.0, 0.143];
+/// Extra slowdown per co-located client beyond the first (contention).
+const CONTENTION_PER_CLIENT: f32 = 0.06;
+
+/// Full specification of one simulated deployment.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub n_clients: usize,
+    pub protocol: ProtocolConfig,
+    pub partition: Partition,
+    /// Phase 1 (sync, Algorithm 1) instead of Phase 2 (async, Algorithm 2).
+    pub sync: bool,
+    /// Virtual machine count (1–3): the paper's deployment variable.
+    pub machines: usize,
+    pub train_n: usize,
+    pub test_n: usize,
+    pub net: NetworkModel,
+    /// Per-client crash schedule (empty = fault-free).
+    pub faults: Vec<FaultPlan>,
+    pub seed: u64,
+}
+
+impl SimConfig {
+    pub fn new(n_clients: usize, trainer_meta_test_batches: usize) -> Self {
+        // test_n must cover the eval_full tensor
+        SimConfig {
+            n_clients,
+            protocol: ProtocolConfig::default(),
+            partition: Partition::Dirichlet(0.6),
+            sync: false,
+            machines: 1,
+            train_n: 2000,
+            test_n: trainer_meta_test_batches,
+            net: NetworkModel::lan(7),
+            faults: Vec::new(),
+            seed: 7,
+        }
+    }
+
+    /// Convenience: derive a config with dataset sizes adequate for `meta`.
+    pub fn for_meta(n_clients: usize, meta: &crate::runtime::Meta) -> Self {
+        let test_n = meta.nb_eval_full * meta.batch;
+        let mut cfg = SimConfig::new(n_clients, test_n);
+        cfg.train_n = (200 * n_clients).max(1000);
+        cfg
+    }
+
+    fn machine_of(&self, client: usize) -> usize {
+        client % self.machines.clamp(1, 3)
+    }
+
+    /// Slowdown factor for a client given its machine + co-location count.
+    fn slowdown_of(&self, client: usize) -> f32 {
+        let m = self.machine_of(client);
+        let colocated = (0..self.n_clients).filter(|&c| self.machine_of(c) == m).count();
+        let contention = CONTENTION_PER_CLIENT * (colocated.saturating_sub(1)) as f32;
+        (1.0 + MACHINE_SLOWDOWN[m]) * (1.0 + contention) - 1.0
+    }
+}
+
+/// Outcome of a deployment: every client's report plus aggregates.
+#[derive(Debug)]
+pub struct SimResult {
+    pub reports: Vec<ClientReport>,
+    pub wall: Duration,
+    pub machines: usize,
+    pub machine_of: Vec<usize>,
+}
+
+impl SimResult {
+    /// Mean full-test accuracy over clients that completed (not crashed).
+    pub fn mean_accuracy(&self) -> Option<f32> {
+        crate::metrics::mean(self.reports.iter().filter_map(|r| r.final_accuracy))
+    }
+
+    /// Max rounds completed by any non-crashed client.
+    pub fn rounds(&self) -> u32 {
+        self.reports
+            .iter()
+            .filter(|r| r.cause != TerminationCause::Crashed)
+            .map(|r| r.rounds_completed)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Per-virtual-machine wallclock = slowest client on that machine
+    /// (the paper's M1/M2 time columns).
+    pub fn machine_times(&self) -> Vec<Duration> {
+        let mut times = vec![Duration::ZERO; self.machines];
+        for (i, r) in self.reports.iter().enumerate() {
+            let m = self.machine_of[i];
+            times[m] = times[m].max(r.wall);
+        }
+        times
+    }
+
+    pub fn crashed(&self) -> usize {
+        self.reports.iter().filter(|r| r.cause == TerminationCause::Crashed).count()
+    }
+
+    /// Termination-detection health: every non-crashed client ended by CCC
+    /// or CRT (not by hitting the hard round cap).
+    pub fn all_terminated_adaptively(&self) -> bool {
+        self.reports
+            .iter()
+            .filter(|r| r.cause != TerminationCause::Crashed)
+            .all(|r| matches!(r.cause, TerminationCause::Converged | TerminationCause::Signaled))
+    }
+}
+
+/// Run one deployment to completion.
+pub fn run(trainer: &(dyn Trainer + Sync), cfg: &SimConfig) -> Result<SimResult> {
+    let meta = trainer.meta().clone();
+    anyhow::ensure!(cfg.n_clients >= 1, "need at least one client");
+    anyhow::ensure!(
+        cfg.n_clients <= meta.k_max,
+        "n_clients {} exceeds aggregate k_max {}",
+        cfg.n_clients,
+        meta.k_max
+    );
+    anyhow::ensure!(
+        cfg.faults.is_empty() || cfg.faults.len() == cfg.n_clients,
+        "faults must be empty or one per client"
+    );
+
+    // --- data --------------------------------------------------------------
+    let test_n = cfg.test_n.max(meta.nb_eval_full * meta.batch);
+    let (train, test) = Dataset::synthetic_pair(&meta, cfg.train_n, test_n, cfg.seed);
+    let train = Arc::new(train);
+    let mut rng = Rng::new(cfg.seed ^ 0x5EED);
+    let parts: Vec<Vec<usize>> = match cfg.partition {
+        Partition::Iid => iid_partition(&train, cfg.n_clients, &mut rng),
+        Partition::Dirichlet(a) => dirichlet_partition(&train, cfg.n_clients, a, &mut rng),
+        Partition::FixedChunk(size) => (0..cfg.n_clients)
+            .map(|_| fixed_chunk(&train, size, &mut rng))
+            .collect(),
+        Partition::SkewedChunk { size, alpha } => (0..cfg.n_clients)
+            .map(|_| skewed_chunk(&train, size, alpha, &mut rng))
+            .collect(),
+        Partition::Full => (0..cfg.n_clients).map(|_| (0..train.len()).collect()).collect(),
+    };
+
+    // --- network + clients ---------------------------------------------------
+    let hub = InProcHub::new(cfg.n_clients, cfg.net.clone());
+    let t0 = Instant::now();
+    let reports: Result<Vec<ClientReport>> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (i, indices) in parts.into_iter().enumerate() {
+            let endpoint = hub.endpoint(i as u32);
+            let data = ClientData::new(Arc::clone(&train), indices, &test, &meta);
+            let fault = cfg.faults.get(i).copied().unwrap_or_default();
+            let protocol = cfg.protocol.clone();
+            let client_rng = Rng::new(cfg.seed ^ (0xC11E << 8) ^ i as u64);
+            let slowdown = cfg.slowdown_of(i);
+            let sync = cfg.sync;
+            handles.push(scope.spawn(move || -> Result<ClientReport> {
+                if sync {
+                    SyncClient {
+                        id: i as u32,
+                        trainer,
+                        transport: Box::new(endpoint),
+                        cfg: protocol,
+                        data,
+                        rng: client_rng,
+                        slowdown,
+                    }
+                    .run()
+                } else {
+                    AsyncClient {
+                        id: i as u32,
+                        trainer,
+                        transport: Box::new(endpoint),
+                        cfg: protocol,
+                        data,
+                        fault,
+                        rng: client_rng,
+                        slowdown,
+                    }
+                    .run()
+                }
+            }));
+        }
+        handles
+            .into_iter()
+            .enumerate()
+            .map(|(i, h)| {
+                h.join()
+                    .map_err(|_| anyhow::anyhow!("client {i} panicked"))?
+                    .with_context(|| format!("client {i} failed"))
+            })
+            .collect()
+    });
+    Ok(SimResult {
+        wall: t0.elapsed(),
+        machines: cfg.machines.clamp(1, 3),
+        machine_of: (0..cfg.n_clients).map(|c| cfg.machine_of(c)).collect(),
+        reports: reports?,
+    })
+}

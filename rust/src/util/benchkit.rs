@@ -1,0 +1,175 @@
+//! Micro/bench harness (the `criterion` substrate).
+//!
+//! Warmup + timed iterations with mean / p50 / p95 / p99 reporting, plus a
+//! table printer the per-figure experiment benches use to emit paper-shaped
+//! rows. Benches are built with `harness = false` and call these directly.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over per-iteration wallclock samples.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    fn from_samples(name: &str, mut samples: Vec<Duration>) -> Stats {
+        samples.sort();
+        let n = samples.len();
+        let total: Duration = samples.iter().sum();
+        let pct = |p: f64| samples[((n as f64 - 1.0) * p) as usize];
+        Stats {
+            name: name.to_string(),
+            iters: n,
+            mean: total / n as u32,
+            p50: pct(0.50),
+            p95: pct(0.95),
+            p99: pct(0.99),
+            min: samples[0],
+            max: samples[n - 1],
+        }
+    }
+
+    pub fn print(&self) {
+        println!(
+            "{:<38} iters={:<5} mean={:>10.3?} p50={:>10.3?} p95={:>10.3?} p99={:>10.3?}",
+            self.name, self.iters, self.mean, self.p50, self.p95, self.p99
+        );
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unrecorded runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Stats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    let stats = Stats::from_samples(name, samples);
+    stats.print();
+    stats
+}
+
+/// Time `f` until roughly `budget` wallclock is spent (at least 3 iters).
+pub fn bench_for<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> Stats {
+    f(); // warmup
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.len() < 3 {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        if samples.len() > 10_000 {
+            break;
+        }
+    }
+    let stats = Stats::from_samples(name, samples);
+    stats.print();
+    stats
+}
+
+/// Keep a value from being optimized away (stable `black_box` substitute).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Fixed-width table printer for paper-shaped experiment output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "table arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self, title: &str) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n== {title} ==");
+        let line = |cells: &[String]| {
+            let cols: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect();
+            println!("| {} |", cols.join(" | "));
+        };
+        line(&self.headers);
+        println!(
+            "|{}|",
+            widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|")
+        );
+        for row in &self.rows {
+            line(row);
+        }
+    }
+
+    /// Render as a markdown table (for EXPERIMENTS.md capture).
+    pub fn markdown(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("| {} |\n", self.headers.join(" | ")));
+        s.push_str(&format!(
+            "|{}|\n",
+            self.headers.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        ));
+        for row in &self.rows {
+            s.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_ordered_stats() {
+        let s = bench("noop", 2, 50, || {
+            black_box(1 + 1);
+        });
+        assert_eq!(s.iters, 50);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new(&["Clients", "Acc"]);
+        t.row(&["2".into(), "59.78".into()]);
+        t.row(&["10".into(), "67.47".into()]);
+        let md = t.markdown();
+        assert!(md.contains("| Clients | Acc |"));
+        assert!(md.contains("| 10 | 67.47 |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only one".into()]);
+    }
+}

@@ -1,0 +1,216 @@
+//! Minimal declarative CLI flag parser (the `clap` substrate).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, typed getters with defaults, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// One registered flag (for help text + boolean detection).
+#[derive(Clone)]
+struct Spec {
+    name: &'static str,
+    help: &'static str,
+    is_bool: bool,
+    default: Option<String>,
+}
+
+/// Declarative flag set; call [`Flags::parse`] on `std::env::args`-style
+/// input to get an [`Args`] bag.
+pub struct Flags {
+    command: &'static str,
+    about: &'static str,
+    specs: Vec<Spec>,
+}
+
+impl Flags {
+    pub fn new(command: &'static str, about: &'static str) -> Self {
+        Flags { command, about, specs: Vec::new() }
+    }
+
+    /// Register a value flag with an optional default (None = required).
+    pub fn opt(mut self, name: &'static str, default: Option<&str>, help: &'static str) -> Self {
+        self.specs.push(Spec {
+            name,
+            help,
+            is_bool: false,
+            default: default.map(str::to_string),
+        });
+        self
+    }
+
+    /// Register a boolean switch (defaults to false).
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(Spec { name, help, is_bool: true, default: None });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nflags:\n", self.command, self.about);
+        for spec in &self.specs {
+            let d = match (&spec.default, spec.is_bool) {
+                (_, true) => " (switch)".to_string(),
+                (Some(d), _) => format!(" (default {d})"),
+                (None, _) => " (required)".to_string(),
+            };
+            s.push_str(&format!("  --{:<18} {}{}\n", spec.name, spec.help, d));
+        }
+        s
+    }
+
+    /// Parse raw args (without the program/subcommand names).
+    pub fn parse<I: IntoIterator<Item = String>>(&self, args: I) -> Result<Args> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut positional = Vec::new();
+        for spec in &self.specs {
+            if let Some(d) = &spec.default {
+                values.insert(spec.name.to_string(), d.clone());
+            }
+        }
+        let mut it = args.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                bail!("{}", self.usage());
+            }
+            if let Some(name) = arg.strip_prefix("--") {
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .with_context(|| format!("unknown flag --{name}\n{}", self.usage()))?;
+                let value = if spec.is_bool {
+                    inline.unwrap_or_else(|| "true".to_string())
+                } else {
+                    match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .with_context(|| format!("--{name} requires a value"))?,
+                    }
+                };
+                values.insert(name.to_string(), value);
+            } else {
+                positional.push(arg);
+            }
+        }
+        for spec in &self.specs {
+            if !spec.is_bool && spec.default.is_none() && !values.contains_key(spec.name) {
+                bail!("missing required flag --{}\n{}", spec.name, self.usage());
+            }
+        }
+        Ok(Args { values, positional })
+    }
+}
+
+/// Parsed argument bag with typed getters.
+pub struct Args {
+    values: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn str(&self, name: &str) -> &str {
+        self.values.get(name).map(String::as_str).unwrap_or("")
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize> {
+        self.values
+            .get(name)
+            .with_context(|| format!("missing --{name}"))?
+            .parse()
+            .with_context(|| format!("--{name} must be an integer"))
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64> {
+        Ok(self.usize(name)? as u64)
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64> {
+        self.values
+            .get(name)
+            .with_context(|| format!("missing --{name}"))?
+            .parse()
+            .with_context(|| format!("--{name} must be a float"))
+    }
+
+    pub fn f32(&self, name: &str) -> Result<f32> {
+        Ok(self.f64(name)? as f32)
+    }
+
+    pub fn bool(&self, name: &str) -> bool {
+        matches!(
+            self.values.get(name).map(String::as_str),
+            Some("true") | Some("1") | Some("yes")
+        )
+    }
+
+    pub fn csv_usize(&self, name: &str) -> Result<Vec<usize>> {
+        self.str(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .with_context(|| format!("--{name}: bad integer {s:?}"))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flags() -> Flags {
+        Flags::new("test", "test command")
+            .opt("clients", Some("4"), "number of clients")
+            .opt("alpha", Some("0.6"), "dirichlet alpha")
+            .opt("name", None, "required name")
+            .switch("verbose", "noisy output")
+    }
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = flags().parse(sv(&["--name", "x"])).unwrap();
+        assert_eq!(a.usize("clients").unwrap(), 4);
+        assert_eq!(a.f32("alpha").unwrap(), 0.6);
+        assert!(!a.bool("verbose"));
+    }
+
+    #[test]
+    fn values_and_switches() {
+        let a = flags()
+            .parse(sv(&["--clients", "12", "--verbose", "--name=y", "pos1"]))
+            .unwrap();
+        assert_eq!(a.usize("clients").unwrap(), 12);
+        assert!(a.bool("verbose"));
+        assert_eq!(a.str("name"), "y");
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(flags().parse(sv(&[])).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(flags().parse(sv(&["--nope", "1", "--name", "x"])).is_err());
+    }
+
+    #[test]
+    fn csv_parsing() {
+        let f = Flags::new("t", "").opt("ns", Some("4,6,8"), "");
+        let a = f.parse(sv(&[])).unwrap();
+        assert_eq!(a.csv_usize("ns").unwrap(), vec![4, 6, 8]);
+    }
+}

@@ -1,0 +1,299 @@
+//! Binary wire codec (the `serde`/`bincode` substrate).
+//!
+//! Little-endian, length-prefixed frames with a magic tag, protocol version
+//! and CRC-32 trailer.  Used verbatim by both transports: over TCP the frame
+//! is the stream record; in-process it round-trips through the same bytes so
+//! tests exercise the real encoding.
+//!
+//! Frame layout:
+//! ```text
+//! [u32 magic][u8 version][u32 payload_len][payload bytes][u32 crc32(payload)]
+//! ```
+
+use anyhow::{bail, Result};
+
+pub const MAGIC: u32 = 0xD1F7_FEED;
+pub const VERSION: u8 = 1;
+
+// ---------------------------------------------------------------------------
+// CRC-32 (IEEE 802.3, table-driven)
+// ---------------------------------------------------------------------------
+
+fn crc_table() -> &'static [u32; 256] {
+    use std::sync::OnceLock;
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    })
+}
+
+/// CRC-32 of a byte slice (IEEE polynomial).
+pub fn crc32(data: &[u8]) -> u32 {
+    let table = crc_table();
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ---------------------------------------------------------------------------
+// Primitive writers/readers
+// ---------------------------------------------------------------------------
+
+/// Append-only byte sink with typed little-endian writers.
+#[derive(Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        Writer { buf: Vec::with_capacity(cap) }
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Length-prefixed f32 slice; bulk-copied as raw LE bytes.
+    pub fn f32_slice(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        self.buf.reserve(v.len() * 4);
+        // f32::to_le_bytes per element optimizes poorly; on LE targets this
+        // is a straight memcpy.
+        #[cfg(target_endian = "little")]
+        {
+            let bytes =
+                unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) };
+            self.buf.extend_from_slice(bytes);
+        }
+        #[cfg(target_endian = "big")]
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf
+    }
+}
+
+/// Cursor over a received payload with typed little-endian readers.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!(
+                "codec underrun: need {n} bytes at {} of {}",
+                self.pos,
+                self.buf.len()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn bool(&mut self) -> Result<bool> {
+        Ok(self.u8()? != 0)
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f32_vec(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n * 4)?;
+        let mut out = vec![0f32; n];
+        #[cfg(target_endian = "little")]
+        unsafe {
+            std::ptr::copy_nonoverlapping(bytes.as_ptr(), out.as_mut_ptr() as *mut u8, n * 4);
+        }
+        #[cfg(target_endian = "big")]
+        for (i, c) in bytes.chunks_exact(4).enumerate() {
+            out[i] = f32::from_le_bytes(c.try_into().unwrap());
+        }
+        Ok(out)
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        Ok(String::from_utf8(self.take(n)?.to_vec())?)
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Framing
+// ---------------------------------------------------------------------------
+
+/// Wrap a payload in the `[magic][version][len][payload][crc]` frame.
+pub fn frame(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(payload.len() + 13);
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.push(VERSION);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    out.extend_from_slice(&crc32(payload).to_le_bytes());
+    out
+}
+
+/// Parse one frame from `buf`. Returns `(payload, consumed)` or `None` if
+/// the buffer does not yet hold a complete frame. Corrupt frames error.
+pub fn deframe(buf: &[u8]) -> Result<Option<(&[u8], usize)>> {
+    if buf.len() < 13 {
+        return Ok(None);
+    }
+    let magic = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+    if magic != MAGIC {
+        bail!("bad frame magic {magic:#x}");
+    }
+    let version = buf[4];
+    if version != VERSION {
+        bail!("unsupported frame version {version}");
+    }
+    let len = u32::from_le_bytes(buf[5..9].try_into().unwrap()) as usize;
+    let total = 13 + len;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let payload = &buf[9..9 + len];
+    let crc = u32::from_le_bytes(buf[9 + len..total].try_into().unwrap());
+    if crc != crc32(payload) {
+        bail!("frame crc mismatch");
+    }
+    Ok(Some((payload, total)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vector() {
+        // Standard check value for "123456789".
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn primitives_roundtrip() {
+        let mut w = Writer::new();
+        w.u8(7);
+        w.bool(true);
+        w.u32(0xDEADBEEF);
+        w.u64(u64::MAX - 3);
+        w.f32(-1.25);
+        w.f32_slice(&[1.0, 2.5, -3.75]);
+        w.str("hello Δ");
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert!(r.bool().unwrap());
+        assert_eq!(r.u32().unwrap(), 0xDEADBEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.f32().unwrap(), -1.25);
+        assert_eq!(r.f32_vec().unwrap(), vec![1.0, 2.5, -3.75]);
+        assert_eq!(r.str().unwrap(), "hello Δ");
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        let payload = b"the payload";
+        let framed = frame(payload);
+        let (got, used) = deframe(&framed).unwrap().unwrap();
+        assert_eq!(got, payload);
+        assert_eq!(used, framed.len());
+    }
+
+    #[test]
+    fn deframe_partial_returns_none() {
+        let framed = frame(b"abcdef");
+        for cut in 0..framed.len() {
+            assert!(deframe(&framed[..cut]).unwrap().is_none(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn deframe_detects_corruption() {
+        let mut framed = frame(b"abcdef");
+        let n = framed.len();
+        framed[n - 6] ^= 0x40; // flip a payload bit
+        assert!(deframe(&framed).is_err());
+    }
+
+    #[test]
+    fn deframe_rejects_bad_magic() {
+        let mut framed = frame(b"x");
+        framed[0] ^= 0xFF;
+        assert!(deframe(&framed).is_err());
+    }
+
+    #[test]
+    fn reader_underrun_errors() {
+        let mut r = Reader::new(&[1, 2]);
+        assert!(r.u32().is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Substrate utilities the offline environment required us to own:
+//! deterministic RNG (no `rand`), binary codec (no `serde`), CLI parsing
+//! (no `clap`), property-test runner (no `proptest`), bench harness
+//! (no `criterion`).
+
+pub mod benchkit;
+pub mod cli;
+pub mod codec;
+pub mod quickcheck;
+pub mod rng;
+
+pub use rng::Rng;

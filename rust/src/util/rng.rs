@@ -1,0 +1,234 @@
+//! Deterministic PRNG + distributions (the `rand`/`rand_distr` substrate).
+//!
+//! PCG32 core (O'Neill 2014) seeded via SplitMix64, with Box-Muller
+//! gaussians, Marsaglia-Tsang gamma, and the Dirichlet sampler the non-IID
+//! data partitioner uses (paper: Dirichlet α = 0.6).
+//!
+//! Everything in the repo that needs randomness threads one of these through
+//! explicitly — experiments are reproducible from a single u64 seed.
+
+/// Permuted congruential generator (PCG-XSH-RR 64/32).
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+    inc: u64,
+}
+
+/// SplitMix64 step — used to expand one u64 seed into PCG state/stream.
+fn splitmix64(x: &mut u64) -> u64 {
+    *x = x.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Deterministic generator from a seed; distinct seeds give independent
+    /// streams (state and increment both derived through SplitMix64).
+    pub fn new(seed: u64) -> Self {
+        let mut s = seed;
+        let state = splitmix64(&mut s);
+        let inc = splitmix64(&mut s) | 1; // stream selector must be odd
+        let mut rng = Rng { state, inc };
+        rng.next_u32(); // decorrelate first output from the raw seed
+        rng
+    }
+
+    /// Derive an independent child stream (e.g. per client, per link).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(6364136223846793005).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform in [0, 1) with f64 resolution.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n) (Lemire-style rejection-free for our needs).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.f32()
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.f64().max(1e-300);
+        let u2 = self.f64();
+        ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+    }
+
+    /// Gamma(shape, 1) via Marsaglia–Tsang (2000); shape > 0.
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        if shape < 1.0 {
+            // boost: Gamma(a) = Gamma(a+1) * U^(1/a)
+            let g = self.gamma(shape + 1.0);
+            return g * self.f64().max(1e-300).powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal() as f64;
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v = v * v * v;
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * x * x * x * x {
+                return d * v;
+            }
+            if u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v;
+            }
+        }
+    }
+
+    /// Dirichlet(α, ..., α) over `k` categories (the paper's non-IID split).
+    pub fn dirichlet(&mut self, alpha: f64, k: usize) -> Vec<f64> {
+        let mut g: Vec<f64> = (0..k).map(|_| self.gamma(alpha).max(1e-12)).collect();
+        let s: f64 = g.iter().sum();
+        for x in &mut g {
+            *x /= s;
+        }
+        g
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, v: &mut [T]) {
+        for i in (1..v.len()).rev() {
+            v.swap(i, self.below(i + 1));
+        }
+    }
+
+    /// Sample from a discrete distribution given by (not necessarily
+    /// normalized) non-negative weights.
+    pub fn discrete(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut t = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            t -= w;
+            if t <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert!((0..10).any(|_| a.next_u64() != b.next_u64()));
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 50_000;
+        let xs: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f32>() / n as f32;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn gamma_mean_matches_shape() {
+        let mut r = Rng::new(13);
+        for &shape in &[0.3, 0.6, 1.0, 2.5, 8.0] {
+            let n = 20_000;
+            let m: f64 = (0..n).map(|_| r.gamma(shape)).sum::<f64>() / n as f64;
+            assert!(
+                (m - shape).abs() / shape < 0.08,
+                "gamma({shape}) mean {m}"
+            );
+        }
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one_and_varies() {
+        let mut r = Rng::new(17);
+        let p = r.dirichlet(0.6, 10);
+        let s: f64 = p.iter().sum();
+        assert!((s - 1.0).abs() < 1e-9);
+        assert!(p.iter().all(|&x| x > 0.0));
+        // α=0.6 should be visibly skewed most of the time
+        let q = r.dirichlet(0.6, 10);
+        assert!(p != q);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(19);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn discrete_respects_zero_weights() {
+        let mut r = Rng::new(23);
+        for _ in 0..1000 {
+            let i = r.discrete(&[0.0, 3.0, 0.0, 1.0]);
+            assert!(i == 1 || i == 3);
+        }
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut root = Rng::new(29);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        let va: Vec<u32> = (0..8).map(|_| a.next_u32()).collect();
+        let vb: Vec<u32> = (0..8).map(|_| b.next_u32()).collect();
+        assert_ne!(va, vb);
+    }
+}

@@ -1,0 +1,121 @@
+//! Experiment-harness tests: structural integrity of every table driver
+//! (right columns/rows, parseable cells) on the fast MockTrainer, plus the
+//! cheap paper-shape assertions that are stable at mock scale.
+
+use dfl::exp::{self, ExpScale};
+use dfl::runtime::{MockTrainer, Trainer};
+
+fn scale() -> ExpScale {
+    ExpScale::for_mock(9)
+}
+
+fn parse_pct(cell: &str) -> f32 {
+    cell.parse::<f32>().unwrap_or_else(|_| panic!("bad pct cell {cell:?}"))
+}
+
+#[test]
+fn table2_structure_and_ordering() {
+    let t = MockTrainer::tiny();
+    let table = exp::table2(&t, scale());
+    let md = table.markdown();
+    let rows: Vec<&str> = md.lines().skip(2).collect();
+    assert_eq!(rows.len(), 3, "table2 must have 3 scenarios:\n{md}");
+    // every accuracy parses and is a valid percentage
+    for row in &rows {
+        let cells: Vec<&str> = row.trim_matches('|').split('|').map(str::trim).collect();
+        let acc = parse_pct(cells[1]);
+        assert!((0.0..=100.0).contains(&acc), "{row}");
+    }
+}
+
+#[test]
+fn phase1_tables_structure() {
+    let t = MockTrainer::tiny();
+    for table in [exp::table3(&t, scale()), exp::table4(&t, scale())] {
+        let md = table.markdown();
+        let rows: Vec<&str> = md.lines().skip(2).collect();
+        assert_eq!(rows.len(), 3, "quick phase1 tables have 3 client counts:\n{md}");
+        for row in rows {
+            let cells: Vec<&str> = row.trim_matches('|').split('|').map(str::trim).collect();
+            assert_eq!(cells.len(), 5);
+            let acc = parse_pct(cells[2]);
+            assert!((0.0..=100.0).contains(&acc));
+            assert!(cells[3].parse::<f32>().unwrap() >= 0.0); // M1 time
+        }
+    }
+}
+
+#[test]
+fn fig3_4_has_machine_sweeps_and_survivor_accounting() {
+    let t = MockTrainer::tiny();
+    let table = exp::fig3_4(&t, scale());
+    let md = table.markdown();
+    let rows: Vec<&str> = md.lines().skip(2).collect();
+    assert_eq!(rows.len(), 4 * 2, "quick: 4 fault levels x 2 machine setups:\n{md}");
+    for row in rows {
+        let cells: Vec<&str> = row.trim_matches('|').split('|').map(str::trim).collect();
+        let faults: usize = cells[0].parse().unwrap();
+        let survivors: usize = cells[5].parse().unwrap();
+        assert!(
+            survivors >= 12 - faults,
+            "more crashes than scheduled: faults={faults} survivors={survivors}"
+        );
+        assert!(survivors >= 1);
+    }
+}
+
+#[test]
+fn fig5_6_has_baseline_rows() {
+    let t = MockTrainer::tiny();
+    let table = exp::fig5_6(&t, scale());
+    let md = table.markdown();
+    assert!(md.contains("baseline(2n/3)"), "missing baseline rows:\n{md}");
+    // every client count contributes 1 baseline + machine-setup rows
+    let baselines = md.matches("baseline(2n/3)").count();
+    assert_eq!(baselines, 2, "quick mode sweeps 2 client counts");
+}
+
+#[test]
+fn fig7_8_survivor_beats_chance() {
+    let t = MockTrainer::tiny();
+    let table = exp::fig7_8(&t, scale());
+    let md = table.markdown();
+    let rows: Vec<&str> = md.lines().skip(2).collect();
+    assert_eq!(rows.len(), 2);
+    for row in rows {
+        let cells: Vec<&str> = row.trim_matches('|').split('|').map(str::trim).collect();
+        let n: usize = cells[0].parse().unwrap();
+        let faults: usize = cells[1].parse().unwrap();
+        assert_eq!(faults, n - 1, "exp3 must crash n-1");
+        let acc = parse_pct(cells[2]);
+        // the mock learns fast; the survivor must at least beat chance
+        assert!(acc > 10.0, "survivor at/below chance: {acc}");
+    }
+}
+
+#[test]
+fn termination_reliability_is_total_under_quick_faults() {
+    let t = MockTrainer::tiny();
+    let table = exp::termination_reliability(&t, scale());
+    let md = table.markdown();
+    let rows: Vec<&str> = md.lines().skip(2).collect();
+    assert_eq!(rows.len(), 2);
+    for row in rows {
+        let cells: Vec<&str> = row.trim_matches('|').split('|').map(str::trim).collect();
+        let adaptive = parse_pct(cells[1]);
+        let premature: usize = cells[5].parse().unwrap();
+        assert_eq!(premature, 0, "premature termination detected: {row}");
+        assert!(adaptive >= 99.0, "adaptive termination below 100%: {row}");
+    }
+}
+
+#[test]
+fn run_all_produces_every_experiment() {
+    let t = MockTrainer::tiny();
+    let all = exp::run_all(&t, scale());
+    assert_eq!(all.len(), 7);
+    let titles: Vec<&str> = all.iter().map(|(t, _)| t.as_str()).collect();
+    for needle in ["Table 2", "Table 3", "Table 4", "Fig 3+4", "Fig 5+6", "Fig 7+8"] {
+        assert!(titles.iter().any(|t| t.contains(needle)), "missing {needle}");
+    }
+}

@@ -1,0 +1,305 @@
+//! Protocol-level integration tests: Algorithm 1/2 + CCC/CRT over the
+//! in-process network with the deterministic MockTrainer (no PJRT cost).
+//! These assert the paper's §3 claims as invariants.
+
+use std::time::Duration;
+
+use dfl::coordinator::fault::{variable_crash_schedule, FaultPlan};
+use dfl::coordinator::termination::TerminationCause;
+use dfl::coordinator::ProtocolConfig;
+use dfl::net::NetworkModel;
+use dfl::runtime::{MockTrainer, Trainer};
+use dfl::sim::{self, Partition, SimConfig};
+use dfl::util::Rng;
+
+fn base_cfg(n: usize, seed: u64) -> SimConfig {
+    let trainer = MockTrainer::tiny();
+    let meta = trainer.meta();
+    let mut cfg = SimConfig::for_meta(n, meta);
+    cfg.protocol = ProtocolConfig {
+        timeout: Duration::from_millis(80),
+        min_rounds: 4,
+        count_threshold: 2,
+        // generous: the mock's gradient noise floor is higher than the CNN's;
+        // these tests exercise protocol logic, not convergence quality
+        conv_threshold_rel: 0.12,
+        max_rounds: 60,
+        lr: 0.08,
+        model_seed: 42,
+        weight_by_samples: false,
+        early_window_exit: true,
+        crt_enabled: true,
+    };
+    cfg.train_n = 60 * n;
+    cfg.net = NetworkModel::lan(seed);
+    cfg.seed = seed;
+    cfg
+}
+
+#[test]
+fn async_fault_free_all_terminate_adaptively() {
+    let trainer = MockTrainer::tiny();
+    let cfg = base_cfg(5, 11);
+    let res = sim::run(&trainer, &cfg).unwrap();
+    assert_eq!(res.reports.len(), 5);
+    assert_eq!(res.crashed(), 0);
+    for r in &res.reports {
+        assert!(
+            matches!(r.cause, TerminationCause::Converged | TerminationCause::Signaled),
+            "client {} ended with {:?}",
+            r.id,
+            r.cause
+        );
+        assert!(r.final_accuracy.is_some());
+        assert!(r.rounds_completed >= cfg.protocol.min_rounds);
+    }
+}
+
+#[test]
+fn no_premature_termination_before_min_rounds() {
+    // Property over seeds: nobody terminates before MINIMUM_ROUNDS.
+    for seed in 0..6u64 {
+        let trainer = MockTrainer::tiny();
+        let cfg = base_cfg(4, 100 + seed);
+        let res = sim::run(&trainer, &cfg).unwrap();
+        for r in &res.reports {
+            if r.cause != TerminationCause::Crashed {
+                assert!(
+                    r.rounds_completed >= cfg.protocol.min_rounds,
+                    "seed {seed}: client {} stopped at round {} < min {}",
+                    r.id,
+                    r.rounds_completed,
+                    cfg.protocol.min_rounds
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn crashes_are_detected_and_survivors_finish() {
+    let trainer = MockTrainer::tiny();
+    let mut cfg = base_cfg(6, 21);
+    cfg.faults = vec![FaultPlan::none(); 6];
+    cfg.faults[2] = FaultPlan::at_round(3);
+    cfg.faults[4] = FaultPlan::at_round(5);
+    let res = sim::run(&trainer, &cfg).unwrap();
+    assert_eq!(res.crashed(), 2);
+    // every survivor must have detected both crashed peers at some round
+    for r in &res.reports {
+        if r.cause == TerminationCause::Crashed {
+            continue;
+        }
+        let detected: Vec<u32> = r
+            .history
+            .iter()
+            .flat_map(|h| h.crashes_detected.iter().copied())
+            .collect();
+        assert!(detected.contains(&2), "client {} never detected crash of 2", r.id);
+        assert!(detected.contains(&4), "client {} never detected crash of 4", r.id);
+        assert!(r.final_accuracy.is_some());
+    }
+}
+
+#[test]
+fn termination_signal_floods_to_all_survivors() {
+    // Over several seeds with random crashes: all survivors end via CCC or
+    // CRT — never stuck, never capped (max_rounds is generous).
+    for seed in 0..5u64 {
+        let trainer = MockTrainer::tiny();
+        let n = 7;
+        let mut cfg = base_cfg(n, 300 + seed);
+        let mut rng = Rng::new(seed);
+        cfg.faults = variable_crash_schedule(n, 2, 2, 10, &mut rng);
+        let res = sim::run(&trainer, &cfg).unwrap();
+        assert!(
+            res.all_terminated_adaptively(),
+            "seed {seed}: causes {:?}",
+            res.reports.iter().map(|r| r.cause).collect::<Vec<_>>()
+        );
+    }
+}
+
+#[test]
+fn crt_provenance_chain_is_consistent() {
+    let trainer = MockTrainer::tiny();
+    let cfg = base_cfg(6, 41);
+    let res = sim::run(&trainer, &cfg).unwrap();
+    let initiators: Vec<u32> = res
+        .reports
+        .iter()
+        .filter(|r| r.cause == TerminationCause::Converged)
+        .map(|r| r.id)
+        .collect();
+    assert!(!initiators.is_empty(), "someone must initiate (CCC)");
+    for r in &res.reports {
+        if r.cause == TerminationCause::Signaled {
+            let src = r.signal_source.expect("signaled client must have a source");
+            assert_ne!(src, r.id);
+            assert!(src < 6);
+        }
+    }
+}
+
+#[test]
+fn max_fault_single_survivor_still_finishes() {
+    let trainer = MockTrainer::tiny();
+    let n = 5;
+    let mut cfg = base_cfg(n, 51);
+    // crash everyone early (before the survivor can converge) so the
+    // survivor must observe every failure: rounds 1..=4
+    cfg.protocol.min_rounds = 8;
+    cfg.faults = (0..n)
+        .map(|i| if i == 2 { FaultPlan::none() } else { FaultPlan::at_round(1 + i as u32 % 4) })
+        .collect();
+    let res = sim::run(&trainer, &cfg).unwrap();
+    assert_eq!(res.crashed(), n - 1);
+    let survivor = res
+        .reports
+        .iter()
+        .find(|r| r.cause != TerminationCause::Crashed)
+        .expect("survivor");
+    assert_eq!(survivor.id, 2);
+    assert!(survivor.final_accuracy.is_some());
+    // survivor must have detected every peer's crash eventually
+    let detected: std::collections::BTreeSet<u32> = survivor
+        .history
+        .iter()
+        .flat_map(|h| h.crashes_detected.iter().copied())
+        .collect();
+    assert_eq!(detected.len(), n - 1, "detected: {detected:?}");
+}
+
+#[test]
+fn message_loss_does_not_break_termination() {
+    // 10% drop probability: CRT piggybacking must still flood the flag.
+    for seed in 0..4u64 {
+        let trainer = MockTrainer::tiny();
+        let mut cfg = base_cfg(5, 500 + seed);
+        cfg.net = NetworkModel::lossy(0.10, seed);
+        let res = sim::run(&trainer, &cfg).unwrap();
+        assert!(
+            res.all_terminated_adaptively(),
+            "seed {seed}: causes {:?}",
+            res.reports.iter().map(|r| r.cause).collect::<Vec<_>>()
+        );
+    }
+}
+
+#[test]
+fn sync_phase1_all_clients_agree_on_rounds() {
+    let trainer = MockTrainer::tiny();
+    let mut cfg = base_cfg(4, 61);
+    cfg.sync = true;
+    let res = sim::run(&trainer, &cfg).unwrap();
+    let rounds: Vec<u32> = res.reports.iter().map(|r| r.rounds_completed).collect();
+    assert!(
+        rounds.windows(2).all(|w| w[0] == w[1]),
+        "sync clients disagree on round count: {rounds:?}"
+    );
+    // mutual agreement: everyone stops for the same reason class
+    for r in &res.reports {
+        assert_ne!(r.cause, TerminationCause::Crashed);
+        assert!(r.final_accuracy.is_some());
+    }
+}
+
+#[test]
+fn sync_and_async_both_learn() {
+    let trainer = MockTrainer::tiny();
+    let mut cfg = base_cfg(4, 71);
+    cfg.protocol.max_rounds = 12;
+    cfg.protocol.conv_threshold_rel = 0.0; // never converge: fixed rounds
+    let res_async = sim::run(&trainer, &cfg).unwrap();
+    cfg.sync = true;
+    let res_sync = sim::run(&trainer, &cfg).unwrap();
+    for res in [&res_async, &res_sync] {
+        let acc = res.mean_accuracy().unwrap();
+        assert!(acc > 0.2, "federation failed to learn: {acc}");
+    }
+}
+
+#[test]
+fn slow_client_is_not_marked_crashed_forever() {
+    // A heavily slowed client should be revived by its late messages:
+    // the run must finish with everyone terminating adaptively.
+    let trainer = MockTrainer::tiny();
+    let mut cfg = base_cfg(4, 81);
+    cfg.machines = 2; // slowdown via machine profile affects some clients
+    let res = sim::run(&trainer, &cfg).unwrap();
+    assert!(res.all_terminated_adaptively());
+    // and at least one revival OR zero crash-markings happened overall;
+    // either way no survivor may end with a permanently-wrong view that
+    // prevented aggregation (aggregated >= 2 in final rounds).
+    for r in &res.reports {
+        if let Some(last) = r.history.last() {
+            assert!(last.aggregated >= 1);
+        }
+    }
+}
+
+#[test]
+fn transient_failure_rejoins_and_finishes() {
+    // §3.1: "temporary and intermittent failures, allowing clients to
+    // rejoin after transient faults". Client 1 goes silent for several
+    // wait-windows at round 2; peers must mark it crashed, then revive it
+    // on its first post-outage broadcast, and it must still terminate.
+    let trainer = MockTrainer::tiny();
+    let mut cfg = base_cfg(4, 301);
+    cfg.protocol.min_rounds = 8; // keep the run alive through the outage
+    cfg.faults = vec![FaultPlan::none(); 4];
+    cfg.faults[1] = FaultPlan::transient(2, Duration::from_millis(400));
+    let res = sim::run(&trainer, &cfg).unwrap();
+    // nobody permanently crashed
+    assert_eq!(res.crashed(), 0, "transient fault must not be a permanent crash");
+    let rejoiner = &res.reports[1];
+    assert!(
+        matches!(rejoiner.cause, TerminationCause::Converged | TerminationCause::Signaled),
+        "rejoiner ended with {:?}",
+        rejoiner.cause
+    );
+    // at least one peer must have first marked client 1 crashed...
+    let marked: Vec<u32> = res
+        .reports
+        .iter()
+        .filter(|r| r.id != 1)
+        .flat_map(|r| r.history.iter().flat_map(|h| h.crashes_detected.iter().copied()))
+        .collect();
+    assert!(marked.contains(&1), "outage went undetected: {marked:?}");
+    // ...and everyone still finished adaptively (revival worked)
+    assert!(res.all_terminated_adaptively());
+}
+
+#[test]
+fn crt_disabled_forces_self_convergence() {
+    // Ablation guard: with CRT off, no client may end as `Signaled`.
+    let trainer = MockTrainer::tiny();
+    let mut cfg = base_cfg(5, 401);
+    cfg.protocol.crt_enabled = false;
+    let res = sim::run(&trainer, &cfg).unwrap();
+    for r in &res.reports {
+        assert_ne!(
+            r.cause,
+            TerminationCause::Signaled,
+            "client {} terminated by signal despite CRT off",
+            r.id
+        );
+    }
+}
+
+#[test]
+fn weight_by_samples_changes_aggregation() {
+    let trainer = MockTrainer::tiny();
+    let mut a = base_cfg(3, 91);
+    a.partition = Partition::Dirichlet(0.3);
+    a.protocol.max_rounds = 6;
+    a.protocol.conv_threshold_rel = 0.0;
+    let res_plain = sim::run(&trainer, &a).unwrap();
+    let mut b = a.clone();
+    b.protocol.weight_by_samples = true;
+    let res_weighted = sim::run(&trainer, &b).unwrap();
+    // Different aggregation weights must produce different final models.
+    let pa = res_plain.reports[0].final_params.as_ref().unwrap();
+    let pb = res_weighted.reports[0].final_params.as_ref().unwrap();
+    assert_ne!(pa, pb);
+}

@@ -1,0 +1,156 @@
+//! Runtime integration tests against the real AOT artifacts via PJRT.
+//! Require `make artifacts` (skipped gracefully when absent).
+
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+use dfl::model::ParamVector;
+use dfl::runtime::{SharedEngine, Trainer};
+use dfl::util::Rng;
+
+fn tiny_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny")
+}
+
+/// One engine per test binary (compiles artifacts once).
+fn engine() -> Option<&'static SharedEngine> {
+    static ENGINE: OnceLock<Option<SharedEngine>> = OnceLock::new();
+    ENGINE
+        .get_or_init(|| {
+            if !tiny_dir().join("meta.txt").exists() {
+                eprintln!("artifacts/tiny missing — run `make artifacts`; skipping");
+                return None;
+            }
+            Some(SharedEngine::load(&tiny_dir()).expect("engine load"))
+        })
+        .as_ref()
+}
+
+fn rand_batch(e: &SharedEngine, rng: &mut Rng) -> (Vec<f32>, Vec<i32>) {
+    let m = e.meta();
+    let xs = (0..m.train_x_len()).map(|_| rng.normal()).collect();
+    let ys = (0..m.train_y_len()).map(|_| rng.below(m.classes) as i32).collect();
+    (xs, ys)
+}
+
+#[test]
+fn init_is_deterministic_and_finite() {
+    let Some(e) = engine() else { return };
+    let a = e.init(7).unwrap();
+    let b = e.init(7).unwrap();
+    let c = e.init(8).unwrap();
+    assert_eq!(a.len(), e.meta().n_params);
+    assert_eq!(a, b);
+    assert_ne!(a, c);
+    assert!(a.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn train_round_reduces_loss_and_changes_params() {
+    let Some(e) = engine() else { return };
+    let mut rng = Rng::new(3);
+    let params = e.init(42).unwrap();
+    let (xs, ys) = rand_batch(e, &mut rng);
+    let (p1, l1) = e.train_round(&params, &xs, &ys, 0.1).unwrap();
+    assert_ne!(p1, params);
+    assert!(l1.is_finite() && l1 > 0.0);
+    // training repeatedly on the same tensors must reduce loss
+    let mut p = p1;
+    let mut last = l1;
+    for _ in 0..5 {
+        let (p2, l2) = e.train_round(&p, &xs, &ys, 0.1).unwrap();
+        p = p2;
+        last = l2;
+    }
+    assert!(last < l1, "loss did not fall: {l1} -> {last}");
+}
+
+#[test]
+fn train_is_deterministic() {
+    let Some(e) = engine() else { return };
+    let mut rng = Rng::new(5);
+    let params = e.init(1).unwrap();
+    let (xs, ys) = rand_batch(e, &mut rng);
+    let (pa, la) = e.train_round(&params, &xs, &ys, 0.05).unwrap();
+    let (pb, lb) = e.train_round(&params, &xs, &ys, 0.05).unwrap();
+    assert_eq!(pa, pb);
+    assert_eq!(la, lb);
+}
+
+#[test]
+fn aggregate_matches_cpu_mean() {
+    let Some(e) = engine() else { return };
+    let a = e.init(1).unwrap();
+    let b = e.init(2).unwrap();
+    let c = e.init(3).unwrap();
+    let out = e.aggregate(&[(&a, 1.0), (&b, 1.0), (&c, 1.0)]).unwrap();
+    let cpu = ParamVector::mean_of(&[
+        &ParamVector(a.clone()),
+        &ParamVector(b.clone()),
+        &ParamVector(c.clone()),
+    ]);
+    let d = ParamVector(out).l2_distance(&cpu) / cpu.l2_norm().max(1.0);
+    assert!(d < 1e-5, "pjrt aggregate deviates from cpu mean: rel {d}");
+}
+
+#[test]
+fn aggregate_weighted_and_single_row() {
+    let Some(e) = engine() else { return };
+    let a = e.init(4).unwrap();
+    let b = e.init(5).unwrap();
+    // single row = identity
+    let out = e.aggregate(&[(&a, 2.5)]).unwrap();
+    let d = ParamVector(out).l2_distance(&ParamVector(a.clone()));
+    assert!(d < 1e-4, "single-row aggregate not identity: {d}");
+    // 3:1 weighting
+    let out = e.aggregate(&[(&a, 3.0), (&b, 1.0)]).unwrap();
+    let expect: Vec<f32> =
+        a.iter().zip(&b).map(|(x, y)| 0.75 * x + 0.25 * y).collect();
+    let d = ParamVector(out).l2_distance(&ParamVector(expect));
+    assert!(d < 1e-3, "weighted aggregate wrong: {d}");
+}
+
+#[test]
+fn eval_counts_are_bounded_and_deterministic() {
+    let Some(e) = engine() else { return };
+    let m = e.meta().clone();
+    let mut rng = Rng::new(9);
+    let params = e.init(6).unwrap();
+    let xs: Vec<f32> = (0..m.eval_x_len(false)).map(|_| rng.normal()).collect();
+    let ys: Vec<i32> = (0..m.eval_y_len(false)).map(|_| rng.below(m.classes) as i32).collect();
+    let (c1, l1) = e.eval(&params, &xs, &ys, false).unwrap();
+    let (c2, l2) = e.eval(&params, &xs, &ys, false).unwrap();
+    assert_eq!((c1, l1.to_bits()), (c2, l2.to_bits()));
+    assert!(c1 as usize <= ys.len());
+    assert!(l1.is_finite());
+}
+
+#[test]
+fn shape_validation_errors_cleanly() {
+    let Some(e) = engine() else { return };
+    let params = e.init(0).unwrap();
+    assert!(e.train_round(&params, &[0.0; 3], &[0; 3], 0.1).is_err());
+    assert!(e.eval(&params, &[0.0; 7], &[0; 7], false).is_err());
+    assert!(e.aggregate(&[]).is_err());
+    let short = vec![0.0f32; 3];
+    assert!(e.aggregate(&[(&short, 1.0)]).is_err());
+}
+
+#[test]
+fn engine_learns_synthetic_task_better_than_chance() {
+    let Some(e) = engine() else { return };
+    let m = e.meta().clone();
+    let (train, test) = dfl::data::Dataset::synthetic_pair(&m, 800, m.nb_eval_full * m.batch, 31);
+    let (exs, eys) = test.take_flat(m.nb_eval_full * m.batch);
+    let mut rng = Rng::new(32);
+    let mut params = e.init(42).unwrap();
+    let all: Vec<usize> = (0..train.len()).collect();
+    for _ in 0..25 {
+        let (xs, ys) = train.gather_round(&all, m.nb_train * m.batch, &mut rng);
+        let (p, _) = e.train_round(&params, &xs, &ys, 0.12).unwrap();
+        params = p;
+    }
+    let (correct, _) = e.eval(&params, &exs, &eys, true).unwrap();
+    let acc = correct as f32 / eys.len() as f32;
+    assert!(acc > 0.25, "PJRT training failed to beat chance x2.5: {acc}");
+}

@@ -1,0 +1,100 @@
+//! End-to-end test of the real-socket deployment: Algorithm 2 clients in
+//! threads over TcpTransport on localhost (the paper's actual transport),
+//! with one injected crash.
+
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpListener};
+use std::sync::Arc;
+use std::time::Duration;
+
+use dfl::coordinator::async_client::{AsyncClient, ClientData};
+use dfl::coordinator::fault::FaultPlan;
+use dfl::coordinator::termination::TerminationCause;
+use dfl::coordinator::ProtocolConfig;
+use dfl::data::{dirichlet_partition, Dataset};
+use dfl::net::TcpTransport;
+use dfl::runtime::{MockTrainer, Trainer};
+use dfl::util::Rng;
+
+fn free_addr() -> SocketAddr {
+    TcpListener::bind("127.0.0.1:0").unwrap().local_addr().unwrap()
+}
+
+#[test]
+fn four_tcp_clients_with_one_crash_terminate() {
+    let n = 4usize;
+    let trainer = Arc::new(MockTrainer::tiny());
+    let meta = trainer.meta().clone();
+    let addrs: Vec<SocketAddr> = (0..n).map(|_| free_addr()).collect();
+
+    let seed = 77u64;
+    let (train, test) = Dataset::synthetic_pair(&meta, 400, meta.nb_eval_full * meta.batch, seed);
+    let train = Arc::new(train);
+    let mut rng = Rng::new(seed);
+    let parts = dirichlet_partition(&train, n, 0.6, &mut rng);
+
+    let cfg = ProtocolConfig {
+        timeout: Duration::from_millis(400),
+        min_rounds: 3,
+        count_threshold: 2,
+        conv_threshold_rel: 0.12, // mock's noise floor (see protocol.rs)
+        max_rounds: 40,
+        lr: 0.08,
+        model_seed: 42,
+        weight_by_samples: false,
+        early_window_exit: true,
+        crt_enabled: true,
+    };
+
+    let reports: Vec<_> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for i in 0..n {
+            let peers: BTreeMap<u32, SocketAddr> = (0..n)
+                .filter(|&j| j != i)
+                .map(|j| (j as u32, addrs[j]))
+                .collect();
+            let transport = TcpTransport::bind(i as u32, addrs[i], peers).unwrap();
+            let data = ClientData::new(Arc::clone(&train), parts[i].clone(), &test, &meta);
+            let trainer = Arc::clone(&trainer);
+            let cfg = cfg.clone();
+            handles.push(scope.spawn(move || {
+                AsyncClient {
+                    id: i as u32,
+                    trainer: trainer.as_ref(),
+                    transport: Box::new(transport),
+                    cfg,
+                    data,
+                    fault: if i == 3 { FaultPlan::at_round(2) } else { FaultPlan::none() },
+                    rng: Rng::new(seed + i as u64),
+                    slowdown: 0.0,
+                }
+                .run()
+                .unwrap()
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    assert_eq!(reports.len(), n);
+    let crashed: Vec<u32> = reports
+        .iter()
+        .filter(|r| r.cause == TerminationCause::Crashed)
+        .map(|r| r.id)
+        .collect();
+    assert_eq!(crashed, vec![3]);
+    for r in &reports {
+        if r.id == 3 {
+            continue;
+        }
+        assert!(
+            matches!(r.cause, TerminationCause::Converged | TerminationCause::Signaled),
+            "client {} over TCP ended with {:?}",
+            r.id,
+            r.cause
+        );
+        // the crash of client 3 must have been detected by timeout
+        let detected: Vec<u32> =
+            r.history.iter().flat_map(|h| h.crashes_detected.iter().copied()).collect();
+        assert!(detected.contains(&3), "client {} missed the crash", r.id);
+    }
+}
