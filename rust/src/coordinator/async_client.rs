@@ -6,9 +6,9 @@
 //! nobody beyond the window, a late message revives a "crashed" peer, and
 //! the terminate flag floods via piggybacking (CRT).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::Duration;
 
 use anyhow::Result;
 
@@ -21,6 +21,7 @@ use crate::metrics::{ClientReport, RoundRecord};
 use crate::model::ParamVector;
 use crate::net::{ClientId, ModelUpdate, Msg, Transport};
 use crate::runtime::Trainer;
+use crate::util::time::Clock;
 use crate::util::Rng;
 
 /// A client's local data: its training partition plus the shared eval
@@ -62,13 +63,20 @@ pub struct AsyncClient<'a> {
     /// Artificial per-round slowdown factor ≥ 0 (heterogeneous-machine
     /// contention model; 0 = full speed). Sleeps `factor × train_time`.
     pub slowdown: f32,
+    /// Modeled per-round training cost.  `None` (wall-clock deployments)
+    /// measures the real training time and sleeps `slowdown × elapsed`;
+    /// `Some(c)` (virtual time) charges the clock a deterministic
+    /// `c × (1 + slowdown)` instead — measured compute time would leak OS
+    /// nondeterminism into the simulated schedule.
+    pub train_cost: Option<Duration>,
 }
 
 struct WindowOutcome {
     /// Latest update per sender seen this window.
     latest: BTreeMap<ClientId, ModelUpdate>,
-    /// Senders heard this window (any message kind).
-    heard: Vec<ClientId>,
+    /// Senders heard this window (Update/Hello; a Bye is a leave, not a
+    /// liveness signal).
+    heard: BTreeSet<ClientId>,
 }
 
 impl<'a> AsyncClient<'a> {
@@ -77,30 +85,33 @@ impl<'a> AsyncClient<'a> {
     /// has reported (if configured).
     fn wait_window(
         &mut self,
+        clock: &Clock,
         round: u32,
         peer_table: &mut PeerTable,
         term: &mut TerminationState,
     ) -> WindowOutcome {
         let mut latest: BTreeMap<ClientId, ModelUpdate> = BTreeMap::new();
-        let mut heard: Vec<ClientId> = Vec::new();
+        let mut heard: BTreeSet<ClientId> = BTreeSet::new();
         // Degenerate single-client deployment: nothing to wait for.
         if self.transport.peers().is_empty() {
             return WindowOutcome { latest, heard };
         }
-        let deadline = Instant::now() + self.cfg.timeout;
+        // Alive-but-silent peers, maintained incrementally so the early-exit
+        // check is O(log n) per message rather than an O(n²) rescan — at
+        // hundreds of clients the window loop is the protocol's hot path.
+        // Invariant: any peer that *becomes* alive mid-window did so by
+        // sending (record_message), so it is heard and never unheard.
+        let mut alive_unheard: BTreeSet<ClientId> = peer_table.alive().into_iter().collect();
+        let deadline = clock.now() + self.cfg.timeout;
         loop {
-            let now = Instant::now();
+            let now = clock.now();
             if now >= deadline {
                 break;
             }
-            if self.cfg.early_window_exit {
-                let alive = peer_table.alive();
-                if !alive.is_empty() && alive.iter().all(|p| heard.contains(p)) {
-                    break;
-                }
-                if alive.is_empty() && !heard.is_empty() {
-                    break;
-                }
+            // Every currently-alive peer reported (or none are left at
+            // all): nothing further can arrive this window but latecomers.
+            if self.cfg.early_window_exit && alive_unheard.is_empty() && !heard.is_empty() {
+                break;
             }
             let Some(msg) = self.transport.recv_timeout(deadline - now) else {
                 continue; // timeout inside window -> loop re-checks deadline
@@ -112,19 +123,20 @@ impl<'a> AsyncClient<'a> {
                     if u.terminate && self.cfg.crt_enabled {
                         term.signal_from(sender, round);
                     }
-                    if !heard.contains(&sender) {
-                        heard.push(sender);
-                    }
+                    heard.insert(sender);
+                    alive_unheard.remove(&sender);
                     latest.insert(sender, u);
                 }
                 Msg::Hello { .. } => {
                     peer_table.record_message(sender, round, false);
-                    if !heard.contains(&sender) {
-                        heard.push(sender);
-                    }
+                    heard.insert(sender);
+                    alive_unheard.remove(&sender);
                 }
                 Msg::Bye { .. } => {
                     peer_table.record_message(sender, round, true);
+                    // Now Terminated, no longer alive: its silence must not
+                    // hold the window open.
+                    alive_unheard.remove(&sender);
                 }
             }
         }
@@ -147,7 +159,8 @@ impl<'a> AsyncClient<'a> {
     /// only for local/engine failures.
     pub fn run(mut self) -> Result<ClientReport> {
         let meta = self.trainer.meta().clone();
-        let started = Instant::now();
+        let clock = self.transport.clock();
+        let started = clock.now();
         let mut params = self.trainer.init(self.cfg.model_seed)?;
         let mut peer_table = PeerTable::new(&self.transport.peers());
         let mut term = TerminationState::new();
@@ -166,7 +179,9 @@ impl<'a> AsyncClient<'a> {
         // Messages can arrive between rounds (buffer carries across).
         while round < self.cfg.max_rounds {
             // -- fault injection: benign crash = immediate silence ---------
-            if !outage_done && self.fault.should_crash(round, started) {
+            if !outage_done
+                && self.fault.should_crash(round, clock.now().saturating_sub(started))
+            {
                 match self.fault.rejoin_after {
                     None => {
                         cause = TerminationCause::Crashed;
@@ -176,8 +191,10 @@ impl<'a> AsyncClient<'a> {
                         // Transient failure (§3.1): full silence for the
                         // outage, traffic sent to us meanwhile is lost, then
                         // resume the loop — peers revive us on our next
-                        // broadcast (PeerTable late-message rule).
-                        std::thread::sleep(downtime);
+                        // broadcast (PeerTable late-message rule).  The
+                        // downtime charges the clock, so a 10 s outage under
+                        // virtual time costs no real waiting.
+                        clock.sleep(downtime);
                         while self.transport.try_recv().is_some() {}
                         outage_done = true;
                     }
@@ -186,7 +203,7 @@ impl<'a> AsyncClient<'a> {
 
             // -- local training (EPOCHS_PER_ROUND is baked into the
             //    train_epoch artifact's nb_train scan) ---------------------
-            let t_train = Instant::now();
+            let t_train = clock.now();
             let (xs, ys) = self.data.train.gather_round(
                 &self.data.indices,
                 meta.nb_train * meta.batch,
@@ -195,8 +212,12 @@ impl<'a> AsyncClient<'a> {
             let (new_params, train_loss) =
                 self.trainer.train_round(&params, &xs, &ys, self.cfg.lr)?;
             params = new_params;
-            if self.slowdown > 0.0 {
-                std::thread::sleep(t_train.elapsed().mul_f32(self.slowdown));
+            match self.train_cost {
+                Some(cost) => clock.sleep(cost.mul_f32(1.0 + self.slowdown.max(0.0))),
+                None if self.slowdown > 0.0 => {
+                    clock.sleep(clock.now().saturating_sub(t_train).mul_f32(self.slowdown))
+                }
+                None => {}
             }
 
             // -- CRT fast path: flag already known -> final broadcast ------
@@ -208,7 +229,7 @@ impl<'a> AsyncClient<'a> {
 
             // -- broadcast + bounded wait ----------------------------------
             self.broadcast_model(round, &params, false, my_weight);
-            let window = self.wait_window(round, &mut peer_table, &mut term);
+            let window = self.wait_window(&clock, round, &mut peer_table, &mut term);
 
             // -- crash detection (Alg. 2 lines 14-19) ----------------------
             let newly_crashed = peer_table.mark_missing(round, &window.heard);
@@ -284,7 +305,7 @@ impl<'a> AsyncClient<'a> {
             rounds_completed: round,
             final_accuracy,
             final_loss,
-            wall: started.elapsed(),
+            wall: clock.now().saturating_sub(started),
             history,
             signal_source: term.source,
             final_params,

@@ -9,7 +9,7 @@
 //! treated as crashed when they fall silent; that disambiguation is the
 //! point of the Client-Responsive Termination protocol.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::net::ClientId;
 
@@ -70,7 +70,7 @@ impl PeerTable {
 
     /// End-of-window sweep: every peer still `Alive` that was *not* heard
     /// during `round` is marked crashed.  Returns the newly-crashed ids.
-    pub fn mark_missing(&mut self, round: u32, heard: &[ClientId]) -> Vec<ClientId> {
+    pub fn mark_missing(&mut self, round: u32, heard: &BTreeSet<ClientId>) -> Vec<ClientId> {
         let mut newly = Vec::new();
         for (&peer, s) in self.status.iter_mut() {
             if *s == PeerStatus::Alive && !heard.contains(&peer) {
@@ -132,7 +132,7 @@ mod tests {
     fn silence_marks_crash() {
         let mut t = PeerTable::new(&[1, 2, 3]);
         t.record_message(1, 0, false);
-        let newly = t.mark_missing(0, &[1]);
+        let newly = t.mark_missing(0, &BTreeSet::from([1]));
         assert_eq!(newly, vec![2, 3]);
         assert_eq!(t.status(1), Some(PeerStatus::Alive));
         assert_eq!(t.status(2), Some(PeerStatus::Crashed));
@@ -142,7 +142,7 @@ mod tests {
     #[test]
     fn late_message_revives() {
         let mut t = PeerTable::new(&[1]);
-        t.mark_missing(0, &[]);
+        t.mark_missing(0, &BTreeSet::new());
         assert_eq!(t.status(1), Some(PeerStatus::Crashed));
         let revived = t.record_message(1, 3, false);
         assert!(revived);
@@ -156,7 +156,7 @@ mod tests {
     fn terminated_peers_not_marked_crashed() {
         let mut t = PeerTable::new(&[1, 2]);
         t.record_message(1, 0, true); // peer 1 announced termination
-        let newly = t.mark_missing(1, &[]); // silence from both
+        let newly = t.mark_missing(1, &BTreeSet::new()); // silence from both
         assert_eq!(newly, vec![2]); // only 2 is a crash
         assert_eq!(t.status(1), Some(PeerStatus::Terminated));
         assert_eq!(t.terminated(), vec![1]);
@@ -165,7 +165,7 @@ mod tests {
     #[test]
     fn recent_crash_window() {
         let mut t = PeerTable::new(&[1, 2]);
-        t.mark_missing(5, &[2]); // 1 crashes at round 5
+        t.mark_missing(5, &BTreeSet::from([2])); // 1 crashes at round 5
         assert!(t.recent_crash(5, 3));
         assert!(t.recent_crash(7, 3));
         assert!(!t.recent_crash(8, 3));
@@ -182,10 +182,10 @@ mod tests {
     #[test]
     fn crash_then_terminate_flag_pins_terminated() {
         let mut t = PeerTable::new(&[1]);
-        t.mark_missing(0, &[]);
+        t.mark_missing(0, &BTreeSet::new());
         // peer was slow, not dead, and meanwhile learned of termination
         t.record_message(1, 4, true);
         assert_eq!(t.status(1), Some(PeerStatus::Terminated));
-        assert_eq!(t.mark_missing(5, &[]), Vec::<ClientId>::new());
+        assert_eq!(t.mark_missing(5, &BTreeSet::new()), Vec::<ClientId>::new());
     }
 }

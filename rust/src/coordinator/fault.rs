@@ -10,7 +10,7 @@
 //!   execution at regular intervals" around the middle of the run.
 //! * **Experiment 3** (maximum fault): n−1 crash, one survivor.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::util::Rng;
 
@@ -20,7 +20,8 @@ pub enum CrashPoint {
     Never,
     /// Crash at the start of the given local round.
     AtRound(u32),
-    /// Crash once this much wallclock has elapsed since client start.
+    /// Crash once this much clock time (wall or virtual) has elapsed since
+    /// client start.
     AtElapsed(Duration),
 }
 
@@ -54,13 +55,16 @@ impl FaultPlan {
         FaultPlan { crash: Some(CrashPoint::AtRound(round)), rejoin_after: Some(downtime) }
     }
 
-    /// Checked at the top of every client round.
-    pub fn should_crash(&self, round: u32, started: Instant) -> bool {
+    /// Checked at the top of every client round.  `elapsed` is time since
+    /// client start on the client's [`crate::util::time::Clock`] — wall or
+    /// virtual, so elapsed-triggered crashes stay meaningful (and
+    /// deterministic) in simulated time.
+    pub fn should_crash(&self, round: u32, elapsed: Duration) -> bool {
         match self.crash {
             None => false,
             Some(CrashPoint::Never) => false,
             Some(CrashPoint::AtRound(r)) => round >= r,
-            Some(CrashPoint::AtElapsed(d)) => started.elapsed() >= d,
+            Some(CrashPoint::AtElapsed(d)) => elapsed >= d,
         }
     }
 }
@@ -123,20 +127,18 @@ mod tests {
     #[test]
     fn plan_round_trigger() {
         let p = FaultPlan::at_round(5);
-        let t0 = Instant::now();
-        assert!(!p.should_crash(4, t0));
-        assert!(p.should_crash(5, t0));
-        assert!(p.should_crash(9, t0));
-        assert!(!FaultPlan::none().should_crash(100, t0));
+        assert!(!p.should_crash(4, Duration::ZERO));
+        assert!(p.should_crash(5, Duration::ZERO));
+        assert!(p.should_crash(9, Duration::ZERO));
+        assert!(!FaultPlan::none().should_crash(100, Duration::ZERO));
     }
 
     #[test]
     fn plan_elapsed_trigger() {
         let p = FaultPlan::at_elapsed(Duration::from_millis(1));
-        let t0 = Instant::now() - Duration::from_millis(5);
-        assert!(p.should_crash(0, t0));
+        assert!(p.should_crash(0, Duration::from_millis(5)));
         let fresh = FaultPlan::at_elapsed(Duration::from_secs(3600));
-        assert!(!fresh.should_crash(0, Instant::now()));
+        assert!(!fresh.should_crash(0, Duration::ZERO));
     }
 
     #[test]

@@ -14,7 +14,7 @@
 //! clients therefore complete an identical number of rounds.
 
 use std::collections::BTreeMap;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
@@ -25,6 +25,7 @@ use crate::metrics::{ClientReport, RoundRecord};
 use crate::model::ParamVector;
 use crate::net::{ClientId, ModelUpdate, Msg, Transport};
 use crate::runtime::Trainer;
+use crate::util::time::Clock;
 use crate::util::Rng;
 
 /// Hard cap on how long a Phase-1 client waits for one round's peers.
@@ -39,6 +40,9 @@ pub struct SyncClient<'a> {
     pub data: ClientData,
     pub rng: Rng,
     pub slowdown: f32,
+    /// Modeled per-round training cost (see
+    /// [`AsyncClient::train_cost`](super::async_client::AsyncClient)).
+    pub train_cost: Option<Duration>,
 }
 
 impl<'a> SyncClient<'a> {
@@ -47,6 +51,7 @@ impl<'a> SyncClient<'a> {
     /// exists precisely to tolerate out-of-order arrival.
     fn collect_round(
         &self,
+        clock: &Clock,
         round: u32,
         pending: &mut Vec<ModelUpdate>,
         terminate_seen: &mut bool,
@@ -65,9 +70,9 @@ impl<'a> SyncClient<'a> {
                 u.round > round // drop stale rounds, keep future ones
             }
         });
-        let deadline = Instant::now() + SYNC_GRACE;
+        let deadline = clock.now() + SYNC_GRACE;
         while got.len() < peers.len() {
-            let now = Instant::now();
+            let now = clock.now();
             if now >= deadline {
                 bail!(
                     "sync client {}: round {round} incomplete after {:?} \
@@ -104,7 +109,8 @@ impl<'a> SyncClient<'a> {
     /// Run Algorithm 1 to completion.
     pub fn run(mut self) -> Result<ClientReport> {
         let meta = self.trainer.meta().clone();
-        let started = Instant::now();
+        let clock = self.transport.clock();
+        let started = clock.now();
         let mut params = self.trainer.init(self.cfg.model_seed)?;
         let mut monitor =
             ConvergenceMonitor::new(self.cfg.count_threshold, self.cfg.conv_threshold_rel);
@@ -122,7 +128,7 @@ impl<'a> SyncClient<'a> {
         let mut want_terminate = false; // set when our CCC fires
         while round < self.cfg.max_rounds {
             // local update
-            let t_train = Instant::now();
+            let t_train = clock.now();
             let (xs, ys) = self.data.train.gather_round(
                 &self.data.indices,
                 meta.nb_train * meta.batch,
@@ -131,8 +137,12 @@ impl<'a> SyncClient<'a> {
             let (new_params, train_loss) =
                 self.trainer.train_round(&params, &xs, &ys, self.cfg.lr)?;
             params = new_params;
-            if self.slowdown > 0.0 {
-                std::thread::sleep(t_train.elapsed().mul_f32(self.slowdown));
+            match self.train_cost {
+                Some(cost) => clock.sleep(cost.mul_f32(1.0 + self.slowdown.max(0.0))),
+                None if self.slowdown > 0.0 => {
+                    clock.sleep(clock.now().saturating_sub(t_train).mul_f32(self.slowdown))
+                }
+                None => {}
             }
 
             // broadcast ⟨M_i, round⟩ (terminate flag set if our CCC fired
@@ -148,7 +158,7 @@ impl<'a> SyncClient<'a> {
 
             // barrier: wait for all peers' round-tagged models
             let mut terminate_seen = want_terminate;
-            let got = self.collect_round(round, &mut pending, &mut terminate_seen)?;
+            let got = self.collect_round(&clock, round, &mut pending, &mut terminate_seen)?;
 
             // aggregate own + all peers (Algorithm 1 line 12)
             let mut rows: Vec<(&[f32], f32)> = vec![(&params, my_weight)];
@@ -201,7 +211,7 @@ impl<'a> SyncClient<'a> {
             rounds_completed: round,
             final_accuracy: Some(correct as f32 / self.data.full_ys.len() as f32),
             final_loss: Some(loss),
-            wall: started.elapsed(),
+            wall: clock.now().saturating_sub(started),
             history,
             signal_source: None,
             final_params: Some(params),

@@ -18,8 +18,9 @@
 //!   never imported at runtime.
 //!
 //! Entry points: [`sim::run`] (in-process N-client deployments used by the
-//! experiment harness), the `dfl` binary (CLI + real TCP clients), and the
-//! `examples/` directory.
+//! experiment harness — wall-clock, or the deterministic virtual-time mode
+//! built on [`util::time`]), the `dfl` binary (CLI + real TCP clients), and
+//! the `examples/` directory.
 
 pub mod coordinator;
 pub mod data;

@@ -219,6 +219,7 @@ fn cmd_client(args: Vec<String>) -> Result<()> {
         },
         rng: Rng::new(seed ^ (0xC11E << 8) ^ id as u64),
         slowdown: 0.0,
+        train_cost: None,
     };
     let report = client.run()?;
     println!(

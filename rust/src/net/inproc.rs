@@ -1,14 +1,21 @@
 //! In-process transport: per-client channels behind a seeded network model
-//! (per-message latency, jitter, probabilistic drops, and per-link blocks
-//! for failure injection).  Every message round-trips through the binary
-//! codec so tests exercise the real wire format.
+//! (per-message latency, jitter, probabilistic drops, time-windowed
+//! partitions, and per-link blocks for failure injection).  Every message
+//! round-trips through the binary codec so tests exercise the real wire
+//! format.
 //!
-//! A single timer thread owns delayed deliveries, keeping the whole network
-//! deterministic under a fixed seed (modulo OS scheduling of the client
-//! threads themselves, which is exactly the asynchrony under test).
+//! Two hubs share the [`NetworkModel`]:
+//!
+//! * [`InProcHub`] — wall-clock: a single timer thread owns delayed
+//!   deliveries, keeping the network deterministic under a fixed seed
+//!   (modulo OS scheduling of the client threads themselves).
+//! * [`VirtualHub`] — logical-clock: deliveries become events on a shared
+//!   [`VirtualClock`], delays sampled from *per-link* RNG streams and tie
+//!   broken by `(due, from, to, seq)`, so the entire network schedule is a
+//!   pure function of the seed — byte-identical across runs.
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashSet};
+use std::collections::{BTreeMap, BinaryHeap, HashSet};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -19,7 +26,30 @@ use anyhow::Result;
 
 use super::message::{ClientId, Msg};
 use super::Transport;
+use crate::util::time::{Clock, SimTime, VirtualClock};
 use crate::util::Rng;
+
+/// A time-windowed network partition: while `start <= t < end`, messages
+/// between `side_a` and everyone else are silently lost in both directions.
+/// Times are measured on the hub's clock (virtual time under [`VirtualHub`],
+/// time since hub creation under [`InProcHub`]), so partition-and-heal
+/// scenarios are reproducible without mid-run intervention.
+#[derive(Clone, Debug)]
+pub struct NetSplit {
+    pub start: Duration,
+    pub end: Duration,
+    /// One side of the split; the complement forms the other side.
+    pub side_a: Vec<ClientId>,
+}
+
+impl NetSplit {
+    /// Does this split sever the directed link `from → to` at time `at`?
+    pub fn severs(&self, at: SimTime, from: ClientId, to: ClientId) -> bool {
+        at >= self.start
+            && at < self.end
+            && (self.side_a.contains(&from) != self.side_a.contains(&to))
+    }
+}
 
 /// Link behaviour of the simulated network.
 #[derive(Clone, Debug)]
@@ -33,12 +63,20 @@ pub struct NetworkModel {
     pub drop_prob: f64,
     /// RNG seed for delays/drops (reproducible network schedules).
     pub seed: u64,
+    /// Scheduled partitions (empty = never partitioned).
+    pub splits: Vec<NetSplit>,
 }
 
 impl NetworkModel {
     /// No delay, no loss (unit tests).
     pub fn ideal() -> Self {
-        NetworkModel { base_delay: Duration::ZERO, jitter: Duration::ZERO, drop_prob: 0.0, seed: 0 }
+        NetworkModel {
+            base_delay: Duration::ZERO,
+            jitter: Duration::ZERO,
+            drop_prob: 0.0,
+            seed: 0,
+            splits: Vec::new(),
+        }
     }
 
     /// LAN-like: small base latency with jitter (the paper's testbed).
@@ -48,12 +86,33 @@ impl NetworkModel {
             jitter: Duration::from_millis(2),
             drop_prob: 0.0,
             seed,
+            splits: Vec::new(),
+        }
+    }
+
+    /// WAN-like: high base latency, heavy jitter, mild loss.  Pair with a
+    /// protocol `timeout` comfortably above `base_delay + jitter` or every
+    /// peer looks crashed.  Wall-clock runs at this scale are painful;
+    /// under the virtual clock they cost milliseconds.
+    pub fn wan(seed: u64) -> Self {
+        NetworkModel {
+            base_delay: Duration::from_millis(40),
+            jitter: Duration::from_millis(120),
+            drop_prob: 0.01,
+            seed,
+            splits: Vec::new(),
         }
     }
 
     /// Lossy variant for fault-injection tests.
     pub fn lossy(drop_prob: f64, seed: u64) -> Self {
         NetworkModel { drop_prob, ..NetworkModel::lan(seed) }
+    }
+
+    /// Attach a partition schedule.
+    pub fn with_splits(mut self, splits: Vec<NetSplit>) -> Self {
+        self.splits = splits;
+        self
     }
 }
 
@@ -90,6 +149,8 @@ struct HubShared {
     rng: Mutex<Rng>,
     seq: Mutex<u64>,
     blocked: Mutex<HashSet<(ClientId, ClientId)>>,
+    /// Hub creation time: the reference point for `NetSplit` windows.
+    epoch: Instant,
 }
 
 impl HubShared {
@@ -128,6 +189,7 @@ impl InProcHub {
             rng: Mutex::new(Rng::new(seed ^ 0x1E7_0000)),
             seq: Mutex::new(0),
             blocked: Mutex::new(HashSet::new()),
+            epoch: Instant::now(),
         });
         let timer = {
             let shared = Arc::clone(&shared);
@@ -215,6 +277,10 @@ impl Transport for Endpoint {
         if self.shared.blocked.lock().unwrap().contains(&(self.id, to)) {
             return Ok(()); // injected link failure: message lost
         }
+        let at = self.shared.epoch.elapsed();
+        if self.shared.model.splits.iter().any(|sp| sp.severs(at, self.id, to)) {
+            return Ok(()); // partitioned: message lost
+        }
         // Exercise the wire format on every in-proc message.
         let decoded = Msg::decode(&msg.encode())?;
         let (delay, dropped) = {
@@ -255,6 +321,148 @@ impl Transport for Endpoint {
 
     fn try_recv(&self) -> Option<Msg> {
         self.rx.try_recv().ok()
+    }
+}
+
+/// Deterministic per-link state of the virtual network: an independent RNG
+/// stream (seeded purely by `(model.seed, from, to)`) plus a message
+/// counter.  Because no draw on one link depends on traffic of any other
+/// link, delays and drops are identical across runs regardless of how the
+/// client threads happened to interleave before the scheduler serialized
+/// them.
+struct LinkState {
+    rng: Rng,
+    seq: u64,
+}
+
+struct VirtualHubShared {
+    n: usize,
+    model: NetworkModel,
+    clock: Arc<VirtualClock>,
+    links: Mutex<BTreeMap<(ClientId, ClientId), LinkState>>,
+    blocked: Mutex<HashSet<(ClientId, ClientId)>>,
+}
+
+impl VirtualHubShared {
+    fn link_rng(&self, from: ClientId, to: ClientId) -> Rng {
+        Rng::new(
+            self.model.seed
+                ^ 0x11AB_0000_0000
+                ^ ((from as u64) << 32)
+                ^ (to as u64).wrapping_add(1),
+        )
+    }
+}
+
+/// The virtual-time simulated network: deliveries are events on a shared
+/// [`VirtualClock`] (token = client id), so a run never sleeps through its
+/// own latency model.  Create once per deployment, then claim one
+/// [`VirtualHub::endpoint`] per client.
+pub struct VirtualHub {
+    shared: Arc<VirtualHubShared>,
+    claimed: Mutex<Vec<bool>>,
+}
+
+impl VirtualHub {
+    /// `clock` must have been created with (at least) `n` tokens.
+    pub fn new(n: usize, model: NetworkModel, clock: Arc<VirtualClock>) -> Self {
+        VirtualHub {
+            shared: Arc::new(VirtualHubShared {
+                n,
+                model,
+                clock,
+                links: Mutex::new(BTreeMap::new()),
+                blocked: Mutex::new(HashSet::new()),
+            }),
+            claimed: Mutex::new(vec![false; n]),
+        }
+    }
+
+    /// Claim the endpoint for client `id` (each id claimable once).
+    pub fn endpoint(&self, id: ClientId) -> VirtualEndpoint {
+        let mut claimed = self.claimed.lock().unwrap();
+        assert!(
+            !std::mem::replace(&mut claimed[id as usize], true),
+            "endpoint {id} already claimed"
+        );
+        VirtualEndpoint { id, shared: Arc::clone(&self.shared) }
+    }
+
+    /// Block/unblock a directed link (failure injection), as on [`InProcHub`].
+    pub fn set_link_blocked(&self, from: ClientId, to: ClientId, blocked: bool) {
+        let mut set = self.shared.blocked.lock().unwrap();
+        if blocked {
+            set.insert((from, to));
+        } else {
+            set.remove(&(from, to));
+        }
+    }
+
+    /// The clock this network schedules on.
+    pub fn clock(&self) -> Arc<VirtualClock> {
+        Arc::clone(&self.shared.clock)
+    }
+}
+
+/// One client's handle onto the virtual network.  Its `recv` waits advance
+/// logical time instead of blocking the OS thread past the next event.
+pub struct VirtualEndpoint {
+    id: ClientId,
+    shared: Arc<VirtualHubShared>,
+}
+
+impl Transport for VirtualEndpoint {
+    fn id(&self) -> ClientId {
+        self.id
+    }
+
+    fn clock(&self) -> Clock {
+        Clock::virtual_for(Arc::clone(&self.shared.clock), self.id as usize)
+    }
+
+    fn peers(&self) -> Vec<ClientId> {
+        (0..self.shared.n as ClientId).filter(|&p| p != self.id).collect()
+    }
+
+    fn send(&self, to: ClientId, msg: &Msg) -> Result<()> {
+        let sh = &self.shared;
+        if sh.blocked.lock().unwrap().contains(&(self.id, to)) {
+            return Ok(()); // injected link failure: message lost
+        }
+        let at = sh.clock.now();
+        if sh.model.splits.iter().any(|sp| sp.severs(at, self.id, to)) {
+            return Ok(()); // partitioned: message lost
+        }
+        let (delay, dropped, seq) = {
+            let mut links = sh.links.lock().unwrap();
+            let link = links
+                .entry((self.id, to))
+                .or_insert_with(|| LinkState { rng: sh.link_rng(self.id, to), seq: 0 });
+            link.seq += 1;
+            let m = &sh.model;
+            let dropped = m.drop_prob > 0.0 && link.rng.f64() < m.drop_prob;
+            let jitter = m.jitter.mul_f64(link.rng.f64());
+            (m.base_delay + jitter, dropped, link.seq)
+        };
+        if dropped {
+            return Ok(());
+        }
+        // The codec round-trip happens decode-side (recv_timeout), keeping
+        // parity with the wall-clock hub's coverage of the wire format.
+        sh.clock.post(to as usize, delay, (self.id, to, seq), msg.encode());
+        Ok(())
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Option<Msg> {
+        let bytes = self.shared.clock.recv_deadline(self.id as usize, timeout)?;
+        // The hub encoded these bytes itself; failure here is a codec bug
+        // and must be loud, not a fake window timeout.
+        Some(Msg::decode(&bytes).expect("virtual hub delivered an undecodable message"))
+    }
+
+    fn try_recv(&self) -> Option<Msg> {
+        let bytes = self.shared.clock.try_recv(self.id as usize)?;
+        Some(Msg::decode(&bytes).expect("virtual hub delivered an undecodable message"))
     }
 }
 
@@ -305,6 +513,7 @@ mod tests {
             jitter: Duration::ZERO,
             drop_prob: 0.0,
             seed: 1,
+            splits: Vec::new(),
         };
         let hub = InProcHub::new(2, model);
         let a = hub.endpoint(0);
@@ -368,5 +577,82 @@ mod tests {
                 _ => panic!("wrong kind"),
             }
         }
+    }
+
+    #[test]
+    fn split_severs_only_cross_group_during_window() {
+        let sp = NetSplit {
+            start: Duration::from_millis(10),
+            end: Duration::from_millis(20),
+            side_a: vec![0, 1],
+        };
+        let in_window = Duration::from_millis(15);
+        assert!(sp.severs(in_window, 0, 2));
+        assert!(sp.severs(in_window, 2, 1), "severed in both directions");
+        assert!(!sp.severs(in_window, 0, 1), "same side unaffected");
+        assert!(!sp.severs(in_window, 2, 3), "same side unaffected");
+        assert!(!sp.severs(Duration::from_millis(5), 0, 2), "before window");
+        assert!(!sp.severs(Duration::from_millis(20), 0, 2), "end is exclusive");
+    }
+
+    #[test]
+    fn wan_preset_is_heavier_than_lan() {
+        let lan = NetworkModel::lan(1);
+        let wan = NetworkModel::wan(1);
+        assert!(wan.base_delay > lan.base_delay);
+        assert!(wan.jitter > lan.jitter);
+        assert!(wan.drop_prob > 0.0 && wan.drop_prob < 0.1);
+    }
+
+    #[test]
+    fn virtual_hub_delivers_at_modeled_latency() {
+        let model = NetworkModel {
+            base_delay: Duration::from_millis(30),
+            jitter: Duration::ZERO,
+            drop_prob: 0.0,
+            seed: 1,
+            splits: Vec::new(),
+        };
+        let clock = VirtualClock::new(2);
+        let hub = VirtualHub::new(2, model, Arc::clone(&clock));
+        let a = hub.endpoint(0);
+        let b = hub.endpoint(1);
+        std::thread::scope(|scope| {
+            let ca = a.clock();
+            scope.spawn(move || {
+                if let Clock::Virtual { clock, token } = &ca {
+                    clock.attach(*token);
+                    a.send(1, &update(0, 1)).unwrap();
+                    clock.detach(*token);
+                }
+            });
+            let cb = b.clock();
+            scope.spawn(move || {
+                if let Clock::Virtual { clock, token } = &cb {
+                    clock.attach(*token);
+                    let got = b.recv_timeout(Duration::from_secs(5));
+                    assert_eq!(got, Some(update(0, 1)));
+                    assert_eq!(cb.now(), Duration::from_millis(30), "exact logical latency");
+                    clock.detach(*token);
+                }
+            });
+        });
+    }
+
+    #[test]
+    fn virtual_hub_recv_times_out_without_real_waiting() {
+        let clock = VirtualClock::new(1);
+        let hub = VirtualHub::new(1, NetworkModel::ideal(), Arc::clone(&clock));
+        let a = hub.endpoint(0);
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            scope.spawn(|| {
+                clock.attach(0);
+                assert!(a.recv_timeout(Duration::from_secs(30)).is_none());
+                clock.detach(0);
+            });
+        });
+        assert_eq!(clock.now(), Duration::from_secs(30));
+        assert!(t0.elapsed() < Duration::from_secs(2), "virtual wait burned wall time");
     }
 }

@@ -1,26 +1,35 @@
 //! P2P messaging substrate.
 //!
-//! Two interchangeable transports implement [`Transport`]:
+//! Three interchangeable transports implement [`Transport`]:
 //!
 //! * [`inproc::InProcHub`] — in-process channels with a seeded network model
 //!   (per-link delay, jitter, drops) used by the simulator, tests, and the
 //!   experiment harness.  Messages still round-trip through the binary wire
 //!   codec so the encoding is exercised everywhere.
+//! * [`inproc::VirtualHub`] — the same network model on a deterministic
+//!   [`crate::util::time::VirtualClock`]: waits advance logical time instead
+//!   of sleeping, making 1000-client deployments and WAN-scale latency
+//!   distributions testable in milliseconds.
 //! * [`tcp::TcpTransport`] — real sockets (std::net) with length-prefixed
 //!   frames for multi-process / multi-machine deployments, matching the
 //!   paper's thread+socket implementation.
+//!
+//! Clients obtain their time source from [`Transport::clock`], so protocol
+//! code is identical under wall and virtual time.
 
 pub mod inproc;
 pub mod message;
 pub mod tcp;
 
-pub use inproc::{InProcHub, NetworkModel};
+pub use inproc::{InProcHub, NetSplit, NetworkModel, VirtualEndpoint, VirtualHub};
 pub use message::{ClientId, ModelUpdate, Msg};
 pub use tcp::TcpTransport;
 
 use std::time::Duration;
 
 use anyhow::Result;
+
+use crate::util::time::Clock;
 
 /// Peer-to-peer endpoint owned by one client.
 ///
@@ -29,6 +38,13 @@ use anyhow::Result;
 /// (asynchronous network).
 pub trait Transport: Send {
     fn id(&self) -> ClientId;
+
+    /// The time source deadline waits on this transport are measured
+    /// against.  Wall time unless the transport runs on a virtual clock;
+    /// clients should call this once and reuse the handle.
+    fn clock(&self) -> Clock {
+        Clock::real()
+    }
 
     /// All peers this endpoint can address (excluding itself).
     fn peers(&self) -> Vec<ClientId>;

@@ -1,0 +1,128 @@
+//! Stand-in for the PJRT-backed engine when built without the `pjrt`
+//! feature (the offline image has no `xla` crate).  Presents the same API
+//! as `engine.rs` so binaries, benches and examples compile; every load
+//! fails with a clear error and the types are uninhabited, so no post-load
+//! path can be reached.  Protocol logic tests run on [`super::MockTrainer`]
+//! either way.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::{Meta, Trainer};
+
+/// Uninhabited marker: a stub `Engine` can never actually be constructed.
+enum Never {}
+
+/// API twin of the PJRT `Engine`; see `engine.rs` for the real thing.
+pub struct Engine {
+    never: Never,
+}
+
+const NO_PJRT: &str = "dfl was built without the `pjrt` feature: the PJRT engine is \
+     unavailable (add the `xla` dependency and build with `--features pjrt`, \
+     or use the MockTrainer)";
+
+impl Engine {
+    pub fn load(_dir: &Path) -> Result<Engine> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn dir(&self) -> &Path {
+        match self.never {}
+    }
+
+    pub fn platform(&self) -> String {
+        match self.never {}
+    }
+
+    pub fn meta(&self) -> &Meta {
+        match self.never {}
+    }
+
+    pub fn train_step(
+        &self,
+        _params: &[f32],
+        _xs: &[f32],
+        _ys: &[i32],
+        _lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        match self.never {}
+    }
+
+    pub fn init(&self, _seed: u32) -> Result<Vec<f32>> {
+        match self.never {}
+    }
+
+    pub fn train_round(
+        &self,
+        _params: &[f32],
+        _xs: &[f32],
+        _ys: &[i32],
+        _lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        match self.never {}
+    }
+
+    pub fn eval(&self, _params: &[f32], _xs: &[f32], _ys: &[i32], _full: bool) -> Result<(u32, f32)> {
+        match self.never {}
+    }
+
+    pub fn aggregate(&self, _rows: &[(&[f32], f32)]) -> Result<Vec<f32>> {
+        match self.never {}
+    }
+}
+
+/// API twin of the thread-shareable PJRT engine.
+pub struct SharedEngine {
+    inner: Engine,
+}
+
+impl SharedEngine {
+    pub fn load(dir: &Path) -> Result<SharedEngine> {
+        Engine::load(dir).map(SharedEngine::from_engine)
+    }
+
+    pub fn from_engine(engine: Engine) -> SharedEngine {
+        SharedEngine { inner: engine }
+    }
+}
+
+impl Trainer for SharedEngine {
+    fn meta(&self) -> &Meta {
+        match self.inner.never {}
+    }
+
+    fn init(&self, _seed: u32) -> Result<Vec<f32>> {
+        match self.inner.never {}
+    }
+
+    fn train_round(
+        &self,
+        _params: &[f32],
+        _xs: &[f32],
+        _ys: &[i32],
+        _lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        match self.inner.never {}
+    }
+
+    fn eval(&self, _params: &[f32], _xs: &[f32], _ys: &[i32], _full: bool) -> Result<(u32, f32)> {
+        match self.inner.never {}
+    }
+
+    fn aggregate(&self, _rows: &[(&[f32], f32)]) -> Result<Vec<f32>> {
+        match self.inner.never {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_load_fails_loudly() {
+        let err = SharedEngine::load(Path::new("artifacts/tiny")).err().unwrap();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}

@@ -39,6 +39,25 @@ impl MockTrainer {
         })
     }
 
+    /// `tiny()` with a custom aggregation fan-in cap — scale tests run
+    /// hundreds of clients, far past the paper's k_max = 16.
+    pub fn tiny_with_k_max(k_max: usize) -> Self {
+        let mut t = MockTrainer::tiny();
+        t.meta.k_max = k_max;
+        t
+    }
+
+    /// Lean variant for very large deployments (1000 clients): 2 classes
+    /// shrink the model to 66 params, keeping per-message payloads and the
+    /// in-flight event queue small.
+    pub fn lean_with_k_max(k_max: usize) -> Self {
+        let mut t = MockTrainer::tiny();
+        t.meta.classes = 2;
+        t.meta.n_params = t.check_params();
+        t.meta.k_max = k_max;
+        t
+    }
+
     /// Feature count: mean-pooled channels (img*img*C -> 32 buckets).
     fn n_features(&self) -> usize {
         32

@@ -6,6 +6,14 @@
 //! logic can be unit/property-tested with the deterministic [`MockTrainer`]
 //! while deployments use the PJRT-backed [`Engine`] / [`SharedEngine`].
 
+// The PJRT engine needs the external `xla` crate, which the offline build
+// image does not ship; without the `pjrt` feature a same-API stub keeps the
+// crate (and everything written against `SharedEngine`) compiling, erroring
+// only at artifact-load time.
+#[cfg(feature = "pjrt")]
+mod engine;
+#[cfg(not(feature = "pjrt"))]
+#[path = "engine_stub.rs"]
 mod engine;
 mod mock;
 

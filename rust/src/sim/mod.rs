@@ -1,12 +1,23 @@
 //! Deterministic in-process N-client deployments.
 //!
-//! Spawns one OS thread per client over an [`InProcHub`] network, with a
-//! machine-contention model standing in for the paper's 1/2/3-machine LAN
-//! testbed (DESIGN.md §3): clients are round-robined onto `machines`
-//! virtual hosts whose relative clock speeds follow Table 1
-//! (4.0 / 2.0 / 3.5 GHz) and whose per-host contention grows with
-//! co-located client count — exactly the effect the paper observes when
-//! all 12 clients share one box.
+//! Spawns one OS thread per client with a machine-contention model standing
+//! in for the paper's 1/2/3-machine LAN testbed (DESIGN.md §3): clients are
+//! round-robined onto `machines` virtual hosts whose relative clock speeds
+//! follow Table 1 (4.0 / 2.0 / 3.5 GHz) and whose per-host contention grows
+//! with co-located client count — exactly the effect the paper observes
+//! when all 12 clients share one box.
+//!
+//! Two time regimes ([`SimConfig::virtual_time`]):
+//!
+//! * **Wall clock** (default) over an [`InProcHub`]: timeouts and fault
+//!   downtime really elapse, exactly as the seed behaved.
+//! * **Virtual clock** over a [`VirtualHub`]: the deployment runs as a
+//!   cooperative discrete-event simulation (`util::time` DESIGN note).
+//!   Wait windows, WAN latencies, and multi-second outages cost no wall
+//!   time, runs are byte-identical under a fixed seed, and client counts
+//!   in the hundreds-to-thousands become practical.  `SimResult::wall`
+//!   and per-report `wall` then report *virtual* durations, keeping
+//!   Table-1-style machine-time comparisons meaningful.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -20,8 +31,9 @@ use crate::coordinator::sync::SyncClient;
 use crate::coordinator::termination::TerminationCause;
 use crate::data::{dirichlet_partition, fixed_chunk, iid_partition, skewed_chunk, Dataset};
 use crate::metrics::ClientReport;
-use crate::net::{InProcHub, NetworkModel};
+use crate::net::{InProcHub, NetworkModel, Transport, VirtualHub};
 use crate::runtime::Trainer;
+use crate::util::time::VirtualClock;
 use crate::util::Rng;
 
 /// How client data is split (paper settings).
@@ -61,6 +73,12 @@ pub struct SimConfig {
     /// Per-client crash schedule (empty = fault-free).
     pub faults: Vec<FaultPlan>,
     pub seed: u64,
+    /// Run on a deterministic [`VirtualClock`] instead of wall time.
+    pub virtual_time: bool,
+    /// Modeled per-round training cost under virtual time (scaled by each
+    /// client's machine slowdown); ignored in wall-clock mode, where real
+    /// compute time is measured instead.
+    pub train_cost: Duration,
 }
 
 impl SimConfig {
@@ -77,6 +95,8 @@ impl SimConfig {
             net: NetworkModel::lan(7),
             faults: Vec::new(),
             seed: 7,
+            virtual_time: false,
+            train_cost: Duration::from_millis(20),
         }
     }
 
@@ -184,46 +204,114 @@ pub fn run(trainer: &(dyn Trainer + Sync), cfg: &SimConfig) -> Result<SimResult>
     };
 
     // --- network + clients ---------------------------------------------------
-    let hub = InProcHub::new(cfg.n_clients, cfg.net.clone());
+    enum Net {
+        Real(InProcHub),
+        Virtual(VirtualHub, Arc<VirtualClock>),
+    }
+    let net = if cfg.virtual_time {
+        let clock = VirtualClock::new(cfg.n_clients);
+        Net::Virtual(
+            VirtualHub::new(cfg.n_clients, cfg.net.clone(), Arc::clone(&clock)),
+            clock,
+        )
+    } else {
+        Net::Real(InProcHub::new(cfg.n_clients, cfg.net.clone()))
+    };
+
+    /// Hands the virtual scheduler onward when a client thread finishes —
+    /// or panics; a stuck token would deadlock every other client.
+    struct DetachGuard {
+        clock: Arc<VirtualClock>,
+        token: usize,
+    }
+    impl Drop for DetachGuard {
+        fn drop(&mut self) {
+            self.clock.detach(self.token);
+        }
+    }
+
     let t0 = Instant::now();
     let reports: Result<Vec<ClientReport>> = std::thread::scope(|scope| {
         let mut handles = Vec::new();
+        let mut spawn_err = None;
         for (i, indices) in parts.into_iter().enumerate() {
-            let endpoint = hub.endpoint(i as u32);
             let data = ClientData::new(Arc::clone(&train), indices, &test, &meta);
             let fault = cfg.faults.get(i).copied().unwrap_or_default();
             let protocol = cfg.protocol.clone();
             let client_rng = Rng::new(cfg.seed ^ (0xC11E << 8) ^ i as u64);
             let slowdown = cfg.slowdown_of(i);
             let sync = cfg.sync;
-            handles.push(scope.spawn(move || -> Result<ClientReport> {
+            let train_cost = cfg.virtual_time.then_some(cfg.train_cost);
+
+            let run_client = move |transport: Box<dyn Transport>| -> Result<ClientReport> {
                 if sync {
                     SyncClient {
                         id: i as u32,
                         trainer,
-                        transport: Box::new(endpoint),
+                        transport,
                         cfg: protocol,
                         data,
                         rng: client_rng,
                         slowdown,
+                        train_cost,
                     }
                     .run()
                 } else {
                     AsyncClient {
                         id: i as u32,
                         trainer,
-                        transport: Box::new(endpoint),
+                        transport,
                         cfg: protocol,
                         data,
                         fault,
                         rng: client_rng,
                         slowdown,
+                        train_cost,
                     }
                     .run()
                 }
-            }));
+            };
+
+            match &net {
+                Net::Real(hub) => {
+                    let endpoint = hub.endpoint(i as u32);
+                    handles.push(scope.spawn(move || run_client(Box::new(endpoint))));
+                }
+                Net::Virtual(hub, clock) => {
+                    let endpoint = hub.endpoint(i as u32);
+                    let spawn_clock = Arc::clone(clock);
+                    // Cooperatively scheduled (one runnable thread at a
+                    // time), so small stacks keep 1000-client deployments
+                    // cheap where a thousand default 8 MB threads are not.
+                    let spawned = std::thread::Builder::new()
+                        .name(format!("client-{i}"))
+                        .stack_size(512 * 1024)
+                        .spawn_scoped(scope, move || {
+                            spawn_clock.attach(i);
+                            let _guard =
+                                DetachGuard { clock: Arc::clone(&spawn_clock), token: i };
+                            run_client(Box::new(endpoint))
+                        });
+                    match spawned {
+                        Ok(handle) => handles.push(handle),
+                        Err(e) => {
+                            // This token (and the unspawned rest) will never
+                            // attach; detaching them hands the scheduler's
+                            // turn onward so already-running clients can
+                            // finish instead of waiting forever on a turn
+                            // nobody owns. The error surfaces after joins.
+                            for t in i..cfg.n_clients {
+                                clock.detach(t);
+                            }
+                            spawn_err =
+                                Some(anyhow::anyhow!("spawning client thread {i}: {e}"));
+                            break;
+                        }
+                    }
+                }
+            }
         }
-        handles
+        let joined: Result<Vec<ClientReport>> = handles
             .into_iter()
             .enumerate()
             .map(|(i, h)| {
@@ -231,12 +319,24 @@ pub fn run(trainer: &(dyn Trainer + Sync), cfg: &SimConfig) -> Result<SimResult>
                     .map_err(|_| anyhow::anyhow!("client {i} panicked"))?
                     .with_context(|| format!("client {i} failed"))
             })
-            .collect()
+            .collect();
+        match spawn_err {
+            Some(e) => Err(e),
+            None => joined,
+        }
     });
+    let reports = reports?;
+    // Virtual runs report logical time: the deployment "took" as long as
+    // its slowest client's simulated schedule, not the compute wall time.
+    let wall = if cfg.virtual_time {
+        reports.iter().map(|r| r.wall).max().unwrap_or_default()
+    } else {
+        t0.elapsed()
+    };
     Ok(SimResult {
-        wall: t0.elapsed(),
+        wall,
         machines: cfg.machines.clamp(1, 3),
         machine_of: (0..cfg.n_clients).map(|c| cfg.machine_of(c)).collect(),
-        reports: reports?,
+        reports,
     })
 }

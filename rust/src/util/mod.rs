@@ -1,12 +1,15 @@
 //! Substrate utilities the offline environment required us to own:
 //! deterministic RNG (no `rand`), binary codec (no `serde`), CLI parsing
 //! (no `clap`), property-test runner (no `proptest`), bench harness
-//! (no `criterion`).
+//! (no `criterion`), and the real/virtual clock abstraction (no `tokio`
+//! test-time machinery).
 
 pub mod benchkit;
 pub mod cli;
 pub mod codec;
 pub mod quickcheck;
 pub mod rng;
+pub mod time;
 
 pub use rng::Rng;
+pub use time::{Clock, SimTime, VirtualClock};

@@ -1,0 +1,469 @@
+//! Clock abstraction: real wall time or a deterministic virtual clock.
+//!
+//! Every layer that waits — the in-process transport's delivery delays, the
+//! Phase-2 wait window, Phase-1's round barrier, fault-plan downtime, and
+//! the machine-contention slowdown — goes through a [`Clock`] handle instead
+//! of `Instant::now()` / `thread::sleep`.  [`Clock::Real`] preserves the
+//! original wall-clock behaviour (TCP deployments, real-clock smoke tests);
+//! [`Clock::Virtual`] runs the whole deployment as a discrete-event
+//! simulation whose logical time jumps instantly to the next due event, so
+//! a protocol round that "waits" 80 ms costs microseconds of wall time and
+//! a 1000-client run is limited by compute, not by sleeping.
+//!
+//! # DESIGN — virtual-clock event ordering and determinism
+//!
+//! The virtual clock is a cooperative discrete-event scheduler over the
+//! deployment's client threads:
+//!
+//! * **One runnable thread at a time.**  Every participant registers a
+//!   `token` (its client id) and gates on [`VirtualClock::attach`] before
+//!   doing any work.  A thread runs until it blocks — [`VirtualClock::sleep`]
+//!   (training charge, fault downtime) or [`VirtualClock::recv_deadline`]
+//!   (transport wait) — and only then does the scheduler hand the CPU to the
+//!   next ready thread.  Serial execution means the interleaving of sends,
+//!   receives and RNG draws is a pure function of the configuration, which
+//!   is what makes same-seed runs byte-identical.
+//! * **Events are totally ordered by `(due, seq)`.**  A scheduled message
+//!   delivery carries a key `(from, to, per-link seq)`; two deliveries due
+//!   at the same instant fire in key order, never in OS-arrival order.
+//!   Sleep/deadline wakeups at the same instant are granted in token order.
+//! * **Time advances only when no thread is ready.**  When every live
+//!   thread is blocked, the scheduler fires all deliveries due at or before
+//!   the earliest pending instant, advances `now` to it, and wakes the
+//!   lowest ready token.  Logical time is therefore exact: an 80 ms wait
+//!   window ends at precisely `start + 80 ms`, with zero OS-jitter.
+//! * **Payloads are opaque bytes.**  The clock carries encoded wire
+//!   messages (`Msg::encode`) so `util` stays independent of `net`; the
+//!   virtual transport decodes on receive, preserving the seed behaviour of
+//!   exercising the codec on every in-process message.
+//!
+//! Liveness: every blocking call carries a finite due instant (windows and
+//! barriers always have deadlines), so the scheduler can always advance; a
+//! thread that finishes (or panics) detaches via a drop guard, and sends to
+//! detached clients vanish silently — exactly the paper's crash model.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// A timestamp on a [`Clock`]: time elapsed since the clock's epoch.
+pub type SimTime = Duration;
+
+/// Per-client handle on either wall time or a shared [`VirtualClock`].
+///
+/// Cheap to clone; obtain one from `Transport::clock()` so the same client
+/// code runs under both time regimes.
+#[derive(Clone)]
+pub enum Clock {
+    /// Wall time, measured from this handle's creation.
+    Real { epoch: Instant },
+    /// Logical time on a shared discrete-event scheduler.
+    Virtual { clock: Arc<VirtualClock>, token: usize },
+}
+
+impl Clock {
+    /// A fresh wall-clock handle (epoch = now).
+    pub fn real() -> Clock {
+        Clock::Real { epoch: Instant::now() }
+    }
+
+    /// Handle for one registered participant of a virtual clock.
+    pub fn virtual_for(clock: Arc<VirtualClock>, token: usize) -> Clock {
+        Clock::Virtual { clock, token }
+    }
+
+    pub fn is_virtual(&self) -> bool {
+        matches!(self, Clock::Virtual { .. })
+    }
+
+    /// Time elapsed since this clock's epoch.
+    pub fn now(&self) -> SimTime {
+        match self {
+            Clock::Real { epoch } => epoch.elapsed(),
+            Clock::Virtual { clock, .. } => clock.now(),
+        }
+    }
+
+    /// Block (really or logically) for `d`.
+    pub fn sleep(&self, d: Duration) {
+        match self {
+            Clock::Real { .. } => std::thread::sleep(d),
+            Clock::Virtual { clock, token } => clock.sleep(*token, d),
+        }
+    }
+}
+
+/// State of one registered participant.
+enum ThreadState {
+    /// Scheduled: the thread may run until its next blocking call.
+    Running,
+    /// Blocked in [`VirtualClock::sleep`] until `due`.
+    Asleep { due: u64 },
+    /// Blocked in [`VirtualClock::recv_deadline`] until mail or `deadline`.
+    Receiving { deadline: u64 },
+    /// Finished (or crashed); sends to it are dropped.
+    Done,
+}
+
+/// One scheduled delivery: fires into `to`'s mailbox at `due`; ties broken
+/// by `key` (see module DESIGN note).
+struct VcEvent {
+    due: u64,
+    key: (u32, u32, u64),
+    to: usize,
+    payload: Vec<u8>,
+}
+
+impl PartialEq for VcEvent {
+    fn eq(&self, other: &Self) -> bool {
+        (self.due, self.key) == (other.due, other.key)
+    }
+}
+impl Eq for VcEvent {}
+impl PartialOrd for VcEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for VcEvent {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.due, self.key).cmp(&(other.due, other.key))
+    }
+}
+
+struct VcState {
+    /// Logical nanoseconds since the simulation epoch.
+    now: u64,
+    threads: Vec<ThreadState>,
+    mailboxes: Vec<VecDeque<Vec<u8>>>,
+    events: BinaryHeap<Reverse<VcEvent>>,
+    /// Tokens currently in `Running` state (0 or 1 after startup).
+    running: usize,
+    /// Tokens not yet `Done`.
+    live: usize,
+}
+
+/// The shared discrete-event scheduler (see module docs).
+pub struct VirtualClock {
+    state: Mutex<VcState>,
+    /// One condvar per token, paired with `state`.
+    cvs: Vec<Condvar>,
+}
+
+fn to_nanos(d: Duration) -> u64 {
+    d.as_nanos().min(u64::MAX as u128) as u64
+}
+
+impl VirtualClock {
+    /// Create a clock for `n` participants (tokens `0..n`).  All start
+    /// blocked at t = 0; the scheduler grants token 0 the first turn, so
+    /// threads may be spawned in any order and simply gate on [`attach`].
+    ///
+    /// [`attach`]: VirtualClock::attach
+    pub fn new(n: usize) -> Arc<VirtualClock> {
+        let mut state = VcState {
+            now: 0,
+            threads: (0..n).map(|_| ThreadState::Asleep { due: 0 }).collect(),
+            mailboxes: (0..n).map(|_| VecDeque::new()).collect(),
+            events: BinaryHeap::new(),
+            running: 0,
+            live: n,
+        };
+        let cvs: Vec<Condvar> = (0..n).map(|_| Condvar::new()).collect();
+        Self::schedule(&mut state, &cvs);
+        Arc::new(VirtualClock { state: Mutex::new(state), cvs })
+    }
+
+    /// Current logical time.  Deterministic when called by the running
+    /// participant (time cannot advance while any thread runs).
+    pub fn now(&self) -> SimTime {
+        Duration::from_nanos(self.state.lock().unwrap().now)
+    }
+
+    /// Gate until this token is scheduled.  Must be the first clock call a
+    /// participant thread makes.
+    pub fn attach(&self, token: usize) {
+        let guard = self.state.lock().unwrap();
+        drop(self.wait_for_turn(guard, token));
+    }
+
+    /// Unregister a finished participant and hand the turn onward.  Safe to
+    /// call from a drop guard on panic; idempotent.
+    pub fn detach(&self, token: usize) {
+        let mut s = self.state.lock().unwrap();
+        if matches!(s.threads[token], ThreadState::Done) {
+            return;
+        }
+        let was_running = matches!(s.threads[token], ThreadState::Running);
+        s.threads[token] = ThreadState::Done;
+        s.mailboxes[token].clear();
+        s.live -= 1;
+        if was_running {
+            s.running -= 1;
+        }
+        if s.running == 0 && s.live > 0 {
+            Self::schedule(&mut s, &self.cvs);
+        }
+    }
+
+    /// Block this token for `d` of logical time.
+    pub fn sleep(&self, token: usize, d: Duration) {
+        let mut s = self.state.lock().unwrap();
+        let due = s.now.saturating_add(to_nanos(d));
+        s.threads[token] = ThreadState::Asleep { due };
+        s.running -= 1;
+        if s.running == 0 {
+            Self::schedule(&mut s, &self.cvs);
+        }
+        drop(self.wait_for_turn(s, token));
+    }
+
+    /// Schedule `payload` for delivery into `to`'s mailbox after `delay`.
+    /// `key` must be unique and reproducible (e.g. `(from, to, link seq)`);
+    /// it breaks ties between deliveries due at the same instant.
+    pub fn post(&self, to: usize, delay: Duration, key: (u32, u32, u64), payload: Vec<u8>) {
+        let mut s = self.state.lock().unwrap();
+        let due = s.now.saturating_add(to_nanos(delay));
+        s.events.push(Reverse(VcEvent { due, key, to, payload }));
+    }
+
+    /// Pop the next delivered payload, or block until one arrives or
+    /// logical `timeout` elapses (then `None`).
+    pub fn recv_deadline(&self, token: usize, timeout: Duration) -> Option<Vec<u8>> {
+        let mut s = self.state.lock().unwrap();
+        let deadline = s.now.saturating_add(to_nanos(timeout));
+        loop {
+            Self::fire_due(&mut s);
+            if let Some(p) = s.mailboxes[token].pop_front() {
+                return Some(p);
+            }
+            if s.now >= deadline {
+                return None;
+            }
+            s.threads[token] = ThreadState::Receiving { deadline };
+            s.running -= 1;
+            if s.running == 0 {
+                Self::schedule(&mut s, &self.cvs);
+            }
+            s = self.wait_for_turn(s, token);
+        }
+    }
+
+    /// Non-blocking receive of anything already due.
+    pub fn try_recv(&self, token: usize) -> Option<Vec<u8>> {
+        let mut s = self.state.lock().unwrap();
+        Self::fire_due(&mut s);
+        s.mailboxes[token].pop_front()
+    }
+
+    /// Park until the scheduler marks `token` running again.
+    fn wait_for_turn<'a>(
+        &'a self,
+        mut guard: MutexGuard<'a, VcState>,
+        token: usize,
+    ) -> MutexGuard<'a, VcState> {
+        while !matches!(guard.threads[token], ThreadState::Running) {
+            guard = self.cvs[token].wait(guard).unwrap();
+        }
+        guard
+    }
+
+    /// Deliver every event due at or before `now` (mailboxes of `Done`
+    /// tokens swallow their traffic — the crash model).
+    fn fire_due(s: &mut VcState) {
+        while let Some(Reverse(ev)) = s.events.peek() {
+            if ev.due > s.now {
+                break;
+            }
+            let Reverse(ev) = s.events.pop().unwrap();
+            if !matches!(s.threads[ev.to], ThreadState::Done) {
+                s.mailboxes[ev.to].push_back(ev.payload);
+            }
+        }
+    }
+
+    /// Core scheduling step; requires `running == 0`.  Fires due events,
+    /// wakes the lowest ready token, advancing `now` to the earliest
+    /// pending instant when nothing is ready yet.
+    fn schedule(s: &mut VcState, cvs: &[Condvar]) {
+        debug_assert_eq!(s.running, 0);
+        if s.live == 0 {
+            return;
+        }
+        loop {
+            Self::fire_due(s);
+            let mut next_due: Option<u64> = s.events.peek().map(|Reverse(e)| e.due);
+            let mut pick: Option<usize> = None;
+            for (t, st) in s.threads.iter().enumerate() {
+                let ready = match st {
+                    ThreadState::Running => {
+                        debug_assert!(false, "schedule() with a running thread");
+                        false
+                    }
+                    ThreadState::Done => continue,
+                    ThreadState::Asleep { due } => {
+                        if *due <= s.now {
+                            true
+                        } else {
+                            next_due = Some(next_due.map_or(*due, |d| d.min(*due)));
+                            false
+                        }
+                    }
+                    ThreadState::Receiving { deadline } => {
+                        if !s.mailboxes[t].is_empty() || *deadline <= s.now {
+                            true
+                        } else {
+                            next_due = Some(next_due.map_or(*deadline, |d| d.min(*deadline)));
+                            false
+                        }
+                    }
+                };
+                if ready {
+                    pick = Some(t);
+                    break;
+                }
+            }
+            if let Some(t) = pick {
+                s.threads[t] = ThreadState::Running;
+                s.running = 1;
+                cvs[t].notify_all();
+                return;
+            }
+            match next_due {
+                // Nothing ready: jump to the earliest pending instant.
+                Some(d) if d > s.now => s.now = d,
+                // No pending work at all — every live thread is Done-racing
+                // to detach, or the simulation is over.
+                _ => return,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MS: Duration = Duration::from_millis(1);
+
+    #[test]
+    fn real_clock_elapses() {
+        let c = Clock::real();
+        assert!(!c.is_virtual());
+        let t0 = c.now();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(c.now() > t0);
+    }
+
+    #[test]
+    fn virtual_sleep_advances_logical_time_instantly() {
+        let clock = VirtualClock::new(2);
+        let wall = Instant::now();
+        let ends: Vec<SimTime> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..2usize)
+                .map(|t| {
+                    let clock = Arc::clone(&clock);
+                    scope.spawn(move || {
+                        clock.attach(t);
+                        // token 0 sleeps 10 s, token 1 sleeps 20 s — virtual
+                        clock.sleep(t, Duration::from_secs(10 * (t as u64 + 1)));
+                        let end = clock.now();
+                        clock.detach(t);
+                        end
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(ends[0], Duration::from_secs(10));
+        assert_eq!(ends[1], Duration::from_secs(20));
+        assert_eq!(clock.now(), Duration::from_secs(20));
+        assert!(wall.elapsed() < Duration::from_secs(2), "virtual sleep slept for real");
+    }
+
+    #[test]
+    fn same_instant_deliveries_fire_in_key_order() {
+        let clock = VirtualClock::new(2);
+        std::thread::scope(|scope| {
+            let c0 = Arc::clone(&clock);
+            scope.spawn(move || {
+                c0.attach(0);
+                // posted in reverse key order, same due instant
+                c0.post(1, 5 * MS, (0, 1, 2), vec![2]);
+                c0.post(1, 5 * MS, (0, 1, 1), vec![1]);
+                c0.detach(0);
+            });
+            let c1 = Arc::clone(&clock);
+            scope.spawn(move || {
+                c1.attach(1);
+                let a = c1.recv_deadline(1, Duration::from_secs(1)).unwrap();
+                let b = c1.recv_deadline(1, Duration::from_secs(1)).unwrap();
+                assert_eq!((a, b), (vec![1], vec![2]), "ties must break by key");
+                assert_eq!(c1.now(), 5 * MS, "delivery at exact due instant");
+                c1.detach(1);
+            });
+        });
+    }
+
+    #[test]
+    fn recv_deadline_times_out_at_exact_instant() {
+        let clock = VirtualClock::new(1);
+        std::thread::scope(|scope| {
+            let c = Arc::clone(&clock);
+            scope.spawn(move || {
+                c.attach(0);
+                assert!(c.recv_deadline(0, 50 * MS).is_none());
+                assert_eq!(c.now(), 50 * MS);
+                c.detach(0);
+            });
+        });
+    }
+
+    #[test]
+    fn detach_unblocks_waiters_and_drops_mail() {
+        let clock = VirtualClock::new(2);
+        std::thread::scope(|scope| {
+            let c0 = Arc::clone(&clock);
+            scope.spawn(move || {
+                c0.attach(0);
+                c0.post(1, Duration::ZERO, (0, 1, 1), vec![7]);
+                c0.detach(0); // token 1 must still be scheduled afterwards
+            });
+            let c1 = Arc::clone(&clock);
+            scope.spawn(move || {
+                c1.attach(1);
+                c1.sleep(1, 10 * MS);
+                // mail sent to a detached token is swallowed silently
+                c1.post(0, Duration::ZERO, (1, 0, 1), vec![9]);
+                assert_eq!(c1.try_recv(1), Some(vec![7]));
+                assert_eq!(c1.try_recv(1), None);
+                c1.detach(1);
+            });
+        });
+    }
+
+    #[test]
+    fn ping_pong_round_trip_accumulates_latency() {
+        let clock = VirtualClock::new(2);
+        std::thread::scope(|scope| {
+            let c0 = Arc::clone(&clock);
+            scope.spawn(move || {
+                c0.attach(0);
+                c0.post(1, 3 * MS, (0, 1, 1), vec![1]);
+                let got = c0.recv_deadline(0, Duration::from_secs(1)).unwrap();
+                assert_eq!(got, vec![2]);
+                assert_eq!(c0.now(), 7 * MS, "3 ms there + 4 ms back");
+                c0.detach(0);
+            });
+            let c1 = Arc::clone(&clock);
+            scope.spawn(move || {
+                c1.attach(1);
+                let got = c1.recv_deadline(1, Duration::from_secs(1)).unwrap();
+                assert_eq!(got, vec![1]);
+                c1.post(0, 4 * MS, (1, 0, 1), vec![2]);
+                c1.detach(1);
+            });
+        });
+    }
+}

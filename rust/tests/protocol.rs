@@ -1,6 +1,12 @@
 //! Protocol-level integration tests: Algorithm 1/2 + CCC/CRT over the
 //! in-process network with the deterministic MockTrainer (no PJRT cost).
 //! These assert the paper's §3 claims as invariants.
+//!
+//! All protocol tests run on the virtual clock (`SimConfig::virtual_time`),
+//! so wait windows and outages advance logical time instead of sleeping —
+//! whole-suite wall time is compute-bound, and seed loops are wide because
+//! runs are cheap.  One wall-clock smoke test per algorithm guards the
+//! `RealClock` path end to end.
 
 use std::time::Duration;
 
@@ -33,6 +39,8 @@ fn base_cfg(n: usize, seed: u64) -> SimConfig {
     cfg.train_n = 60 * n;
     cfg.net = NetworkModel::lan(seed);
     cfg.seed = seed;
+    cfg.virtual_time = true;
+    cfg.train_cost = Duration::from_millis(5);
     cfg
 }
 
@@ -58,7 +66,8 @@ fn async_fault_free_all_terminate_adaptively() {
 #[test]
 fn no_premature_termination_before_min_rounds() {
     // Property over seeds: nobody terminates before MINIMUM_ROUNDS.
-    for seed in 0..6u64 {
+    // (Wide loop: virtual-time runs cost no wall-clock waits.)
+    for seed in 0..32u64 {
         let trainer = MockTrainer::tiny();
         let cfg = base_cfg(4, 100 + seed);
         let res = sim::run(&trainer, &cfg).unwrap();
@@ -103,9 +112,9 @@ fn crashes_are_detected_and_survivors_finish() {
 
 #[test]
 fn termination_signal_floods_to_all_survivors() {
-    // Over several seeds with random crashes: all survivors end via CCC or
+    // Over many seeds with random crashes: all survivors end via CCC or
     // CRT — never stuck, never capped (max_rounds is generous).
-    for seed in 0..5u64 {
+    for seed in 0..32u64 {
         let trainer = MockTrainer::tiny();
         let n = 7;
         let mut cfg = base_cfg(n, 300 + seed);
@@ -173,7 +182,7 @@ fn max_fault_single_survivor_still_finishes() {
 #[test]
 fn message_loss_does_not_break_termination() {
     // 10% drop probability: CRT piggybacking must still flood the flag.
-    for seed in 0..4u64 {
+    for seed in 0..24u64 {
         let trainer = MockTrainer::tiny();
         let mut cfg = base_cfg(5, 500 + seed);
         cfg.net = NetworkModel::lossy(0.10, seed);
@@ -284,6 +293,37 @@ fn crt_disabled_forces_self_convergence() {
             "client {} terminated by signal despite CRT off",
             r.id
         );
+    }
+}
+
+#[test]
+fn async_real_clock_smoke() {
+    // Guards the wall-clock path (RealClock + InProcHub timer thread):
+    // small n and a short timeout keep the real waiting cheap.
+    let trainer = MockTrainer::tiny();
+    let mut cfg = base_cfg(3, 901);
+    cfg.virtual_time = false;
+    cfg.protocol.timeout = Duration::from_millis(40);
+    let res = sim::run(&trainer, &cfg).unwrap();
+    assert_eq!(res.crashed(), 0);
+    assert!(
+        res.all_terminated_adaptively(),
+        "causes {:?}",
+        res.reports.iter().map(|r| r.cause).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn sync_real_clock_smoke() {
+    let trainer = MockTrainer::tiny();
+    let mut cfg = base_cfg(3, 911);
+    cfg.virtual_time = false;
+    cfg.sync = true;
+    let res = sim::run(&trainer, &cfg).unwrap();
+    let rounds: Vec<u32> = res.reports.iter().map(|r| r.rounds_completed).collect();
+    assert!(rounds.windows(2).all(|w| w[0] == w[1]), "{rounds:?}");
+    for r in &res.reports {
+        assert_ne!(r.cause, TerminationCause::Crashed);
     }
 }
 

@@ -67,6 +67,7 @@ fn four_tcp_clients_with_one_crash_terminate() {
                     fault: if i == 3 { FaultPlan::at_round(2) } else { FaultPlan::none() },
                     rng: Rng::new(seed + i as u64),
                     slowdown: 0.0,
+                    train_cost: None,
                 }
                 .run()
                 .unwrap()

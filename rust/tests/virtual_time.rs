@@ -1,0 +1,228 @@
+//! Virtual-clock properties: same-seed determinism down to the bit, cause
+//! agreement with wall-clock runs, fault downtime charged to logical time,
+//! partition-heal CRT flooding, and WAN-scale latency — all in wall-clock
+//! milliseconds because nothing actually sleeps.
+
+use std::time::{Duration, Instant};
+
+use dfl::coordinator::fault::FaultPlan;
+use dfl::coordinator::termination::TerminationCause;
+use dfl::coordinator::ProtocolConfig;
+use dfl::metrics::ClientReport;
+use dfl::net::{NetSplit, NetworkModel};
+use dfl::runtime::{MockTrainer, Trainer};
+use dfl::sim::{self, SimConfig};
+
+fn base_cfg(n: usize, seed: u64) -> SimConfig {
+    let trainer = MockTrainer::tiny();
+    let mut cfg = SimConfig::for_meta(n, trainer.meta());
+    cfg.protocol = ProtocolConfig {
+        timeout: Duration::from_millis(80),
+        min_rounds: 4,
+        count_threshold: 2,
+        conv_threshold_rel: 0.12,
+        max_rounds: 60,
+        lr: 0.08,
+        model_seed: 42,
+        weight_by_samples: false,
+        early_window_exit: true,
+        crt_enabled: true,
+    };
+    cfg.train_n = 60 * n;
+    cfg.net = NetworkModel::lan(seed);
+    cfg.seed = seed;
+    cfg.virtual_time = true;
+    cfg.train_cost = Duration::from_millis(5);
+    cfg
+}
+
+/// 64-bit FNV-1a over a byte stream (tiny, dependency-free digest).
+fn fnv(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x100_0000_01b3);
+    }
+}
+
+/// Bit-exact fingerprint of everything a client reports: round history,
+/// floats by raw bits, virtual wall time to the nanosecond, provenance,
+/// and the final model.
+fn fingerprint(r: &ClientReport) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    fnv(&mut h, &r.id.to_le_bytes());
+    fnv(&mut h, format!("{:?}", r.cause).as_bytes());
+    fnv(&mut h, &r.rounds_completed.to_le_bytes());
+    fnv(&mut h, &r.final_accuracy.map_or(u32::MAX, f32::to_bits).to_le_bytes());
+    fnv(&mut h, &r.final_loss.map_or(u32::MAX, f32::to_bits).to_le_bytes());
+    fnv(&mut h, &(r.wall.as_nanos() as u64).to_le_bytes());
+    fnv(&mut h, &r.signal_source.map_or(u32::MAX, |s| s).to_le_bytes());
+    for rec in &r.history {
+        fnv(&mut h, &rec.round.to_le_bytes());
+        fnv(&mut h, &rec.train_loss.to_bits().to_le_bytes());
+        fnv(&mut h, &rec.probe_acc.to_bits().to_le_bytes());
+        fnv(&mut h, &(rec.alive_peers as u64).to_le_bytes());
+        fnv(&mut h, &(rec.aggregated as u64).to_le_bytes());
+        fnv(&mut h, &rec.delta_rel.to_bits().to_le_bytes());
+        fnv(&mut h, &rec.conv_counter.to_le_bytes());
+        for c in &rec.crashes_detected {
+            fnv(&mut h, &c.to_le_bytes());
+        }
+    }
+    if let Some(p) = &r.final_params {
+        for v in p {
+            fnv(&mut h, &v.to_bits().to_le_bytes());
+        }
+    }
+    h
+}
+
+#[test]
+fn identical_config_and_seed_reproduce_byte_identical_histories() {
+    // The hardest setting we support: message loss, a permanent crash, and
+    // a transient outage.  Same config + seed twice ⇒ every client's full
+    // report (floats by bits, times by nanos) is identical.
+    let make = || {
+        let trainer = MockTrainer::tiny();
+        let mut cfg = base_cfg(5, 1234);
+        cfg.net = NetworkModel::lossy(0.10, 1234);
+        cfg.protocol.min_rounds = 8;
+        cfg.faults = vec![FaultPlan::none(); 5];
+        cfg.faults[2] = FaultPlan::at_round(4);
+        cfg.faults[4] = FaultPlan::transient(3, Duration::from_millis(300));
+        sim::run(&trainer, &cfg).unwrap()
+    };
+    let a = make();
+    let b = make();
+    let fa: Vec<u64> = a.reports.iter().map(fingerprint).collect();
+    let fb: Vec<u64> = b.reports.iter().map(fingerprint).collect();
+    assert_eq!(fa, fb, "virtual-time runs must be bit-reproducible");
+    assert_eq!(a.wall, b.wall);
+}
+
+#[test]
+fn determinism_holds_across_many_seeds() {
+    for seed in 0..16u64 {
+        let trainer = MockTrainer::tiny();
+        let mut cfg = base_cfg(4, 4000 + seed);
+        cfg.net = NetworkModel::lossy(0.05, seed);
+        let a = sim::run(&trainer, &cfg).unwrap();
+        let b = sim::run(&trainer, &cfg).unwrap();
+        let fa: Vec<u64> = a.reports.iter().map(fingerprint).collect();
+        let fb: Vec<u64> = b.reports.iter().map(fingerprint).collect();
+        assert_eq!(fa, fb, "seed {seed} diverged");
+    }
+}
+
+#[test]
+fn virtual_and_real_clock_agree_on_termination_causes() {
+    // With CRT off every client must reach CCC on its own, so the cause
+    // vector is schedule-independent: the virtual run and the wall-clock
+    // run of the same small config must agree exactly.  The window is
+    // generous (300 ms — free under virtual time, and wall runs exit it
+    // early) so OS descheduling on a loaded host cannot fake a crash and
+    // skew the real-clock causes.
+    let trainer = MockTrainer::tiny();
+    let mut cfg = base_cfg(4, 77);
+    cfg.protocol.crt_enabled = false;
+    cfg.protocol.max_rounds = 80;
+    cfg.protocol.timeout = Duration::from_millis(300);
+    let virt = sim::run(&trainer, &cfg).unwrap();
+    cfg.virtual_time = false;
+    let real = sim::run(&trainer, &cfg).unwrap();
+    let causes = |r: &sim::SimResult| -> Vec<TerminationCause> {
+        r.reports.iter().map(|c| c.cause).collect()
+    };
+    assert_eq!(causes(&virt), causes(&real));
+    for c in causes(&virt) {
+        assert_eq!(c, TerminationCause::Converged);
+    }
+}
+
+#[test]
+fn ten_second_outage_completes_in_under_a_second_of_real_time() {
+    // Regression for the fault-injection sleep: FaultPlan::transient used
+    // to block the OS thread for the whole downtime; it now charges the
+    // clock, so a 10 s outage is instant under virtual time.
+    let trainer = MockTrainer::tiny();
+    let mut cfg = base_cfg(4, 301);
+    cfg.protocol.min_rounds = 6;
+    cfg.faults = vec![FaultPlan::none(); 4];
+    cfg.faults[1] = FaultPlan::transient(2, Duration::from_secs(10));
+    let t0 = Instant::now();
+    let res = sim::run(&trainer, &cfg).unwrap();
+    let real_elapsed = t0.elapsed();
+    assert!(
+        real_elapsed < Duration::from_secs(1),
+        "10 s virtual outage took {real_elapsed:?} of real time"
+    );
+    // ...while logically the run did span the outage:
+    assert!(res.wall >= Duration::from_secs(10), "virtual wall {:?}", res.wall);
+    assert_eq!(res.crashed(), 0, "transient fault must not be a permanent crash");
+    assert!(res.all_terminated_adaptively());
+}
+
+#[test]
+fn partition_heals_and_crt_floods_across_it() {
+    // Split 6 clients 3|3 for a stretch of logical time: each side must
+    // detect the other as crashed, keep running, then revive peers and
+    // finish adaptively once the partition heals (CRT flags flow again).
+    let trainer = MockTrainer::tiny();
+    let mut cfg = base_cfg(6, 505);
+    cfg.protocol.min_rounds = 12;
+    cfg.protocol.max_rounds = 120;
+    cfg.net = NetworkModel::lan(505).with_splits(vec![NetSplit {
+        start: Duration::from_millis(40),
+        end: Duration::from_millis(500),
+        side_a: vec![0, 1, 2],
+    }]);
+    let res = sim::run(&trainer, &cfg).unwrap();
+    assert_eq!(res.crashed(), 0);
+    let cross_group_detection = res.reports.iter().any(|r| {
+        r.history.iter().any(|h| {
+            h.crashes_detected.iter().any(|&c| (c >= 3) != (r.id >= 3))
+        })
+    });
+    assert!(cross_group_detection, "the split never bit — widen the window");
+    assert!(
+        res.all_terminated_adaptively(),
+        "causes {:?}",
+        res.reports.iter().map(|r| r.cause).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn wan_latency_distribution_is_testable_in_milliseconds() {
+    // WAN model: 40 ms base delay + up to 120 ms jitter per message.  On
+    // the wall clock this run would spend minutes waiting; virtually it is
+    // compute-bound.  The protocol must still terminate adaptively given a
+    // timeout above the latency ceiling.
+    let trainer = MockTrainer::tiny();
+    let mut cfg = base_cfg(5, 606);
+    cfg.net = NetworkModel::wan(606);
+    cfg.protocol.timeout = Duration::from_millis(400);
+    let t0 = Instant::now();
+    let res = sim::run(&trainer, &cfg).unwrap();
+    assert!(t0.elapsed() < Duration::from_secs(5), "WAN run not virtualized?");
+    assert!(res.wall >= Duration::from_millis(400), "virtual wall {:?}", res.wall);
+    assert!(
+        res.all_terminated_adaptively(),
+        "causes {:?}",
+        res.reports.iter().map(|r| r.cause).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn virtual_wall_time_reflects_modeled_schedule() {
+    // Sanity on SimResult::wall under virtual time: at least min_rounds of
+    // modeled training must have elapsed for the slowest client, and
+    // machine_times() stays consistent with per-report walls.
+    let trainer = MockTrainer::tiny();
+    let mut cfg = base_cfg(4, 808);
+    cfg.machines = 2;
+    let res = sim::run(&trainer, &cfg).unwrap();
+    let floor = cfg.train_cost.mul_f32(cfg.protocol.min_rounds as f32);
+    assert!(res.wall >= floor, "wall {:?} < training floor {floor:?}", res.wall);
+    let mt = res.machine_times();
+    assert_eq!(mt.len(), 2);
+    assert_eq!(mt.iter().max().copied().unwrap(), res.wall);
+}
