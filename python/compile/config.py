@@ -4,7 +4,7 @@ Two configs are AOT-compiled:
 
 * ``paper`` -- the paper's CNN: 32x32x3 inputs, conv(3->16,5x5) ->
   conv(16->32,5x5) -> fc(2048->100) -> fc(100->10) = 219,958 parameters
-  (paper reports "approximately 225,034"; see DESIGN.md SS7).
+  (paper reports "approximately 225,034"; see DESIGN.md §7).
 * ``fast``  -- same architecture on 16x16x3 inputs (66,358 params), used by
   the large experiment sweeps so the full fault grids fit the single-core
   CPU budget of this environment.

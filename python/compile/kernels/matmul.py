@@ -10,7 +10,7 @@ with an output accumulator kept resident in VMEM across the K grid dimension
 (`o_ref[...] +=` under sequential K semantics).  On this CPU substrate the
 kernel runs under interpret=True; tile caps adapt downward to the actual
 (padded) problem so small model layers do not pay 8-16x zero-padding FLOPs.
-See DESIGN.md SSPerf for the VMEM / MXU-utilization estimates.
+See DESIGN.md §6 for the VMEM / MXU-utilization estimates.
 """
 
 import functools

@@ -104,7 +104,7 @@ def train_epoch(cfg: ModelConfig, flat, xs, ys, lr):
 
     xs: (nb, B, img, img, 3), ys: (nb, B) i32.  Returns (params', mean_loss).
     Scan (not unroll) keeps the lowered HLO one kernel-body long regardless
-    of nb -- see DESIGN.md SSPerf (L2).
+    of nb -- see DESIGN.md §6 (L2).
     """
 
     def body(f, xy):

@@ -19,7 +19,7 @@ def _data(cfg, nb, seed=0):
 
 
 def test_param_counts():
-    # DESIGN.md SS7: paper CNN = 219,958 params (paper reports ~225,034).
+    # DESIGN.md §7: paper CNN = 219,958 params (paper reports ~225,034).
     assert PAPER.n_params == 219_958
     assert FAST.n_params == 66_358
     assert TINY.n_params == 6_202

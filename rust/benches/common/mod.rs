@@ -1,8 +1,14 @@
 //! Shared bench bootstrap: locate artifacts, load the engine, pick scale.
 //!
 //! Benches run the real PJRT engine on the `tiny` artifact config by
-//! default; set `DFL_BENCH_CONFIG=fast` (or `paper`) and `DFL_BENCH_FULL=1`
-//! for the bigger grids.
+//! default; env knobs (documented in README "Reproducing the paper"):
+//!
+//! * `DFL_BENCH_CONFIG=fast|paper` — bigger artifact configs.
+//! * `DFL_BENCH_FULL=1`           — full experiment grids instead of quick.
+//! * `DFL_BENCH_REALTIME=1`       — wall-clock deployments instead of the
+//!   default deterministic virtual clock (the seed's original behaviour;
+//!   expect minutes instead of seconds).
+//! * `DFL_ARTIFACTS=<dir>`        — artifact root for non-repo-root runs.
 
 use std::path::PathBuf;
 
@@ -22,9 +28,11 @@ pub fn engine() -> SharedEngine {
 }
 
 pub fn scale() -> ExpScale {
-    if std::env::var("DFL_BENCH_FULL").is_ok_and(|v| v == "1") {
+    let mut scale = if std::env::var("DFL_BENCH_FULL").is_ok_and(|v| v == "1") {
         ExpScale::full()
     } else {
         ExpScale::default()
-    }
+    };
+    scale.virtual_time = !std::env::var("DFL_BENCH_REALTIME").is_ok_and(|v| v == "1");
+    scale
 }

@@ -1,7 +1,6 @@
-//! Micro-benchmarks of the hot path (DESIGN.md §Perf, L3 targets):
+//! Micro-benchmarks of the hot path (DESIGN.md §6):
 //! PJRT call latencies (train/eval/aggregate), codec encode/decode at model
-//! size, in-proc broadcast fan-out, and one full protocol round. These are
-//! the numbers the §Perf iteration log in EXPERIMENTS.md tracks.
+//! size, in-proc broadcast fan-out, and one full protocol round.
 
 mod common;
 

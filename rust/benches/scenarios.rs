@@ -1,0 +1,11 @@
+//! Bench: the beyond-paper network-scenario matrix (DESIGN.md §3.4) —
+//! the async protocol swept across ideal/lan/wan/asym/lossy-burst presets
+//! under the deterministic virtual clock.
+
+mod common;
+
+fn main() {
+    let engine = common::engine();
+    let table = dfl::exp::scenarios(&engine, common::scale());
+    table.print("Scenario matrix — network presets (beyond paper)");
+}

@@ -1,7 +1,7 @@
 //! Dataset substrate: synthetic CIFAR-10-like image generation, the paper's
 //! Dirichlet(α = 0.6) non-IID partitioner, IID/fixed-chunk splits (Table 2
 //! baselines), round-batch sampling, and an optional real CIFAR-10 binary
-//! loader (auto-used when the files are on disk; see DESIGN.md §3).
+//! loader (auto-used when the files are on disk; see DESIGN.md §3.2).
 
 mod cifar;
 mod partition;

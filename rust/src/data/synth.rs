@@ -2,7 +2,7 @@
 //!
 //! The environment has no network access to fetch CIFAR-10, so experiments
 //! run on a synthetic 10-class 32×32×3 (or scaled) distribution that keeps
-//! the paper-relevant properties (DESIGN.md §3):
+//! the paper-relevant properties (DESIGN.md §3.2):
 //!
 //! * class identity is carried by a *smooth spatial template* per class
 //!   (low-frequency sinusoid mixture — learnable by a small CNN, not by a

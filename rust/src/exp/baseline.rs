@@ -20,7 +20,9 @@ pub fn table2(trainer: &(dyn Trainer + Sync), scale: ExpScale) -> Table {
     for (name, partition) in scenarios {
         let mut cfg = SimConfig::for_meta(1, &meta);
         cfg.partition = partition;
-        cfg.protocol = scale.protocol(1);
+        scale.configure(&mut cfg, &meta);
+        // single-client rows draw chunks from a 10-client-sized pool so the
+        // chunk/full ratio matches the paper's 5000-of-50000
         cfg.train_n = scale.train_n(10);
         cfg.seed = scale.seed;
         if matches!(cfg.partition, Partition::Full) {

@@ -32,8 +32,7 @@ pub fn fig3_4(trainer: &(dyn Trainer + Sync), scale: ExpScale) -> Table {
             let mut cfg = SimConfig::for_meta(N_CLIENTS, &meta);
             cfg.machines = machines;
             cfg.partition = Partition::Dirichlet(0.6);
-            cfg.protocol = scale.protocol(N_CLIENTS);
-            cfg.train_n = scale.train_n(N_CLIENTS);
+            scale.configure(&mut cfg, &meta);
             cfg.seed = scale.seed ^ ((machines as u64) << 32) ^ k as u64;
             let mut rng = Rng::new(cfg.seed ^ 0xFA17);
             // crashes land in the first third of the horizon so every

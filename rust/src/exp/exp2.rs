@@ -32,8 +32,7 @@ pub fn fig5_6(trainer: &(dyn Trainer + Sync), scale: ExpScale) -> Table {
         base.sync = true;
         base.machines = 2;
         base.partition = Partition::Dirichlet(0.6);
-        base.protocol = scale.protocol(nb);
-        base.train_n = scale.train_n(nb);
+        scale.configure(&mut base, &meta);
         base.seed = scale.seed + 31 * n as u64;
         let res = sim::run(trainer, &base).expect("exp2 baseline");
         table.row(&[
@@ -50,8 +49,7 @@ pub fn fig5_6(trainer: &(dyn Trainer + Sync), scale: ExpScale) -> Table {
             let mut cfg = SimConfig::for_meta(n, &meta);
             cfg.machines = machines;
             cfg.partition = Partition::Dirichlet(0.6);
-            cfg.protocol = scale.protocol(n);
-            cfg.train_n = scale.train_n(n);
+            scale.configure(&mut cfg, &meta);
             cfg.seed = scale.seed + 37 * n as u64 + machines as u64;
             let mut rng = Rng::new(cfg.seed ^ 0xE2);
             cfg.faults = proportional_schedule(n, cfg.protocol.max_rounds, &mut rng);

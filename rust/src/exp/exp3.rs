@@ -25,8 +25,7 @@ pub fn fig7_8(trainer: &(dyn Trainer + Sync), scale: ExpScale) -> Table {
         let mut cfg = SimConfig::for_meta(n, &meta);
         cfg.machines = 2;
         cfg.partition = Partition::Dirichlet(0.6);
-        cfg.protocol = scale.protocol(n);
-        cfg.train_n = scale.train_n(n);
+        scale.configure(&mut cfg, &meta);
         cfg.seed = scale.seed + 41 * n as u64;
         cfg.faults = max_fault_schedule(n, 0, cfg.protocol.max_rounds);
         let res = sim::run(trainer, &cfg).expect("exp3 run");

@@ -1,4 +1,5 @@
-//! Experiment drivers — one per table/figure of the paper's §4.
+//! Experiment drivers — one per table/figure of the paper's §4, plus the
+//! beyond-paper network-scenario matrix ([`scenarios()`]).
 //!
 //! Each driver runs the relevant deployments through [`crate::sim`] and
 //! returns a [`Table`] shaped like the paper's (same rows/series), so
@@ -6,12 +7,20 @@
 //! numbers differ (synthetic data, scaled rounds, virtual machines — see
 //! DESIGN.md §3); the *shapes* are the reproduction target and are asserted
 //! in `rust/tests/experiments.rs`.
+//!
+//! Drivers run on the deterministic virtual clock by default
+//! ([`ExpScale::virtual_time`], DESIGN.md §3.3): wait windows and modeled
+//! training cost charge logical time, so a full `dfl reproduce all` takes
+//! seconds of wall time and the same seed regenerates byte-identical
+//! tables.  Set `virtual_time: false` (CLI: `--real-time`) for the seed's
+//! original wall-clock behaviour.
 
 mod baseline;
 mod exp1;
 mod exp2;
 mod exp3;
 mod phase1;
+mod scenarios;
 mod termination;
 
 pub use baseline::table2;
@@ -19,12 +28,15 @@ pub use exp1::fig3_4;
 pub use exp2::fig5_6;
 pub use exp3::fig7_8;
 pub use phase1::{table3, table4};
+pub use scenarios::scenarios;
 pub use termination::termination_reliability;
 
 use std::time::Duration;
 
 use crate::coordinator::ProtocolConfig;
-use crate::runtime::Trainer;
+use crate::net::NetPreset;
+use crate::runtime::{Meta, Trainer};
+use crate::sim::SimConfig;
 use crate::util::benchkit::Table;
 
 /// Scaling knobs shared by all drivers.
@@ -42,6 +54,18 @@ pub struct ExpScale {
     pub min_rounds: Option<u32>,
     /// Override the wait window (ms); None = 60*n+200 for the PJRT engine.
     pub timeout_ms: Option<u64>,
+    /// Run deployments on the deterministic virtual clock (default): wait
+    /// windows and training cost charge logical time, tables regenerate in
+    /// seconds, and a fixed seed reproduces them byte-for-byte.  `false`
+    /// restores the seed's wall-clock behaviour.
+    pub virtual_time: bool,
+    /// Modeled per-round training cost (ms) under virtual time, scaled by
+    /// each client's machine slowdown; ignored on the wall clock, where
+    /// real compute time is measured instead.
+    pub train_cost_ms: u64,
+    /// Override every driver's network with a named preset (None = each
+    /// driver's own default, LAN unless the experiment says otherwise).
+    pub net: Option<NetPreset>,
 }
 
 impl Default for ExpScale {
@@ -53,6 +77,9 @@ impl Default for ExpScale {
             max_rounds: None,
             min_rounds: None,
             timeout_ms: None,
+            virtual_time: true,
+            train_cost_ms: 20,
+            net: None,
         }
     }
 }
@@ -63,7 +90,8 @@ impl ExpScale {
     }
 
     /// Mock-trainer scale for fast structural tests: looser convergence
-    /// threshold (the mock's noise floor) and a small round cap.
+    /// threshold (the mock's noise floor), a small round cap, and a small
+    /// modeled train cost.
     pub fn for_mock(seed: u64) -> Self {
         ExpScale {
             quick: true,
@@ -72,6 +100,8 @@ impl ExpScale {
             max_rounds: Some(20),
             min_rounds: Some(4),
             timeout_ms: Some(120),
+            train_cost_ms: 5,
+            ..Default::default()
         }
     }
 
@@ -79,7 +109,8 @@ impl ExpScale {
     pub(crate) fn protocol(&self, n_clients: usize) -> ProtocolConfig {
         ProtocolConfig {
             // window must cover one serialized train+eval pass of every
-            // client on this single-core testbed
+            // client on this single-core testbed (wall clock); virtual
+            // windows are free, so the same bound is simply generous there
             timeout: Duration::from_millis(
                 self.timeout_ms.unwrap_or(60 * n_clients as u64 + 200),
             ),
@@ -100,6 +131,36 @@ impl ExpScale {
     pub(crate) fn train_n(&self, n_clients: usize) -> usize {
         (if self.quick { 150 } else { 400 }) * n_clients.max(2)
     }
+
+    /// Apply the scale's shared knobs to a driver-built [`SimConfig`]:
+    /// protocol constants, dataset size, time regime, modeled train cost,
+    /// and the network-preset override.  Drivers call this once per run and
+    /// then layer their experiment-specific settings (partition, faults,
+    /// per-row seeds) on top.
+    pub(crate) fn configure(&self, cfg: &mut SimConfig, meta: &Meta) {
+        cfg.protocol = self.protocol(cfg.n_clients);
+        cfg.train_n = self.train_n(cfg.n_clients);
+        cfg.virtual_time = self.virtual_time;
+        cfg.train_cost = Duration::from_millis(self.train_cost_ms);
+        if let Some(preset) = self.net {
+            cfg.net = preset.model(self.seed);
+            // A slow preset pushed into a paper table must not shrink below
+            // the network's latency ceiling, or a fault-free grid silently
+            // measures mass false-crash detection instead of the protocol.
+            clear_latency_ceiling(cfg, meta);
+        }
+    }
+}
+
+/// Floor the wait window at 2.5× the network's worst one-way delay for a
+/// model-update payload, so runs measure the configured network, not the
+/// timeout constant (every peer looks crashed below the ceiling).  Applied
+/// wherever a network preset meets a [`SimConfig`]: `ExpScale::configure`
+/// (internal) and `dfl sim --net`.
+pub fn clear_latency_ceiling(cfg: &mut SimConfig, meta: &Meta) {
+    let payload = meta.n_params * 4 + 64; // encoded ModelUpdate upper bound
+    cfg.protocol.timeout =
+        cfg.protocol.timeout.max(cfg.net.max_one_way(payload).mul_f64(2.5));
 }
 
 /// Percent formatting helper for table cells.
@@ -114,7 +175,8 @@ pub(crate) fn secs(d: Duration) -> String {
     format!("{:.2}", d.as_secs_f64())
 }
 
-/// All experiments in paper order (used by `dfl reproduce all`).
+/// All experiments in paper order, then the beyond-paper scenario matrix
+/// (used by `dfl reproduce all`).
 pub fn run_all(trainer: &(dyn Trainer + Sync), scale: ExpScale) -> Vec<(String, Table)> {
     vec![
         ("Table 2 — single-client baselines".into(), table2(trainer, scale)),
@@ -126,6 +188,10 @@ pub fn run_all(trainer: &(dyn Trainer + Sync), scale: ExpScale) -> Vec<(String, 
         (
             "Termination reliability (protocol metric)".into(),
             termination_reliability(trainer, scale),
+        ),
+        (
+            "Scenario matrix — network presets (beyond paper)".into(),
+            scenarios(trainer, scale),
         ),
     ]
 }

@@ -20,8 +20,7 @@ fn phase1(trainer: &(dyn Trainer + Sync), scale: ExpScale, iid: bool) -> Table {
         cfg.sync = true;
         cfg.machines = 2; // the paper reports M1/M2 columns
         cfg.partition = if iid { Partition::Iid } else { Partition::Dirichlet(0.6) };
-        cfg.protocol = scale.protocol(n);
-        cfg.train_n = scale.train_n(n);
+        scale.configure(&mut cfg, &meta);
         cfg.seed = scale.seed + n as u64;
         let res = sim::run(trainer, &cfg).expect("phase1 run");
         let times = res.machine_times();

@@ -1,0 +1,77 @@
+//! Network-scenario matrix — the repo's first beyond-paper workload.
+//!
+//! The paper evaluates on one LAN testbed; this driver sweeps the Phase-2
+//! asynchronous protocol across every [`NetPreset`] (DESIGN.md §3.4):
+//! ideal, LAN, WAN, asymmetric-latency-with-bandwidth-cap, and
+//! Gilbert–Elliott burst loss.  All rows share one seed, so data,
+//! partitions, and fault-freeness are held fixed and the network is the
+//! only variable.  Under the virtual clock the whole sweep is compute
+//! bound — WAN latencies and widened wait windows cost no wall time.
+//!
+//! Reported per preset:
+//!
+//! * accuracy / rounds — does learning quality survive the network?
+//! * virtual time — the modeled schedule length (latency + windows).
+//! * adaptive termination — every client must still end by CCC/CRT.
+//! * false suspicions — crash detections in a run with *no* faults: pure
+//!   network-induced misdiagnosis (late or lost updates past the window).
+
+use super::{pct, secs, ExpScale};
+use crate::coordinator::termination::TerminationCause;
+use crate::net::NetPreset;
+use crate::runtime::Trainer;
+use crate::sim::{self, Partition, SimConfig};
+use crate::util::benchkit::Table;
+
+pub fn scenarios(trainer: &(dyn Trainer + Sync), scale: ExpScale) -> Table {
+    let meta = trainer.meta().clone();
+    let n = if scale.quick { 6 } else { 10 };
+    let mut table = Table::new(&[
+        "Scenario",
+        "Accuracy (%)",
+        "Rounds",
+        "Time (s)",
+        "Adaptive Term. (%)",
+        "False Suspicions",
+    ]);
+    for preset in NetPreset::ALL {
+        // The network is the sweep variable: each row configures through a
+        // scale whose preset is forced to the row's own, so a scale-level
+        // `--net` neither survives into the sweep nor ratchets any other
+        // row's wait window; the shared seed keeps data/partitions
+        // identical across rows.  `configure` floors each row's window at
+        // its own preset's latency ceiling, so rows measure the network,
+        // not the timeout constant.
+        let row_scale = ExpScale { net: Some(preset), ..scale };
+        let mut cfg = SimConfig::for_meta(n, &meta);
+        cfg.partition = Partition::Dirichlet(0.6);
+        row_scale.configure(&mut cfg, &meta);
+        cfg.seed = scale.seed;
+        let res = sim::run(trainer, &cfg).expect("scenario run");
+
+        let adaptive = res
+            .reports
+            .iter()
+            .filter(|r| {
+                matches!(r.cause, TerminationCause::Converged | TerminationCause::Signaled)
+            })
+            .count();
+        // No faults are scheduled, so every crash detection is the network
+        // fooling the timeout detector.
+        let false_suspicions: usize = res
+            .reports
+            .iter()
+            .flat_map(|r| &r.history)
+            .map(|h| h.crashes_detected.len())
+            .sum();
+        table.row(&[
+            preset.name().to_string(),
+            pct(res.mean_accuracy()),
+            res.rounds().to_string(),
+            secs(res.wall),
+            format!("{:.0}", 100.0 * adaptive as f32 / n as f32),
+            false_suspicions.to_string(),
+        ]);
+    }
+    table
+}

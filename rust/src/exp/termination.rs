@@ -37,15 +37,22 @@ pub fn termination_reliability(trainer: &(dyn Trainer + Sync), scale: ExpScale) 
     for (name, drop_prob, crashes) in scenarios {
         let mut cfg = SimConfig::for_meta(n, &meta);
         cfg.partition = Partition::Dirichlet(0.6);
-        cfg.protocol = scale.protocol(n);
+        scale.configure(&mut cfg, &meta);
         if scale.max_rounds.is_none() {
             // This experiment specifically measures *termination*: give the
             // CNN a horizon long enough to actually plateau (the table/figure
             // grids cap rounds for wallclock and often end at R_PRIME).
             cfg.protocol.max_rounds = 160;
         }
-        cfg.train_n = scale.train_n(n);
-        cfg.net = NetworkModel::lossy(drop_prob, scale.seed);
+        if scale.net.is_none() {
+            cfg.net = NetworkModel::lossy(drop_prob, scale.seed);
+        } else {
+            // A scale-level preset supplies latency/bandwidth/burst, but
+            // the per-row independent drop rate stays the experiment
+            // variable — otherwise rows labeled with different loss rates
+            // would be byte-identical runs.
+            cfg.net.drop_prob = drop_prob;
+        }
         cfg.seed = scale.seed ^ 0x7E21;
         let mut rng = Rng::new(cfg.seed);
         cfg.faults =

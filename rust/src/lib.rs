@@ -20,7 +20,13 @@
 //! Entry points: [`sim::run`] (in-process N-client deployments used by the
 //! experiment harness — wall-clock, or the deterministic virtual-time mode
 //! built on [`util::time`]), the `dfl` binary (CLI + real TCP clients), and
-//! the `examples/` directory.
+//! the `examples/` directory.  The testbed model (virtual machines,
+//! synthetic data, time regimes, network-scenario matrix) is specified in
+//! the repo-root `DESIGN.md`.
+
+// Docs are part of the CI contract: a dangling [`reference`] fails
+// `cargo doc --no-deps` (the doc check tier-1 runs alongside the tests).
+#![deny(rustdoc::broken_intra_doc_links)]
 
 pub mod coordinator;
 pub mod data;

@@ -1,9 +1,12 @@
 //! `dfl` — CLI for the decentralized asynchronous FL runtime.
 //!
 //! Subcommands:
-//! * `sim`        — run an in-process N-client deployment (both phases)
+//! * `sim`        — run an in-process N-client deployment (both phases,
+//!                  wall or virtual clock, any `--net` scenario preset)
 //! * `client`     — run one real TCP client process (multi-machine mode)
-//! * `reproduce`  — regenerate a paper table/figure (or `all`)
+//! * `reproduce`  — regenerate a paper table/figure, the beyond-paper
+//!                  `scenarios` matrix, or `all` (virtual time by default;
+//!                  `--real-time` restores wall-clock runs)
 //! * `info`       — print artifact metadata and platform info
 
 use std::collections::BTreeMap;
@@ -68,6 +71,9 @@ fn cmd_sim(args: Vec<String>) -> Result<()> {
         .opt("min-rounds", Some("5"), "MINIMUM_ROUNDS before CCC")
         .opt("threshold", Some("0.015"), "CCC relative convergence threshold")
         .opt("train-n", Some("0"), "global train set size (0 = auto)")
+        .opt("net", Some("lan"), "network preset (ideal|lan|wan|asym|lossy-burst)")
+        .opt("train-cost-ms", Some("20"), "modeled per-round train cost under --virtual")
+        .switch("virtual", "deterministic virtual clock instead of wall time")
         .switch("iid", "IID split instead of Dirichlet")
         .switch("verbose", "print per-round mean loss/accuracy")
         .switch("sync", "Phase 1 (synchronous rounds) instead of Phase 2");
@@ -88,6 +94,19 @@ fn cmd_sim(args: Vec<String>) -> Result<()> {
         ..ProtocolConfig::default()
     };
     cfg.seed = a.u64("seed")?;
+    cfg.net = dfl::net::NetworkModel::preset(a.str("net"), cfg.seed)?;
+    cfg.virtual_time = a.bool("virtual");
+    cfg.train_cost = std::time::Duration::from_millis(a.u64("train-cost-ms")?);
+    let window_before = cfg.protocol.timeout;
+    exp::clear_latency_ceiling(&mut cfg, engine.meta());
+    if cfg.protocol.timeout > window_before {
+        println!(
+            "note: wait window raised {:?} -> {:?} to clear the {} preset's latency ceiling",
+            window_before,
+            cfg.protocol.timeout,
+            a.str("net")
+        );
+    }
     if a.usize("train-n")? > 0 {
         cfg.train_n = a.usize("train-n")?;
     }
@@ -103,11 +122,13 @@ fn cmd_sim(args: Vec<String>) -> Result<()> {
         );
     }
     println!(
-        "running {} clients ({}), {} machines, {} crashes, seed {}",
+        "running {} clients ({}), {} machines, {} crashes, net {}, {} clock, seed {}",
         n,
         if cfg.sync { "phase 1 sync" } else { "phase 2 async" },
         cfg.machines,
         crashes,
+        a.str("net"),
+        if cfg.virtual_time { "virtual" } else { "wall" },
         cfg.seed
     );
     let res = sim::run(&engine, &cfg)?;
@@ -236,11 +257,21 @@ fn cmd_reproduce(args: Vec<String>) -> Result<()> {
     let flags = Flags::new("dfl reproduce", "regenerate a paper table/figure")
         .opt("config", Some("tiny"), "artifact config (tiny|fast|paper)")
         .opt("out", Some(""), "append markdown to this file")
-        .switch("full", "full grids (slower) instead of quick mode");
+        .opt("seed", Some("2025"), "experiment seed (same seed ⇒ identical tables)")
+        .opt("net", Some(""), "override every driver's network with a preset (ideal|lan|wan|asym|lossy-burst)")
+        .opt("train-cost-ms", Some("20"), "modeled per-round train cost under virtual time")
+        .switch("full", "full grids (slower) instead of quick mode")
+        .switch("real-time", "wall-clock deployments (the paper's regime; minutes instead of seconds)");
     let a = flags.parse(args)?;
     let what = a.positional.first().map(String::as_str).unwrap_or("all");
     let engine = load_engine(a.str("config"))?;
-    let scale = if a.bool("full") { ExpScale::full() } else { ExpScale::default() };
+    let mut scale = if a.bool("full") { ExpScale::full() } else { ExpScale::default() };
+    scale.seed = a.u64("seed")?;
+    scale.virtual_time = !a.bool("real-time");
+    scale.train_cost_ms = a.u64("train-cost-ms")?;
+    if !a.str("net").is_empty() {
+        scale.net = Some(dfl::net::NetPreset::parse(a.str("net"))?);
+    }
 
     let runs: Vec<(String, dfl::util::benchkit::Table)> = match what {
         "all" => exp::run_all(&engine, scale),
@@ -259,8 +290,11 @@ fn cmd_reproduce(args: Vec<String>) -> Result<()> {
         "termination" => {
             vec![("Termination".into(), exp::termination_reliability(&engine, scale))]
         }
+        "scenarios" | "matrix" => {
+            vec![("Scenario matrix".into(), exp::scenarios(&engine, scale))]
+        }
         other => bail!(
-            "unknown experiment {other:?}; want all|table2|table3|table4|fig3_4|fig5_6|fig7_8|termination"
+            "unknown experiment {other:?}; want all|table2|table3|table4|fig3_4|fig5_6|fig7_8|termination|scenarios"
         ),
     };
     let mut md = String::new();

@@ -1,10 +1,11 @@
 //! In-process transport: per-client channels behind a seeded network model
-//! (per-message latency, jitter, probabilistic drops, time-windowed
-//! partitions, and per-link blocks for failure injection).  Every message
-//! round-trips through the binary codec so tests exercise the real wire
-//! format.
+//! (per-link latency with optional asymmetry, jitter, bandwidth caps,
+//! independent and Gilbert–Elliott burst drops, time-windowed partitions,
+//! and per-link blocks for failure injection).  Every message round-trips
+//! through the binary codec so tests exercise the real wire format.
 //!
-//! Two hubs share the [`NetworkModel`]:
+//! Two hubs share the [`NetworkModel`] (the scenario matrix of DESIGN.md
+//! §3.4, exposed as named presets via [`NetPreset`]):
 //!
 //! * [`InProcHub`] — wall-clock: a single timer thread owns delayed
 //!   deliveries, keeping the network deterministic under a fixed seed
@@ -13,6 +14,24 @@
 //!   [`VirtualClock`], delays sampled from *per-link* RNG streams and tie
 //!   broken by `(due, from, to, seq)`, so the entire network schedule is a
 //!   pure function of the seed — byte-identical across runs.
+//!
+//! # VirtualHub delivery guarantees
+//!
+//! * **Latency is exact.**  A message sampled with one-way delay `d` at
+//!   logical time `t` is visible to the receiver at exactly `t + d` — no
+//!   OS jitter is added and none can be observed, because logical time only
+//!   advances between thread turns (`util::time` DESIGN note).
+//! * **Per-link FIFO under equal delays.**  Deliveries due at the same
+//!   instant fire in `(from, to, seq)` key order, so two messages on one
+//!   link with equal sampled delays arrive in send order.  With jitter the
+//!   model can reorder across *different* sends — exactly the asynchronous
+//!   network the paper assumes.
+//! * **Schedule is a pure function of `(model, seed)`.**  Every draw (drop,
+//!   burst-state step, jitter) comes from an RNG stream owned by the
+//!   directed link and seeded only by `(model.seed, from, to)`; no draw
+//!   depends on cross-link traffic or thread interleaving.
+//! * **Crash semantics.**  Sends to a detached (finished/crashed) client
+//!   are swallowed silently, matching the paper's benign crash model.
 
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BinaryHeap, HashSet};
@@ -51,7 +70,45 @@ impl NetSplit {
     }
 }
 
-/// Link behaviour of the simulated network.
+/// Correlated loss bursts: a two-state Gilbert–Elliott chain per directed
+/// link, stepped once per message.  In the *good* state the model's base
+/// `drop_prob` applies; in the *bad* state `drop_bad` does.  Expected burst
+/// length is `1 / p_exit` messages, so e.g. `p_exit = 0.25` loses messages
+/// in runs of ~4 — the failure mode that defeats naive "one retry"
+/// reasoning and that independent drops cannot reproduce.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GilbertElliott {
+    /// P(good → bad) per message.
+    pub p_enter: f64,
+    /// P(bad → good) per message.
+    pub p_exit: f64,
+    /// Drop probability while the link is in the bad state.
+    pub drop_bad: f64,
+}
+
+/// Link behaviour of the simulated network (the scenario matrix —
+/// DESIGN.md §3.4).  One-way delay of a message of `b` encoded bytes on
+/// the directed link `from → to`:
+///
+/// ```text
+/// delay = base_delay × asym(from, to) + U[0, jitter] + b / bandwidth
+/// ```
+///
+/// where `asym` is a static per-link multiplier in
+/// `[1 − asymmetry, 1 + asymmetry]` derived purely from
+/// `(seed, from, to)`, and the bandwidth term is zero when `bandwidth`
+/// is `None`.  Drops come from the base `drop_prob` or, when `burst` is
+/// set, from a per-link [`GilbertElliott`] chain.
+///
+/// ```
+/// use std::time::Duration;
+/// use dfl::net::NetworkModel;
+///
+/// // A 1 MB/s link serializes a 500 kB model update for 500 ms.
+/// let m = NetworkModel::ideal().with_bandwidth(1_000_000);
+/// assert_eq!(m.transfer_time(500_000), Duration::from_millis(500));
+/// assert_eq!(m.max_one_way(500_000), Duration::from_millis(500));
+/// ```
 #[derive(Clone, Debug)]
 pub struct NetworkModel {
     /// Minimum one-way latency applied to every message.
@@ -65,6 +122,17 @@ pub struct NetworkModel {
     pub seed: u64,
     /// Scheduled partitions (empty = never partitioned).
     pub splits: Vec<NetSplit>,
+    /// Static per-direction latency spread in [0, 1): each directed link
+    /// gets a persistent `base_delay` multiplier in
+    /// `[1 − asymmetry, 1 + asymmetry]`, so `A → B` can be reliably fast
+    /// while `B → A` is reliably slow (0 = symmetric).
+    pub asymmetry: f64,
+    /// Link bandwidth in bytes/second (`None` = infinite): adds
+    /// `encoded size / bandwidth` of serialization delay per message, so
+    /// large model updates cost more than tiny control messages.
+    pub bandwidth: Option<u64>,
+    /// Correlated loss bursts (`None` = independent drops only).
+    pub burst: Option<GilbertElliott>,
 }
 
 impl NetworkModel {
@@ -76,6 +144,9 @@ impl NetworkModel {
             drop_prob: 0.0,
             seed: 0,
             splits: Vec::new(),
+            asymmetry: 0.0,
+            bandwidth: None,
+            burst: None,
         }
     }
 
@@ -84,14 +155,13 @@ impl NetworkModel {
         NetworkModel {
             base_delay: Duration::from_micros(200),
             jitter: Duration::from_millis(2),
-            drop_prob: 0.0,
             seed,
-            splits: Vec::new(),
+            ..NetworkModel::ideal()
         }
     }
 
     /// WAN-like: high base latency, heavy jitter, mild loss.  Pair with a
-    /// protocol `timeout` comfortably above `base_delay + jitter` or every
+    /// protocol `timeout` comfortably above [`Self::max_one_way`] or every
     /// peer looks crashed.  Wall-clock runs at this scale are painful;
     /// under the virtual clock they cost milliseconds.
     pub fn wan(seed: u64) -> Self {
@@ -100,7 +170,35 @@ impl NetworkModel {
             jitter: Duration::from_millis(120),
             drop_prob: 0.01,
             seed,
-            splits: Vec::new(),
+            ..NetworkModel::ideal()
+        }
+    }
+
+    /// Asymmetric-path preset: WAN-grade latency whose per-direction
+    /// multipliers spread ±80% (each direction lands in [0.2, 1.8]× — up
+    /// to 9× between a link's two directions), over a 2 MiB/s bandwidth
+    /// cap.  The regime where "my broadcast arrived, the reply didn't
+    /// make the window" happens.
+    pub fn asym(seed: u64) -> Self {
+        NetworkModel {
+            base_delay: Duration::from_millis(25),
+            jitter: Duration::from_millis(30),
+            asymmetry: 0.8,
+            bandwidth: Some(2 << 20),
+            seed,
+            ..NetworkModel::ideal()
+        }
+    }
+
+    /// Burst-loss preset: LAN-grade latency with a Gilbert–Elliott chain
+    /// (≈5% of messages enter a bad state that drops 60% and lasts ~4
+    /// messages) plus a light independent floor.  Stresses CRT flag
+    /// re-propagation and timeout crash detection under correlated loss.
+    pub fn lossy_burst(seed: u64) -> Self {
+        NetworkModel {
+            drop_prob: 0.005,
+            burst: Some(GilbertElliott { p_enter: 0.05, p_exit: 0.25, drop_bad: 0.6 }),
+            ..NetworkModel::lan(seed)
         }
     }
 
@@ -109,11 +207,212 @@ impl NetworkModel {
         NetworkModel { drop_prob, ..NetworkModel::lan(seed) }
     }
 
+    /// Look up a named preset (the CLI's `--net` values).
+    ///
+    /// ```
+    /// use dfl::net::NetworkModel;
+    ///
+    /// assert!(NetworkModel::preset("lossy-burst", 7).unwrap().burst.is_some());
+    /// assert!(NetworkModel::preset("asym", 7).unwrap().asymmetry > 0.0);
+    /// assert!(NetworkModel::preset("dial-up", 7).is_err());
+    /// ```
+    pub fn preset(name: &str, seed: u64) -> Result<Self> {
+        Ok(NetPreset::parse(name)?.model(seed))
+    }
+
     /// Attach a partition schedule.
     pub fn with_splits(mut self, splits: Vec<NetSplit>) -> Self {
         self.splits = splits;
         self
     }
+
+    /// Cap link bandwidth (bytes/second).
+    pub fn with_bandwidth(mut self, bytes_per_sec: u64) -> Self {
+        self.bandwidth = Some(bytes_per_sec);
+        self
+    }
+
+    /// Attach a correlated-loss chain.
+    pub fn with_burst(mut self, burst: GilbertElliott) -> Self {
+        self.burst = Some(burst);
+        self
+    }
+
+    /// Serialization delay of `payload_bytes` under the bandwidth cap
+    /// (zero when uncapped).
+    pub fn transfer_time(&self, payload_bytes: usize) -> Duration {
+        match self.bandwidth {
+            Some(rate) if rate > 0 => {
+                Duration::from_secs_f64(payload_bytes as f64 / rate as f64)
+            }
+            _ => Duration::ZERO,
+        }
+    }
+
+    /// Worst-case one-way delay of a `payload_bytes` message on the
+    /// slowest direction of the slowest link: the latency ceiling a
+    /// protocol wait window must clear to avoid false crash suspicion.
+    pub fn max_one_way(&self, payload_bytes: usize) -> Duration {
+        self.base_delay.mul_f64(1.0 + self.asymmetry.clamp(0.0, MAX_ASYMMETRY))
+            + self.jitter
+            + self.transfer_time(payload_bytes)
+    }
+
+    /// The static delay multiplier of the directed link `from → to`: a
+    /// pure function of `(seed, from, to)`, uniform in
+    /// `[1 − asymmetry, 1 + asymmetry]`.
+    fn asym_mult(&self, from: ClientId, to: ClientId) -> f64 {
+        if self.asymmetry <= 0.0 {
+            return 1.0;
+        }
+        let a = self.asymmetry.min(MAX_ASYMMETRY);
+        let mut r = Rng::new(link_seed(self.seed, ASYM_SALT, from, to));
+        1.0 - a + 2.0 * a * r.f64()
+    }
+}
+
+/// Asymmetry is clamped below 1 so no direction's multiplier reaches 0.
+const MAX_ASYMMETRY: f64 = 0.95;
+
+/// Salt separating the static delay-multiplier stream from the per-message
+/// drop/jitter stream of the same link.
+const ASYM_SALT: u64 = 0xA5F3_0000_0000;
+/// Salt of the per-message drop/jitter/burst stream.
+const LINK_SALT: u64 = 0x11AB_0000_0000;
+
+/// Mix a directed link's identity into a stream seed: every per-link RNG
+/// stream is a pure function of `(model.seed, salt, from, to)`.
+fn link_seed(seed: u64, salt: u64, from: ClientId, to: ClientId) -> u64 {
+    seed ^ salt ^ ((from as u64) << 32) ^ (to as u64).wrapping_add(1)
+}
+
+/// The named rows of the network-scenario matrix (DESIGN.md §3.4): what
+/// `dfl sim --net`, `dfl reproduce --net`, and the `scenarios` experiment
+/// driver sweep over.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NetPreset {
+    /// Zero latency, zero loss.
+    Ideal,
+    /// The paper's testbed: sub-ms base latency, small jitter.
+    Lan,
+    /// High latency, heavy jitter, 1% independent loss.
+    Wan,
+    /// Asymmetric per-direction latency plus a bandwidth cap.
+    Asym,
+    /// Gilbert–Elliott correlated loss bursts on LAN latency.
+    LossyBurst,
+}
+
+impl NetPreset {
+    /// Every preset, in sweep order.
+    pub const ALL: [NetPreset; 5] = [
+        NetPreset::Ideal,
+        NetPreset::Lan,
+        NetPreset::Wan,
+        NetPreset::Asym,
+        NetPreset::LossyBurst,
+    ];
+
+    /// The CLI spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            NetPreset::Ideal => "ideal",
+            NetPreset::Lan => "lan",
+            NetPreset::Wan => "wan",
+            NetPreset::Asym => "asym",
+            NetPreset::LossyBurst => "lossy-burst",
+        }
+    }
+
+    /// Parse a CLI spelling.
+    pub fn parse(name: &str) -> Result<NetPreset> {
+        NetPreset::ALL
+            .into_iter()
+            .find(|p| p.name() == name)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown network preset {name:?} (want ideal|lan|wan|asym|lossy-burst)"
+                )
+            })
+    }
+
+    /// Instantiate the preset's [`NetworkModel`] with `seed`.
+    pub fn model(self, seed: u64) -> NetworkModel {
+        match self {
+            NetPreset::Ideal => NetworkModel { seed, ..NetworkModel::ideal() },
+            NetPreset::Lan => NetworkModel::lan(seed),
+            NetPreset::Wan => NetworkModel::wan(seed),
+            NetPreset::Asym => NetworkModel::asym(seed),
+            NetPreset::LossyBurst => NetworkModel::lossy_burst(seed),
+        }
+    }
+}
+
+/// Deterministic per-directed-link state shared by both hubs: an
+/// independent RNG stream (seeded purely by `(model.seed, from, to)`), a
+/// message counter, the static asymmetric delay multiplier, and the
+/// Gilbert–Elliott burst-chain state.  Because no draw on one link depends
+/// on traffic of any other link, delays and drops are identical across
+/// runs regardless of how the client threads happened to interleave before
+/// a scheduler (virtual) or the OS (wall-clock) serialized them.
+struct LinkState {
+    rng: Rng,
+    seq: u64,
+    /// Static per-direction latency multiplier (1.0 = symmetric).
+    delay_mult: f64,
+    /// Gilbert–Elliott chain position: currently in the bad (bursty) state?
+    bad: bool,
+}
+
+impl LinkState {
+    fn new(model: &NetworkModel, from: ClientId, to: ClientId) -> LinkState {
+        LinkState {
+            rng: Rng::new(link_seed(model.seed, LINK_SALT, from, to)),
+            seq: 0,
+            delay_mult: model.asym_mult(from, to),
+            bad: false,
+        }
+    }
+
+    /// Advance the link one message: step the burst chain, sample drop and
+    /// jitter.  Returns `None` if the message is dropped, otherwise the
+    /// one-way delay plus the per-link sequence number (unique and
+    /// reproducible — dropped messages consume a number too, keeping the
+    /// stream independent of delivery outcomes downstream).
+    fn sample(&mut self, m: &NetworkModel, payload_bytes: usize) -> Option<(Duration, u64)> {
+        self.seq += 1;
+        if let Some(ge) = m.burst {
+            let u = self.rng.f64();
+            self.bad = if self.bad { u >= ge.p_exit } else { u < ge.p_enter };
+        }
+        let drop_prob = match (self.bad, m.burst) {
+            (true, Some(ge)) => ge.drop_bad,
+            _ => m.drop_prob,
+        };
+        let dropped = drop_prob > 0.0 && self.rng.f64() < drop_prob;
+        let jitter = m.jitter.mul_f64(self.rng.f64());
+        if dropped {
+            return None;
+        }
+        let delay =
+            m.base_delay.mul_f64(self.delay_mult) + jitter + m.transfer_time(payload_bytes);
+        Some((delay, self.seq))
+    }
+}
+
+/// Look up (or lazily create) the link `from → to` and sample one message.
+fn sample_link(
+    links: &Mutex<BTreeMap<(ClientId, ClientId), LinkState>>,
+    model: &NetworkModel,
+    from: ClientId,
+    to: ClientId,
+    payload_bytes: usize,
+) -> Option<(Duration, u64)> {
+    let mut links = links.lock().unwrap();
+    links
+        .entry((from, to))
+        .or_insert_with(|| LinkState::new(model, from, to))
+        .sample(model, payload_bytes)
 }
 
 struct Scheduled {
@@ -146,7 +445,9 @@ struct HubShared {
     cv: Condvar,
     shutdown: AtomicBool,
     model: NetworkModel,
-    rng: Mutex<Rng>,
+    links: Mutex<BTreeMap<(ClientId, ClientId), LinkState>>,
+    /// Global tie-break counter for the timer queue (per-link seqs are not
+    /// globally unique).
     seq: Mutex<u64>,
     blocked: Mutex<HashSet<(ClientId, ClientId)>>,
     /// Hub creation time: the reference point for `NetSplit` windows.
@@ -179,14 +480,13 @@ impl InProcHub {
             inboxes.push(tx);
             receivers.push(Some(rx));
         }
-        let seed = model.seed;
         let shared = Arc::new(HubShared {
             inboxes,
             queue: Mutex::new(BinaryHeap::new()),
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
             model,
-            rng: Mutex::new(Rng::new(seed ^ 0x1E7_0000)),
+            links: Mutex::new(BTreeMap::new()),
             seq: Mutex::new(0),
             blocked: Mutex::new(HashSet::new()),
             epoch: Instant::now(),
@@ -282,17 +582,13 @@ impl Transport for Endpoint {
             return Ok(()); // partitioned: message lost
         }
         // Exercise the wire format on every in-proc message.
-        let decoded = Msg::decode(&msg.encode())?;
-        let (delay, dropped) = {
-            let mut rng = self.shared.rng.lock().unwrap();
-            let m = &self.shared.model;
-            let dropped = m.drop_prob > 0.0 && rng.f64() < m.drop_prob;
-            let jitter = m.jitter.mul_f64(rng.f64());
-            (m.base_delay + jitter, dropped)
+        let wire = msg.encode();
+        let decoded = Msg::decode(&wire)?;
+        let Some((delay, _)) =
+            sample_link(&self.shared.links, &self.shared.model, self.id, to, wire.len())
+        else {
+            return Ok(()); // dropped (independent or burst loss)
         };
-        if dropped {
-            return Ok(());
-        }
         if delay.is_zero() {
             self.shared.deliver(to as usize, decoded);
         } else {
@@ -324,34 +620,12 @@ impl Transport for Endpoint {
     }
 }
 
-/// Deterministic per-link state of the virtual network: an independent RNG
-/// stream (seeded purely by `(model.seed, from, to)`) plus a message
-/// counter.  Because no draw on one link depends on traffic of any other
-/// link, delays and drops are identical across runs regardless of how the
-/// client threads happened to interleave before the scheduler serialized
-/// them.
-struct LinkState {
-    rng: Rng,
-    seq: u64,
-}
-
 struct VirtualHubShared {
     n: usize,
     model: NetworkModel,
     clock: Arc<VirtualClock>,
     links: Mutex<BTreeMap<(ClientId, ClientId), LinkState>>,
     blocked: Mutex<HashSet<(ClientId, ClientId)>>,
-}
-
-impl VirtualHubShared {
-    fn link_rng(&self, from: ClientId, to: ClientId) -> Rng {
-        Rng::new(
-            self.model.seed
-                ^ 0x11AB_0000_0000
-                ^ ((from as u64) << 32)
-                ^ (to as u64).wrapping_add(1),
-        )
-    }
 }
 
 /// The virtual-time simulated network: deliveries are events on a shared
@@ -433,23 +707,14 @@ impl Transport for VirtualEndpoint {
         if sh.model.splits.iter().any(|sp| sp.severs(at, self.id, to)) {
             return Ok(()); // partitioned: message lost
         }
-        let (delay, dropped, seq) = {
-            let mut links = sh.links.lock().unwrap();
-            let link = links
-                .entry((self.id, to))
-                .or_insert_with(|| LinkState { rng: sh.link_rng(self.id, to), seq: 0 });
-            link.seq += 1;
-            let m = &sh.model;
-            let dropped = m.drop_prob > 0.0 && link.rng.f64() < m.drop_prob;
-            let jitter = m.jitter.mul_f64(link.rng.f64());
-            (m.base_delay + jitter, dropped, link.seq)
+        let wire = msg.encode();
+        let Some((delay, seq)) = sample_link(&sh.links, &sh.model, self.id, to, wire.len())
+        else {
+            return Ok(()); // dropped (independent or burst loss)
         };
-        if dropped {
-            return Ok(());
-        }
         // The codec round-trip happens decode-side (recv_timeout), keeping
         // parity with the wall-clock hub's coverage of the wire format.
-        sh.clock.post(to as usize, delay, (self.id, to, seq), msg.encode());
+        sh.clock.post(to as usize, delay, (self.id, to, seq), wire);
         Ok(())
     }
 
@@ -510,10 +775,8 @@ mod tests {
     fn delayed_delivery_respects_latency() {
         let model = NetworkModel {
             base_delay: Duration::from_millis(30),
-            jitter: Duration::ZERO,
-            drop_prob: 0.0,
             seed: 1,
-            splits: Vec::new(),
+            ..NetworkModel::ideal()
         };
         let hub = InProcHub::new(2, model);
         let a = hub.endpoint(0);
@@ -605,13 +868,101 @@ mod tests {
     }
 
     #[test]
+    fn presets_parse_round_trip_and_are_distinct() {
+        for p in NetPreset::ALL {
+            assert_eq!(NetPreset::parse(p.name()).unwrap(), p);
+            let m = p.model(9);
+            assert_eq!(m.seed, 9, "preset {} must take the caller's seed", p.name());
+        }
+        assert!(NetPreset::parse("carrier-pigeon").is_err());
+        assert!(NetworkModel::preset("asym", 1).unwrap().bandwidth.is_some());
+        assert!(NetworkModel::preset("lossy-burst", 1).unwrap().burst.is_some());
+    }
+
+    #[test]
+    fn asym_multiplier_is_static_per_direction_and_bounded() {
+        let m = NetworkModel::asym(42);
+        for from in 0..4u32 {
+            for to in 0..4u32 {
+                if from == to {
+                    continue;
+                }
+                let mult = m.asym_mult(from, to);
+                assert_eq!(mult, m.asym_mult(from, to), "multiplier must be static");
+                assert!((1.0 - m.asymmetry..=1.0 + m.asymmetry).contains(&mult));
+            }
+        }
+        // the spread must actually produce asymmetric directions somewhere
+        let skewed = (0..8u32).any(|a| {
+            let b = a + 8;
+            (m.asym_mult(a, b) - m.asym_mult(b, a)).abs() > 0.05
+        });
+        assert!(skewed, "±80% spread never separated a link's directions");
+    }
+
+    #[test]
+    fn bandwidth_cap_adds_size_proportional_delay_virtually() {
+        // 10 kB/s link, zero base latency: a ~1.4 kB model update must take
+        // ~0.14 s of *logical* time, measured exactly by the virtual clock.
+        let model = NetworkModel {
+            bandwidth: Some(10_000),
+            seed: 3,
+            ..NetworkModel::ideal()
+        };
+        let wire_len = update(0, 1).encode().len();
+        let expect = Duration::from_secs_f64(wire_len as f64 / 10_000.0);
+        let clock = VirtualClock::new(2);
+        let hub = VirtualHub::new(2, model, Arc::clone(&clock));
+        let a = hub.endpoint(0);
+        let b = hub.endpoint(1);
+        std::thread::scope(|scope| {
+            let c = Arc::clone(&clock);
+            scope.spawn(move || {
+                c.attach(0);
+                a.send(1, &update(0, 1)).unwrap();
+                c.detach(0);
+            });
+            let c = Arc::clone(&clock);
+            scope.spawn(move || {
+                c.attach(1);
+                let got = b.recv_timeout(Duration::from_secs(5));
+                assert_eq!(got, Some(update(0, 1)));
+                assert_eq!(c.now(), expect, "transfer time must be exactly size/rate");
+                c.detach(1);
+            });
+        });
+    }
+
+    #[test]
+    fn burst_chain_drops_in_runs_not_uniformly() {
+        // Deterministic per-link chain: with drop_bad = 1.0 every loss run
+        // inside a bad state is contiguous.  Check (a) losses occur, (b)
+        // they cluster (at least one run of >= 2 consecutive drops), and
+        // (c) the schedule is seed-reproducible.
+        let model = NetworkModel {
+            burst: Some(GilbertElliott { p_enter: 0.2, p_exit: 0.3, drop_bad: 1.0 }),
+            seed: 11,
+            ..NetworkModel::ideal()
+        };
+        let outcomes = |m: &NetworkModel| -> Vec<bool> {
+            let mut link = LinkState::new(m, 0, 1);
+            (0..400).map(|_| link.sample(m, 100).is_some()).collect()
+        };
+        let a = outcomes(&model);
+        assert_eq!(a, outcomes(&model), "burst schedule must be reproducible");
+        let drops = a.iter().filter(|&&ok| !ok).count();
+        assert!(drops > 20, "burst chain never bit: {drops} drops of 400");
+        assert!(drops < 380, "burst chain never recovered: {drops} drops of 400");
+        let clustered = a.windows(2).any(|w| !w[0] && !w[1]);
+        assert!(clustered, "losses never clustered — not a burst model");
+    }
+
+    #[test]
     fn virtual_hub_delivers_at_modeled_latency() {
         let model = NetworkModel {
             base_delay: Duration::from_millis(30),
-            jitter: Duration::ZERO,
-            drop_prob: 0.0,
             seed: 1,
-            splits: Vec::new(),
+            ..NetworkModel::ideal()
         };
         let clock = VirtualClock::new(2);
         let hub = VirtualHub::new(2, model, Arc::clone(&clock));

@@ -3,7 +3,9 @@
 //! Three interchangeable transports implement [`Transport`]:
 //!
 //! * [`inproc::InProcHub`] — in-process channels with a seeded network model
-//!   (per-link delay, jitter, drops) used by the simulator, tests, and the
+//!   (per-link delay with optional asymmetry, jitter, bandwidth caps,
+//!   independent and burst drops — the scenario matrix, see
+//!   [`inproc::NetPreset`]) used by the simulator, tests, and the
 //!   experiment harness.  Messages still round-trip through the binary wire
 //!   codec so the encoding is exercised everywhere.
 //! * [`inproc::VirtualHub`] — the same network model on a deterministic
@@ -21,7 +23,9 @@ pub mod inproc;
 pub mod message;
 pub mod tcp;
 
-pub use inproc::{InProcHub, NetSplit, NetworkModel, VirtualEndpoint, VirtualHub};
+pub use inproc::{
+    GilbertElliott, InProcHub, NetPreset, NetSplit, NetworkModel, VirtualEndpoint, VirtualHub,
+};
 pub use message::{ClientId, ModelUpdate, Msg};
 pub use tcp::TcpTransport;
 

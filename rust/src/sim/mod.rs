@@ -1,13 +1,13 @@
 //! Deterministic in-process N-client deployments.
 //!
 //! Spawns one OS thread per client with a machine-contention model standing
-//! in for the paper's 1/2/3-machine LAN testbed (DESIGN.md §3): clients are
+//! in for the paper's 1/2/3-machine LAN testbed (DESIGN.md §3.1): clients are
 //! round-robined onto `machines` virtual hosts whose relative clock speeds
 //! follow Table 1 (4.0 / 2.0 / 3.5 GHz) and whose per-host contention grows
 //! with co-located client count — exactly the effect the paper observes
 //! when all 12 clients share one box.
 //!
-//! Two time regimes ([`SimConfig::virtual_time`]):
+//! Two time regimes ([`SimConfig::virtual_time`], DESIGN.md §3.3):
 //!
 //! * **Wall clock** (default) over an [`InProcHub`]: timeouts and fault
 //!   downtime really elapse, exactly as the seed behaved.

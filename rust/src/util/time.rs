@@ -32,6 +32,13 @@
 //!   the earliest pending instant, advances `now` to it, and wakes the
 //!   lowest ready token.  Logical time is therefore exact: an 80 ms wait
 //!   window ends at precisely `start + 80 ms`, with zero OS-jitter.
+//! * **Mailboxes are per-token FIFO queues of fired events.**  A delivery
+//!   becomes visible the moment its due instant fires, in `(due, key)`
+//!   order; [`VirtualClock::recv_deadline`] pops in that arrival order,
+//!   [`VirtualClock::try_recv`] never blocks, and mail posted to a `Done`
+//!   token is swallowed silently (the crash model).  Mail never expires:
+//!   anything delivered during a round boundary is waiting at the next
+//!   receive.
 //! * **Payloads are opaque bytes.**  The clock carries encoded wire
 //!   messages (`Msg::encode`) so `util` stays independent of `net`; the
 //!   virtual transport decodes on receive, preserving the seed behaviour of
@@ -54,6 +61,27 @@ pub type SimTime = Duration;
 ///
 /// Cheap to clone; obtain one from `Transport::clock()` so the same client
 /// code runs under both time regimes.
+///
+/// A virtual handle charges sleeps to logical time only — an hour of
+/// protocol waiting costs microseconds of wall time:
+///
+/// ```
+/// use std::sync::Arc;
+/// use std::time::Duration;
+/// use dfl::util::time::{Clock, VirtualClock};
+///
+/// let vc = VirtualClock::new(1);
+/// let clock = Clock::virtual_for(Arc::clone(&vc), 0);
+/// assert!(clock.is_virtual());
+/// std::thread::scope(|s| {
+///     s.spawn(|| {
+///         vc.attach(0);
+///         clock.sleep(Duration::from_secs(3600)); // logical hour, instant
+///         assert_eq!(clock.now(), Duration::from_secs(3600));
+///         vc.detach(0);
+///     });
+/// });
+/// ```
 #[derive(Clone)]
 pub enum Clock {
     /// Wall time, measured from this handle's creation.
@@ -145,6 +173,32 @@ struct VcState {
 }
 
 /// The shared discrete-event scheduler (see module docs).
+///
+/// Deliveries posted with a `(from, to, seq)` key arrive at exactly their
+/// due instant of logical time, ties broken by key — never by OS timing:
+///
+/// ```
+/// use std::sync::Arc;
+/// use std::time::Duration;
+/// use dfl::util::time::VirtualClock;
+///
+/// let clock = VirtualClock::new(2);
+/// std::thread::scope(|s| {
+///     let c = Arc::clone(&clock);
+///     s.spawn(move || {
+///         c.attach(0);
+///         c.post(1, Duration::from_millis(5), (0, 1, 1), vec![42]);
+///         c.detach(0);
+///     });
+///     let c = Arc::clone(&clock);
+///     s.spawn(move || {
+///         c.attach(1);
+///         assert_eq!(c.recv_deadline(1, Duration::from_secs(1)), Some(vec![42]));
+///         assert_eq!(c.now(), Duration::from_millis(5)); // exact logical latency
+///         c.detach(1);
+///     });
+/// });
+/// ```
 pub struct VirtualClock {
     state: Mutex<VcState>,
     /// One condvar per token, paired with `state`.

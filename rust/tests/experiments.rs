@@ -1,6 +1,13 @@
 //! Experiment-harness tests: structural integrity of every table driver
 //! (right columns/rows, parseable cells) on the fast MockTrainer, plus the
 //! cheap paper-shape assertions that are stable at mock scale.
+//!
+//! All drivers run under the deterministic virtual clock
+//! (`ExpScale::for_mock` defaults), so this file also pins the harness's
+//! two virtual-time contracts: same seed ⇒ byte-identical tables, and no
+//! driver ever sleeps a wall-clock timeout window.
+
+use std::time::{Duration, Instant};
 
 use dfl::exp::{self, ExpScale};
 use dfl::runtime::{MockTrainer, Trainer};
@@ -110,12 +117,80 @@ fn termination_reliability_is_total_under_quick_faults() {
 }
 
 #[test]
+fn scenario_matrix_sweeps_every_preset_and_is_deterministic() {
+    let t = MockTrainer::tiny();
+    let table = exp::scenarios(&t, scale());
+    let md = table.markdown();
+    let rows: Vec<&str> = md.lines().skip(2).collect();
+    assert!(rows.len() >= 4, "matrix must cover at least 4 presets:\n{md}");
+    for name in ["ideal", "lan", "wan", "asym", "lossy-burst"] {
+        assert!(md.contains(name), "missing preset {name}:\n{md}");
+    }
+    for row in &rows {
+        let cells: Vec<&str> = row.trim_matches('|').split('|').map(str::trim).collect();
+        assert_eq!(cells.len(), 6, "{row}");
+        let acc = parse_pct(cells[1]);
+        assert!((0.0..=100.0).contains(&acc), "{row}");
+        assert!(cells[3].parse::<f32>().unwrap() >= 0.0, "virtual time: {row}");
+        cells[5].parse::<usize>().expect("false-suspicion count");
+    }
+    // the ideal row is fault- and latency-free: nothing can look crashed,
+    // and every client must end adaptively
+    let ideal = rows.iter().find(|r| r.contains("ideal")).unwrap();
+    let cells: Vec<&str> = ideal.trim_matches('|').split('|').map(str::trim).collect();
+    assert_eq!(cells[5], "0", "false suspicions on an ideal network: {ideal}");
+    assert_eq!(parse_pct(cells[4]), 100.0, "non-adaptive ending on ideal: {ideal}");
+    // network-only variation: same seed ⇒ the whole table reproduces
+    assert_eq!(md, exp::scenarios(&t, scale()).markdown());
+}
+
+#[test]
 fn run_all_produces_every_experiment() {
     let t = MockTrainer::tiny();
     let all = exp::run_all(&t, scale());
-    assert_eq!(all.len(), 7);
+    assert_eq!(all.len(), 8);
     let titles: Vec<&str> = all.iter().map(|(t, _)| t.as_str()).collect();
-    for needle in ["Table 2", "Table 3", "Table 4", "Fig 3+4", "Fig 5+6", "Fig 7+8"] {
+    let needles = [
+        "Table 2",
+        "Table 3",
+        "Table 4",
+        "Fig 3+4",
+        "Fig 5+6",
+        "Fig 7+8",
+        "Termination",
+        "Scenario matrix",
+    ];
+    for needle in needles {
         assert!(titles.iter().any(|t| t.contains(needle)), "missing {needle}");
+    }
+}
+
+#[test]
+fn tables_are_seed_deterministic_and_never_sleep_real_time() {
+    // Two full regenerations with 5-second wait windows: under virtual time
+    // the windows are logical, so both passes finish in wall-clock seconds
+    // and produce byte-identical markdown.  Any real sleep re-introduced
+    // into a driver (one crashed-peer detection costs a full window) blows
+    // the time budget immediately.
+    let t = MockTrainer::tiny();
+    let mut s = scale();
+    s.timeout_ms = Some(5_000);
+    let t0 = Instant::now();
+    let a = exp::run_all(&t, s);
+    let b = exp::run_all(&t, s);
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed < Duration::from_secs(120),
+        "virtual-time harness burned {elapsed:?} of wall time — a driver is \
+         sleeping through its windows for real"
+    );
+    assert_eq!(a.len(), b.len());
+    for ((title_a, table_a), (title_b, table_b)) in a.iter().zip(&b) {
+        assert_eq!(title_a, title_b);
+        assert_eq!(
+            table_a.markdown(),
+            table_b.markdown(),
+            "{title_a} is not reproducible under a fixed seed"
+        );
     }
 }
