@@ -1,17 +1,69 @@
 //! Micro-benchmarks of the hot path (DESIGN.md §6):
 //! PJRT call latencies (train/eval/aggregate), codec encode/decode at model
-//! size, in-proc broadcast fan-out, and one full protocol round.
+//! size, in-proc broadcast fan-out, virtual-scheduler context-switch
+//! throughput (thread-backed vs event-driven at 100 / 1 000 / 10 000
+//! tokens), and one full protocol round under each executor.
 
 mod common;
 
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use dfl::model::ParamVector;
 use dfl::net::{InProcHub, Msg, ModelUpdate, NetworkModel, Transport};
 use dfl::runtime::Trainer;
 use dfl::util::benchkit::{bench_for, black_box};
+use dfl::util::time::VirtualClock;
 use dfl::util::Rng;
+
+/// Staggered sleep per token so the timer heap sees a realistic spread of
+/// dues instead of one degenerate instant.
+fn stagger(token: usize) -> Duration {
+    Duration::from_micros(50 + (token % 7) as u64 * 13)
+}
+
+/// Event-driven mode: one thread pumps every token through the driver API.
+/// Returns context switches per second of wall time.
+fn sched_events(n: usize, wakes_per_token: usize) -> f64 {
+    let clock = VirtualClock::new(n);
+    let mut remaining = vec![wakes_per_token; n];
+    let mut switches = 0u64;
+    let t0 = Instant::now();
+    while let Some(t) = clock.driver_next() {
+        switches += 1;
+        if remaining[t] == 0 {
+            clock.detach(t);
+        } else {
+            remaining[t] -= 1;
+            clock.driver_sleep(t, stagger(t));
+        }
+    }
+    switches as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Thread-backed mode: one small-stack OS thread per token, each sleeping
+/// `wakes_per_token` times on the shared clock.
+fn sched_threads(n: usize, wakes_per_token: usize) -> f64 {
+    let clock = VirtualClock::new(n);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for t in 0..n {
+            let clock = Arc::clone(&clock);
+            std::thread::Builder::new()
+                .name(format!("sched-{t}"))
+                .stack_size(128 * 1024)
+                .spawn_scoped(scope, move || {
+                    clock.attach(t);
+                    for _ in 0..wakes_per_token {
+                        clock.sleep(t, stagger(t));
+                    }
+                    clock.detach(t);
+                })
+                .expect("spawn bench thread");
+        }
+    });
+    (n * (wakes_per_token + 1)) as f64 / t0.elapsed().as_secs_f64()
+}
 
 fn main() {
     let engine = common::engine();
@@ -65,6 +117,15 @@ fn main() {
         }
     });
 
+    // --- virtual scheduler: context switches/sec, threads vs events ---------
+    // ~200k total switches per row, split across the token count, so every
+    // row runs in comparable wall time regardless of n.
+    for &n in &[100usize, 1_000, 10_000] {
+        let wakes = (200_000 / n).max(4);
+        println!("sched/events_{n}: {:>12.0} switches/s", sched_events(n, wakes));
+        println!("sched/threads_{n}: {:>12.0} switches/s", sched_threads(n, wakes));
+    }
+
     // --- one full protocol round (4 clients, mock-speed network) ------------
     let mut cfg = dfl::sim::SimConfig::for_meta(4, &meta);
     cfg.protocol.max_rounds = 1;
@@ -72,6 +133,17 @@ fn main() {
     cfg.train_n = 400;
     let engine_ref = &engine;
     bench_for("e2e/one_round_4_clients", Duration::from_secs(4), || {
+        black_box(dfl::sim::run(engine_ref, &cfg).unwrap());
+    });
+
+    // --- the same round under each virtual-time executor ---------------------
+    cfg.virtual_time = true;
+    cfg.exec = dfl::sim::ExecMode::Events;
+    bench_for("e2e/one_round_4_clients_events", Duration::from_secs(4), || {
+        black_box(dfl::sim::run(engine_ref, &cfg).unwrap());
+    });
+    cfg.exec = dfl::sim::ExecMode::Threads;
+    bench_for("e2e/one_round_4_clients_vthreads", Duration::from_secs(4), || {
         black_box(dfl::sim::run(engine_ref, &cfg).unwrap());
     });
 

@@ -1,57 +1,91 @@
 //! Phase 2 — the fully asynchronous, fault-tolerant client (Algorithm 2).
 //!
+//! The protocol loop itself lives in [`super::machine::AsyncMachine`] as a
+//! poll-style state machine (Training / AwaitUpdates / Outage, see the
+//! [`super::machine`] docs); [`AsyncClient`] is the construction surface —
+//! the same public fields as always — plus the blocking driver that runs
+//! the machine on the current thread.  `sim::exec` drives the identical
+//! machine without a thread per client.
+//!
 //! Per round: local training → (CRT check) → broadcast → bounded wait
 //! window → timeout crash detection → aggregate whatever arrived →
 //! evaluate → CCC check → next round.  No barriers: a slow peer delays
 //! nobody beyond the window, a late message revives a "crashed" peer, and
 //! the terminate flag floods via piggybacking (CRT).
 
-use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::Result;
 
 use super::config::ProtocolConfig;
-use super::failure::PeerTable;
 use super::fault::FaultPlan;
-use super::termination::{ConvergenceMonitor, TerminationCause, TerminationState};
+use super::machine::{AsyncMachine, ClientStateMachine};
 use crate::data::Dataset;
-use crate::metrics::{ClientReport, RoundRecord};
-use crate::model::ParamVector;
-use crate::net::{ClientId, ModelUpdate, Msg, Transport};
+use crate::metrics::ClientReport;
+use crate::net::{ClientId, Transport};
 use crate::runtime::Trainer;
-use crate::util::time::Clock;
 use crate::util::Rng;
 
+/// The shared evaluation tensors (pre-materialized to the artifact's
+/// static shapes).  Every client of a deployment evaluates on the same
+/// test set, so these are reference-counted: at 10 000 clients one copy
+/// exists instead of 10 000.
+#[derive(Clone)]
+pub struct EvalTensors {
+    /// Probe eval tensors (eval_round artifact shapes).
+    pub eval_xs: Arc<Vec<f32>>,
+    pub eval_ys: Arc<Vec<i32>>,
+    /// Full eval tensors (eval_full artifact shapes).
+    pub full_xs: Arc<Vec<f32>>,
+    pub full_ys: Arc<Vec<i32>>,
+}
+
+impl EvalTensors {
+    /// Materialize both eval tensor sets from the shared test dataset.
+    pub fn new(test: &Dataset, meta: &crate::runtime::Meta) -> Self {
+        let (eval_xs, eval_ys) = test.take_flat(meta.nb_eval_round * meta.batch);
+        let (full_xs, full_ys) = test.take_flat(meta.nb_eval_full * meta.batch);
+        EvalTensors {
+            eval_xs: Arc::new(eval_xs),
+            eval_ys: Arc::new(eval_ys),
+            full_xs: Arc::new(full_xs),
+            full_ys: Arc::new(full_ys),
+        }
+    }
+}
+
 /// A client's local data: its training partition plus the shared eval
-/// tensors (pre-materialized to the artifact's static shapes).
+/// tensors.
 pub struct ClientData {
     pub train: Arc<Dataset>,
     pub indices: Vec<usize>,
-    /// Probe eval tensors (eval_round artifact shapes).
-    pub eval_xs: Vec<f32>,
-    pub eval_ys: Vec<i32>,
-    /// Full eval tensors (eval_full artifact shapes).
-    pub full_xs: Vec<f32>,
-    pub full_ys: Vec<i32>,
+    pub eval: EvalTensors,
 }
 
 impl ClientData {
-    /// Build from a dataset + partition + shared test set.
+    /// Build from a dataset + partition + shared test set (materializes a
+    /// private copy of the eval tensors; deployments with many clients
+    /// should build one [`EvalTensors`] and use [`ClientData::with_eval`]).
     pub fn new(
         train: Arc<Dataset>,
         indices: Vec<usize>,
         test: &Dataset,
         meta: &crate::runtime::Meta,
     ) -> Self {
-        let (eval_xs, eval_ys) = test.take_flat(meta.nb_eval_round * meta.batch);
-        let (full_xs, full_ys) = test.take_flat(meta.nb_eval_full * meta.batch);
-        ClientData { train, indices, eval_xs, eval_ys, full_xs, full_ys }
+        ClientData::with_eval(train, indices, EvalTensors::new(test, meta))
+    }
+
+    /// Build from a partition plus already-shared eval tensors.
+    pub fn with_eval(train: Arc<Dataset>, indices: Vec<usize>, eval: EvalTensors) -> Self {
+        ClientData { train, indices, eval }
     }
 }
 
-/// One asynchronous FL participant (owns its transport; shares the trainer).
+/// One asynchronous FL participant (owns its transport; shares the
+/// trainer).  Fill the fields, then either [`run`](AsyncClient::run) on
+/// this thread or [`into_machine`](AsyncClient::into_machine) for an
+/// event-driven executor.
 pub struct AsyncClient<'a> {
     pub id: ClientId,
     pub trainer: &'a dyn Trainer,
@@ -71,244 +105,16 @@ pub struct AsyncClient<'a> {
     pub train_cost: Option<Duration>,
 }
 
-struct WindowOutcome {
-    /// Latest update per sender seen this window.
-    latest: BTreeMap<ClientId, ModelUpdate>,
-    /// Senders heard this window (Update/Hello; a Bye is a leave, not a
-    /// liveness signal).
-    heard: BTreeSet<ClientId>,
-}
-
 impl<'a> AsyncClient<'a> {
-    /// Collect messages for up to `cfg.timeout`, processing CRT flags and
-    /// liveness as they arrive. Ends early once every currently-alive peer
-    /// has reported (if configured).
-    fn wait_window(
-        &mut self,
-        clock: &Clock,
-        round: u32,
-        peer_table: &mut PeerTable,
-        term: &mut TerminationState,
-    ) -> WindowOutcome {
-        let mut latest: BTreeMap<ClientId, ModelUpdate> = BTreeMap::new();
-        let mut heard: BTreeSet<ClientId> = BTreeSet::new();
-        // Degenerate single-client deployment: nothing to wait for.
-        if self.transport.peers().is_empty() {
-            return WindowOutcome { latest, heard };
-        }
-        // Alive-but-silent peers, maintained incrementally so the early-exit
-        // check is O(log n) per message rather than an O(n²) rescan — at
-        // hundreds of clients the window loop is the protocol's hot path.
-        // Invariant: any peer that *becomes* alive mid-window did so by
-        // sending (record_message), so it is heard and never unheard.
-        let mut alive_unheard: BTreeSet<ClientId> = peer_table.alive().into_iter().collect();
-        let deadline = clock.now() + self.cfg.timeout;
-        loop {
-            let now = clock.now();
-            if now >= deadline {
-                break;
-            }
-            // Every currently-alive peer reported (or none are left at
-            // all): nothing further can arrive this window but latecomers.
-            if self.cfg.early_window_exit && alive_unheard.is_empty() && !heard.is_empty() {
-                break;
-            }
-            let Some(msg) = self.transport.recv_timeout(deadline - now) else {
-                continue; // timeout inside window -> loop re-checks deadline
-            };
-            let sender = msg.sender();
-            match msg {
-                Msg::Update(u) => {
-                    peer_table.record_message(sender, round, u.terminate);
-                    if u.terminate && self.cfg.crt_enabled {
-                        term.signal_from(sender, round);
-                    }
-                    heard.insert(sender);
-                    alive_unheard.remove(&sender);
-                    latest.insert(sender, u);
-                }
-                Msg::Hello { .. } => {
-                    peer_table.record_message(sender, round, false);
-                    heard.insert(sender);
-                    alive_unheard.remove(&sender);
-                }
-                Msg::Bye { .. } => {
-                    peer_table.record_message(sender, round, true);
-                    // Now Terminated, no longer alive: its silence must not
-                    // hold the window open.
-                    alive_unheard.remove(&sender);
-                }
-            }
-        }
-        WindowOutcome { latest, heard }
+    /// Lift this client into its poll-style state machine (no thread
+    /// needed; see [`super::machine`]).
+    pub fn into_machine(self) -> ClientStateMachine<'a> {
+        ClientStateMachine::Async(AsyncMachine::new(self))
     }
 
-    fn broadcast_model(&self, round: u32, params: &[f32], terminate: bool, weight: f32) {
-        let msg = Msg::Update(ModelUpdate {
-            sender: self.id,
-            round,
-            terminate,
-            weight,
-            params: ParamVector(params.to_vec()),
-        });
-        // best-effort: unreachable peers are handled by the crash model
-        let _ = self.transport.broadcast(&msg);
-    }
-
-    /// Run Algorithm 2 to completion. Never panics on peer behaviour; Err
-    /// only for local/engine failures.
-    pub fn run(mut self) -> Result<ClientReport> {
-        let meta = self.trainer.meta().clone();
-        let clock = self.transport.clock();
-        let started = clock.now();
-        let mut params = self.trainer.init(self.cfg.model_seed)?;
-        let mut peer_table = PeerTable::new(&self.transport.peers());
-        let mut term = TerminationState::new();
-        let mut monitor =
-            ConvergenceMonitor::new(self.cfg.count_threshold, self.cfg.conv_threshold_rel);
-        let mut history: Vec<RoundRecord> = Vec::new();
-        let my_weight = if self.cfg.weight_by_samples {
-            self.data.indices.len() as f32
-        } else {
-            1.0
-        };
-
-        let mut round: u32 = 0;
-        let mut cause = TerminationCause::MaxRounds;
-        let mut outage_done = false;
-        // Messages can arrive between rounds (buffer carries across).
-        while round < self.cfg.max_rounds {
-            // -- fault injection: benign crash = immediate silence ---------
-            if !outage_done
-                && self.fault.should_crash(round, clock.now().saturating_sub(started))
-            {
-                match self.fault.rejoin_after {
-                    None => {
-                        cause = TerminationCause::Crashed;
-                        break;
-                    }
-                    Some(downtime) => {
-                        // Transient failure (§3.1): full silence for the
-                        // outage, traffic sent to us meanwhile is lost, then
-                        // resume the loop — peers revive us on our next
-                        // broadcast (PeerTable late-message rule).  The
-                        // downtime charges the clock, so a 10 s outage under
-                        // virtual time costs no real waiting.
-                        clock.sleep(downtime);
-                        while self.transport.try_recv().is_some() {}
-                        outage_done = true;
-                    }
-                }
-            }
-
-            // -- local training (EPOCHS_PER_ROUND is baked into the
-            //    train_epoch artifact's nb_train scan) ---------------------
-            let t_train = clock.now();
-            let (xs, ys) = self.data.train.gather_round(
-                &self.data.indices,
-                meta.nb_train * meta.batch,
-                &mut self.rng,
-            );
-            let (new_params, train_loss) =
-                self.trainer.train_round(&params, &xs, &ys, self.cfg.lr)?;
-            params = new_params;
-            match self.train_cost {
-                Some(cost) => clock.sleep(cost.mul_f32(1.0 + self.slowdown.max(0.0))),
-                None if self.slowdown > 0.0 => {
-                    clock.sleep(clock.now().saturating_sub(t_train).mul_f32(self.slowdown))
-                }
-                None => {}
-            }
-
-            // -- CRT fast path: flag already known -> final broadcast ------
-            if term.is_set() {
-                self.broadcast_model(round, &params, true, my_weight);
-                cause = TerminationCause::Signaled;
-                break;
-            }
-
-            // -- broadcast + bounded wait ----------------------------------
-            self.broadcast_model(round, &params, false, my_weight);
-            let window = self.wait_window(&clock, round, &mut peer_table, &mut term);
-
-            // -- crash detection (Alg. 2 lines 14-19) ----------------------
-            let newly_crashed = peer_table.mark_missing(round, &window.heard);
-
-            // -- aggregate own + received (Alg. 2 lines 20-21) -------------
-            let mut rows: Vec<(&[f32], f32)> = vec![(&params, my_weight)];
-            for u in window.latest.values().take(meta.k_max - 1) {
-                rows.push((u.params.as_slice(), u.weight.max(0.0)));
-            }
-            let aggregated = rows.len();
-            params = self.trainer.aggregate(&rows)?;
-
-            // -- evaluate (Alg. 2 line 22) ---------------------------------
-            let (correct, _eval_loss) =
-                self.trainer
-                    .eval(&params, &self.data.eval_xs, &self.data.eval_ys, false)?;
-            let probe_acc = correct as f32 / self.data.eval_ys.len() as f32;
-
-            // -- CCC check (Alg. 2 lines 23-34) ----------------------------
-            let crash_free = newly_crashed.is_empty();
-            let avg = ParamVector(params.clone());
-            let ccc = monitor.observe(&avg, crash_free, aggregated);
-            history.push(RoundRecord {
-                round,
-                train_loss,
-                probe_acc,
-                alive_peers: peer_table.alive().len(),
-                aggregated,
-                delta_rel: monitor.last_delta_rel,
-                conv_counter: monitor.counter(),
-                crashes_detected: newly_crashed,
-            });
-            if round >= self.cfg.min_rounds && ccc {
-                term.self_trigger(round);
-                self.broadcast_model(round, &params, true, my_weight);
-                cause = TerminationCause::Converged;
-                round += 1;
-                break;
-            }
-            // CRT: flag may have arrived during this window — finish the
-            // round (aggregation above already used the data), then exit at
-            // the top of the next iteration after one more local update
-            // (Alg. 2 lines 8-10).
-            round += 1;
-        }
-
-        // -- termination finalization (Alg. 2 lines 39-42) ------------------
-        let (final_accuracy, final_loss, final_params) =
-            if cause == TerminationCause::Crashed {
-                (None, None, None)
-            } else {
-                if cause == TerminationCause::MaxRounds {
-                    // max rounds reached: log and broadcast final weights
-                    self.broadcast_model(round, &params, true, my_weight);
-                }
-                let _ = self.transport.broadcast(&Msg::Bye { sender: self.id });
-                let (correct, loss) = self.trainer.eval(
-                    &params,
-                    &self.data.full_xs,
-                    &self.data.full_ys,
-                    true,
-                )?;
-                (
-                    Some(correct as f32 / self.data.full_ys.len() as f32),
-                    Some(loss),
-                    Some(params),
-                )
-            };
-
-        Ok(ClientReport {
-            id: self.id,
-            cause,
-            rounds_completed: round,
-            final_accuracy,
-            final_loss,
-            wall: clock.now().saturating_sub(started),
-            history,
-            signal_source: term.source,
-            final_params,
-        })
+    /// Run Algorithm 2 to completion on the current thread.  Never panics
+    /// on peer behaviour; Err only for local/engine failures.
+    pub fn run(self) -> Result<ClientReport> {
+        self.into_machine().run_blocking()
     }
 }

@@ -8,8 +8,12 @@
 //! from *failed* clients.  Peers that announced termination are *not*
 //! treated as crashed when they fall silent; that disambiguation is the
 //! point of the Client-Responsive Termination protocol.
-
-use std::collections::{BTreeMap, BTreeSet};
+//!
+//! Storage is dense: every client tracks every peer, so at 10 000 clients
+//! a [`PeerTable`] is an n-entry vector indexed by client id (2 bytes of
+//! state per peer) rather than a pair of BTreeMaps, and per-window
+//! membership checks run on [`IdSet`] bitsets — the difference between
+//! megabytes and gigabytes for the full deployment.
 
 use crate::net::ClientId;
 
@@ -30,51 +34,115 @@ pub enum PeerEvent {
     Revived { round: u32, peer: ClientId },
 }
 
-/// Per-client view of every peer's liveness.
+/// Dense bitset of client ids: O(1) insert/contains with 1 bit per id,
+/// cheap enough to rebuild every wait window even at 10 000 clients.
+#[derive(Clone, Debug, Default)]
+pub struct IdSet {
+    bits: Vec<u64>,
+    len: usize,
+}
+
+impl IdSet {
+    pub fn new() -> IdSet {
+        IdSet::default()
+    }
+
+    /// Insert `id`; returns true if it was not already present.
+    pub fn insert(&mut self, id: ClientId) -> bool {
+        let (word, bit) = (id as usize / 64, id as usize % 64);
+        if word >= self.bits.len() {
+            self.bits.resize(word + 1, 0);
+        }
+        let mask = 1u64 << bit;
+        if self.bits[word] & mask != 0 {
+            return false;
+        }
+        self.bits[word] |= mask;
+        self.len += 1;
+        true
+    }
+
+    pub fn contains(&self, id: ClientId) -> bool {
+        let (word, bit) = (id as usize / 64, id as usize % 64);
+        self.bits.get(word).is_some_and(|w| w & (1u64 << bit) != 0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl FromIterator<ClientId> for IdSet {
+    fn from_iter<I: IntoIterator<Item = ClientId>>(iter: I) -> IdSet {
+        let mut set = IdSet::new();
+        for id in iter {
+            set.insert(id);
+        }
+        set
+    }
+}
+
+/// Per-client view of every peer's liveness (dense by client id).
 #[derive(Clone, Debug)]
 pub struct PeerTable {
-    status: BTreeMap<ClientId, PeerStatus>,
-    /// Round at which we last heard each peer (our local round counter).
-    last_heard: BTreeMap<ClientId, Option<u32>>,
+    /// `status[id]`: `None` = not a peer (self / unknown id).
+    status: Vec<Option<PeerStatus>>,
+    /// Count of peers currently `Alive` (maintained incrementally so the
+    /// per-round metrics never rescan the table).
+    alive: usize,
     events: Vec<PeerEvent>,
 }
 
 impl PeerTable {
     pub fn new(peers: &[ClientId]) -> Self {
-        PeerTable {
-            status: peers.iter().map(|&p| (p, PeerStatus::Alive)).collect(),
-            last_heard: peers.iter().map(|&p| (p, None)).collect(),
-            events: Vec::new(),
+        let size = peers.iter().max().map_or(0, |&m| m as usize + 1);
+        let mut status = vec![None; size];
+        for &p in peers {
+            status[p as usize] = Some(PeerStatus::Alive);
         }
+        PeerTable { status, alive: peers.len(), events: Vec::new() }
     }
 
     pub fn status(&self, peer: ClientId) -> Option<PeerStatus> {
-        self.status.get(&peer).copied()
+        self.status.get(peer as usize).copied().flatten()
     }
 
     /// Record receipt of any message from `peer` during our `round`.
     /// Returns true if this revived a previously-crashed peer.
     pub fn record_message(&mut self, peer: ClientId, round: u32, terminated: bool) -> bool {
-        let mut revived = false;
-        if let Some(s) = self.status.get_mut(&peer) {
-            if *s == PeerStatus::Crashed {
-                revived = true;
-                self.events.push(PeerEvent::Revived { round, peer });
-            }
-            // A terminate flag pins the peer to Terminated; otherwise alive.
-            *s = if terminated { PeerStatus::Terminated } else { PeerStatus::Alive };
-            self.last_heard.insert(peer, Some(round));
+        let prev = match self.status.get(peer as usize) {
+            Some(Some(s)) => *s,
+            _ => return false,
+        };
+        let revived = prev == PeerStatus::Crashed;
+        if revived {
+            self.events.push(PeerEvent::Revived { round, peer });
         }
+        // A terminate flag pins the peer to Terminated; otherwise alive.
+        let next = if terminated { PeerStatus::Terminated } else { PeerStatus::Alive };
+        match (prev == PeerStatus::Alive, next == PeerStatus::Alive) {
+            (true, false) => self.alive -= 1,
+            (false, true) => self.alive += 1,
+            _ => {}
+        }
+        self.status[peer as usize] = Some(next);
         revived
     }
 
     /// End-of-window sweep: every peer still `Alive` that was *not* heard
-    /// during `round` is marked crashed.  Returns the newly-crashed ids.
-    pub fn mark_missing(&mut self, round: u32, heard: &BTreeSet<ClientId>) -> Vec<ClientId> {
+    /// during `round` is marked crashed.  Returns the newly-crashed ids
+    /// (ascending).
+    pub fn mark_missing(&mut self, round: u32, heard: &IdSet) -> Vec<ClientId> {
         let mut newly = Vec::new();
-        for (&peer, s) in self.status.iter_mut() {
-            if *s == PeerStatus::Alive && !heard.contains(&peer) {
-                *s = PeerStatus::Crashed;
+        for id in 0..self.status.len() {
+            let peer = id as ClientId;
+            if self.status[id] == Some(PeerStatus::Alive) && !heard.contains(peer) {
+                self.status[id] = Some(PeerStatus::Crashed);
+                self.alive -= 1;
                 self.events.push(PeerEvent::Crashed { round, peer });
                 newly.push(peer);
             }
@@ -82,29 +150,45 @@ impl PeerTable {
         newly
     }
 
-    /// Peers currently believed alive (participating in aggregation).
-    pub fn alive(&self) -> Vec<ClientId> {
+    fn with_status(&self, want: PeerStatus) -> Vec<ClientId> {
         self.status
             .iter()
-            .filter(|(_, &s)| s == PeerStatus::Alive)
-            .map(|(&p, _)| p)
+            .enumerate()
+            .filter(|(_, s)| **s == Some(want))
+            .map(|(id, _)| id as ClientId)
             .collect()
+    }
+
+    /// Peers currently believed alive (participating in aggregation),
+    /// ascending by id.
+    pub fn alive(&self) -> Vec<ClientId> {
+        self.with_status(PeerStatus::Alive)
+    }
+
+    /// The alive peers as a bitset (the per-window working form: no
+    /// intermediate `Vec` on the once-per-round path).
+    pub fn alive_ids(&self) -> IdSet {
+        let mut set = IdSet::new();
+        for (id, s) in self.status.iter().enumerate() {
+            if *s == Some(PeerStatus::Alive) {
+                set.insert(id as ClientId);
+            }
+        }
+        set
+    }
+
+    /// How many peers are currently believed alive (O(1); the per-round
+    /// metrics path at four-digit client counts).
+    pub fn alive_count(&self) -> usize {
+        self.alive
     }
 
     pub fn crashed(&self) -> Vec<ClientId> {
-        self.status
-            .iter()
-            .filter(|(_, &s)| s == PeerStatus::Crashed)
-            .map(|(&p, _)| p)
-            .collect()
+        self.with_status(PeerStatus::Crashed)
     }
 
     pub fn terminated(&self) -> Vec<ClientId> {
-        self.status
-            .iter()
-            .filter(|(_, &s)| s == PeerStatus::Terminated)
-            .map(|(&p, _)| p)
-            .collect()
+        self.with_status(PeerStatus::Terminated)
     }
 
     pub fn events(&self) -> &[PeerEvent] {
@@ -128,25 +212,34 @@ impl PeerTable {
 mod tests {
     use super::*;
 
+    fn ids<I: IntoIterator<Item = ClientId>>(iter: I) -> IdSet {
+        iter.into_iter().collect()
+    }
+
     #[test]
     fn silence_marks_crash() {
         let mut t = PeerTable::new(&[1, 2, 3]);
         t.record_message(1, 0, false);
-        let newly = t.mark_missing(0, &BTreeSet::from([1]));
+        let newly = t.mark_missing(0, &ids([1]));
         assert_eq!(newly, vec![2, 3]);
         assert_eq!(t.status(1), Some(PeerStatus::Alive));
         assert_eq!(t.status(2), Some(PeerStatus::Crashed));
         assert_eq!(t.alive(), vec![1]);
+        assert_eq!(t.alive_count(), 1);
+        let ids = t.alive_ids();
+        assert!(ids.contains(1) && !ids.contains(2) && ids.len() == 1);
     }
 
     #[test]
     fn late_message_revives() {
         let mut t = PeerTable::new(&[1]);
-        t.mark_missing(0, &BTreeSet::new());
+        t.mark_missing(0, &ids([]));
         assert_eq!(t.status(1), Some(PeerStatus::Crashed));
+        assert_eq!(t.alive_count(), 0);
         let revived = t.record_message(1, 3, false);
         assert!(revived);
         assert_eq!(t.status(1), Some(PeerStatus::Alive));
+        assert_eq!(t.alive_count(), 1);
         assert!(t
             .events()
             .contains(&PeerEvent::Revived { round: 3, peer: 1 }));
@@ -156,16 +249,17 @@ mod tests {
     fn terminated_peers_not_marked_crashed() {
         let mut t = PeerTable::new(&[1, 2]);
         t.record_message(1, 0, true); // peer 1 announced termination
-        let newly = t.mark_missing(1, &BTreeSet::new()); // silence from both
+        let newly = t.mark_missing(1, &ids([])); // silence from both
         assert_eq!(newly, vec![2]); // only 2 is a crash
         assert_eq!(t.status(1), Some(PeerStatus::Terminated));
         assert_eq!(t.terminated(), vec![1]);
+        assert_eq!(t.alive_count(), 0);
     }
 
     #[test]
     fn recent_crash_window() {
         let mut t = PeerTable::new(&[1, 2]);
-        t.mark_missing(5, &BTreeSet::from([2])); // 1 crashes at round 5
+        t.mark_missing(5, &ids([2])); // 1 crashes at round 5
         assert!(t.recent_crash(5, 3));
         assert!(t.recent_crash(7, 3));
         assert!(!t.recent_crash(8, 3));
@@ -182,10 +276,23 @@ mod tests {
     #[test]
     fn crash_then_terminate_flag_pins_terminated() {
         let mut t = PeerTable::new(&[1]);
-        t.mark_missing(0, &BTreeSet::new());
+        t.mark_missing(0, &ids([]));
         // peer was slow, not dead, and meanwhile learned of termination
         t.record_message(1, 4, true);
         assert_eq!(t.status(1), Some(PeerStatus::Terminated));
-        assert_eq!(t.mark_missing(5, &BTreeSet::new()), Vec::<ClientId>::new());
+        assert_eq!(t.mark_missing(5, &ids([])), Vec::<ClientId>::new());
+    }
+
+    #[test]
+    fn idset_insert_contains_len() {
+        let mut s = IdSet::new();
+        assert!(s.is_empty());
+        assert!(s.insert(3));
+        assert!(!s.insert(3), "double insert must report existing");
+        assert!(s.insert(200)); // forces bitset growth
+        assert!(s.contains(3));
+        assert!(s.contains(200));
+        assert!(!s.contains(64));
+        assert_eq!(s.len(), 2);
     }
 }

@@ -1,0 +1,873 @@
+//! Poll-style client state machines — the protocol loops of Algorithms 1–2
+//! with every blocking point made explicit.
+//!
+//! [`AsyncClient`](super::async_client::AsyncClient) and
+//! [`SyncClient`](super::sync::SyncClient) used to *be* their run loops:
+//! straight-line code that slept and received inline, so every client
+//! needed a thread to block on.  This module turns each loop inside out
+//! into a [`ClientStateMachine`]: a `step(input) -> Step` automaton that
+//! never blocks.  Compute (training, aggregation, evaluation) and sends
+//! happen inside `step`; the only things a client ever *waits* for are
+//! yielded to the caller as [`Step::Sleep`] or [`Step::Recv`], and the
+//! caller answers with the matching [`Input`].
+//!
+//! Two executors drive the same machine:
+//!
+//! * **Blocking** ([`ClientStateMachine::run_blocking`]) — one thread per
+//!   client, `Sleep` ⇒ `Clock::sleep`, `Recv` ⇒ `Transport::recv_timeout`.
+//!   This is the wall-clock path (TCP, `InProcHub`) and the thread-backed
+//!   virtual compatibility mode.
+//! * **Event-driven** (`sim::exec`) — a single thread owns every machine
+//!   and maps the yields onto the virtual clock's driver API; no
+//!   per-client OS threads exist.  Both executors make the identical
+//!   sequence of scheduler transitions, so same-seed runs are
+//!   byte-identical across them.
+//!
+//! # Async (Phase 2) state lifecycle
+//!
+//! ```text
+//! Boot ──▶ [fault check] ──▶ Training ──▶ AwaitUpdates ──▶ (window close:
+//!            │    │ transient              ▲    │ msg        suspect sweep,
+//!            │    ▼                        │    ▼            aggregate, CCC)
+//!            │  Outage ────────────────────┘  (loop)            │
+//!            │ crash                                   next round│  CCC/CRT/cap
+//!            ▼                                           ◀──────┴──▶ terminate
+//!         Finished ◀───────────── final broadcast + Bye + full eval ──┘
+//! ```
+//!
+//! The end-of-window crash-suspicion sweep ([`PeerTable::mark_missing`])
+//! and the terminating tail (final broadcast, `Bye`, full evaluation) run
+//! synchronously inside `step` — they never wait, so they are phases of a
+//! transition rather than resting states.
+//!
+//! # Window memory at four-digit client counts
+//!
+//! A wait window only ever aggregates the `k_max − 1` lowest-id senders
+//! (the fan-in cap of the aggregation artifact), so the window keeps full
+//! model payloads for exactly that prefix and tracks everyone else in
+//! [`IdSet`] bitsets.  At 10 000 clients this is the difference between
+//! ~64 buffered updates per client and ~10 000 — without changing a single
+//! aggregation result, because an id evicted from the lowest-`k` prefix
+//! can never re-enter it.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use super::async_client::{AsyncClient, ClientData};
+use super::config::ProtocolConfig;
+use super::failure::{IdSet, PeerTable};
+use super::fault::FaultPlan;
+use super::sync::{SyncClient, SYNC_GRACE};
+use super::termination::{ConvergenceMonitor, TerminationCause, TerminationState};
+use crate::metrics::{ClientReport, RoundRecord};
+use crate::model::ParamVector;
+use crate::net::{ClientId, ModelUpdate, Msg, Transport};
+use crate::runtime::{Meta, Trainer};
+use crate::util::time::{Clock, SimTime};
+use crate::util::Rng;
+
+/// What a machine needs from its executor next.
+pub enum Step {
+    /// Charge the clock `d` (training cost, fault downtime), then step
+    /// again with [`Input::SleepElapsed`].
+    Sleep(Duration),
+    /// Wait up to `timeout` for one message, then step again with
+    /// [`Input::Msg`] or [`Input::Timeout`].
+    Recv(Duration),
+    /// The client finished; the machine must not be stepped again.
+    Done(Box<ClientReport>),
+}
+
+/// The executor's answer to the previous [`Step`].
+pub enum Input {
+    /// First step of a fresh machine.
+    Start,
+    /// The requested sleep has elapsed.
+    SleepElapsed,
+    /// A message arrived within the receive window.
+    Msg(Msg),
+    /// The receive window elapsed without a message.
+    Timeout,
+}
+
+/// Internal: either yield a [`Step`] to the executor or fall through to
+/// the next round (kept iterative so ten thousand zero-wait rounds cannot
+/// grow the stack).
+enum Flow {
+    Yield(Step),
+    NextRound,
+}
+
+/// One client as a pollable automaton: Phase 2 (async, Algorithm 2) or
+/// Phase 1 (sync, Algorithm 1).
+pub enum ClientStateMachine<'a> {
+    Async(AsyncMachine<'a>),
+    Sync(SyncMachine<'a>),
+}
+
+impl<'a> ClientStateMachine<'a> {
+    /// Advance until the client next needs to wait (or finishes).  `Err`
+    /// means a local failure (engine error, Phase-1 barrier overrun); the
+    /// machine is then spent.
+    pub fn step(&mut self, input: Input) -> Result<Step> {
+        match self {
+            ClientStateMachine::Async(m) => m.step(input),
+            ClientStateMachine::Sync(m) => m.step(input),
+        }
+    }
+
+    /// The clock this machine's waits are measured on.
+    pub fn clock(&self) -> Clock {
+        match self {
+            ClientStateMachine::Async(m) => m.clock.clone(),
+            ClientStateMachine::Sync(m) => m.clock.clone(),
+        }
+    }
+
+    /// The transport the blocking executor should receive on.
+    pub fn transport(&self) -> &(dyn Transport + 'a) {
+        match self {
+            ClientStateMachine::Async(m) => m.transport.as_ref(),
+            ClientStateMachine::Sync(m) => m.transport.as_ref(),
+        }
+    }
+
+    /// Blocking executor: drive the machine on the current thread, really
+    /// sleeping and receiving.  Exactly the pre-state-machine behaviour of
+    /// `AsyncClient::run` / `SyncClient::run` under both time regimes.
+    pub fn run_blocking(mut self) -> Result<ClientReport> {
+        let clock = self.clock();
+        let mut input = Input::Start;
+        loop {
+            match self.step(input)? {
+                Step::Sleep(d) => {
+                    clock.sleep(d);
+                    input = Input::SleepElapsed;
+                }
+                Step::Recv(timeout) => {
+                    input = match self.transport().recv_timeout(timeout) {
+                        Some(m) => Input::Msg(m),
+                        None => Input::Timeout,
+                    };
+                }
+                Step::Done(report) => return Ok(*report),
+            }
+        }
+    }
+}
+
+// --- Phase 2: the asynchronous, fault-tolerant client ----------------------
+
+/// Resting states of the Phase-2 automaton (yield points only; everything
+/// between two waits is a synchronous transition).
+enum AsyncState {
+    /// Created, not yet stepped.
+    Boot,
+    /// Transient-outage silence: sleeping through the fault downtime.
+    Outage,
+    /// Charging the modeled (or contention-scaled) training cost.
+    Training,
+    /// Inside the bounded wait window, between receives.
+    AwaitUpdates(Window),
+    /// Report emitted; any further step is an executor bug.
+    Finished,
+}
+
+/// Per-window bookkeeping (see module docs on the `k_max` prefix bound).
+struct Window {
+    deadline: SimTime,
+    /// Peers heard this window (Update/Hello; a Bye is a leave, not a
+    /// liveness signal) — the input to the end-of-window suspect sweep.
+    heard: IdSet,
+    /// Peers alive at window start, whose silence holds the window open.
+    awaited: IdSet,
+    /// `awaited` members that no longer hold the window open (heard, or
+    /// departed via Bye).  Invariant: any peer that *becomes* alive
+    /// mid-window did so by sending, so it is heard and never unheard.
+    resolved: IdSet,
+    /// `awaited.len() - resolved.len()`, maintained for the O(1)
+    /// early-exit check.
+    awaiting: usize,
+    /// Latest updates of the `k_max − 1` lowest-id senders — the only
+    /// payloads aggregation can consume.
+    kept: BTreeMap<ClientId, ModelUpdate>,
+}
+
+impl Window {
+    fn open(deadline: SimTime, peer_table: &PeerTable) -> Window {
+        let awaited = peer_table.alive_ids();
+        let awaiting = awaited.len();
+        Window {
+            deadline,
+            heard: IdSet::new(),
+            awaited,
+            resolved: IdSet::new(),
+            awaiting,
+            kept: BTreeMap::new(),
+        }
+    }
+
+    /// `peer` no longer holds the window open.
+    fn resolve(&mut self, peer: ClientId) {
+        if self.awaited.contains(peer) && self.resolved.insert(peer) {
+            self.awaiting -= 1;
+        }
+    }
+
+    /// Remember `u` as `sender`'s latest update, bounded to the `cap`
+    /// lowest-id senders.  Once the prefix is full, only a lower id can
+    /// displace its maximum, and a displaced id can never re-enter (the
+    /// lowest-`cap` set of a growing id set only ever moves down) — so the
+    /// surviving values are exactly what the unbounded map's
+    /// `values().take(cap)` would have produced.
+    fn stash(&mut self, sender: ClientId, u: ModelUpdate, cap: usize) {
+        if cap == 0 {
+            return;
+        }
+        if let Some(slot) = self.kept.get_mut(&sender) {
+            *slot = u; // latest update per sender wins
+            return;
+        }
+        if self.kept.len() < cap {
+            self.kept.insert(sender, u);
+            return;
+        }
+        let evict = self.kept.keys().next_back().copied();
+        if let Some(max_id) = evict {
+            if sender < max_id {
+                self.kept.remove(&max_id);
+                self.kept.insert(sender, u);
+            }
+        }
+    }
+}
+
+/// Phase 2 (Algorithm 2) as a state machine.  Per round: local training →
+/// (CRT check) → broadcast → bounded wait window → timeout crash detection
+/// → aggregate whatever arrived → evaluate → CCC check → next round.  No
+/// barriers: a slow peer delays nobody beyond the window, a late message
+/// revives a "crashed" peer, and the terminate flag floods via
+/// piggybacking (CRT).
+pub struct AsyncMachine<'a> {
+    id: ClientId,
+    trainer: &'a dyn Trainer,
+    transport: Box<dyn Transport + 'a>,
+    cfg: ProtocolConfig,
+    data: ClientData,
+    fault: FaultPlan,
+    rng: Rng,
+    slowdown: f32,
+    train_cost: Option<Duration>,
+    clock: Clock,
+    meta: Meta,
+    my_weight: f32,
+    state: AsyncState,
+    started: SimTime,
+    params: Vec<f32>,
+    peer_table: PeerTable,
+    term: TerminationState,
+    monitor: ConvergenceMonitor,
+    history: Vec<RoundRecord>,
+    last_train_loss: f32,
+    round: u32,
+    cause: TerminationCause,
+    outage_done: bool,
+}
+
+impl<'a> AsyncMachine<'a> {
+    pub(super) fn new(c: AsyncClient<'a>) -> AsyncMachine<'a> {
+        let clock = c.transport.clock();
+        let meta = c.trainer.meta().clone();
+        let my_weight =
+            if c.cfg.weight_by_samples { c.data.indices.len() as f32 } else { 1.0 };
+        let peer_table = PeerTable::new(&c.transport.peers());
+        let monitor = ConvergenceMonitor::new(c.cfg.count_threshold, c.cfg.conv_threshold_rel);
+        AsyncMachine {
+            id: c.id,
+            trainer: c.trainer,
+            transport: c.transport,
+            cfg: c.cfg,
+            data: c.data,
+            fault: c.fault,
+            rng: c.rng,
+            slowdown: c.slowdown,
+            train_cost: c.train_cost,
+            clock,
+            meta,
+            my_weight,
+            state: AsyncState::Boot,
+            started: SimTime::ZERO,
+            params: Vec::new(),
+            peer_table,
+            term: TerminationState::new(),
+            monitor,
+            history: Vec::new(),
+            last_train_loss: 0.0,
+            round: 0,
+            cause: TerminationCause::MaxRounds,
+            outage_done: false,
+        }
+    }
+
+    fn step(&mut self, input: Input) -> Result<Step> {
+        let state = std::mem::replace(&mut self.state, AsyncState::Finished);
+        let mut flow = match (state, input) {
+            (AsyncState::Boot, Input::Start) => {
+                self.started = self.clock.now();
+                self.params = self.trainer.init(self.cfg.model_seed)?;
+                self.round_start()?
+            }
+            (AsyncState::Outage, Input::SleepElapsed) => {
+                // Transient failure (§3.1): traffic sent to us during the
+                // outage is lost; peers revive us on our next broadcast
+                // (PeerTable late-message rule).
+                while self.transport.try_recv().is_some() {}
+                self.outage_done = true;
+                self.train()?
+            }
+            (AsyncState::Training, Input::SleepElapsed) => self.after_train()?,
+            (AsyncState::AwaitUpdates(mut w), Input::Msg(msg)) => {
+                self.on_window_msg(&mut w, msg);
+                self.window_poll(w)?
+            }
+            (AsyncState::AwaitUpdates(w), Input::Timeout) => self.window_poll(w)?,
+            (AsyncState::Finished, _) => {
+                bail!("client {}: stepped after completion", self.id)
+            }
+            _ => bail!("client {}: executor sent an input the state cannot take", self.id),
+        };
+        loop {
+            match flow {
+                Flow::Yield(step) => return Ok(step),
+                Flow::NextRound => flow = self.round_start()?,
+            }
+        }
+    }
+
+    /// Top of the round loop: round cap, then fault injection, then train.
+    fn round_start(&mut self) -> Result<Flow> {
+        if self.round >= self.cfg.max_rounds {
+            return self.finalize();
+        }
+        // Fault injection: benign crash = immediate silence.
+        if !self.outage_done
+            && self
+                .fault
+                .should_crash(self.round, self.clock.now().saturating_sub(self.started))
+        {
+            match self.fault.rejoin_after {
+                None => {
+                    self.cause = TerminationCause::Crashed;
+                    return self.finalize();
+                }
+                Some(downtime) => {
+                    // Full silence for the outage; the downtime charges the
+                    // clock, so a 10 s outage under virtual time costs no
+                    // real waiting.
+                    self.state = AsyncState::Outage;
+                    return Ok(Flow::Yield(Step::Sleep(downtime)));
+                }
+            }
+        }
+        self.train()
+    }
+
+    /// Local training (EPOCHS_PER_ROUND is baked into the train_epoch
+    /// artifact's nb_train scan), then the modeled / contention time
+    /// charge.
+    fn train(&mut self) -> Result<Flow> {
+        let t_train = self.clock.now();
+        let (xs, ys) = self.data.train.gather_round(
+            &self.data.indices,
+            self.meta.nb_train * self.meta.batch,
+            &mut self.rng,
+        );
+        let (new_params, train_loss) =
+            self.trainer.train_round(&self.params, &xs, &ys, self.cfg.lr)?;
+        self.params = new_params;
+        self.last_train_loss = train_loss;
+        // `Some(cost)` (virtual time) charges a deterministic modeled cost;
+        // `None` (wall clock) measures real training time and sleeps
+        // `slowdown × elapsed` — measured compute time would leak OS
+        // nondeterminism into a simulated schedule.
+        let charge = match self.train_cost {
+            Some(cost) => Some(cost.mul_f32(1.0 + self.slowdown.max(0.0))),
+            None if self.slowdown > 0.0 => {
+                Some(self.clock.now().saturating_sub(t_train).mul_f32(self.slowdown))
+            }
+            None => None,
+        };
+        match charge {
+            Some(d) => {
+                self.state = AsyncState::Training;
+                Ok(Flow::Yield(Step::Sleep(d)))
+            }
+            None => self.after_train(),
+        }
+    }
+
+    /// Post-training: CRT fast path, broadcast, open the wait window.
+    fn after_train(&mut self) -> Result<Flow> {
+        // CRT fast path: flag already known -> final broadcast.
+        if self.term.is_set() {
+            self.broadcast_model(true);
+            self.cause = TerminationCause::Signaled;
+            return self.finalize();
+        }
+        self.broadcast_model(false);
+        // Degenerate single-client deployment: nothing to wait for.
+        if self.transport.peers().is_empty() {
+            let w = Window::open(self.clock.now(), &self.peer_table);
+            return self.close_window(w);
+        }
+        let deadline = self.clock.now() + self.cfg.timeout;
+        let w = Window::open(deadline, &self.peer_table);
+        self.window_poll(w)
+    }
+
+    /// One turn of the wait-window loop: close on deadline or early exit,
+    /// otherwise ask for the next message.
+    fn window_poll(&mut self, w: Window) -> Result<Flow> {
+        let now = self.clock.now();
+        if now >= w.deadline {
+            return self.close_window(w);
+        }
+        // Every currently-alive peer reported (or none are left at all):
+        // nothing further can arrive this window but latecomers.
+        if self.cfg.early_window_exit && w.awaiting == 0 && !w.heard.is_empty() {
+            return self.close_window(w);
+        }
+        let remaining = w.deadline - now;
+        self.state = AsyncState::AwaitUpdates(w);
+        Ok(Flow::Yield(Step::Recv(remaining)))
+    }
+
+    /// Process one in-window message: CRT flags and liveness as they
+    /// arrive.
+    fn on_window_msg(&mut self, w: &mut Window, msg: Msg) {
+        let sender = msg.sender();
+        match msg {
+            Msg::Update(u) => {
+                self.peer_table.record_message(sender, self.round, u.terminate);
+                if u.terminate && self.cfg.crt_enabled {
+                    self.term.signal_from(sender, self.round);
+                }
+                w.heard.insert(sender);
+                w.resolve(sender);
+                w.stash(sender, u, self.meta.k_max.saturating_sub(1));
+            }
+            Msg::Hello { .. } => {
+                self.peer_table.record_message(sender, self.round, false);
+                w.heard.insert(sender);
+                w.resolve(sender);
+            }
+            Msg::Bye { .. } => {
+                self.peer_table.record_message(sender, self.round, true);
+                // Now Terminated, no longer alive: its silence must not
+                // hold the window open.
+                w.resolve(sender);
+            }
+        }
+    }
+
+    /// End of window: suspect sweep, aggregate, evaluate, CCC — the
+    /// synchronous tail of Algorithm 2's round.
+    fn close_window(&mut self, w: Window) -> Result<Flow> {
+        // Crash detection (Alg. 2 lines 14-19).
+        let newly_crashed = self.peer_table.mark_missing(self.round, &w.heard);
+        // Aggregate own + received (Alg. 2 lines 20-21).
+        let (aggregated, new_params) = {
+            let mut rows: Vec<(&[f32], f32)> = vec![(&self.params, self.my_weight)];
+            for u in w.kept.values() {
+                rows.push((u.params.as_slice(), u.weight.max(0.0)));
+            }
+            (rows.len(), self.trainer.aggregate(&rows)?)
+        };
+        self.params = new_params;
+        // Evaluate (Alg. 2 line 22).
+        let (correct, _eval_loss) = self.trainer.eval(
+            &self.params,
+            &self.data.eval.eval_xs,
+            &self.data.eval.eval_ys,
+            false,
+        )?;
+        let probe_acc = correct as f32 / self.data.eval.eval_ys.len() as f32;
+        // CCC check (Alg. 2 lines 23-34).
+        let crash_free = newly_crashed.is_empty();
+        let avg = ParamVector(self.params.clone());
+        let ccc = self.monitor.observe(&avg, crash_free, aggregated);
+        self.history.push(RoundRecord {
+            round: self.round,
+            train_loss: self.last_train_loss,
+            probe_acc,
+            alive_peers: self.peer_table.alive_count(),
+            aggregated,
+            delta_rel: self.monitor.last_delta_rel,
+            conv_counter: self.monitor.counter(),
+            crashes_detected: newly_crashed,
+        });
+        if self.round >= self.cfg.min_rounds && ccc {
+            self.term.self_trigger(self.round);
+            self.broadcast_model(true);
+            self.cause = TerminationCause::Converged;
+            self.round += 1;
+            return self.finalize();
+        }
+        // CRT: a flag that arrived during this window is honored at the
+        // top of the next iteration, after one more local update
+        // (Alg. 2 lines 8-10).
+        self.round += 1;
+        Ok(Flow::NextRound)
+    }
+
+    /// Terminating tail (Alg. 2 lines 39-42): final broadcast on a round
+    /// cap, Bye, full evaluation, report.
+    fn finalize(&mut self) -> Result<Flow> {
+        let (final_accuracy, final_loss, final_params) =
+            if self.cause == TerminationCause::Crashed {
+                (None, None, None)
+            } else {
+                if self.cause == TerminationCause::MaxRounds {
+                    // Max rounds reached: log and broadcast final weights.
+                    self.broadcast_model(true);
+                }
+                let _ = self.transport.broadcast(&Msg::Bye { sender: self.id });
+                let (correct, loss) = self.trainer.eval(
+                    &self.params,
+                    &self.data.eval.full_xs,
+                    &self.data.eval.full_ys,
+                    true,
+                )?;
+                (
+                    Some(correct as f32 / self.data.eval.full_ys.len() as f32),
+                    Some(loss),
+                    Some(std::mem::take(&mut self.params)),
+                )
+            };
+        let report = ClientReport {
+            id: self.id,
+            cause: self.cause,
+            rounds_completed: self.round,
+            final_accuracy,
+            final_loss,
+            wall: self.clock.now().saturating_sub(self.started),
+            history: std::mem::take(&mut self.history),
+            signal_source: self.term.source,
+            final_params,
+        };
+        self.state = AsyncState::Finished;
+        Ok(Flow::Yield(Step::Done(Box::new(report))))
+    }
+
+    fn broadcast_model(&self, terminate: bool) {
+        let msg = Msg::Update(ModelUpdate {
+            sender: self.id,
+            round: self.round,
+            terminate,
+            weight: self.my_weight,
+            params: ParamVector(self.params.clone()),
+        });
+        // Best-effort: unreachable peers are handled by the crash model.
+        let _ = self.transport.broadcast(&msg);
+    }
+}
+
+// --- Phase 1: round-synchronized client ------------------------------------
+
+/// Resting states of the Phase-1 automaton.
+enum SyncState {
+    Boot,
+    /// Charging the modeled / contention training cost.
+    Training,
+    /// Blocked on the round barrier: waiting for every peer's round-tagged
+    /// model.
+    Collect {
+        deadline: SimTime,
+        got: BTreeMap<ClientId, ModelUpdate>,
+        terminate_seen: bool,
+    },
+    Finished,
+}
+
+/// Phase 1 (Algorithm 1) as a state machine.  Each round every client
+/// trains locally, broadcasts ⟨M_i, round⟩, then *waits* until models from
+/// all other clients for the same round have arrived, aggregates the
+/// average, and advances.  No crash tolerance: a peer that never reports
+/// is a deployment error, surfaced after a liberal grace period rather
+/// than masked.  Termination mirrors the paper's "mutual agreement": any
+/// client whose convergence monitor fires broadcasts its round-tagged
+/// model with the terminate flag; every client finishes that same round —
+/// all clients therefore complete an identical number of rounds.
+pub struct SyncMachine<'a> {
+    id: ClientId,
+    trainer: &'a dyn Trainer,
+    transport: Box<dyn Transport + 'a>,
+    cfg: ProtocolConfig,
+    data: ClientData,
+    rng: Rng,
+    slowdown: f32,
+    train_cost: Option<Duration>,
+    clock: Clock,
+    meta: Meta,
+    my_weight: f32,
+    n_peers: usize,
+    state: SyncState,
+    started: SimTime,
+    params: Vec<f32>,
+    monitor: ConvergenceMonitor,
+    history: Vec<RoundRecord>,
+    last_train_loss: f32,
+    /// Early/late updates buffered across rounds — the paper's round tag
+    /// exists precisely to tolerate out-of-order arrival.
+    pending: Vec<ModelUpdate>,
+    round: u32,
+    cause: TerminationCause,
+    want_terminate: bool,
+}
+
+impl<'a> SyncMachine<'a> {
+    pub(super) fn new(c: SyncClient<'a>) -> SyncMachine<'a> {
+        let clock = c.transport.clock();
+        let meta = c.trainer.meta().clone();
+        let my_weight =
+            if c.cfg.weight_by_samples { c.data.indices.len() as f32 } else { 1.0 };
+        let n_peers = c.transport.peers().len();
+        let monitor = ConvergenceMonitor::new(c.cfg.count_threshold, c.cfg.conv_threshold_rel);
+        SyncMachine {
+            id: c.id,
+            trainer: c.trainer,
+            transport: c.transport,
+            cfg: c.cfg,
+            data: c.data,
+            rng: c.rng,
+            slowdown: c.slowdown,
+            train_cost: c.train_cost,
+            clock,
+            meta,
+            my_weight,
+            n_peers,
+            state: SyncState::Boot,
+            started: SimTime::ZERO,
+            params: Vec::new(),
+            monitor,
+            history: Vec::new(),
+            last_train_loss: 0.0,
+            pending: Vec::new(),
+            round: 0,
+            cause: TerminationCause::MaxRounds,
+            want_terminate: false,
+        }
+    }
+
+    fn step(&mut self, input: Input) -> Result<Step> {
+        let state = std::mem::replace(&mut self.state, SyncState::Finished);
+        let mut flow = match (state, input) {
+            (SyncState::Boot, Input::Start) => {
+                self.started = self.clock.now();
+                self.params = self.trainer.init(self.cfg.model_seed)?;
+                self.round_start()?
+            }
+            (SyncState::Training, Input::SleepElapsed) => self.after_train()?,
+            (
+                SyncState::Collect { deadline, mut got, mut terminate_seen },
+                Input::Msg(msg),
+            ) => {
+                if let Msg::Update(u) = msg {
+                    match u.round.cmp(&self.round) {
+                        std::cmp::Ordering::Equal => {
+                            // The terminate flag only counts for the round
+                            // it is tagged with: honoring a *future*
+                            // round's flag here would stop this client one
+                            // round before its peers and deadlock their
+                            // barrier (they wait on us).
+                            if u.terminate {
+                                terminate_seen = true;
+                            }
+                            got.insert(u.sender, u);
+                        }
+                        std::cmp::Ordering::Greater => self.pending.push(u),
+                        std::cmp::Ordering::Less => {} // stale duplicate
+                    }
+                }
+                self.collect_poll(deadline, got, terminate_seen)?
+            }
+            (SyncState::Collect { deadline, got, terminate_seen }, Input::Timeout) => {
+                self.collect_poll(deadline, got, terminate_seen)?
+            }
+            (SyncState::Finished, _) => {
+                bail!("client {}: stepped after completion", self.id)
+            }
+            _ => bail!("client {}: executor sent an input the state cannot take", self.id),
+        };
+        loop {
+            match flow {
+                Flow::Yield(step) => return Ok(step),
+                Flow::NextRound => flow = self.round_start()?,
+            }
+        }
+    }
+
+    fn round_start(&mut self) -> Result<Flow> {
+        if self.round >= self.cfg.max_rounds {
+            return self.finalize();
+        }
+        // Local update.
+        let t_train = self.clock.now();
+        let (xs, ys) = self.data.train.gather_round(
+            &self.data.indices,
+            self.meta.nb_train * self.meta.batch,
+            &mut self.rng,
+        );
+        let (new_params, train_loss) =
+            self.trainer.train_round(&self.params, &xs, &ys, self.cfg.lr)?;
+        self.params = new_params;
+        self.last_train_loss = train_loss;
+        let charge = match self.train_cost {
+            Some(cost) => Some(cost.mul_f32(1.0 + self.slowdown.max(0.0))),
+            None if self.slowdown > 0.0 => {
+                Some(self.clock.now().saturating_sub(t_train).mul_f32(self.slowdown))
+            }
+            None => None,
+        };
+        match charge {
+            Some(d) => {
+                self.state = SyncState::Training;
+                Ok(Flow::Yield(Step::Sleep(d)))
+            }
+            None => self.after_train(),
+        }
+    }
+
+    /// Broadcast ⟨M_i, round⟩ (terminate flag set if our CCC fired last
+    /// round — the "mutual agreement" carrier), then open the barrier.
+    fn after_train(&mut self) -> Result<Flow> {
+        let msg = Msg::Update(ModelUpdate {
+            sender: self.id,
+            round: self.round,
+            terminate: self.want_terminate,
+            weight: self.my_weight,
+            params: ParamVector(self.params.clone()),
+        });
+        let _ = self.transport.broadcast(&msg);
+        let mut terminate_seen = self.want_terminate;
+        let mut got: BTreeMap<ClientId, ModelUpdate> = BTreeMap::new();
+        let round = self.round;
+        // Pull matching updates already buffered.
+        self.pending.retain(|u| {
+            if u.round == round {
+                if u.terminate {
+                    terminate_seen = true;
+                }
+                got.insert(u.sender, u.clone());
+                false
+            } else {
+                u.round > round // drop stale rounds, keep future ones
+            }
+        });
+        let deadline = self.clock.now() + SYNC_GRACE;
+        self.collect_poll(deadline, got, terminate_seen)
+    }
+
+    /// One turn of the barrier: complete, overrun, or wait for the next
+    /// update.
+    fn collect_poll(
+        &mut self,
+        deadline: SimTime,
+        got: BTreeMap<ClientId, ModelUpdate>,
+        terminate_seen: bool,
+    ) -> Result<Flow> {
+        if got.len() >= self.n_peers {
+            return self.close_round(got, terminate_seen);
+        }
+        let now = self.clock.now();
+        if now >= deadline {
+            bail!(
+                "sync client {}: round {} incomplete after {:?} \
+                 ({}/{} peers) — Phase 1 assumes a fault-free system",
+                self.id,
+                self.round,
+                SYNC_GRACE,
+                got.len(),
+                self.n_peers
+            );
+        }
+        let remaining = deadline - now;
+        self.state = SyncState::Collect { deadline, got, terminate_seen };
+        Ok(Flow::Yield(Step::Recv(remaining)))
+    }
+
+    fn close_round(
+        &mut self,
+        got: BTreeMap<ClientId, ModelUpdate>,
+        terminate_seen: bool,
+    ) -> Result<Flow> {
+        // Aggregate own + all peers (Algorithm 1 line 12).
+        let (aggregated, new_params) = {
+            let mut rows: Vec<(&[f32], f32)> = vec![(&self.params, self.my_weight)];
+            for u in got.values().take(self.meta.k_max - 1) {
+                rows.push((u.params.as_slice(), u.weight.max(0.0)));
+            }
+            (rows.len(), self.trainer.aggregate(&rows)?)
+        };
+        self.params = new_params;
+        let (correct, _) = self.trainer.eval(
+            &self.params,
+            &self.data.eval.eval_xs,
+            &self.data.eval.eval_ys,
+            false,
+        )?;
+        let probe_acc = correct as f32 / self.data.eval.eval_ys.len() as f32;
+        let ccc =
+            self.monitor.observe(&ParamVector(self.params.clone()), true, aggregated);
+        self.history.push(RoundRecord {
+            round: self.round,
+            train_loss: self.last_train_loss,
+            probe_acc,
+            alive_peers: self.n_peers,
+            aggregated,
+            delta_rel: self.monitor.last_delta_rel,
+            conv_counter: self.monitor.counter(),
+            crashes_detected: Vec::new(),
+        });
+        self.round += 1;
+        // Mutual-agreement termination: if anyone (us included) carried the
+        // flag this round, every client stops at this same boundary.
+        if terminate_seen {
+            self.cause = if self.want_terminate {
+                TerminationCause::Converged
+            } else {
+                TerminationCause::Signaled
+            };
+            return self.finalize();
+        }
+        if self.round >= self.cfg.min_rounds && ccc {
+            // Fire our flag next round so all peers see the same tag.
+            self.want_terminate = true;
+        }
+        Ok(Flow::NextRound)
+    }
+
+    fn finalize(&mut self) -> Result<Flow> {
+        let (correct, loss) = self.trainer.eval(
+            &self.params,
+            &self.data.eval.full_xs,
+            &self.data.eval.full_ys,
+            true,
+        )?;
+        let report = ClientReport {
+            id: self.id,
+            cause: self.cause,
+            rounds_completed: self.round,
+            final_accuracy: Some(correct as f32 / self.data.eval.full_ys.len() as f32),
+            final_loss: Some(loss),
+            wall: self.clock.now().saturating_sub(self.started),
+            history: std::mem::take(&mut self.history),
+            signal_source: None,
+            final_params: Some(std::mem::take(&mut self.params)),
+        };
+        self.state = SyncState::Finished;
+        Ok(Flow::Yield(Step::Done(Box::new(report))))
+    }
+}

@@ -4,6 +4,10 @@
 //!   network (Algorithm 1).
 //! * [`async_client`] — Phase 2: fully asynchronous client with
 //!   timeout-based crash detection (Algorithm 2).
+//! * [`machine`] — both protocol loops as poll-style state machines
+//!   ([`machine::ClientStateMachine`]): blocking points are yielded to an
+//!   executor, so a client needs a thread only if its executor chooses to
+//!   spend one.
 //! * [`failure`] — peer status table: Alive/Crashed/Terminated with
 //!   late-message revival ("slow ≠ crashed").
 //! * [`termination`] — Client-Confident Convergence (CCC) monitor and the
@@ -17,12 +21,14 @@ pub mod async_client;
 pub mod config;
 pub mod failure;
 pub mod fault;
+pub mod machine;
 pub mod sync;
 pub mod termination;
 
-pub use async_client::{AsyncClient, ClientData};
+pub use async_client::{AsyncClient, ClientData, EvalTensors};
 pub use config::ProtocolConfig;
-pub use failure::{PeerStatus, PeerTable};
+pub use failure::{IdSet, PeerStatus, PeerTable};
 pub use fault::{CrashPoint, FaultPlan};
+pub use machine::{ClientStateMachine, Input, Step};
 pub use sync::SyncClient;
 pub use termination::{ConvergenceMonitor, TerminationCause, TerminationState};

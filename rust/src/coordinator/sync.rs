@@ -12,26 +12,30 @@
 //! convergence monitor fires broadcasts its round-tagged model with the
 //! terminate flag; every client finishes that same round and stops — all
 //! clients therefore complete an identical number of rounds.
+//!
+//! The loop itself lives in [`super::machine::SyncMachine`] as a
+//! poll-style state machine; [`SyncClient`] is the construction surface
+//! plus the blocking driver.
 
-use std::collections::BTreeMap;
 use std::time::Duration;
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use super::async_client::ClientData;
 use super::config::ProtocolConfig;
-use super::termination::{ConvergenceMonitor, TerminationCause};
-use crate::metrics::{ClientReport, RoundRecord};
-use crate::model::ParamVector;
-use crate::net::{ClientId, ModelUpdate, Msg, Transport};
+use super::machine::{ClientStateMachine, SyncMachine};
+use crate::metrics::ClientReport;
+use crate::net::{ClientId, Transport};
 use crate::runtime::Trainer;
-use crate::util::time::Clock;
 use crate::util::Rng;
 
 /// Hard cap on how long a Phase-1 client waits for one round's peers.
-const SYNC_GRACE: Duration = Duration::from_secs(120);
+pub(crate) const SYNC_GRACE: Duration = Duration::from_secs(120);
 
-/// One Phase-1 participant.
+/// One Phase-1 participant.  Fill the fields, then either
+/// [`run`](SyncClient::run) on this thread or
+/// [`into_machine`](SyncClient::into_machine) for an event-driven
+/// executor.
 pub struct SyncClient<'a> {
     pub id: ClientId,
     pub trainer: &'a dyn Trainer,
@@ -46,175 +50,14 @@ pub struct SyncClient<'a> {
 }
 
 impl<'a> SyncClient<'a> {
-    /// Block until an update from every peer tagged with `round` arrived.
-    /// Early/late messages are buffered (`pending`) — the paper's round tag
-    /// exists precisely to tolerate out-of-order arrival.
-    fn collect_round(
-        &self,
-        clock: &Clock,
-        round: u32,
-        pending: &mut Vec<ModelUpdate>,
-        terminate_seen: &mut bool,
-    ) -> Result<BTreeMap<ClientId, ModelUpdate>> {
-        let peers = self.transport.peers();
-        let mut got: BTreeMap<ClientId, ModelUpdate> = BTreeMap::new();
-        // pull matching updates already buffered
-        pending.retain(|u| {
-            if u.round == round {
-                if u.terminate {
-                    *terminate_seen = true;
-                }
-                got.insert(u.sender, u.clone());
-                false
-            } else {
-                u.round > round // drop stale rounds, keep future ones
-            }
-        });
-        let deadline = clock.now() + SYNC_GRACE;
-        while got.len() < peers.len() {
-            let now = clock.now();
-            if now >= deadline {
-                bail!(
-                    "sync client {}: round {round} incomplete after {:?} \
-                     ({}/{} peers) — Phase 1 assumes a fault-free system",
-                    self.id,
-                    SYNC_GRACE,
-                    got.len(),
-                    peers.len()
-                );
-            }
-            let Some(msg) = self.transport.recv_timeout(deadline - now) else {
-                continue;
-            };
-            if let Msg::Update(u) = msg {
-                match u.round.cmp(&round) {
-                    std::cmp::Ordering::Equal => {
-                        // The terminate flag only counts for the round it is
-                        // tagged with: honoring a *future* round's flag here
-                        // would stop this client one round before its peers
-                        // and deadlock their barrier (they wait on us).
-                        if u.terminate {
-                            *terminate_seen = true;
-                        }
-                        got.insert(u.sender, u);
-                    }
-                    std::cmp::Ordering::Greater => pending.push(u),
-                    std::cmp::Ordering::Less => {} // stale duplicate
-                }
-            }
-        }
-        Ok(got)
+    /// Lift this client into its poll-style state machine (no thread
+    /// needed; see [`super::machine`]).
+    pub fn into_machine(self) -> ClientStateMachine<'a> {
+        ClientStateMachine::Sync(SyncMachine::new(self))
     }
 
-    /// Run Algorithm 1 to completion.
-    pub fn run(mut self) -> Result<ClientReport> {
-        let meta = self.trainer.meta().clone();
-        let clock = self.transport.clock();
-        let started = clock.now();
-        let mut params = self.trainer.init(self.cfg.model_seed)?;
-        let mut monitor =
-            ConvergenceMonitor::new(self.cfg.count_threshold, self.cfg.conv_threshold_rel);
-        let mut history = Vec::new();
-        let mut pending: Vec<ModelUpdate> = Vec::new();
-        let n_peers = self.transport.peers().len();
-        let my_weight = if self.cfg.weight_by_samples {
-            self.data.indices.len() as f32
-        } else {
-            1.0
-        };
-
-        let mut cause = TerminationCause::MaxRounds;
-        let mut round: u32 = 0;
-        let mut want_terminate = false; // set when our CCC fires
-        while round < self.cfg.max_rounds {
-            // local update
-            let t_train = clock.now();
-            let (xs, ys) = self.data.train.gather_round(
-                &self.data.indices,
-                meta.nb_train * meta.batch,
-                &mut self.rng,
-            );
-            let (new_params, train_loss) =
-                self.trainer.train_round(&params, &xs, &ys, self.cfg.lr)?;
-            params = new_params;
-            match self.train_cost {
-                Some(cost) => clock.sleep(cost.mul_f32(1.0 + self.slowdown.max(0.0))),
-                None if self.slowdown > 0.0 => {
-                    clock.sleep(clock.now().saturating_sub(t_train).mul_f32(self.slowdown))
-                }
-                None => {}
-            }
-
-            // broadcast ⟨M_i, round⟩ (terminate flag set if our CCC fired
-            // last round — the "mutual agreement" carrier)
-            let msg = Msg::Update(ModelUpdate {
-                sender: self.id,
-                round,
-                terminate: want_terminate,
-                weight: my_weight,
-                params: ParamVector(params.clone()),
-            });
-            let _ = self.transport.broadcast(&msg);
-
-            // barrier: wait for all peers' round-tagged models
-            let mut terminate_seen = want_terminate;
-            let got = self.collect_round(&clock, round, &mut pending, &mut terminate_seen)?;
-
-            // aggregate own + all peers (Algorithm 1 line 12)
-            let mut rows: Vec<(&[f32], f32)> = vec![(&params, my_weight)];
-            for u in got.values().take(meta.k_max - 1) {
-                rows.push((u.params.as_slice(), u.weight.max(0.0)));
-            }
-            let aggregated = rows.len();
-            params = self.trainer.aggregate(&rows)?;
-
-            let (correct, _) =
-                self.trainer
-                    .eval(&params, &self.data.eval_xs, &self.data.eval_ys, false)?;
-            let probe_acc = correct as f32 / self.data.eval_ys.len() as f32;
-
-            let ccc = monitor.observe(&ParamVector(params.clone()), true, aggregated);
-            history.push(RoundRecord {
-                round,
-                train_loss,
-                probe_acc,
-                alive_peers: n_peers,
-                aggregated,
-                delta_rel: monitor.last_delta_rel,
-                conv_counter: monitor.counter(),
-                crashes_detected: Vec::new(),
-            });
-            round += 1;
-
-            // mutual-agreement termination: if anyone (us included) carried
-            // the flag this round, every client stops at this same boundary.
-            if terminate_seen {
-                cause = if want_terminate {
-                    TerminationCause::Converged
-                } else {
-                    TerminationCause::Signaled
-                };
-                break;
-            }
-            if round >= self.cfg.min_rounds && ccc {
-                // fire our flag next round so all peers see the same tag
-                want_terminate = true;
-            }
-        }
-
-        let (correct, loss) =
-            self.trainer
-                .eval(&params, &self.data.full_xs, &self.data.full_ys, true)?;
-        Ok(ClientReport {
-            id: self.id,
-            cause,
-            rounds_completed: round,
-            final_accuracy: Some(correct as f32 / self.data.full_ys.len() as f32),
-            final_loss: Some(loss),
-            wall: clock.now().saturating_sub(started),
-            history,
-            signal_source: None,
-            final_params: Some(params),
-        })
+    /// Run Algorithm 1 to completion on the current thread.
+    pub fn run(self) -> Result<ClientReport> {
+        self.into_machine().run_blocking()
     }
 }

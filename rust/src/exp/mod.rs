@@ -36,7 +36,7 @@ use std::time::Duration;
 use crate::coordinator::ProtocolConfig;
 use crate::net::NetPreset;
 use crate::runtime::{Meta, Trainer};
-use crate::sim::SimConfig;
+use crate::sim::{ExecMode, SimConfig};
 use crate::util::benchkit::Table;
 
 /// Scaling knobs shared by all drivers.
@@ -59,6 +59,12 @@ pub struct ExpScale {
     /// seconds, and a fixed seed reproduces them byte-for-byte.  `false`
     /// restores the seed's wall-clock behaviour.
     pub virtual_time: bool,
+    /// Which executor drives virtual-time deployments (CLI: `--exec`).
+    /// [`ExecMode::Events`] (default) runs every client as a state machine
+    /// on one thread; [`ExecMode::Threads`] is the thread-backed
+    /// compatibility mode — both produce byte-identical tables for the
+    /// same seed.
+    pub exec: ExecMode,
     /// Modeled per-round training cost (ms) under virtual time, scaled by
     /// each client's machine slowdown; ignored on the wall clock, where
     /// real compute time is measured instead.
@@ -78,6 +84,7 @@ impl Default for ExpScale {
             min_rounds: None,
             timeout_ms: None,
             virtual_time: true,
+            exec: ExecMode::Events,
             train_cost_ms: 20,
             net: None,
         }
@@ -141,6 +148,7 @@ impl ExpScale {
         cfg.protocol = self.protocol(cfg.n_clients);
         cfg.train_n = self.train_n(cfg.n_clients);
         cfg.virtual_time = self.virtual_time;
+        cfg.exec = self.exec;
         cfg.train_cost = Duration::from_millis(self.train_cost_ms);
         if let Some(preset) = self.net {
             cfg.net = preset.model(self.seed);

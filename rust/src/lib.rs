@@ -19,8 +19,10 @@
 //!
 //! Entry points: [`sim::run`] (in-process N-client deployments used by the
 //! experiment harness — wall-clock, or the deterministic virtual-time mode
-//! built on [`util::time`]), the `dfl` binary (CLI + real TCP clients), and
-//! the `examples/` directory.  The testbed model (virtual machines,
+//! built on [`util::time`], driven either by one thread per client or by
+//! the zero-thread event executor over [`coordinator::machine`] state
+//! machines, [`sim::ExecMode`]), the `dfl` binary (CLI + real TCP
+//! clients), and the `examples/` directory.  The testbed model (virtual machines,
 //! synthetic data, time regimes, network-scenario matrix) is specified in
 //! the repo-root `DESIGN.md`.
 

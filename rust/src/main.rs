@@ -73,6 +73,7 @@ fn cmd_sim(args: Vec<String>) -> Result<()> {
         .opt("train-n", Some("0"), "global train set size (0 = auto)")
         .opt("net", Some("lan"), "network preset (ideal|lan|wan|asym|lossy-burst)")
         .opt("train-cost-ms", Some("20"), "modeled per-round train cost under --virtual")
+        .opt("exec", Some("events"), "--virtual executor: events (state machines, zero per-client threads) or threads")
         .switch("virtual", "deterministic virtual clock instead of wall time")
         .switch("iid", "IID split instead of Dirichlet")
         .switch("verbose", "print per-round mean loss/accuracy")
@@ -96,6 +97,7 @@ fn cmd_sim(args: Vec<String>) -> Result<()> {
     cfg.seed = a.u64("seed")?;
     cfg.net = dfl::net::NetworkModel::preset(a.str("net"), cfg.seed)?;
     cfg.virtual_time = a.bool("virtual");
+    cfg.exec = dfl::sim::ExecMode::parse(a.str("exec"))?;
     cfg.train_cost = std::time::Duration::from_millis(a.u64("train-cost-ms")?);
     let window_before = cfg.protocol.timeout;
     exp::clear_latency_ceiling(&mut cfg, engine.meta());
@@ -122,13 +124,18 @@ fn cmd_sim(args: Vec<String>) -> Result<()> {
         );
     }
     println!(
-        "running {} clients ({}), {} machines, {} crashes, net {}, {} clock, seed {}",
+        "running {} clients ({}), {} machines, {} crashes, net {}, {} clock{}, seed {}",
         n,
         if cfg.sync { "phase 1 sync" } else { "phase 2 async" },
         cfg.machines,
         crashes,
         a.str("net"),
         if cfg.virtual_time { "virtual" } else { "wall" },
+        if cfg.virtual_time {
+            format!(" ({} executor)", cfg.exec.name())
+        } else {
+            String::new()
+        },
         cfg.seed
     );
     let res = sim::run(&engine, &cfg)?;
@@ -260,6 +267,7 @@ fn cmd_reproduce(args: Vec<String>) -> Result<()> {
         .opt("seed", Some("2025"), "experiment seed (same seed ⇒ identical tables)")
         .opt("net", Some(""), "override every driver's network with a preset (ideal|lan|wan|asym|lossy-burst)")
         .opt("train-cost-ms", Some("20"), "modeled per-round train cost under virtual time")
+        .opt("exec", Some("events"), "virtual-time executor: events or threads")
         .switch("full", "full grids (slower) instead of quick mode")
         .switch("real-time", "wall-clock deployments (the paper's regime; minutes instead of seconds)");
     let a = flags.parse(args)?;
@@ -268,6 +276,7 @@ fn cmd_reproduce(args: Vec<String>) -> Result<()> {
     let mut scale = if a.bool("full") { ExpScale::full() } else { ExpScale::default() };
     scale.seed = a.u64("seed")?;
     scale.virtual_time = !a.bool("real-time");
+    scale.exec = dfl::sim::ExecMode::parse(a.str("exec"))?;
     scale.train_cost_ms = a.u64("train-cost-ms")?;
     if !a.str("net").is_empty() {
         scale.net = Some(dfl::net::NetPreset::parse(a.str("net"))?);

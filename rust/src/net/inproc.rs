@@ -685,6 +685,39 @@ pub struct VirtualEndpoint {
     shared: Arc<VirtualHubShared>,
 }
 
+/// Decode bytes the virtual hub delivered (used by both the blocking
+/// receive path below and the event executor, which pops the same
+/// mailboxes through the clock's driver API — one decode contract for
+/// both executors).  The hub encoded these bytes itself; failure here is
+/// a codec bug and must be loud, not a fake window timeout.
+pub fn decode_delivery(bytes: &[u8]) -> Msg {
+    Msg::decode(bytes).expect("virtual hub delivered an undecodable message")
+}
+
+impl VirtualEndpoint {
+    /// Route one already-encoded message: link block / partition / drop
+    /// sampling, then an event post on the shared clock.  Sharing the
+    /// encoded bytes is what keeps a broadcast to 10 000 peers at one
+    /// encode + n refcounts instead of n copies of the model.
+    fn send_encoded(&self, to: ClientId, wire: &Arc<[u8]>) {
+        let sh = &self.shared;
+        if sh.blocked.lock().unwrap().contains(&(self.id, to)) {
+            return; // injected link failure: message lost
+        }
+        let at = sh.clock.now();
+        if sh.model.splits.iter().any(|sp| sp.severs(at, self.id, to)) {
+            return; // partitioned: message lost
+        }
+        let Some((delay, seq)) = sample_link(&sh.links, &sh.model, self.id, to, wire.len())
+        else {
+            return; // dropped (independent or burst loss)
+        };
+        // The codec round-trip happens decode-side (recv_timeout), keeping
+        // parity with the wall-clock hub's coverage of the wire format.
+        sh.clock.post(to as usize, delay, (self.id, to, seq), Arc::clone(wire));
+    }
+}
+
 impl Transport for VirtualEndpoint {
     fn id(&self) -> ClientId {
         self.id
@@ -699,35 +732,30 @@ impl Transport for VirtualEndpoint {
     }
 
     fn send(&self, to: ClientId, msg: &Msg) -> Result<()> {
-        let sh = &self.shared;
-        if sh.blocked.lock().unwrap().contains(&(self.id, to)) {
-            return Ok(()); // injected link failure: message lost
+        let wire: Arc<[u8]> = msg.encode().into();
+        self.send_encoded(to, &wire);
+        Ok(())
+    }
+
+    /// Encode once, post per peer (same per-link sampling and ascending
+    /// peer order as the default per-peer `send` loop, so the network
+    /// schedule is unchanged — only the allocations are).
+    fn broadcast(&self, msg: &Msg) -> Result<()> {
+        let wire: Arc<[u8]> = msg.encode().into();
+        for p in self.peers() {
+            self.send_encoded(p, &wire);
         }
-        let at = sh.clock.now();
-        if sh.model.splits.iter().any(|sp| sp.severs(at, self.id, to)) {
-            return Ok(()); // partitioned: message lost
-        }
-        let wire = msg.encode();
-        let Some((delay, seq)) = sample_link(&sh.links, &sh.model, self.id, to, wire.len())
-        else {
-            return Ok(()); // dropped (independent or burst loss)
-        };
-        // The codec round-trip happens decode-side (recv_timeout), keeping
-        // parity with the wall-clock hub's coverage of the wire format.
-        sh.clock.post(to as usize, delay, (self.id, to, seq), wire);
         Ok(())
     }
 
     fn recv_timeout(&self, timeout: Duration) -> Option<Msg> {
         let bytes = self.shared.clock.recv_deadline(self.id as usize, timeout)?;
-        // The hub encoded these bytes itself; failure here is a codec bug
-        // and must be loud, not a fake window timeout.
-        Some(Msg::decode(&bytes).expect("virtual hub delivered an undecodable message"))
+        Some(decode_delivery(&bytes))
     }
 
     fn try_recv(&self) -> Option<Msg> {
         let bytes = self.shared.clock.try_recv(self.id as usize)?;
-        Some(Msg::decode(&bytes).expect("virtual hub delivered an undecodable message"))
+        Some(decode_delivery(&bytes))
     }
 }
 

@@ -1,0 +1,164 @@
+//! Event-driven deployment executor: every client is a poll-style state
+//! machine ([`ClientStateMachine`]) and one thread pumps all of them
+//! through the virtual clock's driver API — zero per-client OS threads.
+//!
+//! This is [`SimConfig::exec`](super::SimConfig) = [`ExecMode::Events`]
+//! (virtual time only; wall-clock deployments need real threads to really
+//! block).  The executor makes exactly the scheduler transitions the
+//! thread-backed path makes — [`Step::Sleep`] ⇒
+//! [`VirtualClock::driver_sleep`], [`Step::Recv`] ⇒
+//! [`VirtualClock::driver_recv`] / resume — so a same-seed run is
+//! byte-identical across the two modes (asserted in `tests/virtual_time.rs`
+//! and at 200 clients in `tests/scale.rs`).  What changes is the resource
+//! envelope: a 10 000-client deployment is one thread, one clock, and ten
+//! thousand small state structs.
+//!
+//! [`ExecMode::Events`]: super::ExecMode
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::async_client::{AsyncClient, ClientData, EvalTensors};
+use crate::coordinator::machine::{ClientStateMachine, Input, Step};
+use crate::coordinator::sync::SyncClient;
+use crate::data::Dataset;
+use crate::metrics::ClientReport;
+use crate::net::inproc::decode_delivery;
+use crate::net::VirtualHub;
+use crate::runtime::Trainer;
+use crate::util::time::{DriverRecv, SimTime, VirtualClock};
+use crate::util::Rng;
+
+use super::SimConfig;
+
+/// What each parked machine is waiting for (the executor-side mirror of
+/// the clock's blocked state).
+#[derive(Clone, Copy)]
+enum Pending {
+    /// Never stepped: owes an [`Input::Start`].
+    Fresh,
+    /// Parked in [`Step::Sleep`]: owes an [`Input::SleepElapsed`].
+    Sleeping,
+    /// Parked in [`Step::Recv`] until `deadline`: owes a message or an
+    /// [`Input::Timeout`].
+    Receiving { deadline: SimTime },
+}
+
+/// Run one virtual-time deployment on the event executor.  Mirrors the
+/// thread-backed path's client construction exactly (same per-client RNG
+/// streams, same endpoint claim order) so the two executors diverge in
+/// nothing but how turns are granted.
+pub(super) fn run_events(
+    trainer: &(dyn Trainer + Sync),
+    cfg: &SimConfig,
+    parts: Vec<Vec<usize>>,
+    train: &Arc<Dataset>,
+    eval: &EvalTensors,
+) -> Result<Vec<ClientReport>> {
+    let n = cfg.n_clients;
+    let clock = VirtualClock::new(n);
+    let hub = VirtualHub::new(n, cfg.net.clone(), Arc::clone(&clock));
+
+    let mut machines: Vec<ClientStateMachine> = Vec::with_capacity(n);
+    for (i, indices) in parts.into_iter().enumerate() {
+        let data = ClientData::with_eval(Arc::clone(train), indices, eval.clone());
+        let fault = cfg.faults.get(i).copied().unwrap_or_default();
+        let rng = Rng::new(cfg.seed ^ (0xC11E << 8) ^ i as u64);
+        let slowdown = cfg.slowdown_of(i);
+        let transport = Box::new(hub.endpoint(i as u32));
+        let train_cost = Some(cfg.train_cost);
+        machines.push(if cfg.sync {
+            SyncClient {
+                id: i as u32,
+                trainer,
+                transport,
+                cfg: cfg.protocol.clone(),
+                data,
+                rng,
+                slowdown,
+                train_cost,
+            }
+            .into_machine()
+        } else {
+            AsyncClient {
+                id: i as u32,
+                trainer,
+                transport,
+                cfg: cfg.protocol.clone(),
+                data,
+                fault,
+                rng,
+                slowdown,
+                train_cost,
+            }
+            .into_machine()
+        });
+    }
+
+    let mut pending: Vec<Pending> = vec![Pending::Fresh; n];
+    let mut reports: Vec<Option<ClientReport>> = (0..n).map(|_| None).collect();
+    let mut failures: Vec<Option<anyhow::Error>> = (0..n).map(|_| None).collect();
+
+    // The pump: take the next turn, translate the wakeup into the machine's
+    // input, then step the machine until it parks again.
+    while let Some(token) = clock.driver_next() {
+        let mut input = match pending[token] {
+            Pending::Fresh => Input::Start,
+            Pending::Sleeping => Input::SleepElapsed,
+            Pending::Receiving { deadline } => {
+                match clock.driver_recv_resume(token, deadline) {
+                    DriverRecv::Delivered(bytes) => Input::Msg(decode_delivery(&bytes)),
+                    DriverRecv::TimedOut => Input::Timeout,
+                    // Re-parked (defensive; a wakeup always carries mail or
+                    // the deadline).
+                    DriverRecv::Parked { deadline } => {
+                        pending[token] = Pending::Receiving { deadline };
+                        continue;
+                    }
+                }
+            }
+        };
+        loop {
+            match machines[token].step(input) {
+                Ok(Step::Sleep(d)) => {
+                    clock.driver_sleep(token, d);
+                    pending[token] = Pending::Sleeping;
+                    break;
+                }
+                Ok(Step::Recv(timeout)) => match clock.driver_recv(token, timeout) {
+                    DriverRecv::Delivered(bytes) => input = Input::Msg(decode_delivery(&bytes)),
+                    DriverRecv::TimedOut => input = Input::Timeout,
+                    DriverRecv::Parked { deadline } => {
+                        pending[token] = Pending::Receiving { deadline };
+                        break;
+                    }
+                },
+                Ok(Step::Done(report)) => {
+                    reports[token] = Some(*report);
+                    clock.detach(token);
+                    break;
+                }
+                // A failed client leaves the deployment exactly as a dead
+                // thread would: detached, its error surfaced after the
+                // survivors finish.
+                Err(e) => {
+                    failures[token] = Some(e);
+                    clock.detach(token);
+                    break;
+                }
+            }
+        }
+    }
+
+    for (i, failure) in failures.iter_mut().enumerate() {
+        if let Some(e) = failure.take() {
+            return Err(e).with_context(|| format!("client {i} failed"));
+        }
+    }
+    reports
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| r.with_context(|| format!("client {i} never completed (scheduler stall)")))
+        .collect()
+}

@@ -1,30 +1,42 @@
 //! Deterministic in-process N-client deployments.
 //!
-//! Spawns one OS thread per client with a machine-contention model standing
-//! in for the paper's 1/2/3-machine LAN testbed (DESIGN.md §3.1): clients are
-//! round-robined onto `machines` virtual hosts whose relative clock speeds
-//! follow Table 1 (4.0 / 2.0 / 3.5 GHz) and whose per-host contention grows
-//! with co-located client count — exactly the effect the paper observes
-//! when all 12 clients share one box.
+//! Clients run with a machine-contention model standing in for the paper's
+//! 1/2/3-machine LAN testbed (DESIGN.md §3.1): clients are round-robined
+//! onto `machines` virtual hosts whose relative clock speeds follow
+//! Table 1 (4.0 / 2.0 / 3.5 GHz) and whose per-host contention grows with
+//! co-located client count — exactly the effect the paper observes when
+//! all 12 clients share one box.
 //!
 //! Two time regimes ([`SimConfig::virtual_time`], DESIGN.md §3.3):
 //!
 //! * **Wall clock** (default) over an [`InProcHub`]: timeouts and fault
-//!   downtime really elapse, exactly as the seed behaved.
+//!   downtime really elapse, exactly as the seed behaved.  One OS thread
+//!   per client, because blocking is real.
 //! * **Virtual clock** over a [`VirtualHub`]: the deployment runs as a
-//!   cooperative discrete-event simulation (`util::time` DESIGN note).
-//!   Wait windows, WAN latencies, and multi-second outages cost no wall
-//!   time, runs are byte-identical under a fixed seed, and client counts
-//!   in the hundreds-to-thousands become practical.  `SimResult::wall`
-//!   and per-report `wall` then report *virtual* durations, keeping
-//!   Table-1-style machine-time comparisons meaningful.
+//!   discrete-event simulation (`util::time` DESIGN note).  Wait windows,
+//!   WAN latencies, and multi-second outages cost no wall time, runs are
+//!   byte-identical under a fixed seed, and `SimResult::wall` reports
+//!   *virtual* durations, keeping Table-1-style machine-time comparisons
+//!   meaningful.
+//!
+//! Virtual-time deployments additionally pick an executor
+//! ([`SimConfig::exec`], DESIGN.md §8):
+//!
+//! * [`ExecMode::Events`] (default) — every client is a poll-style state
+//!   machine driven by the single-threaded [`exec`] executor: zero
+//!   per-client OS threads, which is what makes 10 000-client deployments
+//!   practical.
+//! * [`ExecMode::Threads`] — the original thread-backed compatibility
+//!   mode: one small-stack, cooperatively-scheduled OS thread per client.
+//!   Same seed ⇒ byte-identical [`SimResult`] across both executors
+//!   (asserted in `tests/virtual_time.rs` and `tests/scale.rs`).
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::async_client::{AsyncClient, ClientData};
+use crate::coordinator::async_client::{AsyncClient, ClientData, EvalTensors};
 use crate::coordinator::config::ProtocolConfig;
 use crate::coordinator::fault::FaultPlan;
 use crate::coordinator::sync::SyncClient;
@@ -35,6 +47,8 @@ use crate::net::{InProcHub, NetworkModel, Transport, VirtualHub};
 use crate::runtime::Trainer;
 use crate::util::time::VirtualClock;
 use crate::util::Rng;
+
+pub mod exec;
 
 /// How client data is split (paper settings).
 #[derive(Clone, Copy, Debug)]
@@ -49,6 +63,37 @@ pub enum Partition {
     SkewedChunk { size: usize, alpha: f64 },
     /// Everyone trains on the whole dataset (Table 2 "full" baseline).
     Full,
+}
+
+/// How a virtual-time deployment executes its clients (ignored on the
+/// wall clock, where blocking is real and therefore needs threads).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// One cooperatively-scheduled OS thread per client (compatibility
+    /// mode; the only option before the event executor existed).
+    Threads,
+    /// Single-threaded event executor over client state machines
+    /// ([`exec`]): no per-client OS threads at all.
+    Events,
+}
+
+impl ExecMode {
+    /// The CLI spelling (`dfl sim --exec`).
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecMode::Threads => "threads",
+            ExecMode::Events => "events",
+        }
+    }
+
+    /// Parse a CLI spelling.
+    pub fn parse(name: &str) -> Result<ExecMode> {
+        match name {
+            "threads" => Ok(ExecMode::Threads),
+            "events" => Ok(ExecMode::Events),
+            other => anyhow::bail!("unknown executor {other:?} (want threads|events)"),
+        }
+    }
 }
 
 /// Relative clock-speed factors of the paper's machines (Table 1):
@@ -75,6 +120,9 @@ pub struct SimConfig {
     pub seed: u64,
     /// Run on a deterministic [`VirtualClock`] instead of wall time.
     pub virtual_time: bool,
+    /// Which executor drives the clients under virtual time (the wall
+    /// clock always uses threads).
+    pub exec: ExecMode,
     /// Modeled per-round training cost under virtual time (scaled by each
     /// client's machine slowdown); ignored in wall-clock mode, where real
     /// compute time is measured instead.
@@ -96,6 +144,7 @@ impl SimConfig {
             faults: Vec::new(),
             seed: 7,
             virtual_time: false,
+            exec: ExecMode::Events,
             train_cost: Duration::from_millis(20),
         }
     }
@@ -175,12 +224,10 @@ impl SimResult {
 pub fn run(trainer: &(dyn Trainer + Sync), cfg: &SimConfig) -> Result<SimResult> {
     let meta = trainer.meta().clone();
     anyhow::ensure!(cfg.n_clients >= 1, "need at least one client");
-    anyhow::ensure!(
-        cfg.n_clients <= meta.k_max,
-        "n_clients {} exceeds aggregate k_max {}",
-        cfg.n_clients,
-        meta.k_max
-    );
+    // n_clients may exceed meta.k_max: each round then aggregates only the
+    // k_max − 1 lowest-id reporters plus the local model (the artifact's
+    // static fan-in cap), which is how four-digit deployments stay within
+    // the aggregation shapes.
     anyhow::ensure!(
         cfg.faults.is_empty() || cfg.faults.len() == cfg.n_clients,
         "faults must be empty or one per client"
@@ -202,8 +249,40 @@ pub fn run(trainer: &(dyn Trainer + Sync), cfg: &SimConfig) -> Result<SimResult>
             .collect(),
         Partition::Full => (0..cfg.n_clients).map(|_| (0..train.len()).collect()).collect(),
     };
+    // One shared copy of the eval tensors for the whole deployment.
+    let eval = EvalTensors::new(&test, &meta);
 
-    // --- network + clients ---------------------------------------------------
+    // --- executors ----------------------------------------------------------
+    let t0 = Instant::now();
+    let reports = if cfg.virtual_time && cfg.exec == ExecMode::Events {
+        exec::run_events(trainer, cfg, parts, &train, &eval)?
+    } else {
+        run_threads(trainer, cfg, parts, &train, &eval)?
+    };
+    // Virtual runs report logical time: the deployment "took" as long as
+    // its slowest client's simulated schedule, not the compute wall time.
+    let wall = if cfg.virtual_time {
+        reports.iter().map(|r| r.wall).max().unwrap_or_default()
+    } else {
+        t0.elapsed()
+    };
+    Ok(SimResult {
+        wall,
+        machines: cfg.machines.clamp(1, 3),
+        machine_of: (0..cfg.n_clients).map(|c| cfg.machine_of(c)).collect(),
+        reports,
+    })
+}
+
+/// Thread-backed executor: one OS thread per client (wall clock, or the
+/// virtual-time compatibility mode).
+fn run_threads(
+    trainer: &(dyn Trainer + Sync),
+    cfg: &SimConfig,
+    parts: Vec<Vec<usize>>,
+    train: &Arc<Dataset>,
+    eval: &EvalTensors,
+) -> Result<Vec<ClientReport>> {
     enum Net {
         Real(InProcHub),
         Virtual(VirtualHub, Arc<VirtualClock>),
@@ -230,12 +309,11 @@ pub fn run(trainer: &(dyn Trainer + Sync), cfg: &SimConfig) -> Result<SimResult>
         }
     }
 
-    let t0 = Instant::now();
-    let reports: Result<Vec<ClientReport>> = std::thread::scope(|scope| {
+    std::thread::scope(|scope| {
         let mut handles = Vec::new();
         let mut spawn_err = None;
         for (i, indices) in parts.into_iter().enumerate() {
-            let data = ClientData::new(Arc::clone(&train), indices, &test, &meta);
+            let data = ClientData::with_eval(Arc::clone(train), indices, eval.clone());
             let fault = cfg.faults.get(i).copied().unwrap_or_default();
             let protocol = cfg.protocol.clone();
             let client_rng = Rng::new(cfg.seed ^ (0xC11E << 8) ^ i as u64);
@@ -324,19 +402,5 @@ pub fn run(trainer: &(dyn Trainer + Sync), cfg: &SimConfig) -> Result<SimResult>
             Some(e) => Err(e),
             None => joined,
         }
-    });
-    let reports = reports?;
-    // Virtual runs report logical time: the deployment "took" as long as
-    // its slowest client's simulated schedule, not the compute wall time.
-    let wall = if cfg.virtual_time {
-        reports.iter().map(|r| r.wall).max().unwrap_or_default()
-    } else {
-        t0.elapsed()
-    };
-    Ok(SimResult {
-        wall,
-        machines: cfg.machines.clamp(1, 3),
-        machine_of: (0..cfg.n_clients).map(|c| cfg.machine_of(c)).collect(),
-        reports,
     })
 }

@@ -1,10 +1,19 @@
-//! Seeded property-test runner (the `proptest` substrate).
+//! Seeded property-test runner (the `proptest` substrate) and the
+//! [`SimConfig`] shrinker that exploits the simulator's determinism.
 //!
 //! `forall(base_seed, cases, |rng| gen, |input| prop)` runs `cases`
 //! independently-seeded generations; a failure panics with the exact seed so
 //! the case replays deterministically with `replay(seed, gen, prop)`.
+//!
+//! Because a virtual-time deployment is a pure function of its
+//! [`SimConfig`], a failing configuration can be *minimized* instead of
+//! debugged at full size: [`shrink_sim_config`] bisects the client count
+//! and prunes the fault list against any reproducible predicate, handing
+//! back the smallest deployment that still exhibits the failure.
 
 use super::rng::Rng;
+use crate::coordinator::fault::FaultPlan;
+use crate::sim::SimConfig;
 
 /// Run `cases` property checks. `generate` builds an input from a seeded RNG;
 /// `property` returns `Err(reason)` on violation.
@@ -24,6 +33,84 @@ where
             );
         }
     }
+}
+
+/// Outcome of [`shrink_sim_config`]: the smallest failing configuration
+/// found, plus how many predicate evaluations (= deterministic re-runs)
+/// the search spent.
+#[derive(Debug)]
+pub struct Shrunk {
+    pub config: SimConfig,
+    pub tests_run: usize,
+}
+
+/// Minimize a failing [`SimConfig`] against `fails` (true = the failure
+/// still reproduces).  Two passes, both preserving the `faults` invariant
+/// (empty or one plan per client):
+///
+/// 1. **Client bisection** — binary-search the smallest prefix of clients
+///    (faults truncated alongside) that still fails.
+/// 2. **Fault pruning** — try clearing the fault list outright, else
+///    disable surviving fault plans one at a time.
+///
+/// Like every shrinker this is greedy: for non-monotone predicates the
+/// result is a local minimum (still failing, never larger than the
+/// input).  If `cfg` does not fail at all it is returned unchanged.
+pub fn shrink_sim_config<F>(cfg: &SimConfig, mut fails: F) -> Shrunk
+where
+    F: FnMut(&SimConfig) -> bool,
+{
+    fn truncate_clients(cfg: &SimConfig, n: usize) -> SimConfig {
+        let mut cand = cfg.clone();
+        cand.n_clients = n;
+        if !cand.faults.is_empty() {
+            cand.faults.truncate(n);
+        }
+        cand
+    }
+
+    let mut best = cfg.clone();
+    let mut tests_run = 1;
+    if !fails(&best) {
+        return Shrunk { config: best, tests_run };
+    }
+
+    // 1. Bisect n_clients: invariant `best` fails and every count below
+    // `lo` has been ruled out (under monotonicity).
+    let mut lo = 1usize;
+    while lo < best.n_clients {
+        let mid = (lo + best.n_clients) / 2;
+        let cand = truncate_clients(&best, mid);
+        tests_run += 1;
+        if fails(&cand) {
+            best = cand;
+        } else {
+            lo = mid + 1;
+        }
+    }
+
+    // 2. Prune the fault list.
+    if best.faults.iter().any(|f| f.crash.is_some()) {
+        let mut cand = best.clone();
+        cand.faults.clear();
+        tests_run += 1;
+        if fails(&cand) {
+            best = cand;
+        } else {
+            for i in 0..best.faults.len() {
+                if best.faults[i].crash.is_none() {
+                    continue;
+                }
+                let mut cand = best.clone();
+                cand.faults[i] = FaultPlan::none();
+                tests_run += 1;
+                if fails(&cand) {
+                    best = cand;
+                }
+            }
+        }
+    }
+    Shrunk { config: best, tests_run }
 }
 
 /// Replay a single failing case by seed.
@@ -70,6 +157,63 @@ mod tests {
                 Err("hit 7".into())
             }
         });
+    }
+
+    /// A seeded "failure": the bug needs at least `min_clients` clients
+    /// and both planted faults to manifest.  The shrinker must walk a
+    /// 64-client, fully-faulted config down to exactly that minimum.
+    #[test]
+    fn shrinks_seeded_sim_config_failure() {
+        let mut rng = Rng::new(31);
+        let idx_a = rng.below(8) as u32;
+        let idx_b = 8 + rng.below(8) as u32; // distinct from idx_a by range
+        let min_clients = idx_b as usize + 1;
+
+        let mut cfg = SimConfig::new(64, 128);
+        cfg.faults = vec![FaultPlan::none(); 64];
+        cfg.faults[idx_a as usize] = FaultPlan::at_round(3);
+        cfg.faults[idx_b as usize] = FaultPlan::at_round(5);
+        let fails = |c: &SimConfig| {
+            c.n_clients >= min_clients
+                && c.faults.iter().filter(|f| f.crash.is_some()).count() >= 2
+        };
+        assert!(fails(&cfg), "the seeded failure must reproduce at full size");
+
+        let shrunk = shrink_sim_config(&cfg, fails);
+        assert!(fails(&shrunk.config), "shrinking must preserve the failure");
+        assert_eq!(shrunk.config.n_clients, min_clients, "client bisection");
+        assert_eq!(
+            shrunk.config.faults.iter().filter(|f| f.crash.is_some()).count(),
+            2,
+            "both load-bearing faults kept, all idle plans prunable"
+        );
+        assert_eq!(
+            shrunk.config.faults.len(),
+            min_clients,
+            "faults invariant: one plan per surviving client"
+        );
+        assert!(shrunk.tests_run > 5, "the search must actually have run");
+    }
+
+    #[test]
+    fn shrink_returns_non_failing_config_unchanged() {
+        let cfg = SimConfig::new(12, 128);
+        let shrunk = shrink_sim_config(&cfg, |_| false);
+        assert_eq!(shrunk.config.n_clients, 12);
+        assert_eq!(shrunk.tests_run, 1);
+    }
+
+    #[test]
+    fn shrink_clears_irrelevant_fault_list_outright() {
+        let mut cfg = SimConfig::new(16, 128);
+        cfg.faults = (0..16).map(|_| FaultPlan::at_round(2)).collect();
+        // Failure depends only on the client count.
+        let shrunk = shrink_sim_config(&cfg, |c| c.n_clients >= 4);
+        assert_eq!(shrunk.config.n_clients, 4);
+        assert!(
+            shrunk.config.faults.is_empty(),
+            "faults play no role and must be cleared"
+        );
     }
 
     #[test]

@@ -12,26 +12,34 @@
 //!
 //! # DESIGN — virtual-clock event ordering and determinism
 //!
-//! The virtual clock is a cooperative discrete-event scheduler over the
-//! deployment's client threads:
+//! The virtual clock is a serialized discrete-event scheduler over the
+//! deployment's participants:
 //!
-//! * **One runnable thread at a time.**  Every participant registers a
-//!   `token` (its client id) and gates on [`VirtualClock::attach`] before
-//!   doing any work.  A thread runs until it blocks — [`VirtualClock::sleep`]
-//!   (training charge, fault downtime) or [`VirtualClock::recv_deadline`]
-//!   (transport wait) — and only then does the scheduler hand the CPU to the
-//!   next ready thread.  Serial execution means the interleaving of sends,
-//!   receives and RNG draws is a pure function of the configuration, which
-//!   is what makes same-seed runs byte-identical.
+//! * **One runnable participant at a time.**  Every participant registers a
+//!   `token` (its client id).  A participant runs until it blocks —
+//!   [`VirtualClock::sleep`] (training charge, fault downtime) or
+//!   [`VirtualClock::recv_deadline`] (transport wait) — and only then does
+//!   the scheduler hand the turn to the next ready token.  Serial execution
+//!   means the interleaving of sends, receives and RNG draws is a pure
+//!   function of the configuration, which is what makes same-seed runs
+//!   byte-identical.
 //! * **Events are totally ordered by `(due, seq)`.**  A scheduled message
 //!   delivery carries a key `(from, to, per-link seq)`; two deliveries due
 //!   at the same instant fire in key order, never in OS-arrival order.
 //!   Sleep/deadline wakeups at the same instant are granted in token order.
-//! * **Time advances only when no thread is ready.**  When every live
-//!   thread is blocked, the scheduler fires all deliveries due at or before
-//!   the earliest pending instant, advances `now` to it, and wakes the
-//!   lowest ready token.  Logical time is therefore exact: an 80 ms wait
-//!   window ends at precisely `start + 80 ms`, with zero OS-jitter.
+//! * **Wakeups are incremental, not scanned.**  Ready tokens live in an
+//!   explicit ready set (granted lowest-token-first); pending sleep and
+//!   receive deadlines live in a `(due, token, gen)` timer heap, and a mail
+//!   delivery moves its receiver straight onto the ready set.  A context
+//!   switch therefore costs O(log n) instead of rescanning every
+//!   participant's state (the pre-refactor O(n) bottleneck at four-digit
+//!   client counts).  The `gen` tag makes superseded timer entries — a
+//!   receive deadline whose mail arrived first — cheap to discard lazily.
+//! * **Time advances only when no token is ready.**  The scheduler fires
+//!   every delivery and timer due at or before the earliest pending
+//!   instant, advances `now` to it, and wakes the lowest ready token.
+//!   Logical time is therefore exact: an 80 ms wait window ends at
+//!   precisely `start + 80 ms`, with zero OS-jitter.
 //! * **Mailboxes are per-token FIFO queues of fired events.**  A delivery
 //!   becomes visible the moment its due instant fires, in `(due, key)`
 //!   order; [`VirtualClock::recv_deadline`] pops in that arrival order,
@@ -39,18 +47,32 @@
 //!   token is swallowed silently (the crash model).  Mail never expires:
 //!   anything delivered during a round boundary is waiting at the next
 //!   receive.
-//! * **Payloads are opaque bytes.**  The clock carries encoded wire
-//!   messages (`Msg::encode`) so `util` stays independent of `net`; the
-//!   virtual transport decodes on receive, preserving the seed behaviour of
-//!   exercising the codec on every in-process message.
+//! * **Payloads are opaque shared bytes.**  The clock carries encoded wire
+//!   messages (`Msg::encode`) as `Arc<[u8]>` so `util` stays independent of
+//!   `net` and a broadcast to 10 000 peers shares one encoded buffer
+//!   instead of cloning it 10 000 times; the virtual transport decodes on
+//!   receive, preserving the seed behaviour of exercising the codec on
+//!   every in-process message.
+//!
+//! # Two ways to drive the scheduler
+//!
+//! *Thread-backed* (compatibility mode): each participant is an OS thread
+//! that gates on [`VirtualClock::attach`] and parks on a condvar whenever
+//! it is not its turn.  *Event-driven* (`sim::exec`): a single thread owns
+//! every client as a poll-style state machine and pumps the scheduler
+//! through the non-parking driver API ([`VirtualClock::driver_next`],
+//! [`VirtualClock::driver_sleep`], [`VirtualClock::driver_recv`]) — same
+//! `VcState` transitions, zero per-client threads, byte-identical
+//! schedules.
 //!
 //! Liveness: every blocking call carries a finite due instant (windows and
 //! barriers always have deadlines), so the scheduler can always advance; a
-//! thread that finishes (or panics) detaches via a drop guard, and sends to
-//! detached clients vanish silently — exactly the paper's crash model.
+//! participant that finishes (or panics) detaches via a drop guard, and
+//! sends to detached clients vanish silently — exactly the paper's crash
+//! model.
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::{BTreeSet, BinaryHeap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
@@ -114,6 +136,10 @@ impl Clock {
     }
 
     /// Block (really or logically) for `d`.
+    ///
+    /// Only valid from the owning participant's turn; poll-style state
+    /// machines must yield a `Sleep` step to their executor instead (the
+    /// executor calls [`VirtualClock::driver_sleep`]).
     pub fn sleep(&self, d: Duration) {
         match self {
             Clock::Real { .. } => std::thread::sleep(d),
@@ -124,8 +150,11 @@ impl Clock {
 
 /// State of one registered participant.
 enum ThreadState {
-    /// Scheduled: the thread may run until its next blocking call.
+    /// Scheduled: the participant may run until its next blocking call.
     Running,
+    /// Runnable (wakeup fired / mail arrived); in the ready set, waiting
+    /// for the turn.
+    Ready,
     /// Blocked in [`VirtualClock::sleep`] until `due`.
     Asleep { due: u64 },
     /// Blocked in [`VirtualClock::recv_deadline`] until mail or `deadline`.
@@ -134,13 +163,19 @@ enum ThreadState {
     Done,
 }
 
+impl ThreadState {
+    fn is_blocked(&self) -> bool {
+        matches!(self, ThreadState::Asleep { .. } | ThreadState::Receiving { .. })
+    }
+}
+
 /// One scheduled delivery: fires into `to`'s mailbox at `due`; ties broken
 /// by `key` (see module DESIGN note).
 struct VcEvent {
     due: u64,
     key: (u32, u32, u64),
     to: usize,
-    payload: Vec<u8>,
+    payload: Arc<[u8]>,
 }
 
 impl PartialEq for VcEvent {
@@ -164,12 +199,58 @@ struct VcState {
     /// Logical nanoseconds since the simulation epoch.
     now: u64,
     threads: Vec<ThreadState>,
-    mailboxes: Vec<VecDeque<Vec<u8>>>,
+    mailboxes: Vec<VecDeque<Arc<[u8]>>>,
     events: BinaryHeap<Reverse<VcEvent>>,
-    /// Tokens currently in `Running` state (0 or 1 after startup).
-    running: usize,
+    /// Pending sleep / receive-deadline wakeups as `(due, token, gen)`;
+    /// an entry is live iff `gen` still matches `wait_gen[token]` and the
+    /// token is still blocked (stale entries are discarded lazily).
+    timers: BinaryHeap<Reverse<(u64, usize, u64)>>,
+    /// Per-token blocking-operation counter; bumped on every block so
+    /// superseded timer entries self-invalidate.
+    wait_gen: Vec<u64>,
+    /// Runnable tokens, granted in ascending token order.
+    ready: BTreeSet<usize>,
+    /// The token currently holding the turn (at most one).
+    current: Option<usize>,
     /// Tokens not yet `Done`.
     live: usize,
+}
+
+impl VcState {
+    /// Register a wakeup for `token` at `due` (the token must already be in
+    /// a blocked state).
+    fn arm_timer(&mut self, token: usize, due: u64) {
+        self.wait_gen[token] += 1;
+        let gen = self.wait_gen[token];
+        self.timers.push(Reverse((due, token, gen)));
+    }
+
+    /// Move a blocked token onto the ready set.
+    fn make_ready(&mut self, token: usize) {
+        self.threads[token] = ThreadState::Ready;
+        self.ready.insert(token);
+    }
+
+    /// Release the turn if `token` holds it.
+    fn yield_turn(&mut self, token: usize) {
+        if self.current == Some(token) {
+            self.current = None;
+        }
+    }
+}
+
+/// Outcome of one non-parking receive attempt
+/// ([`VirtualClock::driver_recv`] / [`VirtualClock::driver_recv_resume`]).
+pub enum DriverRecv {
+    /// A payload was already deliverable; the token keeps its turn.
+    Delivered(Arc<[u8]>),
+    /// The deadline has passed with nothing deliverable; the token keeps
+    /// its turn.
+    TimedOut,
+    /// Nothing deliverable yet: the token is parked until mail arrives or
+    /// `deadline` (an absolute instant — hand it back to
+    /// [`VirtualClock::driver_recv_resume`] on wakeup).
+    Parked { deadline: SimTime },
 }
 
 /// The shared discrete-event scheduler (see module docs).
@@ -187,13 +268,14 @@ struct VcState {
 ///     let c = Arc::clone(&clock);
 ///     s.spawn(move || {
 ///         c.attach(0);
-///         c.post(1, Duration::from_millis(5), (0, 1, 1), vec![42]);
+///         c.post(1, Duration::from_millis(5), (0, 1, 1), vec![42].into());
 ///         c.detach(0);
 ///     });
 ///     let c = Arc::clone(&clock);
 ///     s.spawn(move || {
 ///         c.attach(1);
-///         assert_eq!(c.recv_deadline(1, Duration::from_secs(1)), Some(vec![42]));
+///         let got = c.recv_deadline(1, Duration::from_secs(1));
+///         assert_eq!(got.as_deref(), Some(&[42u8][..]));
 ///         assert_eq!(c.now(), Duration::from_millis(5)); // exact logical latency
 ///         c.detach(1);
 ///     });
@@ -201,7 +283,8 @@ struct VcState {
 /// ```
 pub struct VirtualClock {
     state: Mutex<VcState>,
-    /// One condvar per token, paired with `state`.
+    /// One condvar per token, paired with `state` (thread-backed mode
+    /// only; the event-driven executor never parks).
     cvs: Vec<Condvar>,
 }
 
@@ -211,32 +294,40 @@ fn to_nanos(d: Duration) -> u64 {
 
 impl VirtualClock {
     /// Create a clock for `n` participants (tokens `0..n`).  All start
-    /// blocked at t = 0; the scheduler grants token 0 the first turn, so
-    /// threads may be spawned in any order and simply gate on [`attach`].
+    /// runnable at t = 0; the scheduler grants token 0 the first turn, so
+    /// threads may be spawned in any order and simply gate on [`attach`]
+    /// (an event-driven executor instead pumps [`driver_next`]).
     ///
     /// [`attach`]: VirtualClock::attach
+    /// [`driver_next`]: VirtualClock::driver_next
     pub fn new(n: usize) -> Arc<VirtualClock> {
         let mut state = VcState {
             now: 0,
             threads: (0..n).map(|_| ThreadState::Asleep { due: 0 }).collect(),
             mailboxes: (0..n).map(|_| VecDeque::new()).collect(),
             events: BinaryHeap::new(),
-            running: 0,
+            timers: BinaryHeap::new(),
+            wait_gen: vec![0; n],
+            ready: BTreeSet::new(),
+            current: None,
             live: n,
         };
+        for t in 0..n {
+            state.arm_timer(t, 0);
+        }
         let cvs: Vec<Condvar> = (0..n).map(|_| Condvar::new()).collect();
         Self::schedule(&mut state, &cvs);
         Arc::new(VirtualClock { state: Mutex::new(state), cvs })
     }
 
     /// Current logical time.  Deterministic when called by the running
-    /// participant (time cannot advance while any thread runs).
+    /// participant (time cannot advance while any participant runs).
     pub fn now(&self) -> SimTime {
         Duration::from_nanos(self.state.lock().unwrap().now)
     }
 
     /// Gate until this token is scheduled.  Must be the first clock call a
-    /// participant thread makes.
+    /// participant thread makes (thread-backed mode only).
     pub fn attach(&self, token: usize) {
         let guard = self.state.lock().unwrap();
         drop(self.wait_for_turn(guard, token));
@@ -249,25 +340,28 @@ impl VirtualClock {
         if matches!(s.threads[token], ThreadState::Done) {
             return;
         }
-        let was_running = matches!(s.threads[token], ThreadState::Running);
+        if matches!(s.threads[token], ThreadState::Ready) {
+            s.ready.remove(&token);
+        }
         s.threads[token] = ThreadState::Done;
+        s.wait_gen[token] += 1; // invalidate any pending wakeup
         s.mailboxes[token].clear();
         s.live -= 1;
-        if was_running {
-            s.running -= 1;
-        }
-        if s.running == 0 && s.live > 0 {
+        s.yield_turn(token);
+        if s.current.is_none() && s.live > 0 {
             Self::schedule(&mut s, &self.cvs);
         }
     }
 
-    /// Block this token for `d` of logical time.
+    /// Block this token for `d` of logical time (thread-backed mode; the
+    /// event-driven equivalent is [`VirtualClock::driver_sleep`]).
     pub fn sleep(&self, token: usize, d: Duration) {
         let mut s = self.state.lock().unwrap();
         let due = s.now.saturating_add(to_nanos(d));
         s.threads[token] = ThreadState::Asleep { due };
-        s.running -= 1;
-        if s.running == 0 {
+        s.arm_timer(token, due);
+        s.yield_turn(token);
+        if s.current.is_none() {
             Self::schedule(&mut s, &self.cvs);
         }
         drop(self.wait_for_turn(s, token));
@@ -275,16 +369,21 @@ impl VirtualClock {
 
     /// Schedule `payload` for delivery into `to`'s mailbox after `delay`.
     /// `key` must be unique and reproducible (e.g. `(from, to, link seq)`);
-    /// it breaks ties between deliveries due at the same instant.
-    pub fn post(&self, to: usize, delay: Duration, key: (u32, u32, u64), payload: Vec<u8>) {
+    /// it breaks ties between deliveries due at the same instant.  Mail to
+    /// a `Done` token is swallowed immediately (crash model).
+    pub fn post(&self, to: usize, delay: Duration, key: (u32, u32, u64), payload: Arc<[u8]>) {
         let mut s = self.state.lock().unwrap();
+        if matches!(s.threads[to], ThreadState::Done) {
+            return;
+        }
         let due = s.now.saturating_add(to_nanos(delay));
         s.events.push(Reverse(VcEvent { due, key, to, payload }));
     }
 
     /// Pop the next delivered payload, or block until one arrives or
-    /// logical `timeout` elapses (then `None`).
-    pub fn recv_deadline(&self, token: usize, timeout: Duration) -> Option<Vec<u8>> {
+    /// logical `timeout` elapses (then `None`).  Thread-backed mode; the
+    /// event-driven equivalent is [`VirtualClock::driver_recv`].
+    pub fn recv_deadline(&self, token: usize, timeout: Duration) -> Option<Arc<[u8]>> {
         let mut s = self.state.lock().unwrap();
         let deadline = s.now.saturating_add(to_nanos(timeout));
         loop {
@@ -296,8 +395,9 @@ impl VirtualClock {
                 return None;
             }
             s.threads[token] = ThreadState::Receiving { deadline };
-            s.running -= 1;
-            if s.running == 0 {
+            s.arm_timer(token, deadline);
+            s.yield_turn(token);
+            if s.current.is_none() {
                 Self::schedule(&mut s, &self.cvs);
             }
             s = self.wait_for_turn(s, token);
@@ -305,11 +405,86 @@ impl VirtualClock {
     }
 
     /// Non-blocking receive of anything already due.
-    pub fn try_recv(&self, token: usize) -> Option<Vec<u8>> {
+    pub fn try_recv(&self, token: usize) -> Option<Arc<[u8]>> {
         let mut s = self.state.lock().unwrap();
         Self::fire_due(&mut s);
         s.mailboxes[token].pop_front()
     }
+
+    // --- event-driven executor API (no per-client threads) -----------------
+    //
+    // A single driver thread owns every participant as a state machine and
+    // pumps these instead of parking on condvars.  The state transitions
+    // are the same ones the blocking calls make, so a driver-pumped run is
+    // byte-identical to a thread-backed run of the same seed.
+
+    /// Hand out the next turn: the lowest ready token, advancing logical
+    /// time when none is ready yet.  Returns `None` when every participant
+    /// is `Done` (or nothing can ever become ready — a protocol deadlock,
+    /// which finite deadlines rule out).  The returned token holds the turn
+    /// until it blocks via [`driver_sleep`](VirtualClock::driver_sleep) /
+    /// [`driver_recv`](VirtualClock::driver_recv) or detaches.
+    pub fn driver_next(&self) -> Option<usize> {
+        let mut s = self.state.lock().unwrap();
+        if s.current.is_none() {
+            Self::schedule(&mut s, &self.cvs);
+        }
+        s.current
+    }
+
+    /// Non-parking [`sleep`](VirtualClock::sleep): block `token` for `d` of
+    /// logical time and release the turn.  The token comes back from
+    /// [`driver_next`](VirtualClock::driver_next) once `d` has elapsed.
+    pub fn driver_sleep(&self, token: usize, d: Duration) {
+        let mut s = self.state.lock().unwrap();
+        debug_assert_eq!(s.current, Some(token), "driver_sleep off-turn");
+        let due = s.now.saturating_add(to_nanos(d));
+        s.threads[token] = ThreadState::Asleep { due };
+        s.arm_timer(token, due);
+        s.yield_turn(token);
+    }
+
+    /// Non-parking [`recv_deadline`](VirtualClock::recv_deadline): one
+    /// attempt with a deadline of `timeout` from now.  On
+    /// [`DriverRecv::Parked`] the turn is released; when
+    /// [`driver_next`](VirtualClock::driver_next) returns this token again,
+    /// finish the receive with [`driver_recv_resume`] and the parked
+    /// deadline.
+    ///
+    /// [`driver_recv_resume`]: VirtualClock::driver_recv_resume
+    pub fn driver_recv(&self, token: usize, timeout: Duration) -> DriverRecv {
+        let mut s = self.state.lock().unwrap();
+        debug_assert_eq!(s.current, Some(token), "driver_recv off-turn");
+        let deadline = s.now.saturating_add(to_nanos(timeout));
+        Self::recv_attempt(&mut s, token, deadline)
+    }
+
+    /// Resume a parked receive: deliver mail that woke the token, or report
+    /// the timeout.  `deadline` is the absolute instant returned by the
+    /// [`DriverRecv::Parked`] that parked it.
+    pub fn driver_recv_resume(&self, token: usize, deadline: SimTime) -> DriverRecv {
+        let mut s = self.state.lock().unwrap();
+        debug_assert_eq!(s.current, Some(token), "driver_recv_resume off-turn");
+        Self::recv_attempt(&mut s, token, to_nanos(deadline))
+    }
+
+    /// Shared body of the two driver receives: mirror one iteration of
+    /// [`recv_deadline`](VirtualClock::recv_deadline)'s loop.
+    fn recv_attempt(s: &mut VcState, token: usize, deadline: u64) -> DriverRecv {
+        Self::fire_due(s);
+        if let Some(p) = s.mailboxes[token].pop_front() {
+            return DriverRecv::Delivered(p);
+        }
+        if s.now >= deadline {
+            return DriverRecv::TimedOut;
+        }
+        s.threads[token] = ThreadState::Receiving { deadline };
+        s.arm_timer(token, deadline);
+        s.yield_turn(token);
+        DriverRecv::Parked { deadline: Duration::from_nanos(deadline) }
+    }
+
+    // --- scheduler core ------------------------------------------------------
 
     /// Park until the scheduler marks `token` running again.
     fn wait_for_turn<'a>(
@@ -323,71 +498,82 @@ impl VirtualClock {
         guard
     }
 
-    /// Deliver every event due at or before `now` (mailboxes of `Done`
-    /// tokens swallow their traffic — the crash model).
+    /// Deliver every event due at or before `now`, in `(due, key)` order.
+    /// Mailboxes of `Done` tokens swallow their traffic (the crash model);
+    /// a `Receiving` recipient moves straight onto the ready set.
     fn fire_due(s: &mut VcState) {
         while let Some(Reverse(ev)) = s.events.peek() {
             if ev.due > s.now {
                 break;
             }
             let Reverse(ev) = s.events.pop().unwrap();
-            if !matches!(s.threads[ev.to], ThreadState::Done) {
-                s.mailboxes[ev.to].push_back(ev.payload);
+            let to = ev.to;
+            if matches!(s.threads[to], ThreadState::Done) {
+                continue; // crash model: swallowed
+            }
+            s.mailboxes[to].push_back(ev.payload);
+            if matches!(s.threads[to], ThreadState::Receiving { .. }) {
+                s.make_ready(to);
             }
         }
     }
 
-    /// Core scheduling step; requires `running == 0`.  Fires due events,
-    /// wakes the lowest ready token, advancing `now` to the earliest
-    /// pending instant when nothing is ready yet.
+    /// Wake every timer due at or before `now` whose blocking operation is
+    /// still outstanding; stale entries (superseded by an earlier wake) are
+    /// dropped.
+    fn wake_timers(s: &mut VcState) {
+        while let Some(&Reverse((due, token, gen))) = s.timers.peek() {
+            if due > s.now {
+                break;
+            }
+            s.timers.pop();
+            if gen == s.wait_gen[token] && s.threads[token].is_blocked() {
+                s.make_ready(token);
+            }
+        }
+    }
+
+    /// Due instant of the earliest still-live timer, discarding stale
+    /// entries on the way.
+    fn next_timer_due(s: &mut VcState) -> Option<u64> {
+        while let Some(&Reverse((due, token, gen))) = s.timers.peek() {
+            if gen == s.wait_gen[token] && s.threads[token].is_blocked() {
+                return Some(due);
+            }
+            s.timers.pop();
+        }
+        None
+    }
+
+    /// Core scheduling step; requires no token to hold the turn.  Fires due
+    /// deliveries and timers, grants the lowest ready token, and advances
+    /// `now` to the earliest pending instant when nothing is ready yet.
     fn schedule(s: &mut VcState, cvs: &[Condvar]) {
-        debug_assert_eq!(s.running, 0);
+        debug_assert!(s.current.is_none(), "schedule() with a running thread");
         if s.live == 0 {
             return;
         }
         loop {
             Self::fire_due(s);
-            let mut next_due: Option<u64> = s.events.peek().map(|Reverse(e)| e.due);
-            let mut pick: Option<usize> = None;
-            for (t, st) in s.threads.iter().enumerate() {
-                let ready = match st {
-                    ThreadState::Running => {
-                        debug_assert!(false, "schedule() with a running thread");
-                        false
-                    }
-                    ThreadState::Done => continue,
-                    ThreadState::Asleep { due } => {
-                        if *due <= s.now {
-                            true
-                        } else {
-                            next_due = Some(next_due.map_or(*due, |d| d.min(*due)));
-                            false
-                        }
-                    }
-                    ThreadState::Receiving { deadline } => {
-                        if !s.mailboxes[t].is_empty() || *deadline <= s.now {
-                            true
-                        } else {
-                            next_due = Some(next_due.map_or(*deadline, |d| d.min(*deadline)));
-                            false
-                        }
-                    }
-                };
-                if ready {
-                    pick = Some(t);
-                    break;
-                }
-            }
-            if let Some(t) = pick {
+            Self::wake_timers(s);
+            let first = s.ready.iter().next().copied();
+            if let Some(t) = first {
+                s.ready.remove(&t);
                 s.threads[t] = ThreadState::Running;
-                s.running = 1;
+                s.current = Some(t);
                 cvs[t].notify_all();
                 return;
             }
+            let next_due = match (Self::next_timer_due(s), s.events.peek().map(|Reverse(e)| e.due))
+            {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (a, None) => a,
+                (None, b) => b,
+            };
             match next_due {
                 // Nothing ready: jump to the earliest pending instant.
                 Some(d) if d > s.now => s.now = d,
-                // No pending work at all — every live thread is Done-racing
+                // No pending work at all — every live participant is racing
                 // to detach, or the simulation is over.
                 _ => return,
             }
@@ -400,6 +586,10 @@ mod tests {
     use super::*;
 
     const MS: Duration = Duration::from_millis(1);
+
+    fn bytes(v: &[u8]) -> Arc<[u8]> {
+        v.to_vec().into()
+    }
 
     #[test]
     fn real_clock_elapses() {
@@ -444,8 +634,8 @@ mod tests {
             scope.spawn(move || {
                 c0.attach(0);
                 // posted in reverse key order, same due instant
-                c0.post(1, 5 * MS, (0, 1, 2), vec![2]);
-                c0.post(1, 5 * MS, (0, 1, 1), vec![1]);
+                c0.post(1, 5 * MS, (0, 1, 2), bytes(&[2]));
+                c0.post(1, 5 * MS, (0, 1, 1), bytes(&[1]));
                 c0.detach(0);
             });
             let c1 = Arc::clone(&clock);
@@ -453,7 +643,7 @@ mod tests {
                 c1.attach(1);
                 let a = c1.recv_deadline(1, Duration::from_secs(1)).unwrap();
                 let b = c1.recv_deadline(1, Duration::from_secs(1)).unwrap();
-                assert_eq!((a, b), (vec![1], vec![2]), "ties must break by key");
+                assert_eq!((&a[..], &b[..]), (&[1u8][..], &[2u8][..]), "ties must break by key");
                 assert_eq!(c1.now(), 5 * MS, "delivery at exact due instant");
                 c1.detach(1);
             });
@@ -481,7 +671,7 @@ mod tests {
             let c0 = Arc::clone(&clock);
             scope.spawn(move || {
                 c0.attach(0);
-                c0.post(1, Duration::ZERO, (0, 1, 1), vec![7]);
+                c0.post(1, Duration::ZERO, (0, 1, 1), bytes(&[7]));
                 c0.detach(0); // token 1 must still be scheduled afterwards
             });
             let c1 = Arc::clone(&clock);
@@ -489,8 +679,8 @@ mod tests {
                 c1.attach(1);
                 c1.sleep(1, 10 * MS);
                 // mail sent to a detached token is swallowed silently
-                c1.post(0, Duration::ZERO, (1, 0, 1), vec![9]);
-                assert_eq!(c1.try_recv(1), Some(vec![7]));
+                c1.post(0, Duration::ZERO, (1, 0, 1), bytes(&[9]));
+                assert_eq!(c1.try_recv(1).as_deref(), Some(&[7u8][..]));
                 assert_eq!(c1.try_recv(1), None);
                 c1.detach(1);
             });
@@ -504,9 +694,9 @@ mod tests {
             let c0 = Arc::clone(&clock);
             scope.spawn(move || {
                 c0.attach(0);
-                c0.post(1, 3 * MS, (0, 1, 1), vec![1]);
+                c0.post(1, 3 * MS, (0, 1, 1), bytes(&[1]));
                 let got = c0.recv_deadline(0, Duration::from_secs(1)).unwrap();
-                assert_eq!(got, vec![2]);
+                assert_eq!(&got[..], &[2u8][..]);
                 assert_eq!(c0.now(), 7 * MS, "3 ms there + 4 ms back");
                 c0.detach(0);
             });
@@ -514,10 +704,141 @@ mod tests {
             scope.spawn(move || {
                 c1.attach(1);
                 let got = c1.recv_deadline(1, Duration::from_secs(1)).unwrap();
-                assert_eq!(got, vec![1]);
-                c1.post(0, 4 * MS, (1, 0, 1), vec![2]);
+                assert_eq!(&got[..], &[1u8][..]);
+                c1.post(0, 4 * MS, (1, 0, 1), bytes(&[2]));
                 c1.detach(1);
             });
         });
+    }
+
+    // --- driver (event-executor) API ---------------------------------------
+
+    /// The full sleep/recv/post lifecycle pumped by a single thread: no
+    /// participant threads exist at all.
+    #[test]
+    fn driver_api_ping_pong_without_threads() {
+        let clock = VirtualClock::new(2);
+        // token 0: sleep 2 ms, post to 1, recv reply; token 1: recv, reply.
+        let mut t0_phase = 0;
+        let mut t1_phase = 0;
+        let mut parked: [Option<SimTime>; 2] = [None, None];
+        let mut done = [false, false];
+        while let Some(t) = clock.driver_next() {
+            if t == 0 {
+                match t0_phase {
+                    0 => {
+                        clock.driver_sleep(0, 2 * MS);
+                        t0_phase = 1;
+                    }
+                    1 => {
+                        clock.post(1, 3 * MS, (0, 1, 1), bytes(&[10]));
+                        match clock.driver_recv(0, Duration::from_secs(1)) {
+                            DriverRecv::Parked { deadline } => parked[0] = Some(deadline),
+                            _ => panic!("reply cannot be ready yet"),
+                        }
+                        t0_phase = 2;
+                    }
+                    _ => {
+                        let d = parked[0].take().unwrap();
+                        match clock.driver_recv_resume(0, d) {
+                            DriverRecv::Delivered(p) => assert_eq!(&p[..], &[20u8][..]),
+                            _ => panic!("expected the reply"),
+                        }
+                        // 2 ms sleep + 3 ms there + 4 ms back
+                        assert_eq!(clock.now(), 9 * MS);
+                        done[0] = true;
+                        clock.detach(0);
+                    }
+                }
+            } else {
+                match t1_phase {
+                    0 => {
+                        match clock.driver_recv(1, Duration::from_secs(1)) {
+                            DriverRecv::Parked { deadline } => parked[1] = Some(deadline),
+                            _ => panic!("nothing sent yet"),
+                        }
+                        t1_phase = 1;
+                    }
+                    _ => {
+                        let d = parked[1].take().unwrap();
+                        match clock.driver_recv_resume(1, d) {
+                            DriverRecv::Delivered(p) => assert_eq!(&p[..], &[10u8][..]),
+                            _ => panic!("expected the ping"),
+                        }
+                        clock.post(0, 4 * MS, (1, 0, 1), bytes(&[20]));
+                        done[1] = true;
+                        clock.detach(1);
+                    }
+                }
+            }
+        }
+        assert_eq!(done, [true, true]);
+    }
+
+    #[test]
+    fn driver_recv_times_out_at_exact_deadline() {
+        let clock = VirtualClock::new(1);
+        let t = clock.driver_next().unwrap();
+        assert_eq!(t, 0);
+        let deadline = match clock.driver_recv(0, 25 * MS) {
+            DriverRecv::Parked { deadline } => deadline,
+            _ => panic!("mailbox must be empty"),
+        };
+        assert_eq!(clock.driver_next(), Some(0), "deadline must wake the token");
+        assert_eq!(clock.now(), 25 * MS);
+        match clock.driver_recv_resume(0, deadline) {
+            DriverRecv::TimedOut => {}
+            _ => panic!("expected timeout"),
+        }
+        clock.detach(0);
+        assert_eq!(clock.driver_next(), None);
+    }
+
+    /// Same-instant wakeups must be granted in token order (the ready set's
+    /// invariant) and a receive whose mail arrives before its deadline must
+    /// leave no live timer behind (the gen-tag invariant).
+    #[test]
+    fn ready_queue_grants_lowest_token_and_discards_stale_timers() {
+        let clock = VirtualClock::new(3);
+        // Park everyone: 2 and 1 sleep to the same instant, 0 receives with
+        // a far deadline but gets mail at that same instant.
+        assert_eq!(clock.driver_next(), Some(0));
+        let d0 = match clock.driver_recv(0, Duration::from_secs(60)) {
+            DriverRecv::Parked { deadline } => deadline,
+            _ => panic!("no mail yet"),
+        };
+        assert_eq!(clock.driver_next(), Some(1));
+        clock.post(0, 5 * MS, (1, 0, 1), bytes(&[1]));
+        clock.driver_sleep(1, 5 * MS);
+        assert_eq!(clock.driver_next(), Some(2));
+        clock.driver_sleep(2, 5 * MS);
+        // All three wake at t = 5 ms: token order, mail before deadline.
+        assert_eq!(clock.driver_next(), Some(0), "mail readies the receiver");
+        match clock.driver_recv_resume(0, d0) {
+            DriverRecv::Delivered(p) => assert_eq!(&p[..], &[1u8][..]),
+            _ => panic!("mail was due"),
+        }
+        clock.detach(0);
+        assert_eq!(clock.driver_next(), Some(1));
+        clock.detach(1);
+        assert_eq!(clock.driver_next(), Some(2));
+        assert_eq!(clock.now(), 5 * MS);
+        clock.detach(2);
+        assert_eq!(clock.driver_next(), None);
+        // The receiver's 60 s deadline must not hold the clock hostage.
+        assert_eq!(clock.now(), 5 * MS, "stale deadline advanced the clock");
+    }
+
+    #[test]
+    fn post_to_done_token_is_swallowed_at_post_time() {
+        let clock = VirtualClock::new(2);
+        assert_eq!(clock.driver_next(), Some(0));
+        clock.detach(0);
+        assert_eq!(clock.driver_next(), Some(1));
+        clock.post(0, Duration::ZERO, (1, 0, 1), bytes(&[9]));
+        // Nothing pending: detaching 1 ends the run with time unmoved.
+        clock.detach(1);
+        assert_eq!(clock.driver_next(), None);
+        assert_eq!(clock.now(), Duration::ZERO);
     }
 }

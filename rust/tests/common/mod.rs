@@ -1,0 +1,45 @@
+//! Shared integration-test helpers (included via `mod common;` — the
+//! directory form keeps this out of the test-binary list).
+
+use dfl::metrics::ClientReport;
+
+/// 64-bit FNV-1a over a byte stream (tiny, dependency-free digest).
+fn fnv(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x100_0000_01b3);
+    }
+}
+
+/// Bit-exact fingerprint of everything a client reports: round history,
+/// floats by raw bits, virtual wall time to the nanosecond, provenance,
+/// and the final model.  This digest *is* the byte-identical-executors
+/// acceptance criterion — extend it whenever [`ClientReport`] grows.
+pub fn fingerprint(r: &ClientReport) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    fnv(&mut h, &r.id.to_le_bytes());
+    fnv(&mut h, format!("{:?}", r.cause).as_bytes());
+    fnv(&mut h, &r.rounds_completed.to_le_bytes());
+    fnv(&mut h, &r.final_accuracy.map_or(u32::MAX, f32::to_bits).to_le_bytes());
+    fnv(&mut h, &r.final_loss.map_or(u32::MAX, f32::to_bits).to_le_bytes());
+    fnv(&mut h, &(r.wall.as_nanos() as u64).to_le_bytes());
+    fnv(&mut h, &r.signal_source.map_or(u32::MAX, |s| s).to_le_bytes());
+    for rec in &r.history {
+        fnv(&mut h, &rec.round.to_le_bytes());
+        fnv(&mut h, &rec.train_loss.to_bits().to_le_bytes());
+        fnv(&mut h, &rec.probe_acc.to_bits().to_le_bytes());
+        fnv(&mut h, &(rec.alive_peers as u64).to_le_bytes());
+        fnv(&mut h, &(rec.aggregated as u64).to_le_bytes());
+        fnv(&mut h, &rec.delta_rel.to_bits().to_le_bytes());
+        fnv(&mut h, &rec.conv_counter.to_le_bytes());
+        for c in &rec.crashes_detected {
+            fnv(&mut h, &c.to_le_bytes());
+        }
+    }
+    if let Some(p) = &r.final_params {
+        for v in p {
+            fnv(&mut h, &v.to_bits().to_le_bytes());
+        }
+    }
+    h
+}

@@ -3,15 +3,17 @@
 //! partition-heal CRT flooding, and WAN-scale latency — all in wall-clock
 //! milliseconds because nothing actually sleeps.
 
+mod common;
+
 use std::time::{Duration, Instant};
 
+use common::fingerprint;
 use dfl::coordinator::fault::FaultPlan;
 use dfl::coordinator::termination::TerminationCause;
 use dfl::coordinator::ProtocolConfig;
-use dfl::metrics::ClientReport;
 use dfl::net::{NetSplit, NetworkModel};
 use dfl::runtime::{MockTrainer, Trainer};
-use dfl::sim::{self, SimConfig};
+use dfl::sim::{self, ExecMode, SimConfig};
 
 fn base_cfg(n: usize, seed: u64) -> SimConfig {
     let trainer = MockTrainer::tiny();
@@ -36,46 +38,6 @@ fn base_cfg(n: usize, seed: u64) -> SimConfig {
     cfg
 }
 
-/// 64-bit FNV-1a over a byte stream (tiny, dependency-free digest).
-fn fnv(h: &mut u64, bytes: &[u8]) {
-    for &b in bytes {
-        *h ^= b as u64;
-        *h = h.wrapping_mul(0x100_0000_01b3);
-    }
-}
-
-/// Bit-exact fingerprint of everything a client reports: round history,
-/// floats by raw bits, virtual wall time to the nanosecond, provenance,
-/// and the final model.
-fn fingerprint(r: &ClientReport) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
-    fnv(&mut h, &r.id.to_le_bytes());
-    fnv(&mut h, format!("{:?}", r.cause).as_bytes());
-    fnv(&mut h, &r.rounds_completed.to_le_bytes());
-    fnv(&mut h, &r.final_accuracy.map_or(u32::MAX, f32::to_bits).to_le_bytes());
-    fnv(&mut h, &r.final_loss.map_or(u32::MAX, f32::to_bits).to_le_bytes());
-    fnv(&mut h, &(r.wall.as_nanos() as u64).to_le_bytes());
-    fnv(&mut h, &r.signal_source.map_or(u32::MAX, |s| s).to_le_bytes());
-    for rec in &r.history {
-        fnv(&mut h, &rec.round.to_le_bytes());
-        fnv(&mut h, &rec.train_loss.to_bits().to_le_bytes());
-        fnv(&mut h, &rec.probe_acc.to_bits().to_le_bytes());
-        fnv(&mut h, &(rec.alive_peers as u64).to_le_bytes());
-        fnv(&mut h, &(rec.aggregated as u64).to_le_bytes());
-        fnv(&mut h, &rec.delta_rel.to_bits().to_le_bytes());
-        fnv(&mut h, &rec.conv_counter.to_le_bytes());
-        for c in &rec.crashes_detected {
-            fnv(&mut h, &c.to_le_bytes());
-        }
-    }
-    if let Some(p) = &r.final_params {
-        for v in p {
-            fnv(&mut h, &v.to_bits().to_le_bytes());
-        }
-    }
-    h
-}
-
 #[test]
 fn identical_config_and_seed_reproduce_byte_identical_histories() {
     // The hardest setting we support: message loss, a permanent crash, and
@@ -97,6 +59,47 @@ fn identical_config_and_seed_reproduce_byte_identical_histories() {
     let fb: Vec<u64> = b.reports.iter().map(fingerprint).collect();
     assert_eq!(fa, fb, "virtual-time runs must be bit-reproducible");
     assert_eq!(a.wall, b.wall);
+}
+
+#[test]
+fn event_and_thread_executors_are_byte_identical() {
+    // The two virtual-time executors — single-threaded state machines vs
+    // one cooperative thread per client — must make the identical sequence
+    // of scheduler transitions.  Hardest small setting we have: message
+    // loss, a permanent crash, a transient outage.
+    let trainer = MockTrainer::tiny();
+    let mut cfg = base_cfg(5, 1234);
+    cfg.net = NetworkModel::lossy(0.10, 1234);
+    cfg.protocol.min_rounds = 8;
+    cfg.faults = vec![FaultPlan::none(); 5];
+    cfg.faults[2] = FaultPlan::at_round(4);
+    cfg.faults[4] = FaultPlan::transient(3, Duration::from_millis(300));
+    cfg.exec = ExecMode::Events;
+    let ev = sim::run(&trainer, &cfg).unwrap();
+    cfg.exec = ExecMode::Threads;
+    let th = sim::run(&trainer, &cfg).unwrap();
+    let fe: Vec<u64> = ev.reports.iter().map(fingerprint).collect();
+    let ft: Vec<u64> = th.reports.iter().map(fingerprint).collect();
+    assert_eq!(fe, ft, "executors must be byte-identical");
+    assert_eq!(ev.wall, th.wall);
+}
+
+#[test]
+fn sync_phase_executors_are_byte_identical() {
+    // Phase 1's barrier (SyncMachine::Collect) under both executors.
+    let trainer = MockTrainer::tiny();
+    let mut cfg = base_cfg(4, 888);
+    cfg.sync = true;
+    cfg.exec = ExecMode::Events;
+    let ev = sim::run(&trainer, &cfg).unwrap();
+    cfg.exec = ExecMode::Threads;
+    let th = sim::run(&trainer, &cfg).unwrap();
+    let fe: Vec<u64> = ev.reports.iter().map(fingerprint).collect();
+    let ft: Vec<u64> = th.reports.iter().map(fingerprint).collect();
+    assert_eq!(fe, ft, "sync executors must be byte-identical");
+    // Phase 1's mutual agreement: every client stops at the same round.
+    let rounds: Vec<u32> = ev.reports.iter().map(|r| r.rounds_completed).collect();
+    assert!(rounds.windows(2).all(|w| w[0] == w[1]), "rounds {rounds:?}");
 }
 
 #[test]
