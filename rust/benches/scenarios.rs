@@ -1,6 +1,6 @@
-//! Bench: the beyond-paper network-scenario matrix (DESIGN.md §3.4) —
-//! the async protocol swept across ideal/lan/wan/asym/lossy-burst presets
-//! under the deterministic virtual clock.
+//! Bench: the beyond-paper sweeps — the network-scenario matrix
+//! (DESIGN.md §3.4) and the sparse-overlay topology sweep (DESIGN.md §9),
+//! both under the deterministic virtual clock.
 
 mod common;
 
@@ -8,4 +8,6 @@ fn main() {
     let engine = common::engine();
     let table = dfl::exp::scenarios(&engine, common::scale());
     table.print("Scenario matrix — network presets (beyond paper)");
+    let table = dfl::exp::topologies(&engine, common::scale());
+    table.print("Topology sweep — sparse overlays (beyond paper)");
 }

@@ -34,6 +34,16 @@ pub struct ProtocolConfig {
     /// received terminate flag is ignored, so every client must reach CCC
     /// on its own — `benches/ablation.rs` quantifies the wasted rounds).
     pub crt_enabled: bool,
+    /// Quorum-CCC fraction `q` for condition (a): a round counts as
+    /// crash-free when at least a `q`-fraction of the overlay neighborhood
+    /// went unsuspected this round, i.e. at most
+    /// `⌊(1 − q) · |neighborhood|⌋` peers were *newly* marked crashed
+    /// (see [`crate::coordinator::termination::quorum_crash_free`]).
+    /// `q = 1.0` (default) tolerates zero fresh suspicions — exactly the
+    /// paper's strict condition, byte-identical per seed; `q < 1.0` keeps
+    /// adaptive termination reachable under uniform message loss, where
+    /// false suspicion never stops at scale (DESIGN.md §9).
+    pub quorum: f32,
 }
 
 impl Default for ProtocolConfig {
@@ -53,6 +63,7 @@ impl Default for ProtocolConfig {
             weight_by_samples: false,
             early_window_exit: true,
             crt_enabled: true,
+            quorum: 1.0,
         }
     }
 }
@@ -83,5 +94,6 @@ mod tests {
         assert!(c.count_threshold >= 1);
         assert!(c.conv_threshold_rel > 0.0);
         assert!(!c.timeout.is_zero());
+        assert_eq!(c.quorum, 1.0, "default must be the paper-strict condition");
     }
 }

@@ -9,11 +9,16 @@
 //! treated as crashed when they fall silent; that disambiguation is the
 //! point of the Client-Responsive Termination protocol.
 //!
-//! Storage is dense: every client tracks every peer, so at 10 000 clients
-//! a [`PeerTable`] is an n-entry vector indexed by client id (2 bytes of
-//! state per peer) rather than a pair of BTreeMaps, and per-window
+//! Scope: a client tracks its *overlay neighborhood*
+//! ([`crate::net::Transport::neighbors`]) — the full peer set on the
+//! default all-to-all topology, a degree-d subset on a sparse overlay
+//! (DESIGN.md §9), which is also the population quorum-CCC's condition
+//! (a) ranges over.
+//!
+//! Storage is dense: status is a vector indexed by client id (1 byte of
+//! state per slot) rather than a pair of BTreeMaps, and per-window
 //! membership checks run on [`IdSet`] bitsets — the difference between
-//! megabytes and gigabytes for the full deployment.
+//! megabytes and gigabytes for the full 10 000-client deployment.
 
 use crate::net::ClientId;
 
@@ -89,11 +94,15 @@ impl FromIterator<ClientId> for IdSet {
 /// Per-client view of every peer's liveness (dense by client id).
 #[derive(Clone, Debug)]
 pub struct PeerTable {
-    /// `status[id]`: `None` = not a peer (self / unknown id).
+    /// `status[id]`: `None` = not a tracked peer (self / outside the
+    /// neighborhood / unknown id).
     status: Vec<Option<PeerStatus>>,
     /// Count of peers currently `Alive` (maintained incrementally so the
     /// per-round metrics never rescan the table).
     alive: usize,
+    /// How many peers this table tracks (static: the neighborhood size,
+    /// the denominator of quorum-CCC's condition (a)).
+    tracked: usize,
     events: Vec<PeerEvent>,
 }
 
@@ -104,7 +113,13 @@ impl PeerTable {
         for &p in peers {
             status[p as usize] = Some(PeerStatus::Alive);
         }
-        PeerTable { status, alive: peers.len(), events: Vec::new() }
+        PeerTable { status, alive: peers.len(), tracked: peers.len(), events: Vec::new() }
+    }
+
+    /// How many peers this table tracks (the neighborhood size; static
+    /// over the table's lifetime).
+    pub fn tracked(&self) -> usize {
+        self.tracked
     }
 
     pub fn status(&self, peer: ClientId) -> Option<PeerStatus> {
@@ -214,6 +229,16 @@ mod tests {
 
     fn ids<I: IntoIterator<Item = ClientId>>(iter: I) -> IdSet {
         iter.into_iter().collect()
+    }
+
+    #[test]
+    fn tracked_is_static_neighborhood_size() {
+        let mut t = PeerTable::new(&[1, 5, 9]);
+        assert_eq!(t.tracked(), 3);
+        t.mark_missing(0, &ids([]));
+        assert_eq!(t.tracked(), 3, "suspicion must not shrink the denominator");
+        t.record_message(5, 1, true);
+        assert_eq!(t.tracked(), 3, "termination must not shrink the denominator");
     }
 
     #[test]

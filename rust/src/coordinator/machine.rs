@@ -49,6 +49,27 @@
 //! ~64 buffered updates per client and ~10 000 — without changing a single
 //! aggregation result, because an id evicted from the lowest-`k` prefix
 //! can never re-enter it.
+//!
+//! # Sparse overlays (DESIGN.md §9)
+//!
+//! Everything round-scoped ranges over the transport's overlay
+//! *neighborhood* ([`Transport::neighbors`]): the [`PeerTable`] tracks
+//! neighbors, wait windows await and aggregate in-neighborhood updates,
+//! broadcasts reach neighbors only, and CCC's condition (a) is the
+//! quorum test [`quorum_crash_free`] over the neighborhood.  Global
+//! information still reaches the whole graph two ways: model content
+//! mixes hop-by-hop through successive neighborhood aggregations (gossip
+//! averaging), and the CRT terminate flag *relays* — the first flagged
+//! update a client receives is forwarded verbatim (origin's sender and
+//! round tag preserved) to its own neighborhood, each client forwarding
+//! at most once, so one CCC trigger floods the connected overlay in
+//! ≤ diameter hops and ≤ n·d total relay messages.  Receivers dedup
+//! flagged updates per origin: duplicate copies (direct + relayed) set
+//! the flag but are never liveness evidence or aggregation input twice.
+//! On the full mesh the relay is disabled: every peer hears the origin
+//! directly, and the extra sends would perturb the seeded per-link RNG
+//! streams that make full-overlay runs byte-identical to the
+//! pre-topology protocol.
 
 use std::collections::BTreeMap;
 use std::time::Duration;
@@ -60,7 +81,9 @@ use super::config::ProtocolConfig;
 use super::failure::{IdSet, PeerTable};
 use super::fault::FaultPlan;
 use super::sync::{SyncClient, SYNC_GRACE};
-use super::termination::{ConvergenceMonitor, TerminationCause, TerminationState};
+use super::termination::{
+    quorum_crash_free, ConvergenceMonitor, TerminationCause, TerminationState,
+};
 use crate::metrics::{ClientReport, RoundRecord};
 use crate::model::ParamVector;
 use crate::net::{ClientId, ModelUpdate, Msg, Transport};
@@ -267,6 +290,21 @@ pub struct AsyncMachine<'a> {
     started: SimTime,
     params: Vec<f32>,
     peer_table: PeerTable,
+    /// Relay first-seen terminate flags onward?  True only on a sparse
+    /// overlay (on the full mesh the relay is disabled; see the module
+    /// docs on byte-identity).
+    relay_sparse: bool,
+    /// Has this client already forwarded a flagged update? (The sender
+    /// side of the relay dedup: at most one forward per client per run.)
+    relayed: bool,
+    /// Origins whose flagged update we already processed (the receiver
+    /// side of the relay dedup): the flood can deliver the same flagged
+    /// broadcast several times — direct plus relayed copies — and only
+    /// the first sighting carries liveness/aggregation semantics.  On the
+    /// full mesh an origin's flagged update arrives at most once (one
+    /// flagged broadcast per client, no relays, no retransmits), so this
+    /// set changes nothing there.
+    flagged_seen: IdSet,
     term: TerminationState,
     monitor: ConvergenceMonitor,
     history: Vec<RoundRecord>,
@@ -282,7 +320,12 @@ impl<'a> AsyncMachine<'a> {
         let meta = c.trainer.meta().clone();
         let my_weight =
             if c.cfg.weight_by_samples { c.data.indices.len() as f32 } else { 1.0 };
-        let peer_table = PeerTable::new(&c.transport.peers());
+        // Liveness (and therefore quorum-CCC) is neighborhood-scoped: on
+        // the full mesh `neighbors()` is the all-peers list and nothing
+        // changes; on a sparse overlay only the d neighbors are tracked.
+        let neighbors = c.transport.neighbors();
+        let peer_table = PeerTable::new(&neighbors);
+        let relay_sparse = neighbors.len() < c.transport.n_peers();
         let monitor = ConvergenceMonitor::new(c.cfg.count_threshold, c.cfg.conv_threshold_rel);
         AsyncMachine {
             id: c.id,
@@ -301,6 +344,9 @@ impl<'a> AsyncMachine<'a> {
             started: SimTime::ZERO,
             params: Vec::new(),
             peer_table,
+            relay_sparse,
+            relayed: false,
+            flagged_seen: IdSet::new(),
             term: TerminationState::new(),
             monitor,
             history: Vec::new(),
@@ -417,8 +463,9 @@ impl<'a> AsyncMachine<'a> {
             return self.finalize();
         }
         self.broadcast_model(false);
-        // Degenerate single-client deployment: nothing to wait for.
-        if self.transport.peers().is_empty() {
+        // Degenerate neighborless deployment (single client): nothing to
+        // wait for.
+        if self.peer_table.tracked() == 0 {
             let w = Window::open(self.clock.now(), &self.peer_table);
             return self.close_window(w);
         }
@@ -444,32 +491,72 @@ impl<'a> AsyncMachine<'a> {
         Ok(Flow::Yield(Step::Recv(remaining)))
     }
 
-    /// Process one in-window message: CRT flags and liveness as they
-    /// arrive.
+    /// Process one in-window message: CRT flags (with the sparse-overlay
+    /// relay) and liveness as they arrive.  Liveness, window bookkeeping,
+    /// and aggregation stashing apply only to *tracked* (in-neighborhood)
+    /// senders; a relayed update from a distant origin contributes its
+    /// terminate flag and nothing else.
     fn on_window_msg(&mut self, w: &mut Window, msg: Msg) {
         let sender = msg.sender();
+        let tracked = self.peer_table.status(sender).is_some();
         match msg {
             Msg::Update(u) => {
-                self.peer_table.record_message(sender, self.round, u.terminate);
+                // Receiver-side relay dedup: only the first flagged update
+                // per origin carries liveness/aggregation semantics; a
+                // later (relayed) copy would otherwise re-stash the
+                // origin's stale round-r model into a later window.  The
+                // first copy to arrive — direct or relayed, they are
+                // byte-identical — wins.
+                let fresh = !u.terminate || self.flagged_seen.insert(sender);
                 if u.terminate && self.cfg.crt_enabled {
                     self.term.signal_from(sender, self.round);
+                    self.relay_terminate(&u);
                 }
-                w.heard.insert(sender);
-                w.resolve(sender);
-                w.stash(sender, u, self.meta.k_max.saturating_sub(1));
+                if tracked && fresh {
+                    self.peer_table.record_message(sender, self.round, u.terminate);
+                    w.heard.insert(sender);
+                    w.resolve(sender);
+                    w.stash(sender, u, self.meta.k_max.saturating_sub(1));
+                }
             }
             Msg::Hello { .. } => {
-                self.peer_table.record_message(sender, self.round, false);
-                w.heard.insert(sender);
-                w.resolve(sender);
+                if tracked {
+                    self.peer_table.record_message(sender, self.round, false);
+                    w.heard.insert(sender);
+                    w.resolve(sender);
+                }
             }
             Msg::Bye { .. } => {
-                self.peer_table.record_message(sender, self.round, true);
-                // Now Terminated, no longer alive: its silence must not
-                // hold the window open.
-                w.resolve(sender);
+                if tracked {
+                    self.peer_table.record_message(sender, self.round, true);
+                    // Now Terminated, no longer alive: its silence must not
+                    // hold the window open.
+                    w.resolve(sender);
+                }
             }
         }
+    }
+
+    /// CRT flag relay over a sparse overlay: forward the first flagged
+    /// update we see to our whole neighborhood, verbatim (the origin's
+    /// sender id and round tag ride along, so provenance and round
+    /// accounting survive multi-hop).  Each client forwards at most once
+    /// per run — with the receiver-side `flagged_seen` dedup that bounds
+    /// the flood at one message per directed edge (≤ n·d total) while
+    /// still reaching every client of the connected graph within diameter
+    /// hops.  Forwarding uses `broadcast` for its encode-once path (one
+    /// serialization instead of d); the origin may be among the
+    /// recipients, but it has already terminated and sends to finished
+    /// clients are swallowed by the crash model.  No-op on the full mesh:
+    /// there every peer hears the origin directly, and extra sends would
+    /// shift the seeded link streams.
+    fn relay_terminate(&mut self, u: &ModelUpdate) {
+        if self.relayed || !self.relay_sparse {
+            return;
+        }
+        self.relayed = true;
+        // Best-effort, like every send under the crash model.
+        let _ = self.transport.broadcast(&Msg::Update(u.clone()));
     }
 
     /// End of window: suspect sweep, aggregate, evaluate, CCC — the
@@ -494,8 +581,14 @@ impl<'a> AsyncMachine<'a> {
             false,
         )?;
         let probe_acc = correct as f32 / self.data.eval.eval_ys.len() as f32;
-        // CCC check (Alg. 2 lines 23-34).
-        let crash_free = newly_crashed.is_empty();
+        // CCC check (Alg. 2 lines 23-34), condition (a) generalized to the
+        // neighborhood quorum: at q = 1.0 this is exactly the paper's
+        // `newly_crashed.is_empty()`.
+        let crash_free = quorum_crash_free(
+            newly_crashed.len(),
+            self.peer_table.tracked(),
+            self.cfg.quorum,
+        );
         let avg = ParamVector(self.params.clone());
         let ccc = self.monitor.observe(&avg, crash_free, aggregated);
         self.history.push(RoundRecord {
@@ -633,7 +726,7 @@ impl<'a> SyncMachine<'a> {
         let meta = c.trainer.meta().clone();
         let my_weight =
             if c.cfg.weight_by_samples { c.data.indices.len() as f32 } else { 1.0 };
-        let n_peers = c.transport.peers().len();
+        let n_peers = c.transport.n_peers();
         let monitor = ConvergenceMonitor::new(c.cfg.count_threshold, c.cfg.conv_threshold_rel);
         SyncMachine {
             id: c.id,

@@ -9,9 +9,13 @@
 //!   executor, so a client needs a thread only if its executor chooses to
 //!   spend one.
 //! * [`failure`] — peer status table: Alive/Crashed/Terminated with
-//!   late-message revival ("slow ≠ crashed").
-//! * [`termination`] — Client-Confident Convergence (CCC) monitor and the
-//!   Client-Responsive Termination (CRT) flag state.
+//!   late-message revival ("slow ≠ crashed"), scoped to the overlay
+//!   neighborhood on sparse topologies (DESIGN.md §9).
+//! * [`termination`] — Client-Confident Convergence (CCC) monitor with
+//!   the quorum generalization of condition (a)
+//!   ([`termination::quorum_crash_free`]) and the Client-Responsive
+//!   Termination (CRT) flag state; on sparse overlays the flag also
+//!   relays hop-by-hop ([`machine`]).
 //! * [`fault`] — crash schedules and fault injection used by the
 //!   experiments (Experiments 1–3).
 //! * [`config`] — protocol constants (TIMEOUT, MINIMUM_ROUNDS,
@@ -31,4 +35,6 @@ pub use failure::{IdSet, PeerStatus, PeerTable};
 pub use fault::{CrashPoint, FaultPlan};
 pub use machine::{ClientStateMachine, Input, Step};
 pub use sync::SyncClient;
-pub use termination::{ConvergenceMonitor, TerminationCause, TerminationState};
+pub use termination::{
+    quorum_crash_free, ConvergenceMonitor, TerminationCause, TerminationState,
+};

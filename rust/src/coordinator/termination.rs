@@ -11,7 +11,18 @@
 //!
 //! **Client-Responsive Termination (CRT)** — receiving a terminate flag
 //! sets the local flag; every subsequent broadcast carries it, flooding the
-//! signal through delays and intermittent disconnects.
+//! signal through delays and intermittent disconnects.  On a sparse
+//! overlay the flag additionally relays hop-by-hop within the round
+//! (`coordinator::machine`, DESIGN.md §9), so the whole graph — not just
+//! the origin's neighborhood — learns of termination.
+//!
+//! **Quorum-CCC** — the paper's condition (a) ("no crash detected for x
+//! consecutive rounds") ranges over every peer, which makes it
+//! structurally unreachable under uniform message loss at scale: with
+//! hundreds of peers, *some* update misses the window essentially every
+//! round, so the crash-free streak never starts.  [`quorum_crash_free`]
+//! generalizes (a) to tolerate a bounded minority of fresh suspicions per
+//! round; `q = 1.0` reproduces the paper exactly.
 
 use crate::model::ParamVector;
 use crate::net::ClientId;
@@ -65,6 +76,47 @@ impl TerminationState {
             self.at_round = Some(round);
         }
     }
+}
+
+/// Quorum-CCC condition (a) for one round: did at least a `quorum`
+/// fraction of the (`neighborhood`-sized) tracked peer set go unsuspected
+/// this round?  Equivalently: were at most `⌊(1 − q) · neighborhood⌋`
+/// peers *newly* marked crashed by this round's sweep?
+///
+/// * `q = 1.0` tolerates zero fresh suspicions — exactly the paper's
+///   strict "no crash detected this round", so full-overlay runs with the
+///   default quorum are byte-identical to the pre-quorum protocol.
+/// * `q < 1.0` keeps the streak alive through the bounded false suspicion
+///   that uniform loss inflicts every round (a peer whose message was
+///   dropped looks crashed until its next update revives it).
+///
+/// Safety is preserved for the same reason as in the strict protocol:
+/// tolerating a suspicion never *adds* a model to the aggregate, and a
+/// genuinely unconverged neighbor that is still heard keeps moving the
+/// aggregated average, so condition (b) — the stability test — holds the
+/// counter at zero regardless of (a).  A q-quorum can only terminate a
+/// client whose *heard* neighborhood is stable; see DESIGN.md §9 for the
+/// full argument.
+///
+/// ```
+/// use dfl::coordinator::termination::quorum_crash_free;
+///
+/// assert!(quorum_crash_free(0, 199, 1.0));
+/// assert!(!quorum_crash_free(1, 199, 1.0));   // paper-strict
+/// assert!(quorum_crash_free(29, 199, 0.85));  // ⌊0.15·199⌋ = 29 tolerated
+/// assert!(!quorum_crash_free(30, 199, 0.85));
+/// ```
+pub fn quorum_crash_free(newly_suspected: usize, neighborhood: usize, quorum: f32) -> bool {
+    let q = quorum.clamp(0.0, 1.0) as f64;
+    if q >= 1.0 {
+        // Exact zero-tolerance at any neighborhood size (the epsilon
+        // below would otherwise tolerate 1 at n >= 1e6).
+        return newly_suspected == 0;
+    }
+    // The epsilon absorbs the f32→f64 widening error of q (≈1.2e-7·n)
+    // so e.g. q = 0.8 over 10 peers tolerates the intended 2, not 1.
+    let tolerated = ((1.0 - q) * neighborhood as f64 + 1e-6 * neighborhood as f64).floor();
+    (newly_suspected as f64) <= tolerated
 }
 
 /// The CCC stability monitor over successive aggregated (global-average)
@@ -197,6 +249,34 @@ mod tests {
         // nor does a self trigger
         t.self_trigger(20);
         assert_eq!(t.at_round, Some(12));
+    }
+
+    #[test]
+    fn quorum_one_is_the_strict_paper_condition() {
+        for neighborhood in [0usize, 1, 5, 199, 9_999, 10_000_000] {
+            assert!(quorum_crash_free(0, neighborhood, 1.0));
+            assert!(
+                !quorum_crash_free(1, neighborhood, 1.0),
+                "q=1.0 must tolerate zero fresh suspicions (n={neighborhood})"
+            );
+        }
+    }
+
+    #[test]
+    fn quorum_tolerates_the_complement_fraction() {
+        // ⌊(1-q)·d⌋ boundary on both sides, including f32 boundary values
+        assert!(quorum_crash_free(2, 10, 0.8));
+        assert!(!quorum_crash_free(3, 10, 0.8));
+        assert!(quorum_crash_free(29, 199, 0.85));
+        assert!(!quorum_crash_free(30, 199, 0.85));
+        assert!(quorum_crash_free(1, 10, 0.9));
+        assert!(!quorum_crash_free(2, 10, 0.9));
+        // q = 0 disables condition (a) entirely
+        assert!(quorum_crash_free(10, 10, 0.0));
+        // out-of-range inputs clamp instead of exploding
+        assert!(quorum_crash_free(0, 10, 1.5));
+        assert!(!quorum_crash_free(1, 10, 1.5));
+        assert!(quorum_crash_free(10, 10, -0.2));
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Experiment drivers — one per table/figure of the paper's §4, plus the
-//! beyond-paper network-scenario matrix ([`scenarios()`]).
+//! beyond-paper network-scenario matrix ([`scenarios()`]) and sparse-
+//! overlay topology sweep ([`topologies()`]).
 //!
 //! Each driver runs the relevant deployments through [`crate::sim`] and
 //! returns a [`Table`] shaped like the paper's (same rows/series), so
@@ -28,13 +29,13 @@ pub use exp1::fig3_4;
 pub use exp2::fig5_6;
 pub use exp3::fig7_8;
 pub use phase1::{table3, table4};
-pub use scenarios::scenarios;
+pub use scenarios::{scenarios, topologies};
 pub use termination::termination_reliability;
 
 use std::time::Duration;
 
 use crate::coordinator::ProtocolConfig;
-use crate::net::NetPreset;
+use crate::net::{NetPreset, TopologySpec};
 use crate::runtime::{Meta, Trainer};
 use crate::sim::{ExecMode, SimConfig};
 use crate::util::benchkit::Table;
@@ -72,6 +73,13 @@ pub struct ExpScale {
     /// Override every driver's network with a named preset (None = each
     /// driver's own default, LAN unless the experiment says otherwise).
     pub net: Option<NetPreset>,
+    /// Override every async driver's peer overlay (None = each driver's
+    /// own default, the paper's full mesh).  Phase-1 drivers ignore it —
+    /// their barrier requires the full mesh.
+    pub topology: Option<TopologySpec>,
+    /// Override the quorum-CCC fraction `q` of condition (a)
+    /// (None = 1.0, the paper-strict condition).
+    pub quorum: Option<f32>,
 }
 
 impl Default for ExpScale {
@@ -87,6 +95,8 @@ impl Default for ExpScale {
             exec: ExecMode::Events,
             train_cost_ms: 20,
             net: None,
+            topology: None,
+            quorum: None,
         }
     }
 }
@@ -132,6 +142,7 @@ impl ExpScale {
             weight_by_samples: false,
             early_window_exit: true,
             crt_enabled: true,
+            quorum: self.quorum.unwrap_or(1.0),
         }
     }
 
@@ -150,6 +161,13 @@ impl ExpScale {
         cfg.virtual_time = self.virtual_time;
         cfg.exec = self.exec;
         cfg.train_cost = Duration::from_millis(self.train_cost_ms);
+        if let Some(topology) = self.topology {
+            // Phase-1 drivers keep the full mesh: their barrier waits on
+            // every peer, so a sparse override would abort the run.
+            if !cfg.sync {
+                cfg.topology = topology;
+            }
+        }
         if let Some(preset) = self.net {
             cfg.net = preset.model(self.seed);
             // A slow preset pushed into a paper table must not shrink below
@@ -200,6 +218,10 @@ pub fn run_all(trainer: &(dyn Trainer + Sync), scale: ExpScale) -> Vec<(String, 
         (
             "Scenario matrix — network presets (beyond paper)".into(),
             scenarios(trainer, scale),
+        ),
+        (
+            "Topology sweep — sparse overlays (beyond paper)".into(),
+            topologies(trainer, scale),
         ),
     ]
 }

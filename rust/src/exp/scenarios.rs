@@ -1,4 +1,10 @@
-//! Network-scenario matrix — the repo's first beyond-paper workload.
+//! Network-scenario matrix and topology sweep — beyond-paper workloads.
+//!
+//! Two drivers live here: [`scenarios`] sweeps the network presets on the
+//! paper's full mesh, and [`topologies`] sweeps the peer overlay
+//! (full / ring / k-regular / small-world, DESIGN.md §9) on one network,
+//! measuring the O(n·d) vs O(n²) per-round message volume directly from
+//! the hub counters.
 //!
 //! The paper evaluates on one LAN testbed; this driver sweeps the Phase-2
 //! asynchronous protocol across every [`NetPreset`] (DESIGN.md §3.4):
@@ -16,9 +22,9 @@
 //! * false suspicions — crash detections in a run with *no* faults: pure
 //!   network-induced misdiagnosis (late or lost updates past the window).
 
-use super::{pct, secs, ExpScale};
+use super::{clear_latency_ceiling, pct, secs, ExpScale};
 use crate::coordinator::termination::TerminationCause;
-use crate::net::NetPreset;
+use crate::net::{NetPreset, NetworkModel, TopologySpec};
 use crate::runtime::Trainer;
 use crate::sim::{self, Partition, SimConfig};
 use crate::util::benchkit::Table;
@@ -71,6 +77,71 @@ pub fn scenarios(trainer: &(dyn Trainer + Sync), scale: ExpScale) -> Table {
             secs(res.wall),
             format!("{:.0}", 100.0 * adaptive as f32 / n as f32),
             false_suspicions.to_string(),
+        ]);
+    }
+    table
+}
+
+/// Topology sweep (DESIGN.md §9) — the O(n·d) vs O(n²) message-volume
+/// comparison, measured: the Phase-2 protocol on one seed across the full
+/// mesh and the sparse overlay presets.  Everything but the overlay is
+/// held fixed (data, partitions, network, fault-freeness), so per-round
+/// message count and bytes isolate the dissemination cost, while rounds /
+/// adaptive-termination / accuracy show what multi-hop dissemination does
+/// to convergence and the CRT flood.
+pub fn topologies(trainer: &(dyn Trainer + Sync), scale: ExpScale) -> Table {
+    let meta = trainer.meta().clone();
+    let n = if scale.quick { 24 } else { 48 };
+    let sweep = [
+        TopologySpec::Full,
+        TopologySpec::Ring { k: 2 },
+        TopologySpec::KRegular { d: 6 },
+        TopologySpec::SmallWorld { d: 6, p: 0.1 },
+    ];
+    let mut table = Table::new(&[
+        "Topology",
+        "Max degree",
+        "Msgs/round",
+        "kB/round",
+        "Rounds",
+        "Adaptive Term. (%)",
+        "Accuracy (%)",
+    ]);
+    for spec in sweep {
+        // The overlay is the sweep variable; `scale.topology` (the global
+        // `--topology` override) must not leak into the sweep, so the row
+        // forces its own spec after `configure`.
+        let mut cfg = SimConfig::for_meta(n, &meta);
+        cfg.partition = Partition::Dirichlet(0.6);
+        scale.configure(&mut cfg, &meta);
+        if scale.net.is_none() {
+            // No global --net override: run the sweep's default (LAN)
+            // with the experiment seed, as scenarios() does, so a seed
+            // sweep actually varies the network schedule too.
+            cfg.net = NetworkModel::lan(scale.seed);
+            clear_latency_ceiling(&mut cfg, &meta);
+        }
+        cfg.topology = spec;
+        cfg.seed = scale.seed;
+        // Same derivation sim::run uses, so the column describes the
+        // graph this row actually ran on.
+        let graph = cfg.build_topology().expect("sweep spec");
+        let res = sim::run(trainer, &cfg).expect("topology run");
+        let adaptive = res
+            .reports
+            .iter()
+            .filter(|r| {
+                matches!(r.cause, TerminationCause::Converged | TerminationCause::Signaled)
+            })
+            .count();
+        table.row(&[
+            spec.name(),
+            graph.max_degree().to_string(),
+            format!("{:.0}", res.msgs_per_round()),
+            format!("{:.1}", res.net.bytes_per_round(res.rounds()) / 1024.0),
+            res.rounds().to_string(),
+            format!("{:.0}", 100.0 * adaptive as f32 / n as f32),
+            pct(res.mean_accuracy()),
         ]);
     }
     table

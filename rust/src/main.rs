@@ -26,6 +26,16 @@ use dfl::sim::{self, Partition, SimConfig};
 use dfl::util::cli::Flags;
 use dfl::util::Rng;
 
+/// Parse + range-check a `--quorum` value (shared by `sim` and `reproduce`).
+fn parse_quorum(a: &dfl::util::cli::Args) -> Result<f32> {
+    let quorum = a.f32("quorum")?;
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&quorum),
+        "--quorum must be in [0, 1], got {quorum}"
+    );
+    Ok(quorum)
+}
+
 fn artifacts_dir(config: &str) -> PathBuf {
     // honor DFL_ARTIFACTS for non-repo-root invocations
     let root = std::env::var("DFL_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
@@ -72,6 +82,8 @@ fn cmd_sim(args: Vec<String>) -> Result<()> {
         .opt("threshold", Some("0.015"), "CCC relative convergence threshold")
         .opt("train-n", Some("0"), "global train set size (0 = auto)")
         .opt("net", Some("lan"), "network preset (ideal|lan|wan|asym|lossy-burst)")
+        .opt("topology", Some("full"), "peer overlay: full | ring:K | k-regular:D | small-world:D:P")
+        .opt("quorum", Some("1.0"), "quorum-CCC fraction q of the neighborhood for condition (a); 1.0 = paper-strict")
         .opt("train-cost-ms", Some("20"), "modeled per-round train cost under --virtual")
         .opt("exec", Some("events"), "--virtual executor: events (state machines, zero per-client threads) or threads")
         .switch("virtual", "deterministic virtual clock instead of wall time")
@@ -96,6 +108,8 @@ fn cmd_sim(args: Vec<String>) -> Result<()> {
     };
     cfg.seed = a.u64("seed")?;
     cfg.net = dfl::net::NetworkModel::preset(a.str("net"), cfg.seed)?;
+    cfg.topology = dfl::net::TopologySpec::parse(a.str("topology"))?;
+    cfg.protocol.quorum = parse_quorum(&a)?;
     cfg.virtual_time = a.bool("virtual");
     cfg.exec = dfl::sim::ExecMode::parse(a.str("exec"))?;
     cfg.train_cost = std::time::Duration::from_millis(a.u64("train-cost-ms")?);
@@ -124,12 +138,14 @@ fn cmd_sim(args: Vec<String>) -> Result<()> {
         );
     }
     println!(
-        "running {} clients ({}), {} machines, {} crashes, net {}, {} clock{}, seed {}",
+        "running {} clients ({}), {} machines, {} crashes, net {}, topology {} (q={}), {} clock{}, seed {}",
         n,
         if cfg.sync { "phase 1 sync" } else { "phase 2 async" },
         cfg.machines,
         crashes,
         a.str("net"),
+        cfg.topology.name(),
+        cfg.protocol.quorum,
         if cfg.virtual_time { "virtual" } else { "wall" },
         if cfg.virtual_time {
             format!(" ({} executor)", cfg.exec.name())
@@ -167,10 +183,11 @@ fn cmd_sim(args: Vec<String>) -> Result<()> {
         );
     }
     println!(
-        "mean accuracy {} | rounds {} | wall {:.2}s | machine times {:?}",
+        "mean accuracy {} | rounds {} | wall {:.2}s | msgs/round {:.0} | machine times {:?}",
         res.mean_accuracy().map(|a| format!("{:.2}%", a * 100.0)).unwrap_or("-".into()),
         res.rounds(),
         res.wall.as_secs_f64(),
+        res.msgs_per_round(),
         res.machine_times().iter().map(|t| format!("{:.2}s", t.as_secs_f64())).collect::<Vec<_>>(),
     );
     Ok(())
@@ -266,6 +283,8 @@ fn cmd_reproduce(args: Vec<String>) -> Result<()> {
         .opt("out", Some(""), "append markdown to this file")
         .opt("seed", Some("2025"), "experiment seed (same seed ⇒ identical tables)")
         .opt("net", Some(""), "override every driver's network with a preset (ideal|lan|wan|asym|lossy-burst)")
+        .opt("topology", Some(""), "override every async driver's peer overlay (full|ring:K|k-regular:D|small-world:D:P)")
+        .opt("quorum", Some(""), "override the quorum-CCC fraction q (condition (a)); empty = 1.0, paper-strict")
         .opt("train-cost-ms", Some("20"), "modeled per-round train cost under virtual time")
         .opt("exec", Some("events"), "virtual-time executor: events or threads")
         .switch("full", "full grids (slower) instead of quick mode")
@@ -280,6 +299,12 @@ fn cmd_reproduce(args: Vec<String>) -> Result<()> {
     scale.train_cost_ms = a.u64("train-cost-ms")?;
     if !a.str("net").is_empty() {
         scale.net = Some(dfl::net::NetPreset::parse(a.str("net"))?);
+    }
+    if !a.str("topology").is_empty() {
+        scale.topology = Some(dfl::net::TopologySpec::parse(a.str("topology"))?);
+    }
+    if !a.str("quorum").is_empty() {
+        scale.quorum = Some(parse_quorum(&a)?);
     }
 
     let runs: Vec<(String, dfl::util::benchkit::Table)> = match what {
@@ -302,8 +327,11 @@ fn cmd_reproduce(args: Vec<String>) -> Result<()> {
         "scenarios" | "matrix" => {
             vec![("Scenario matrix".into(), exp::scenarios(&engine, scale))]
         }
+        "topologies" | "topo" => {
+            vec![("Topology sweep".into(), exp::topologies(&engine, scale))]
+        }
         other => bail!(
-            "unknown experiment {other:?}; want all|table2|table3|table4|fig3_4|fig5_6|fig7_8|termination|scenarios"
+            "unknown experiment {other:?}; want all|table2|table3|table4|fig3_4|fig5_6|fig7_8|termination|scenarios|topologies"
         ),
     };
     let mut md = String::new();

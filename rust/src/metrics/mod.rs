@@ -76,6 +76,37 @@ impl ClientReport {
     }
 }
 
+/// Aggregate network-traffic counters of one simulated deployment (both
+/// in-proc hubs count; collected into `sim::SimResult::net`).  This is
+/// how the topology layer's O(n·d) claim is *measured* instead of argued:
+/// a full mesh sends ~n·(n−1) updates per round, a degree-d overlay ~n·d.
+///
+/// `msgs_sent`/`bytes_sent` count every send attempt a client made (the
+/// offered load); `msgs_delivered` counts what the network actually
+/// handed (or scheduled) to a receiver; `msgs_dropped` is the difference
+/// — injected link blocks, partitions, and sampled (independent or
+/// burst) loss.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct NetStats {
+    pub msgs_sent: u64,
+    pub msgs_delivered: u64,
+    pub msgs_dropped: u64,
+    pub bytes_sent: u64,
+}
+
+impl NetStats {
+    /// Mean messages offered per protocol round (the O(n·d) vs O(n²)
+    /// comparison axis; `rounds` from `sim::SimResult::rounds`).
+    pub fn msgs_per_round(&self, rounds: u32) -> f64 {
+        self.msgs_sent as f64 / rounds.max(1) as f64
+    }
+
+    /// Mean bytes offered per protocol round.
+    pub fn bytes_per_round(&self, rounds: u32) -> f64 {
+        self.bytes_sent as f64 / rounds.max(1) as f64
+    }
+}
+
 /// Mean of an f32 iterator (None when empty) — small shared helper.
 pub fn mean<I: IntoIterator<Item = f32>>(xs: I) -> Option<f32> {
     let mut sum = 0.0f64;
@@ -90,6 +121,14 @@ pub fn mean<I: IntoIterator<Item = f32>>(xs: I) -> Option<f32> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn net_stats_per_round_guards_zero_rounds() {
+        let s = NetStats { msgs_sent: 120, msgs_delivered: 100, msgs_dropped: 20, bytes_sent: 1200 };
+        assert_eq!(s.msgs_per_round(10), 12.0);
+        assert_eq!(s.bytes_per_round(10), 120.0);
+        assert_eq!(s.msgs_per_round(0), 120.0, "0 rounds must not divide by zero");
+    }
 
     #[test]
     fn mean_works() {

@@ -35,7 +35,7 @@
 
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BinaryHeap, HashSet};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -44,9 +44,47 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::message::{ClientId, Msg};
+use super::topology::Topology;
 use super::Transport;
+use crate::metrics::NetStats;
 use crate::util::time::{Clock, SimTime, VirtualClock};
 use crate::util::Rng;
+
+/// Shared traffic counters (one set per hub, lock-free): every endpoint
+/// send bumps these, [`InProcHub::net_stats`] / [`VirtualHub::net_stats`]
+/// snapshot them into the [`NetStats`] the simulator reports.  Counting
+/// never touches the RNG streams or the event schedule, so it cannot
+/// perturb determinism.
+#[derive(Default)]
+struct NetCounters {
+    sent: AtomicU64,
+    delivered: AtomicU64,
+    bytes: AtomicU64,
+}
+
+impl NetCounters {
+    fn count_send(&self, bytes: usize) {
+        self.sent.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    fn count_delivered(&self) {
+        self.delivered.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Drops are derived (`sent − delivered`) rather than counted, so the
+    /// invariant cannot drift as loss paths are added.
+    fn snapshot(&self) -> NetStats {
+        let sent = self.sent.load(Ordering::Relaxed);
+        let delivered = self.delivered.load(Ordering::Relaxed);
+        NetStats {
+            msgs_sent: sent,
+            msgs_delivered: delivered,
+            msgs_dropped: sent.saturating_sub(delivered),
+            bytes_sent: self.bytes.load(Ordering::Relaxed),
+        }
+    }
+}
 
 /// A time-windowed network partition: while `start <= t < end`, messages
 /// between `side_a` and everyone else are silently lost in both directions.
@@ -452,6 +490,9 @@ struct HubShared {
     blocked: Mutex<HashSet<(ClientId, ClientId)>>,
     /// Hub creation time: the reference point for `NetSplit` windows.
     epoch: Instant,
+    /// Peer overlay: which peers each endpoint's broadcasts reach.
+    topology: Arc<Topology>,
+    stats: NetCounters,
 }
 
 impl HubShared {
@@ -472,7 +513,17 @@ pub struct InProcHub {
 }
 
 impl InProcHub {
+    /// A full-mesh hub (the pre-topology behaviour).
     pub fn new(n: usize, model: NetworkModel) -> Self {
+        Self::with_topology(n, model, Arc::new(Topology::full(n)))
+    }
+
+    /// A hub whose broadcasts follow `topology` (each endpoint's
+    /// [`Transport::neighbors`] is its overlay neighborhood).  Direct
+    /// `send` to any peer stays possible — the overlay scopes
+    /// *dissemination*, it is not a reachability firewall.
+    pub fn with_topology(n: usize, model: NetworkModel, topology: Arc<Topology>) -> Self {
+        assert_eq!(topology.n(), n, "topology built for a different deployment size");
         let mut inboxes = Vec::with_capacity(n);
         let mut receivers = Vec::with_capacity(n);
         for _ in 0..n {
@@ -490,6 +541,8 @@ impl InProcHub {
             seq: Mutex::new(0),
             blocked: Mutex::new(HashSet::new()),
             epoch: Instant::now(),
+            topology,
+            stats: NetCounters::default(),
         });
         let timer = {
             let shared = Arc::clone(&shared);
@@ -518,6 +571,11 @@ impl InProcHub {
         } else {
             set.remove(&(from, to));
         }
+    }
+
+    /// Snapshot the hub's traffic counters.
+    pub fn net_stats(&self) -> NetStats {
+        self.shared.stats.snapshot()
     }
 }
 
@@ -573,7 +631,20 @@ impl Transport for Endpoint {
         (0..self.n as ClientId).filter(|&p| p != self.id).collect()
     }
 
+    fn n_peers(&self) -> usize {
+        self.n.saturating_sub(1)
+    }
+
+    fn neighbors(&self) -> Vec<ClientId> {
+        self.shared.topology.neighbors(self.id)
+    }
+
     fn send(&self, to: ClientId, msg: &Msg) -> Result<()> {
+        // Exercise the wire format on every in-proc message (encoding is
+        // pure, so doing it before the loss checks only feeds the traffic
+        // counters — the schedule is untouched).
+        let wire = msg.encode();
+        self.shared.stats.count_send(wire.len());
         if self.shared.blocked.lock().unwrap().contains(&(self.id, to)) {
             return Ok(()); // injected link failure: message lost
         }
@@ -581,14 +652,13 @@ impl Transport for Endpoint {
         if self.shared.model.splits.iter().any(|sp| sp.severs(at, self.id, to)) {
             return Ok(()); // partitioned: message lost
         }
-        // Exercise the wire format on every in-proc message.
-        let wire = msg.encode();
         let decoded = Msg::decode(&wire)?;
         let Some((delay, _)) =
             sample_link(&self.shared.links, &self.shared.model, self.id, to, wire.len())
         else {
             return Ok(()); // dropped (independent or burst loss)
         };
+        self.shared.stats.count_delivered();
         if delay.is_zero() {
             self.shared.deliver(to as usize, decoded);
         } else {
@@ -626,6 +696,9 @@ struct VirtualHubShared {
     clock: Arc<VirtualClock>,
     links: Mutex<BTreeMap<(ClientId, ClientId), LinkState>>,
     blocked: Mutex<HashSet<(ClientId, ClientId)>>,
+    /// Peer overlay: which peers each endpoint's broadcasts reach.
+    topology: Arc<Topology>,
+    stats: NetCounters,
 }
 
 /// The virtual-time simulated network: deliveries are events on a shared
@@ -639,7 +712,20 @@ pub struct VirtualHub {
 
 impl VirtualHub {
     /// `clock` must have been created with (at least) `n` tokens.
+    /// Full-mesh overlay (the pre-topology behaviour).
     pub fn new(n: usize, model: NetworkModel, clock: Arc<VirtualClock>) -> Self {
+        Self::with_topology(n, model, clock, Arc::new(Topology::full(n)))
+    }
+
+    /// A virtual hub whose broadcasts follow `topology` (see
+    /// [`InProcHub::with_topology`]).
+    pub fn with_topology(
+        n: usize,
+        model: NetworkModel,
+        clock: Arc<VirtualClock>,
+        topology: Arc<Topology>,
+    ) -> Self {
+        assert_eq!(topology.n(), n, "topology built for a different deployment size");
         VirtualHub {
             shared: Arc::new(VirtualHubShared {
                 n,
@@ -647,6 +733,8 @@ impl VirtualHub {
                 clock,
                 links: Mutex::new(BTreeMap::new()),
                 blocked: Mutex::new(HashSet::new()),
+                topology,
+                stats: NetCounters::default(),
             }),
             claimed: Mutex::new(vec![false; n]),
         }
@@ -676,6 +764,11 @@ impl VirtualHub {
     pub fn clock(&self) -> Arc<VirtualClock> {
         Arc::clone(&self.shared.clock)
     }
+
+    /// Snapshot the hub's traffic counters.
+    pub fn net_stats(&self) -> NetStats {
+        self.shared.stats.snapshot()
+    }
 }
 
 /// One client's handle onto the virtual network.  Its `recv` waits advance
@@ -701,6 +794,7 @@ impl VirtualEndpoint {
     /// encode + n refcounts instead of n copies of the model.
     fn send_encoded(&self, to: ClientId, wire: &Arc<[u8]>) {
         let sh = &self.shared;
+        sh.stats.count_send(wire.len());
         if sh.blocked.lock().unwrap().contains(&(self.id, to)) {
             return; // injected link failure: message lost
         }
@@ -714,6 +808,7 @@ impl VirtualEndpoint {
         };
         // The codec round-trip happens decode-side (recv_timeout), keeping
         // parity with the wall-clock hub's coverage of the wire format.
+        sh.stats.count_delivered();
         sh.clock.post(to as usize, delay, (self.id, to, seq), Arc::clone(wire));
     }
 }
@@ -731,20 +826,29 @@ impl Transport for VirtualEndpoint {
         (0..self.shared.n as ClientId).filter(|&p| p != self.id).collect()
     }
 
+    fn n_peers(&self) -> usize {
+        self.shared.n.saturating_sub(1)
+    }
+
+    fn neighbors(&self) -> Vec<ClientId> {
+        self.shared.topology.neighbors(self.id)
+    }
+
     fn send(&self, to: ClientId, msg: &Msg) -> Result<()> {
         let wire: Arc<[u8]> = msg.encode().into();
         self.send_encoded(to, &wire);
         Ok(())
     }
 
-    /// Encode once, post per peer (same per-link sampling and ascending
-    /// peer order as the default per-peer `send` loop, so the network
-    /// schedule is unchanged — only the allocations are).
+    /// Encode once, post per overlay neighbor (same per-link sampling and
+    /// ascending order as the default per-peer `send` loop — on a full
+    /// mesh the neighbor list *is* the ascending peer list, so the
+    /// network schedule is unchanged; only the allocations are).
     fn broadcast(&self, msg: &Msg) -> Result<()> {
         let wire: Arc<[u8]> = msg.encode().into();
-        for p in self.peers() {
+        self.shared.topology.for_each_neighbor(self.id, |p| {
             self.send_encoded(p, &wire);
-        }
+        });
         Ok(())
     }
 
@@ -826,6 +930,29 @@ mod tests {
             a.send(1, &update(0, r)).unwrap();
         }
         assert!(b.recv_timeout(Duration::from_millis(50)).is_none());
+        let stats = hub.net_stats();
+        assert_eq!(stats.msgs_sent, 10);
+        assert_eq!(stats.msgs_dropped, 10, "a 100% lossy link drops every send");
+        assert_eq!(stats.msgs_delivered, 0);
+    }
+
+    #[test]
+    fn topology_scopes_broadcast_and_counters_measure_it() {
+        use crate::net::topology::TopologySpec;
+        let topo = Arc::new(TopologySpec::Ring { k: 1 }.build(4, 5).unwrap());
+        let hub = InProcHub::with_topology(4, NetworkModel::ideal(), topo);
+        let eps: Vec<Endpoint> = (0..4).map(|i| hub.endpoint(i)).collect();
+        assert_eq!(eps[0].neighbors(), vec![1, 3], "ring:1 neighborhood of 0");
+        assert_eq!(eps[0].peers(), vec![1, 2, 3], "peers stays the full set");
+        eps[0].broadcast(&update(0, 1)).unwrap();
+        assert_eq!(eps[1].recv_timeout(Duration::from_secs(1)), Some(update(0, 1)));
+        assert_eq!(eps[3].recv_timeout(Duration::from_secs(1)), Some(update(0, 1)));
+        assert!(eps[2].try_recv().is_none(), "non-neighbor heard a broadcast");
+        let stats = hub.net_stats();
+        assert_eq!(stats.msgs_sent, 2, "degree-2 broadcast is 2 sends, not n-1");
+        assert_eq!(stats.msgs_delivered, 2);
+        assert_eq!(stats.msgs_dropped, 0);
+        assert_eq!(stats.bytes_sent, 2 * update(0, 1).encode().len() as u64);
     }
 
     #[test]

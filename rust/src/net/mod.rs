@@ -22,12 +22,14 @@
 pub mod inproc;
 pub mod message;
 pub mod tcp;
+pub mod topology;
 
 pub use inproc::{
     GilbertElliott, InProcHub, NetPreset, NetSplit, NetworkModel, VirtualEndpoint, VirtualHub,
 };
 pub use message::{ClientId, ModelUpdate, Msg};
 pub use tcp::TcpTransport;
+pub use topology::{Topology, TopologySpec};
 
 use std::time::Duration;
 
@@ -53,13 +55,32 @@ pub trait Transport: Send {
     /// All peers this endpoint can address (excluding itself).
     fn peers(&self) -> Vec<ClientId>;
 
+    /// How many peers this endpoint can address (excluding itself).
+    /// Override where the count is known without materializing the list —
+    /// at 10 000 clients the default would allocate a 10 000-entry `Vec`
+    /// per call.
+    fn n_peers(&self) -> usize {
+        self.peers().len()
+    }
+
+    /// The peers this endpoint *disseminates to* — its overlay
+    /// neighborhood ([`topology::Topology`]), ascending.  Defaults to all
+    /// peers (the full mesh); transports built over a sparse overlay
+    /// return the neighbor set instead, and protocol code that used to
+    /// range over `peers()` (liveness tracking, wait windows, broadcasts)
+    /// ranges over this.
+    fn neighbors(&self) -> Vec<ClientId> {
+        self.peers()
+    }
+
     /// Send to one peer. Returns Ok even if the peer never receives it
     /// (crash model); hard local errors (e.g. serialization) are Err.
     fn send(&self, to: ClientId, msg: &Msg) -> Result<()>;
 
-    /// Broadcast to every peer (best effort, independent per peer).
+    /// Broadcast to every overlay neighbor (best effort, independent per
+    /// peer; the whole peer set on a full mesh).
     fn broadcast(&self, msg: &Msg) -> Result<()> {
-        for p in self.peers() {
+        for p in self.neighbors() {
             self.send(p, msg)?;
         }
         Ok(())

@@ -168,6 +168,10 @@ impl Transport for TcpTransport {
         self.peer_addrs.keys().copied().collect()
     }
 
+    fn n_peers(&self) -> usize {
+        self.peer_addrs.len()
+    }
+
     fn send(&self, to: ClientId, msg: &Msg) -> Result<()> {
         let bytes = codec::frame(&msg.encode());
         let mut conns = self.conns.lock().unwrap();

@@ -1,0 +1,516 @@
+//! Sparse peer-overlay graphs — the topology layer (DESIGN.md §9).
+//!
+//! The paper's Phase-2 protocol broadcasts every update to every peer:
+//! O(n²) messages per round, which is what bounds 10 000-client rounds in
+//! both time and memory.  Production decentralized-FL systems replace the
+//! full mesh with a sparse overlay: each client exchanges models only with
+//! a small neighbor set, and global information (convergence, termination)
+//! reaches the rest of the graph over multiple hops.  This module provides
+//! that overlay as a seeded, deterministic graph shared by both in-proc
+//! hubs:
+//!
+//! * [`TopologySpec`] — the CLI-facing description (`full`, `ring:K`,
+//!   `k-regular:D`, `small-world:D:P`), a pure value carried by
+//!   `SimConfig`.
+//! * [`Topology`] — the built graph: one sorted neighbor list per client,
+//!   undirected (neighborhoods are mutual, so liveness tracking and relays
+//!   work in both directions) and connected by construction (every
+//!   non-full preset keeps the offset-1 ring intact).
+//!
+//! Determinism contract: the adjacency is a pure function of
+//! `(spec, n, seed)` — same inputs, same graph, independent of build
+//! order or thread interleaving — and on `full` the neighbor list of
+//! client `i` is exactly the ascending all-peers list the pre-topology
+//! transports produced, so a full-overlay run is byte-identical to the
+//! pre-refactor behaviour.
+
+use std::collections::BTreeSet;
+
+use anyhow::{bail, Result};
+
+use super::message::ClientId;
+use crate::util::Rng;
+
+/// Salt separating the graph-construction RNG stream from every other
+/// consumer of the deployment seed.
+const TOPO_SALT: u64 = 0x7090_1060_0000;
+
+/// Which overlay to build (the `--topology` flag).  `Full` reproduces the
+/// paper's all-to-all dissemination exactly; the sparse presets trade
+/// per-round message volume O(n²) → O(n·d) for multi-hop dissemination
+/// latency.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TopologySpec {
+    /// All-to-all (the paper's assumption; the default).
+    Full,
+    /// Circulant ring: client `i` connects to `i ± 1..=k` (mod n),
+    /// degree `min(2k, n−1)`.
+    Ring { k: usize },
+    /// Random circulant: `⌊d/2⌋` seeded distinct ring offsets (offset 1
+    /// forced for connectivity), degree ≈ `d` (exact for even `d`; odd
+    /// `d` adds the antipodal chord when `n` is even, else rounds down).
+    KRegular { d: usize },
+    /// Watts–Strogatz small world: a `ring(d/2)` base whose long-range
+    /// chords (offset ≥ 2) are each rewired to a random peer with
+    /// probability `p`; offset-1 edges are never rewired, keeping the
+    /// graph connected.
+    SmallWorld { d: usize, p: f64 },
+}
+
+impl TopologySpec {
+    /// The CLI spelling (`full`, `ring:2`, `k-regular:8`,
+    /// `small-world:8:0.1`).
+    pub fn name(self) -> String {
+        match self {
+            TopologySpec::Full => "full".into(),
+            TopologySpec::Ring { k } => format!("ring:{k}"),
+            TopologySpec::KRegular { d } => format!("k-regular:{d}"),
+            TopologySpec::SmallWorld { d, p } => format!("small-world:{d}:{p}"),
+        }
+    }
+
+    /// Parse a CLI spelling.
+    ///
+    /// ```
+    /// use dfl::net::TopologySpec;
+    ///
+    /// assert_eq!(TopologySpec::parse("full").unwrap(), TopologySpec::Full);
+    /// assert_eq!(TopologySpec::parse("ring:2").unwrap(), TopologySpec::Ring { k: 2 });
+    /// assert_eq!(TopologySpec::parse("k-regular:8").unwrap(), TopologySpec::KRegular { d: 8 });
+    /// assert!(TopologySpec::parse("torus:3").is_err());
+    /// ```
+    pub fn parse(s: &str) -> Result<TopologySpec> {
+        let mut parts = s.split(':');
+        let kind = parts.next().unwrap_or("");
+        let arg = |p: Option<&str>, what: &str| -> Result<usize> {
+            p.and_then(|v| v.parse().ok())
+                .ok_or_else(|| anyhow::anyhow!("topology {s:?}: missing/bad {what}"))
+        };
+        let spec = match kind {
+            "full" => TopologySpec::Full,
+            "ring" => TopologySpec::Ring { k: arg(parts.next(), "ring width k")? },
+            "k-regular" | "kreg" => TopologySpec::KRegular { d: arg(parts.next(), "degree d")? },
+            "small-world" | "sw" => {
+                let d = arg(parts.next(), "degree d")?;
+                let p: f64 = parts
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .ok_or_else(|| anyhow::anyhow!("topology {s:?}: missing/bad rewire p"))?;
+                TopologySpec::SmallWorld { d, p }
+            }
+            _ => bail!(
+                "unknown topology {s:?} (want full | ring:K | k-regular:D | small-world:D:P)"
+            ),
+        };
+        if parts.next().is_some() {
+            bail!("topology {s:?}: trailing arguments");
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Degree/probability sanity (n-independent; n-dependent clamping
+    /// happens in [`TopologySpec::build`]).
+    pub fn validate(self) -> Result<()> {
+        match self {
+            TopologySpec::Full => {}
+            TopologySpec::Ring { k } => {
+                if k == 0 {
+                    bail!("ring topology needs k >= 1");
+                }
+            }
+            TopologySpec::KRegular { d } => {
+                if d < 2 {
+                    bail!("k-regular topology needs degree d >= 2");
+                }
+            }
+            TopologySpec::SmallWorld { d, p } => {
+                if d < 2 {
+                    bail!("small-world topology needs degree d >= 2");
+                }
+                if !(0.0..=1.0).contains(&p) {
+                    bail!("small-world rewire probability must be in [0, 1], got {p}");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The simplest strictly-smaller spec along the degree axis, if any
+    /// (the shrink dimension `util::quickcheck::shrink_sim_config` walks
+    /// before falling back to `Full`).
+    pub fn shrink_degree(self) -> Option<TopologySpec> {
+        match self {
+            TopologySpec::Full => None,
+            TopologySpec::Ring { k } if k > 1 => Some(TopologySpec::Ring { k: k / 2 }),
+            TopologySpec::Ring { .. } => None,
+            TopologySpec::KRegular { d } if d > 2 => {
+                Some(TopologySpec::KRegular { d: (d / 2).max(2) })
+            }
+            TopologySpec::KRegular { .. } => None,
+            TopologySpec::SmallWorld { d, p } if d > 2 => {
+                Some(TopologySpec::SmallWorld { d: (d / 2).max(2), p })
+            }
+            TopologySpec::SmallWorld { .. } => None,
+        }
+    }
+
+    /// Build the overlay for an `n`-client deployment.  Deterministic in
+    /// `(self, n, seed)`.  Any spec whose requested degree reaches `n − 1`
+    /// degenerates to the full mesh.
+    pub fn build(self, n: usize, seed: u64) -> Result<Topology> {
+        self.validate()?;
+        let full = Topology { spec: self, n, adj: None };
+        if n <= 2 {
+            return Ok(full); // 0/1/2 clients: every overlay is the mesh
+        }
+        let adj = match self {
+            TopologySpec::Full => return Ok(full),
+            TopologySpec::Ring { k } => {
+                if 2 * k >= n - 1 {
+                    return Ok(full);
+                }
+                circulant(n, &(1..=k).collect::<Vec<_>>(), false)
+            }
+            TopologySpec::KRegular { d } => {
+                let d = d.min(n - 1);
+                if d >= n - 1 {
+                    return Ok(full);
+                }
+                // Offsets 1..=(n−1)/2 each contribute degree 2; the forced
+                // offset 1 keeps the ring (and therefore the graph)
+                // connected, the rest are a seeded sample without
+                // replacement.  An odd degree on even n adds the antipodal
+                // chord n/2 (degree +1).
+                let mut rng = Rng::new(seed ^ TOPO_SALT);
+                let mut pool: Vec<usize> = (2..=(n - 1) / 2).collect();
+                rng.shuffle(&mut pool);
+                let mut offsets = vec![1usize];
+                offsets.extend(pool.into_iter().take((d / 2).saturating_sub(1)));
+                circulant(n, &offsets, d % 2 == 1 && n % 2 == 0)
+            }
+            TopologySpec::SmallWorld { d, p } => {
+                let h = (d / 2).max(1);
+                if 2 * h >= n - 1 {
+                    return Ok(full);
+                }
+                let mut sets = circulant_sets(n, &(1..=h).collect::<Vec<_>>(), false);
+                // Watts–Strogatz rewiring over the long-range chords only
+                // (offset >= 2); the offset-1 ring is left intact so the
+                // graph stays connected.  Deterministic iteration order:
+                // ascending (i, offset).
+                let mut rng = Rng::new(seed ^ TOPO_SALT);
+                for i in 0..n {
+                    for o in 2..=h {
+                        let j = (i + o) % n;
+                        if rng.f64() >= p {
+                            continue;
+                        }
+                        // Pick a fresh endpoint; bounded retries keep the
+                        // build total even in dense corners, and giving up
+                        // just keeps the original chord.
+                        for _ in 0..8 {
+                            let t = rng.below(n);
+                            if t != i && t != j && !sets[i].contains(&(t as ClientId)) {
+                                sets[i].remove(&(j as ClientId));
+                                sets[j].remove(&(i as ClientId));
+                                sets[i].insert(t as ClientId);
+                                sets[t].insert(i as ClientId);
+                                break;
+                            }
+                        }
+                    }
+                }
+                finalize(sets)
+            }
+        };
+        Ok(Topology { spec: self, n, adj: Some(adj) })
+    }
+}
+
+/// Circulant adjacency as sorted neighbor lists.
+fn circulant(n: usize, offsets: &[usize], antipode: bool) -> Vec<Vec<ClientId>> {
+    finalize(circulant_sets(n, offsets, antipode))
+}
+
+/// Circulant adjacency as sets (the small-world rewiring substrate).
+fn circulant_sets(n: usize, offsets: &[usize], antipode: bool) -> Vec<BTreeSet<ClientId>> {
+    let mut sets = vec![BTreeSet::new(); n];
+    for i in 0..n {
+        for &o in offsets {
+            let j = (i + o) % n;
+            sets[i].insert(j as ClientId);
+            sets[j].insert(i as ClientId);
+        }
+        if antipode {
+            let j = (i + n / 2) % n;
+            sets[i].insert(j as ClientId);
+            sets[j].insert(i as ClientId);
+        }
+    }
+    sets
+}
+
+fn finalize(sets: Vec<BTreeSet<ClientId>>) -> Vec<Vec<ClientId>> {
+    sets.into_iter().map(|s| s.into_iter().collect()).collect()
+}
+
+/// A built overlay: one sorted neighbor list per client.  The full mesh
+/// is represented implicitly (no adjacency is materialized), so a
+/// 10 000-client full-topology deployment costs no O(n²) memory here.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    spec: TopologySpec,
+    n: usize,
+    /// `None` = full mesh (implicit); `Some` = sparse adjacency, each
+    /// list sorted ascending.
+    adj: Option<Vec<Vec<ClientId>>>,
+}
+
+impl Topology {
+    /// The all-to-all overlay for `n` clients (what every deployment used
+    /// before the topology layer existed).
+    pub fn full(n: usize) -> Topology {
+        Topology { spec: TopologySpec::Full, n, adj: None }
+    }
+
+    pub fn spec(&self) -> TopologySpec {
+        self.spec
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Is this the all-to-all mesh? (Multi-hop relays are pointless —
+    /// and disabled — on a full overlay.)
+    pub fn is_full(&self) -> bool {
+        self.adj.is_none()
+    }
+
+    /// The neighbor set of `id`, ascending.  On the full mesh this is
+    /// exactly the ascending all-peers list (the pre-topology `peers()`
+    /// order — the byte-identity contract).
+    pub fn neighbors(&self, id: ClientId) -> Vec<ClientId> {
+        match &self.adj {
+            None => (0..self.n as ClientId).filter(|&p| p != id).collect(),
+            Some(adj) => adj[id as usize].clone(),
+        }
+    }
+
+    /// Visit `id`'s neighbors in ascending order without allocating.
+    pub fn for_each_neighbor(&self, id: ClientId, mut f: impl FnMut(ClientId)) {
+        match &self.adj {
+            None => (0..self.n as ClientId).filter(|&p| p != id).for_each(&mut f),
+            Some(adj) => adj[id as usize].iter().copied().for_each(&mut f),
+        }
+    }
+
+    pub fn degree(&self, id: ClientId) -> usize {
+        match &self.adj {
+            None => self.n.saturating_sub(1),
+            Some(adj) => adj[id as usize].len(),
+        }
+    }
+
+    pub fn max_degree(&self) -> usize {
+        match &self.adj {
+            None => self.n.saturating_sub(1),
+            Some(adj) => adj.iter().map(Vec::len).max().unwrap_or(0),
+        }
+    }
+
+    /// Total undirected edges.
+    pub fn edges(&self) -> usize {
+        match &self.adj {
+            None => self.n * self.n.saturating_sub(1) / 2,
+            Some(adj) => adj.iter().map(Vec::len).sum::<usize>() / 2,
+        }
+    }
+
+    /// Is every client reachable from client 0?  All presets guarantee
+    /// this by construction (the offset-1 ring is never broken); the
+    /// check exists for tests and debug assertions.
+    pub fn is_connected(&self) -> bool {
+        if self.n <= 1 {
+            return true;
+        }
+        let Some(adj) = &self.adj else { return true };
+        let mut seen = vec![false; self.n];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(i) = stack.pop() {
+            for &j in &adj[i] {
+                if !seen[j as usize] {
+                    seen[j as usize] = true;
+                    count += 1;
+                    stack.push(j as usize);
+                }
+            }
+        }
+        count == self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_undirected(t: &Topology) {
+        for i in 0..t.n() as ClientId {
+            for j in t.neighbors(i) {
+                assert_ne!(i, j, "self loop at {i}");
+                assert!(
+                    t.neighbors(j).contains(&i),
+                    "edge {i}->{j} has no reverse"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn full_matches_pretopology_peer_order() {
+        let t = Topology::full(5);
+        assert!(t.is_full());
+        assert_eq!(t.neighbors(2), vec![0, 1, 3, 4]);
+        assert_eq!(t.degree(2), 4);
+        let mut visited = Vec::new();
+        t.for_each_neighbor(2, |p| visited.push(p));
+        assert_eq!(visited, vec![0, 1, 3, 4], "iteration must match allocation");
+    }
+
+    #[test]
+    fn ring_degree_and_symmetry() {
+        let t = TopologySpec::Ring { k: 2 }.build(10, 7).unwrap();
+        assert!(!t.is_full());
+        for i in 0..10 {
+            assert_eq!(t.degree(i), 4, "ring:2 degree at {i}");
+        }
+        assert_eq!(t.neighbors(0), vec![1, 2, 8, 9]);
+        assert_undirected(&t);
+        assert!(t.is_connected());
+    }
+
+    #[test]
+    fn wide_ring_degenerates_to_full() {
+        let t = TopologySpec::Ring { k: 5 }.build(8, 7).unwrap();
+        assert!(t.is_full(), "2k >= n-1 must be the mesh");
+        assert_eq!(t.neighbors(3), vec![0, 1, 2, 4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn k_regular_is_regular_connected_and_seeded() {
+        for seed in [1u64, 2, 99] {
+            let t = TopologySpec::KRegular { d: 6 }.build(50, seed).unwrap();
+            for i in 0..50 {
+                assert_eq!(t.degree(i), 6, "seed {seed} client {i}");
+            }
+            assert_undirected(&t);
+            assert!(t.is_connected(), "seed {seed}");
+        }
+        // deterministic per seed, different across seeds (50 choose 2
+        // offsets — a collision would be a broken RNG stream)
+        let a = TopologySpec::KRegular { d: 6 }.build(50, 1).unwrap();
+        let b = TopologySpec::KRegular { d: 6 }.build(50, 1).unwrap();
+        let c = TopologySpec::KRegular { d: 6 }.build(50, 2).unwrap();
+        assert_eq!(a.neighbors(0), b.neighbors(0), "same seed, same graph");
+        assert_ne!(
+            (0..50).map(|i| a.neighbors(i)).collect::<Vec<_>>(),
+            (0..50).map(|i| c.neighbors(i)).collect::<Vec<_>>(),
+            "different seeds must differ somewhere"
+        );
+    }
+
+    #[test]
+    fn k_regular_odd_degree_even_n_uses_antipode() {
+        let t = TopologySpec::KRegular { d: 5 }.build(12, 3).unwrap();
+        for i in 0..12 {
+            assert_eq!(t.degree(i), 5, "antipodal chord must top up odd degree");
+        }
+        assert!(t.neighbors(0).contains(&6), "antipode of 0 in a 12-ring");
+    }
+
+    #[test]
+    fn small_world_stays_connected_and_near_degree() {
+        let t = TopologySpec::SmallWorld { d: 6, p: 0.3 }.build(60, 11).unwrap();
+        assert!(t.is_connected());
+        assert_undirected(&t);
+        let total: usize = (0..60).map(|i| t.degree(i)).sum();
+        assert_eq!(total, 2 * t.edges());
+        // rewiring moves edges, it does not add or remove them
+        assert_eq!(t.edges(), 60 * 3, "edge count preserved by rewiring");
+        // p = 0.3 over 2 long chords/client: some rewiring must happen
+        let base = TopologySpec::SmallWorld { d: 6, p: 0.0 }.build(60, 11).unwrap();
+        assert_ne!(
+            (0..60).map(|i| t.neighbors(i)).collect::<Vec<_>>(),
+            (0..60).map(|i| base.neighbors(i)).collect::<Vec<_>>(),
+            "p=0.3 never rewired anything"
+        );
+        // deterministic per seed
+        let again = TopologySpec::SmallWorld { d: 6, p: 0.3 }.build(60, 11).unwrap();
+        assert_eq!(
+            (0..60).map(|i| t.neighbors(i)).collect::<Vec<_>>(),
+            (0..60).map(|i| again.neighbors(i)).collect::<Vec<_>>(),
+        );
+    }
+
+    #[test]
+    fn parse_name_roundtrip_and_rejections() {
+        for s in ["full", "ring:2", "k-regular:8", "small-world:8:0.1"] {
+            let spec = TopologySpec::parse(s).unwrap();
+            assert_eq!(TopologySpec::parse(&spec.name()).unwrap(), spec);
+        }
+        assert_eq!(
+            TopologySpec::parse("kreg:4").unwrap(),
+            TopologySpec::KRegular { d: 4 },
+            "short alias"
+        );
+        assert_eq!(
+            TopologySpec::parse("sw:4:0.2").unwrap(),
+            TopologySpec::SmallWorld { d: 4, p: 0.2 },
+        );
+        for bad in [
+            "",
+            "mesh",
+            "ring",
+            "ring:0",
+            "ring:x",
+            "k-regular:1",
+            "small-world:4",
+            "small-world:4:1.5",
+            "full:1",
+        ] {
+            assert!(TopologySpec::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn shrink_degree_walks_down_then_stops() {
+        let mut spec = TopologySpec::KRegular { d: 16 };
+        let mut seen = vec![spec];
+        while let Some(s) = spec.shrink_degree() {
+            spec = s;
+            seen.push(s);
+        }
+        assert_eq!(
+            seen,
+            vec![
+                TopologySpec::KRegular { d: 16 },
+                TopologySpec::KRegular { d: 8 },
+                TopologySpec::KRegular { d: 4 },
+                TopologySpec::KRegular { d: 2 },
+            ]
+        );
+        assert_eq!(TopologySpec::Full.shrink_degree(), None);
+        assert_eq!(TopologySpec::Ring { k: 1 }.shrink_degree(), None);
+    }
+
+    #[test]
+    fn tiny_deployments_are_always_the_mesh() {
+        for n in 0..=2 {
+            let t = TopologySpec::KRegular { d: 4 }.build(n, 9).unwrap();
+            assert!(t.is_full(), "n={n}");
+        }
+    }
+}

@@ -23,9 +23,9 @@ use crate::coordinator::async_client::{AsyncClient, ClientData, EvalTensors};
 use crate::coordinator::machine::{ClientStateMachine, Input, Step};
 use crate::coordinator::sync::SyncClient;
 use crate::data::Dataset;
-use crate::metrics::ClientReport;
+use crate::metrics::{ClientReport, NetStats};
 use crate::net::inproc::decode_delivery;
-use crate::net::VirtualHub;
+use crate::net::{Topology, VirtualHub};
 use crate::runtime::Trainer;
 use crate::util::time::{DriverRecv, SimTime, VirtualClock};
 use crate::util::Rng;
@@ -55,10 +55,12 @@ pub(super) fn run_events(
     parts: Vec<Vec<usize>>,
     train: &Arc<Dataset>,
     eval: &EvalTensors,
-) -> Result<Vec<ClientReport>> {
+    topology: &Arc<Topology>,
+) -> Result<(Vec<ClientReport>, NetStats)> {
     let n = cfg.n_clients;
     let clock = VirtualClock::new(n);
-    let hub = VirtualHub::new(n, cfg.net.clone(), Arc::clone(&clock));
+    let hub =
+        VirtualHub::with_topology(n, cfg.net.clone(), Arc::clone(&clock), Arc::clone(topology));
 
     let mut machines: Vec<ClientStateMachine> = Vec::with_capacity(n);
     for (i, indices) in parts.into_iter().enumerate() {
@@ -156,9 +158,10 @@ pub(super) fn run_events(
             return Err(e).with_context(|| format!("client {i} failed"));
         }
     }
-    reports
+    let reports: Result<Vec<ClientReport>> = reports
         .into_iter()
         .enumerate()
         .map(|(i, r)| r.with_context(|| format!("client {i} never completed (scheduler stall)")))
-        .collect()
+        .collect();
+    Ok((reports?, hub.net_stats()))
 }

@@ -42,8 +42,8 @@ use crate::coordinator::fault::FaultPlan;
 use crate::coordinator::sync::SyncClient;
 use crate::coordinator::termination::TerminationCause;
 use crate::data::{dirichlet_partition, fixed_chunk, iid_partition, skewed_chunk, Dataset};
-use crate::metrics::ClientReport;
-use crate::net::{InProcHub, NetworkModel, Transport, VirtualHub};
+use crate::metrics::{ClientReport, NetStats};
+use crate::net::{InProcHub, NetworkModel, Topology, TopologySpec, Transport, VirtualHub};
 use crate::runtime::Trainer;
 use crate::util::time::VirtualClock;
 use crate::util::Rng;
@@ -118,6 +118,12 @@ pub struct SimConfig {
     /// Per-client crash schedule (empty = fault-free).
     pub faults: Vec<FaultPlan>,
     pub seed: u64,
+    /// Peer overlay (DESIGN.md §9): `Full` (default) is the paper's
+    /// all-to-all dissemination; sparse presets cut per-round message
+    /// volume from O(n²) to O(n·d).  The graph is built deterministically
+    /// from `(topology, n_clients, seed)`.  Phase 1 (`sync`) requires
+    /// `Full` — its barrier waits on every peer's round-tagged model.
+    pub topology: TopologySpec,
     /// Run on a deterministic [`VirtualClock`] instead of wall time.
     pub virtual_time: bool,
     /// Which executor drives the clients under virtual time (the wall
@@ -143,6 +149,7 @@ impl SimConfig {
             net: NetworkModel::lan(7),
             faults: Vec::new(),
             seed: 7,
+            topology: TopologySpec::Full,
             virtual_time: false,
             exec: ExecMode::Events,
             train_cost: Duration::from_millis(20),
@@ -155,6 +162,13 @@ impl SimConfig {
         let mut cfg = SimConfig::new(n_clients, test_n);
         cfg.train_n = (200 * n_clients).max(1000);
         cfg
+    }
+
+    /// Build this deployment's overlay graph — the one derivation of
+    /// `(topology, n_clients, seed)`, shared by [`run`] and any reporting
+    /// code that wants to describe the graph a config will actually use.
+    pub fn build_topology(&self) -> Result<Topology> {
+        self.topology.build(self.n_clients, self.seed)
     }
 
     fn machine_of(&self, client: usize) -> usize {
@@ -177,6 +191,9 @@ pub struct SimResult {
     pub wall: Duration,
     pub machines: usize,
     pub machine_of: Vec<usize>,
+    /// Aggregate traffic the deployment offered to the network — the
+    /// measured O(n·d) vs O(n²) axis (see [`NetStats::msgs_per_round`]).
+    pub net: NetStats,
 }
 
 impl SimResult {
@@ -210,6 +227,12 @@ impl SimResult {
         self.reports.iter().filter(|r| r.cause == TerminationCause::Crashed).count()
     }
 
+    /// Mean messages offered to the network per protocol round (≈ n·d on
+    /// a degree-d overlay, ≈ n² on the full mesh).
+    pub fn msgs_per_round(&self) -> f64 {
+        self.net.msgs_per_round(self.rounds())
+    }
+
     /// Termination-detection health: every non-crashed client ended by CCC
     /// or CRT (not by hitting the hard round cap).
     pub fn all_terminated_adaptively(&self) -> bool {
@@ -231,6 +254,14 @@ pub fn run(trainer: &(dyn Trainer + Sync), cfg: &SimConfig) -> Result<SimResult>
     anyhow::ensure!(
         cfg.faults.is_empty() || cfg.faults.len() == cfg.n_clients,
         "faults must be empty or one per client"
+    );
+    // The overlay is a pure function of (spec, n, seed): both executors —
+    // and any re-run of the same config — build the identical graph.
+    let topology = Arc::new(cfg.build_topology()?);
+    anyhow::ensure!(
+        !cfg.sync || topology.is_full(),
+        "Phase 1 (sync) waits on every peer each round and requires --topology full, got {}",
+        cfg.topology.name()
     );
 
     // --- data --------------------------------------------------------------
@@ -254,10 +285,10 @@ pub fn run(trainer: &(dyn Trainer + Sync), cfg: &SimConfig) -> Result<SimResult>
 
     // --- executors ----------------------------------------------------------
     let t0 = Instant::now();
-    let reports = if cfg.virtual_time && cfg.exec == ExecMode::Events {
-        exec::run_events(trainer, cfg, parts, &train, &eval)?
+    let (reports, net) = if cfg.virtual_time && cfg.exec == ExecMode::Events {
+        exec::run_events(trainer, cfg, parts, &train, &eval, &topology)?
     } else {
-        run_threads(trainer, cfg, parts, &train, &eval)?
+        run_threads(trainer, cfg, parts, &train, &eval, &topology)?
     };
     // Virtual runs report logical time: the deployment "took" as long as
     // its slowest client's simulated schedule, not the compute wall time.
@@ -271,6 +302,7 @@ pub fn run(trainer: &(dyn Trainer + Sync), cfg: &SimConfig) -> Result<SimResult>
         machines: cfg.machines.clamp(1, 3),
         machine_of: (0..cfg.n_clients).map(|c| cfg.machine_of(c)).collect(),
         reports,
+        net,
     })
 }
 
@@ -282,7 +314,8 @@ fn run_threads(
     parts: Vec<Vec<usize>>,
     train: &Arc<Dataset>,
     eval: &EvalTensors,
-) -> Result<Vec<ClientReport>> {
+    topology: &Arc<Topology>,
+) -> Result<(Vec<ClientReport>, NetStats)> {
     enum Net {
         Real(InProcHub),
         Virtual(VirtualHub, Arc<VirtualClock>),
@@ -290,11 +323,20 @@ fn run_threads(
     let net = if cfg.virtual_time {
         let clock = VirtualClock::new(cfg.n_clients);
         Net::Virtual(
-            VirtualHub::new(cfg.n_clients, cfg.net.clone(), Arc::clone(&clock)),
+            VirtualHub::with_topology(
+                cfg.n_clients,
+                cfg.net.clone(),
+                Arc::clone(&clock),
+                Arc::clone(topology),
+            ),
             clock,
         )
     } else {
-        Net::Real(InProcHub::new(cfg.n_clients, cfg.net.clone()))
+        Net::Real(InProcHub::with_topology(
+            cfg.n_clients,
+            cfg.net.clone(),
+            Arc::clone(topology),
+        ))
     };
 
     /// Hands the virtual scheduler onward when a client thread finishes —
@@ -309,7 +351,7 @@ fn run_threads(
         }
     }
 
-    std::thread::scope(|scope| {
+    let reports = std::thread::scope(|scope| {
         let mut handles = Vec::new();
         let mut spawn_err = None;
         for (i, indices) in parts.into_iter().enumerate() {
@@ -402,5 +444,10 @@ fn run_threads(
             Some(e) => Err(e),
             None => joined,
         }
-    })
+    })?;
+    let stats = match &net {
+        Net::Real(hub) => hub.net_stats(),
+        Net::Virtual(hub, _) => hub.net_stats(),
+    };
+    Ok((reports, stats))
 }

@@ -13,6 +13,7 @@
 
 use super::rng::Rng;
 use crate::coordinator::fault::FaultPlan;
+use crate::net::TopologySpec;
 use crate::sim::SimConfig;
 
 /// Run `cases` property checks. `generate` builds an input from a seeded RNG;
@@ -45,13 +46,18 @@ pub struct Shrunk {
 }
 
 /// Minimize a failing [`SimConfig`] against `fails` (true = the failure
-/// still reproduces).  Two passes, both preserving the `faults` invariant
+/// still reproduces).  Three passes, all preserving the `faults` invariant
 /// (empty or one plan per client):
 ///
 /// 1. **Client bisection** — binary-search the smallest prefix of clients
 ///    (faults truncated alongside) that still fails.
 /// 2. **Fault pruning** — try clearing the fault list outright, else
 ///    disable surviving fault plans one at a time.
+/// 3. **Topology shrinking** — halve the overlay degree while the failure
+///    holds ([`TopologySpec::shrink_degree`]), then try the trivial
+///    preset (`full`) outright: a failure that survives on the mesh is
+///    independent of the overlay, which is the most useful thing a
+///    repro can learn.
 ///
 /// Like every shrinker this is greedy: for non-monotone predicates the
 /// result is a local minimum (still failing, never larger than the
@@ -108,6 +114,26 @@ where
                     best = cand;
                 }
             }
+        }
+    }
+
+    // 3. Shrink the topology: degree first, then the preset toward `full`.
+    while let Some(smaller) = best.topology.shrink_degree() {
+        let mut cand = best.clone();
+        cand.topology = smaller;
+        tests_run += 1;
+        if fails(&cand) {
+            best = cand;
+        } else {
+            break;
+        }
+    }
+    if best.topology != TopologySpec::Full {
+        let mut cand = best.clone();
+        cand.topology = TopologySpec::Full;
+        tests_run += 1;
+        if fails(&cand) {
+            best = cand;
         }
     }
     Shrunk { config: best, tests_run }
@@ -213,6 +239,41 @@ mod tests {
         assert!(
             shrunk.config.faults.is_empty(),
             "faults play no role and must be cleared"
+        );
+    }
+
+    #[test]
+    fn shrink_walks_topology_degree_down_to_the_failing_minimum() {
+        let mut cfg = SimConfig::new(64, 128);
+        cfg.topology = TopologySpec::KRegular { d: 16 };
+        // The "bug" needs a sparse overlay of degree >= 4: the shrinker
+        // must halve 16 -> 8 -> 4, reject 2, and reject `full`.
+        let fails = |c: &SimConfig| {
+            c.n_clients >= 8
+                && matches!(c.topology, TopologySpec::KRegular { d } if d >= 4)
+        };
+        let shrunk = shrink_sim_config(&cfg, fails);
+        assert!(fails(&shrunk.config), "shrinking must preserve the failure");
+        assert_eq!(shrunk.config.n_clients, 8, "client bisection still runs first");
+        assert_eq!(
+            shrunk.config.topology,
+            TopologySpec::KRegular { d: 4 },
+            "degree must shrink to the smallest failing value"
+        );
+    }
+
+    #[test]
+    fn shrink_replaces_irrelevant_overlay_with_full() {
+        let mut cfg = SimConfig::new(32, 128);
+        cfg.topology = TopologySpec::SmallWorld { d: 8, p: 0.1 };
+        // Failure depends only on the client count: the overlay must be
+        // walked all the way back to the trivial mesh.
+        let shrunk = shrink_sim_config(&cfg, |c| c.n_clients >= 6);
+        assert_eq!(shrunk.config.n_clients, 6);
+        assert_eq!(
+            shrunk.config.topology,
+            TopologySpec::Full,
+            "an overlay the failure does not need must shrink to full"
         );
     }
 

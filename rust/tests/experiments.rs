@@ -145,10 +145,53 @@ fn scenario_matrix_sweeps_every_preset_and_is_deterministic() {
 }
 
 #[test]
+fn topology_sweep_measures_the_message_volume_gap() {
+    let t = MockTrainer::tiny();
+    let table = exp::topologies(&t, scale());
+    let md = table.markdown();
+    let rows: Vec<&str> = md.lines().skip(2).collect();
+    assert_eq!(rows.len(), 4, "full + 3 sparse overlays:\n{md}");
+    for name in ["full", "ring:2", "k-regular:6", "small-world:6:0.1"] {
+        assert!(md.contains(name), "missing overlay {name}:\n{md}");
+    }
+    let cells_of = |row: &str| -> Vec<String> {
+        row.trim_matches('|').split('|').map(|c| c.trim().to_string()).collect()
+    };
+    let mut full_volume = None;
+    for row in &rows {
+        let cells = cells_of(row);
+        assert_eq!(cells.len(), 7, "{row}");
+        let degree: usize = cells[1].parse().unwrap();
+        let volume: f64 = cells[2].parse().unwrap();
+        assert!(volume > 0.0, "empty counter: {row}");
+        // fault-free LAN: every overlay must still terminate adaptively
+        // (on the sparse rows that exercises the CRT relay)
+        assert_eq!(parse_pct(&cells[5]), 100.0, "non-adaptive ending: {row}");
+        if cells[0] == "full" {
+            assert_eq!(degree, 23, "24 clients, mesh degree");
+            full_volume = Some(volume);
+        } else {
+            assert!(degree < 23, "sparse row with mesh degree: {row}");
+        }
+    }
+    // O(n·d) vs O(n²), measured: ring:2 (degree 4) must offer a fraction
+    // of the mesh volume per round.
+    let full_volume = full_volume.expect("full row present");
+    let ring = rows.iter().find(|r| r.contains("ring:2")).unwrap();
+    let ring_volume: f64 = cells_of(ring)[2].parse().unwrap();
+    assert!(
+        ring_volume * 2.0 < full_volume,
+        "ring:2 volume {ring_volume} not well under mesh volume {full_volume}"
+    );
+    // one seed, one sweep: byte-identical regeneration
+    assert_eq!(md, exp::topologies(&t, scale()).markdown());
+}
+
+#[test]
 fn run_all_produces_every_experiment() {
     let t = MockTrainer::tiny();
     let all = exp::run_all(&t, scale());
-    assert_eq!(all.len(), 8);
+    assert_eq!(all.len(), 9);
     let titles: Vec<&str> = all.iter().map(|(t, _)| t.as_str()).collect();
     let needles = [
         "Table 2",
@@ -159,6 +202,7 @@ fn run_all_produces_every_experiment() {
         "Fig 7+8",
         "Termination",
         "Scenario matrix",
+        "Topology sweep",
     ];
     for needle in needles {
         assert!(titles.iter().any(|t| t.contains(needle)), "missing {needle}");

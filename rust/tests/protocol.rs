@@ -35,6 +35,7 @@ fn base_cfg(n: usize, seed: u64) -> SimConfig {
         weight_by_samples: false,
         early_window_exit: true,
         crt_enabled: true,
+        quorum: 1.0,
     };
     cfg.train_n = 60 * n;
     cfg.net = NetworkModel::lan(seed);

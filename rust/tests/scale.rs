@@ -15,7 +15,7 @@ use common::fingerprint;
 use dfl::coordinator::fault::variable_crash_schedule;
 use dfl::coordinator::termination::TerminationCause;
 use dfl::coordinator::ProtocolConfig;
-use dfl::net::NetworkModel;
+use dfl::net::{NetworkModel, TopologySpec};
 use dfl::runtime::{MockTrainer, Trainer};
 use dfl::sim::{self, ExecMode, Partition, SimConfig};
 use dfl::util::Rng;
@@ -33,6 +33,7 @@ fn scale_cfg(trainer: &MockTrainer, n: usize, seed: u64) -> SimConfig {
         weight_by_samples: false,
         early_window_exit: true,
         crt_enabled: true,
+        quorum: 1.0,
     };
     cfg.train_n = 20 * n;
     cfg.net = NetworkModel::lan(seed);
@@ -43,18 +44,22 @@ fn scale_cfg(trainer: &MockTrainer, n: usize, seed: u64) -> SimConfig {
 }
 
 /// The acceptance scenario: 200 clients, 30 staggered crashes, 10% message
-/// loss — the deployment must complete with exactly the scheduled crashes
-/// and a final model on every survivor.
+/// loss — the deployment must complete with exactly the scheduled crashes,
+/// a final model on every survivor, and (since quorum-CCC) *adaptive*
+/// termination.
 ///
-/// Note on termination causes: with 10% *uniform* loss at 200 clients,
-/// every round drops messages from ~18 alive peers per observer, so the
-/// end-of-window sweep detects (false) crashes essentially every round and
-/// CCC's crash-free precondition (condition (a) of §3.2) never holds for
-/// `count_threshold` consecutive rounds.  Survivors therefore legitimately
-/// run to the round cap — that is the protocol being faithful to its spec
-/// under correlated false suspicion, not a detection failure, so this test
-/// does not assert adaptive termination (the fault-free 1000-client test
-/// below does).
+/// Why quorum-CCC (`q = 0.85`) is load-bearing here: with 10% *uniform*
+/// loss at 200 clients, every round drops messages from ~17 of the ~170
+/// alive peers per observer, so the end-of-window sweep detects (false)
+/// crashes essentially every round and the paper-strict condition (a)
+/// (q = 1.0, zero fresh suspicions) never holds for `count_threshold`
+/// consecutive rounds — survivors ran to the round cap, and this test
+/// could not assert adaptive termination before quorum-CCC existed.
+/// q = 0.85 tolerates ⌊0.15·199⌋ = 29 fresh suspicions per round: the
+/// per-round false-suspicion count is ≈Binomial(170, 0.1) (mean ≈ 17,
+/// σ ≈ 3.9), so 29 sits > 3σ above the mean — the quorum absorbs the
+/// loss-induced noise while still tripping on any mass-crash event, and
+/// one client reaching CCC floods everyone else via CRT.
 #[test]
 #[ignore = "scale test: ~200 clients, run explicitly with -- --ignored"]
 fn two_hundred_clients_with_crashes_and_drops_terminate() {
@@ -62,6 +67,7 @@ fn two_hundred_clients_with_crashes_and_drops_terminate() {
     let trainer = MockTrainer::tiny_with_k_max(n + 8);
     let mut cfg = scale_cfg(&trainer, n, 42);
     cfg.net = NetworkModel::lossy(0.10, 42);
+    cfg.protocol.quorum = 0.85;
     let mut rng = Rng::new(42);
     cfg.faults = variable_crash_schedule(n, 30, 2, 12, &mut rng);
     let res = sim::run(&trainer, &cfg).unwrap();
@@ -75,6 +81,13 @@ fn two_hundred_clients_with_crashes_and_drops_terminate() {
             assert!(r.final_accuracy.is_some());
         }
     }
+    // The restored adaptive-termination claim: under quorum-CCC no
+    // survivor needs the round cap even with crashes + uniform loss.
+    assert!(
+        res.all_terminated_adaptively(),
+        "quorum-CCC (q=0.85) must restore adaptive termination under 10% loss; causes: {:?}",
+        res.reports.iter().map(|r| r.cause).collect::<Vec<_>>()
+    );
 }
 
 /// The cross-executor acceptance criterion: at 200 clients with crashes
@@ -99,6 +112,68 @@ fn event_and_thread_executors_byte_identical_at_200_clients() {
     let ft: Vec<u64> = th.reports.iter().map(fingerprint).collect();
     assert_eq!(fe, ft, "executors diverged at 200 clients");
     assert_eq!(ev.wall, th.wall);
+}
+
+/// The sparse-overlay acceptance criterion: 1000 clients on `k-regular:8`
+/// must (a) show O(n·d) per-round message volume on the new hub counters
+/// — not the full mesh's O(n²) — and (b) still deliver global
+/// termination: every client reaches `Finished` adaptively even though
+/// each one only ever hears 8 peers, because the CRT flag relays across
+/// the overlay (flood with per-client dedup) once any client's CCC fires.
+#[test]
+#[ignore = "scale test: 1000 clients on a sparse overlay, run with -- --ignored"]
+fn thousand_clients_k_regular_volume_is_linear_and_crt_relays() {
+    let n = 1000;
+    let d = 8usize;
+    let trainer = MockTrainer::lean_with_k_max(64);
+    let mut cfg = scale_cfg(&trainer, n, 7);
+    cfg.topology = TopologySpec::KRegular { d };
+    cfg.protocol.min_rounds = 3;
+    cfg.protocol.max_rounds = 40;
+    cfg.train_n = 4 * n;
+    cfg.exec = ExecMode::Events;
+    let res = sim::run(&trainer, &cfg).unwrap();
+    assert_eq!(res.reports.len(), n);
+    assert_eq!(res.crashed(), 0);
+    assert!(
+        res.all_terminated_adaptively(),
+        "every client must reach Finished adaptively on the sparse graph; causes: {:?}",
+        res.reports
+            .iter()
+            .filter(|r| !matches!(
+                r.cause,
+                TerminationCause::Converged | TerminationCause::Signaled
+            ))
+            .map(|r| (r.id, r.cause))
+            .take(10)
+            .collect::<Vec<_>>()
+    );
+    // CRT actually crossed the overlay: with 1000 clients and degree 8,
+    // termination cannot be all-local — peers beyond the origin's
+    // neighborhood must have been signaled.
+    let signaled = res
+        .reports
+        .iter()
+        .filter(|r| r.cause == TerminationCause::Signaled)
+        .count();
+    assert!(signaled > d, "flag never left a neighborhood: {signaled} signaled");
+    // O(n·d), measured: every client offers ≤ d updates per completed
+    // round, plus three bounded one-offs of ≤ d sends each (the final
+    // flagged broadcast, the one-shot CRT relay, the Bye) — so total
+    // volume is ≤ n·d·(rounds + 3), ~100x below the full mesh's
+    // n·(n−1)·rounds ≈ 10⁶/round at this size.
+    let rounds = res.rounds() as usize;
+    let budget = (n * d * (rounds + 3)) as u64;
+    assert!(
+        res.net.msgs_sent <= budget,
+        "message volume {} over {rounds} rounds exceeds the O(n·d) budget {budget}",
+        res.net.msgs_sent
+    );
+    assert!(
+        res.net.msgs_sent >= (n * d) as u64,
+        "volume implausibly low ({} total) — counter broken?",
+        res.net.msgs_sent
+    );
 }
 
 /// Stretch: four-digit client count on the lean (66-param) model so the
@@ -160,6 +235,7 @@ fn ten_thousand_clients_event_executor_with_crashes_and_drops() {
         weight_by_samples: false,
         early_window_exit: true,
         crt_enabled: true,
+        quorum: 1.0,
     };
     // Tiny independent chunks: partitioning 10k clients must not dominate
     // the benchmark, and every client needs a non-empty slice.

@@ -44,6 +44,7 @@ fn four_tcp_clients_with_one_crash_terminate() {
         weight_by_samples: false,
         early_window_exit: true,
         crt_enabled: true,
+        quorum: 1.0,
     };
 
     let reports: Vec<_> = std::thread::scope(|scope| {

@@ -11,7 +11,7 @@ use common::fingerprint;
 use dfl::coordinator::fault::FaultPlan;
 use dfl::coordinator::termination::TerminationCause;
 use dfl::coordinator::ProtocolConfig;
-use dfl::net::{NetSplit, NetworkModel};
+use dfl::net::{NetSplit, NetworkModel, TopologySpec};
 use dfl::runtime::{MockTrainer, Trainer};
 use dfl::sim::{self, ExecMode, SimConfig};
 
@@ -29,6 +29,7 @@ fn base_cfg(n: usize, seed: u64) -> SimConfig {
         weight_by_samples: false,
         early_window_exit: true,
         crt_enabled: true,
+        quorum: 1.0,
     };
     cfg.train_n = 60 * n;
     cfg.net = NetworkModel::lan(seed);
@@ -100,6 +101,101 @@ fn sync_phase_executors_are_byte_identical() {
     // Phase 1's mutual agreement: every client stops at the same round.
     let rounds: Vec<u32> = ev.reports.iter().map(|r| r.rounds_completed).collect();
     assert!(rounds.windows(2).all(|w| w[0] == w[1]), "rounds {rounds:?}");
+}
+
+#[test]
+fn explicit_full_topology_and_strict_quorum_match_the_defaults() {
+    // `--topology full --quorum 1.0` is the byte-identity contract: a
+    // config that spells out the defaults must fingerprint identically to
+    // one that never mentions them (guards any future drift of either
+    // default away from the paper-exact path).
+    let trainer = MockTrainer::tiny();
+    let mut defaults = base_cfg(5, 1234);
+    defaults.net = NetworkModel::lossy(0.10, 1234);
+    defaults.faults = vec![FaultPlan::none(); 5];
+    defaults.faults[2] = FaultPlan::at_round(4);
+    let a = sim::run(&trainer, &defaults).unwrap();
+    let mut explicit = defaults.clone();
+    explicit.topology = TopologySpec::Full;
+    explicit.protocol.quorum = 1.0;
+    let b = sim::run(&trainer, &explicit).unwrap();
+    let fa: Vec<u64> = a.reports.iter().map(fingerprint).collect();
+    let fb: Vec<u64> = b.reports.iter().map(fingerprint).collect();
+    assert_eq!(fa, fb, "explicit full/1.0 must be byte-identical to the defaults");
+    assert_eq!(a.net, b.net, "traffic counters must agree too");
+}
+
+#[test]
+fn sparse_topology_executors_are_byte_identical() {
+    // The cross-executor contract extended to the sparse overlay: message
+    // loss, a permanent crash, a transient outage, quorum-CCC, and the
+    // CRT relay path all active — events vs threads must still agree on
+    // every byte, including the traffic counters.
+    let trainer = MockTrainer::tiny();
+    let mut cfg = base_cfg(8, 4321);
+    cfg.net = NetworkModel::lossy(0.10, 4321);
+    cfg.topology = TopologySpec::SmallWorld { d: 4, p: 0.2 };
+    cfg.protocol.quorum = 0.75;
+    cfg.protocol.min_rounds = 6;
+    cfg.faults = vec![FaultPlan::none(); 8];
+    cfg.faults[3] = FaultPlan::at_round(4);
+    cfg.faults[6] = FaultPlan::transient(3, Duration::from_millis(300));
+    cfg.exec = ExecMode::Events;
+    let ev = sim::run(&trainer, &cfg).unwrap();
+    cfg.exec = ExecMode::Threads;
+    let th = sim::run(&trainer, &cfg).unwrap();
+    let fe: Vec<u64> = ev.reports.iter().map(fingerprint).collect();
+    let ft: Vec<u64> = th.reports.iter().map(fingerprint).collect();
+    assert_eq!(fe, ft, "executors diverged on a sparse overlay");
+    assert_eq!(ev.wall, th.wall);
+    assert_eq!(ev.net, th.net, "executors offered different traffic");
+}
+
+#[test]
+fn crt_flag_relays_across_a_sparse_overlay() {
+    // ring:1 on 10 clients: degree 2, diameter 5 — most pairs are NOT
+    // neighbors, so adaptive termination everywhere requires the CRT flag
+    // to cross the overlay (in-window relay flood + round-to-round
+    // piggybacking).  Fault-free LAN keeps the only hard part the graph.
+    let trainer = MockTrainer::tiny();
+    let mut cfg = base_cfg(10, 909);
+    cfg.topology = TopologySpec::Ring { k: 1 };
+    let res = sim::run(&trainer, &cfg).unwrap();
+    assert_eq!(res.crashed(), 0);
+    assert!(
+        res.all_terminated_adaptively(),
+        "causes {:?}",
+        res.reports.iter().map(|r| r.cause).collect::<Vec<_>>()
+    );
+    // At least someone ended on a received flag (10 independent CCC
+    // triggers in the same instant would be a broken relay).
+    assert!(
+        res.reports.iter().any(|r| r.cause == TerminationCause::Signaled),
+        "nobody was signaled — did the relay run?"
+    );
+}
+
+#[test]
+fn sparse_overlay_cuts_message_volume() {
+    // Same 16-client deployment, full mesh vs k-regular:4: the sparse run
+    // must offer far fewer messages per round (degree 4 vs 15) while
+    // still finishing adaptively — the O(n·d) claim at unit-test scale.
+    let trainer = MockTrainer::tiny();
+    let full = sim::run(&trainer, &base_cfg(16, 246)).unwrap();
+    let mut cfg = base_cfg(16, 246);
+    cfg.topology = TopologySpec::KRegular { d: 4 };
+    let sparse = sim::run(&trainer, &cfg).unwrap();
+    assert!(
+        sparse.all_terminated_adaptively(),
+        "causes {:?}",
+        sparse.reports.iter().map(|r| r.cause).collect::<Vec<_>>()
+    );
+    let (f, s) = (full.msgs_per_round(), sparse.msgs_per_round());
+    assert!(
+        s * 2.0 < f,
+        "degree-4 overlay should offer well under half the mesh volume: {s:.0} vs {f:.0}"
+    );
+    assert!(s > 0.0 && full.net.bytes_sent > sparse.net.bytes_sent);
 }
 
 #[test]

@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# Tier-1 verify sequence — the whole CI story in one entrypoint.
+# Referenced by README.md ("Build, test, docs") and ROADMAP.md.
+#
+#   scripts/tier1.sh            # build + tests + doc check + bench build
+#   scripts/tier1.sh --scale    # additionally run the opt-in scale tests
+#                               # (200/1000/10000 clients; minutes)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+echo "==> cargo doc --no-deps   (broken intra-doc links are denied)"
+cargo doc --no-deps
+
+echo "==> cargo bench --no-run  (benches must keep compiling)"
+cargo bench --no-run
+
+if [[ "${1:-}" == "--scale" ]]; then
+  echo "==> cargo test -q -- --ignored --test-threads=1   (scale tests)"
+  cargo test -q -- --ignored --test-threads=1
+fi
+
+echo "tier-1: OK"
