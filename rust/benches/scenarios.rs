@@ -1,6 +1,7 @@
 //! Bench: the beyond-paper sweeps — the network-scenario matrix
-//! (DESIGN.md §3.4) and the sparse-overlay topology sweep (DESIGN.md §9),
-//! both under the deterministic virtual clock.
+//! (DESIGN.md §3.4), the sparse-overlay topology sweep (DESIGN.md §9),
+//! and the graph-fault sweep (DESIGN.md §10), all under the
+//! deterministic virtual clock.
 
 mod common;
 
@@ -10,4 +11,6 @@ fn main() {
     table.print("Scenario matrix — network presets (beyond paper)");
     let table = dfl::exp::topologies(&engine, common::scale());
     table.print("Topology sweep — sparse overlays (beyond paper)");
+    let table = dfl::exp::faults(&engine, common::scale());
+    table.print("Fault sweep — graph faults + quorum auto-tuning (beyond paper)");
 }

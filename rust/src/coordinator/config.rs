@@ -2,6 +2,76 @@
 
 use std::time::Duration;
 
+use anyhow::Result;
+
+/// How quorum-CCC's condition (a) picks its `q` (the `--quorum` flag).
+///
+/// * [`QuorumSpec::Fixed`] — a hand-picked fraction; `1.0` (the default)
+///   is the paper-strict zero-tolerance condition, byte-identical per
+///   seed to the pre-quorum protocol.
+/// * [`QuorumSpec::Auto`] — suspicion-driven auto-tuning
+///   ([`crate::coordinator::termination::QuorumController`]): each client
+///   derives `q` from an EWMA of its own per-window fresh-suspicion rate,
+///   clamped to `[q_min, 1.0]`, so no per-deployment constant has to be
+///   guessed.  Deterministic per seed (the controller is a pure fold).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum QuorumSpec {
+    /// Judge every window with this fraction.
+    Fixed(f32),
+    /// Derive `q` per client from the measured suspicion rate, never
+    /// dropping below `q_min`.
+    Auto { q_min: f32 },
+}
+
+/// Default lower clamp for `--quorum auto` (a majority quorum: condition
+/// (a) never tolerates half the neighborhood going silent at once).
+pub const QUORUM_AUTO_MIN: f32 = 0.5;
+
+impl QuorumSpec {
+    /// The paper-strict condition (a).
+    pub const STRICT: QuorumSpec = QuorumSpec::Fixed(1.0);
+
+    /// Parse a CLI spelling: a fraction in `[0, 1]`, `auto`, or
+    /// `auto:Q_MIN`.
+    ///
+    /// ```
+    /// use dfl::coordinator::config::{QuorumSpec, QUORUM_AUTO_MIN};
+    ///
+    /// assert_eq!(QuorumSpec::parse("0.85").unwrap(), QuorumSpec::Fixed(0.85));
+    /// assert_eq!(QuorumSpec::parse("auto").unwrap(), QuorumSpec::Auto { q_min: QUORUM_AUTO_MIN });
+    /// assert_eq!(QuorumSpec::parse("auto:0.7").unwrap(), QuorumSpec::Auto { q_min: 0.7 });
+    /// assert!(QuorumSpec::parse("1.5").is_err());
+    /// ```
+    pub fn parse(s: &str) -> Result<QuorumSpec> {
+        let in_range = |q: f32, what: &str| -> Result<f32> {
+            anyhow::ensure!((0.0..=1.0).contains(&q), "--quorum {what} must be in [0, 1], got {q}");
+            Ok(q)
+        };
+        if s == "auto" {
+            return Ok(QuorumSpec::Auto { q_min: QUORUM_AUTO_MIN });
+        }
+        if let Some(min) = s.strip_prefix("auto:") {
+            let q_min: f32 = min
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--quorum auto:{min:?}: bad q_min"))?;
+            return Ok(QuorumSpec::Auto { q_min: in_range(q_min, "auto q_min")? });
+        }
+        let q: f32 = s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--quorum {s:?}: want a fraction, auto, or auto:Q_MIN"))?;
+        Ok(QuorumSpec::Fixed(in_range(q, "fraction")?))
+    }
+
+    /// The CLI spelling (round-trips through [`QuorumSpec::parse`]).
+    pub fn name(self) -> String {
+        match self {
+            QuorumSpec::Fixed(q) => format!("{q}"),
+            QuorumSpec::Auto { q_min } if q_min == QUORUM_AUTO_MIN => "auto".into(),
+            QuorumSpec::Auto { q_min } => format!("auto:{q_min}"),
+        }
+    }
+}
+
 /// Tunable protocol parameters.  Field names follow the paper's pseudocode
 /// (`TIMEOUT`, `MINIMUM_ROUNDS`, `COUNT_THRESHOLD`, `R_PRIME`).
 #[derive(Clone, Debug)]
@@ -34,16 +104,18 @@ pub struct ProtocolConfig {
     /// received terminate flag is ignored, so every client must reach CCC
     /// on its own — `benches/ablation.rs` quantifies the wasted rounds).
     pub crt_enabled: bool,
-    /// Quorum-CCC fraction `q` for condition (a): a round counts as
-    /// crash-free when at least a `q`-fraction of the overlay neighborhood
-    /// went unsuspected this round, i.e. at most
+    /// Quorum-CCC `q` for condition (a): a round counts as crash-free
+    /// when at least a `q`-fraction of the overlay neighborhood went
+    /// unsuspected this round, i.e. at most
     /// `⌊(1 − q) · |neighborhood|⌋` peers were *newly* marked crashed
     /// (see [`crate::coordinator::termination::quorum_crash_free`]).
-    /// `q = 1.0` (default) tolerates zero fresh suspicions — exactly the
-    /// paper's strict condition, byte-identical per seed; `q < 1.0` keeps
-    /// adaptive termination reachable under uniform message loss, where
-    /// false suspicion never stops at scale (DESIGN.md §9).
-    pub quorum: f32,
+    /// [`QuorumSpec::Fixed`]`(1.0)` (default) tolerates zero fresh
+    /// suspicions — exactly the paper's strict condition, byte-identical
+    /// per seed; `q < 1.0` keeps adaptive termination reachable under
+    /// uniform message loss, where false suspicion never stops at scale
+    /// (DESIGN.md §9); [`QuorumSpec::Auto`] derives `q` per client from
+    /// the measured suspicion rate (DESIGN.md §10).
+    pub quorum: QuorumSpec,
 }
 
 impl Default for ProtocolConfig {
@@ -63,7 +135,7 @@ impl Default for ProtocolConfig {
             weight_by_samples: false,
             early_window_exit: true,
             crt_enabled: true,
-            quorum: 1.0,
+            quorum: QuorumSpec::STRICT,
         }
     }
 }
@@ -94,6 +166,22 @@ mod tests {
         assert!(c.count_threshold >= 1);
         assert!(c.conv_threshold_rel > 0.0);
         assert!(!c.timeout.is_zero());
-        assert_eq!(c.quorum, 1.0, "default must be the paper-strict condition");
+        assert_eq!(
+            c.quorum,
+            QuorumSpec::Fixed(1.0),
+            "default must be the paper-strict condition"
+        );
+    }
+
+    #[test]
+    fn quorum_spec_parses_and_round_trips() {
+        for s in ["0.85", "1.0", "0", "auto", "auto:0.7"] {
+            let spec = QuorumSpec::parse(s).unwrap();
+            assert_eq!(QuorumSpec::parse(&spec.name()).unwrap(), spec, "{s}");
+        }
+        assert_eq!(QuorumSpec::STRICT, QuorumSpec::Fixed(1.0));
+        for bad in ["1.5", "-0.1", "auto:1.5", "auto:", "full", ""] {
+            assert!(QuorumSpec::parse(bad).is_err(), "{bad:?} must not parse");
+        }
     }
 }

@@ -97,6 +97,12 @@ pub struct PeerTable {
     /// `status[id]`: `None` = not a tracked peer (self / outside the
     /// neighborhood / unknown id).
     status: Vec<Option<PeerStatus>>,
+    /// Last-known status of peers [`PeerTable::retrack`] dropped from the
+    /// neighborhood: when an overlay change brings such a peer back (a
+    /// cut heals, a churned client rejoins nearby), its suspicion or
+    /// termination knowledge is restored instead of resurrecting it as
+    /// `Alive` — a healed edge is not evidence that a dead peer lives.
+    parked: Vec<Option<PeerStatus>>,
     /// Count of peers currently `Alive` (maintained incrementally so the
     /// per-round metrics never rescan the table).
     alive: usize,
@@ -113,13 +119,79 @@ impl PeerTable {
         for &p in peers {
             status[p as usize] = Some(PeerStatus::Alive);
         }
-        PeerTable { status, alive: peers.len(), tracked: peers.len(), events: Vec::new() }
+        PeerTable {
+            status,
+            parked: Vec::new(),
+            alive: peers.len(),
+            tracked: peers.len(),
+            events: Vec::new(),
+        }
     }
 
-    /// How many peers this table tracks (the neighborhood size; static
-    /// over the table's lifetime).
+    /// How many peers this table tracks (the neighborhood size — the
+    /// quorum denominator).  Static on a static overlay; under graph
+    /// faults [`PeerTable::retrack`] applies neighborhood deltas, so the
+    /// denominator follows the *current* overlay instead of the one the
+    /// client booted with.
     pub fn tracked(&self) -> usize {
         self.tracked
+    }
+
+    /// Re-scope the table to a new neighborhood (graph faults: cuts,
+    /// churn, edge repair — DESIGN.md §10).  Applied as a delta:
+    ///
+    /// * peers no longer in the neighborhood are dropped from the tracked
+    ///   set (keeping them would hold the quorum denominator stale
+    ///   against a graph that moved on), but their last-known status is
+    ///   *parked* for a possible return;
+    /// * peers that persist keep their status — a crash suspicion is not
+    ///   forgotten just because an unrelated edge moved;
+    /// * entering neighbors restore their parked status if the table has
+    ///   ever tracked them (a healed cut must not resurrect a dead or
+    ///   terminated peer as `Alive` — that would stall the wait window on
+    ///   a corpse and then re-suspect it as a *fresh* crash, resetting
+    ///   the CCC streak exactly when the graph healed), and otherwise
+    ///   enter as [`PeerStatus::Alive`], the optimistic default every
+    ///   tracked peer starts with.
+    ///
+    /// Returns the peers that entered the tracked set as `Alive` (new, or
+    /// parked-alive) — the set the CRT relay re-arms toward: an alive
+    /// newcomer may have been out of the flood's reach while a terminate
+    /// flag circulated ([`crate::coordinator::machine`], DESIGN.md §10).
+    pub fn retrack(&mut self, neighbors: &[ClientId]) -> Vec<ClientId> {
+        let keep: IdSet = neighbors.iter().copied().collect();
+        for id in 0..self.status.len() {
+            if self.status[id].is_some() && !keep.contains(id as ClientId) {
+                if self.status[id] == Some(PeerStatus::Alive) {
+                    self.alive -= 1;
+                }
+                if id >= self.parked.len() {
+                    self.parked.resize(id + 1, None);
+                }
+                self.parked[id] = self.status[id].take();
+                self.tracked -= 1;
+            }
+        }
+        let mut entered_alive = Vec::new();
+        for &p in neighbors {
+            if p as usize >= self.status.len() {
+                self.status.resize(p as usize + 1, None);
+            }
+            if self.status[p as usize].is_none() {
+                let restored = self
+                    .parked
+                    .get_mut(p as usize)
+                    .and_then(Option::take)
+                    .unwrap_or(PeerStatus::Alive);
+                self.status[p as usize] = Some(restored);
+                if restored == PeerStatus::Alive {
+                    self.alive += 1;
+                    entered_alive.push(p);
+                }
+                self.tracked += 1;
+            }
+        }
+        entered_alive
     }
 
     pub fn status(&self, peer: ClientId) -> Option<PeerStatus> {
@@ -232,7 +304,9 @@ mod tests {
     }
 
     #[test]
-    fn tracked_is_static_neighborhood_size() {
+    fn tracked_denominator_ignores_suspicion_and_termination() {
+        // Only `retrack` (an overlay change) may move the denominator —
+        // liveness transitions never do.
         let mut t = PeerTable::new(&[1, 5, 9]);
         assert_eq!(t.tracked(), 3);
         t.mark_missing(0, &ids([]));
@@ -306,6 +380,64 @@ mod tests {
         t.record_message(1, 4, true);
         assert_eq!(t.status(1), Some(PeerStatus::Terminated));
         assert_eq!(t.mark_missing(5, &ids([])), Vec::<ClientId>::new());
+    }
+
+    #[test]
+    fn retrack_applies_neighborhood_deltas() {
+        let mut t = PeerTable::new(&[1, 2, 3]);
+        t.record_message(2, 0, true); // 2 terminated
+        t.mark_missing(0, &ids([1])); // 3 crashed
+        assert_eq!(t.tracked(), 3);
+        // overlay rewires: lose 3, keep 1 (alive) and 2 (terminated), gain 5
+        let entered = t.retrack(&[1, 2, 5]);
+        assert_eq!(entered, vec![5], "only the alive newcomer is reported");
+        assert_eq!(t.tracked(), 3, "denominator follows the new neighborhood");
+        assert_eq!(t.status(3), None, "dropped peer is gone");
+        assert_eq!(t.status(1), Some(PeerStatus::Alive), "kept peer keeps state");
+        assert_eq!(t.status(2), Some(PeerStatus::Terminated), "kept state survives");
+        assert_eq!(t.status(5), Some(PeerStatus::Alive), "new neighbor starts alive");
+        assert_eq!(t.alive_count(), 2);
+        // shrink to nothing (a churned-out client)
+        assert!(t.retrack(&[]).is_empty());
+        assert_eq!(t.tracked(), 0);
+        assert_eq!(t.alive_count(), 0);
+        // and regrow past the original id range
+        assert_eq!(t.retrack(&[9]), vec![9]);
+        assert_eq!(t.tracked(), 1);
+        assert_eq!(t.status(9), Some(PeerStatus::Alive));
+    }
+
+    #[test]
+    fn retrack_with_same_neighborhood_is_a_noop() {
+        let mut t = PeerTable::new(&[1, 4]);
+        t.mark_missing(0, &ids([4]));
+        let (alive, tracked) = (t.alive_count(), t.tracked());
+        assert!(t.retrack(&[1, 4]).is_empty(), "nothing entered");
+        assert_eq!(t.alive_count(), alive);
+        assert_eq!(t.tracked(), tracked);
+        assert_eq!(t.status(1), Some(PeerStatus::Crashed), "suspicion not forgotten");
+    }
+
+    #[test]
+    fn retrack_restores_parked_status_instead_of_resurrecting() {
+        // A healed cut is not evidence of life: a peer dropped while
+        // Crashed/Terminated must come back in that same state.
+        let mut t = PeerTable::new(&[1, 2, 3]);
+        t.record_message(3, 0, true); // 3 terminated
+        t.mark_missing(0, &ids([2])); // 1 crashed
+        // cut severs edges to 1 and 3
+        t.retrack(&[2]);
+        assert_eq!(t.tracked(), 1);
+        // cut heals: both return with their remembered states
+        let entered = t.retrack(&[1, 2, 3]);
+        assert!(entered.is_empty(), "no resurrected peer counts as an alive entry");
+        assert_eq!(t.status(1), Some(PeerStatus::Crashed), "suspicion restored");
+        assert_eq!(t.status(3), Some(PeerStatus::Terminated), "termination restored");
+        assert_eq!(t.alive_count(), 1, "only 2 is alive");
+        assert_eq!(t.tracked(), 3);
+        // a restored-crashed peer can still revive by speaking
+        assert!(t.record_message(1, 5, false));
+        assert_eq!(t.status(1), Some(PeerStatus::Alive));
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Crash schedules + fault injection for the three fault experiments.
+//! Crash schedules + fault injection for the three fault experiments,
+//! plus the topology-aware graph-fault family (DESIGN.md §10).
 //!
 //! A crashed client goes *silent* (benign crash model §3.1): its thread
 //! stops broadcasting and receiving; it never sends wrong data.  Schedules
@@ -9,9 +10,23 @@
 //! * **Experiment 2** (proportional): ⌊n/3⌋ clients "fail during the system
 //!   execution at regular intervals" around the middle of the run.
 //! * **Experiment 3** (maximum fault): n−1 crash, one survivor.
+//!
+//! [`GraphFault`]s attack the *communication graph* instead of the client
+//! set: [`GraphFault::EdgeCut`] severs a named overlay cut for a time
+//! window (a partition that is real on the built graph, unlike a
+//! client-ID bisection that may cross zero edges of a sparse overlay),
+//! and [`GraphFault::Churn`] removes a client from the overlay mid-run
+//! (edges torn down, orphaned neighbors repaired) and optionally rejoins
+//! it later with deterministically regenerated edges.  They are compiled
+//! against the built [`crate::net::Topology`] at sim setup and applied by
+//! the shared [`crate::net::Overlay`] as the deployment clock reaches
+//! them.
 
 use std::time::Duration;
 
+use anyhow::{bail, Context, Result};
+
+use crate::net::ClientId;
 use crate::util::Rng;
 
 /// When (if ever) a client is scheduled to crash.
@@ -65,6 +80,167 @@ impl FaultPlan {
             Some(CrashPoint::Never) => false,
             Some(CrashPoint::AtRound(r)) => round >= r,
             Some(CrashPoint::AtElapsed(d)) => elapsed >= d,
+        }
+    }
+}
+
+/// Which overlay edges an [`GraphFault::EdgeCut`] severs.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CutSpec {
+    /// An explicit edge list (each pair an existing overlay edge —
+    /// validated against the built graph at sim setup).
+    Edges(Vec<(ClientId, ClientId)>),
+    /// A seeded approximate min-cut of the built topology
+    /// ([`crate::net::Topology::min_cut`]): sever the overlay where it is
+    /// thinnest.
+    MinCut,
+}
+
+/// A topology-aware fault: a scheduled change to the communication graph
+/// itself (`dfl sim --fault`, DESIGN.md §10).  Times are measured on the
+/// deployment clock (virtual or wall), like [`crate::net::NetSplit`]
+/// windows.
+#[derive(Clone, Debug, PartialEq)]
+pub enum GraphFault {
+    /// Sever a named overlay cut for `[start, end)`; the severed edges
+    /// heal at `end` (unless an endpoint has meanwhile churned out).
+    EdgeCut { start: Duration, end: Duration, cut: CutSpec },
+    /// `client` leaves the overlay at `leave` (edges torn down, orphaned
+    /// neighbors re-attached to maintain their quorum denominators) and
+    /// rejoins at `rejoin` with deterministically regenerated edges
+    /// (`None` = permanent departure).
+    Churn { client: ClientId, leave: Duration, rejoin: Option<Duration> },
+}
+
+impl GraphFault {
+    /// Parse one CLI spelling:
+    ///
+    /// * `graph-cut:START-END:mincut` — seeded min-cut window
+    /// * `graph-cut:START-END:A-B,C-D,…` — explicit edge-list window
+    /// * `churn:CLIENT:LEAVE-REJOIN` / `churn:CLIENT:LEAVE` — churn
+    ///
+    /// Times are seconds (fractions allowed).
+    ///
+    /// ```
+    /// use dfl::coordinator::fault::{CutSpec, GraphFault};
+    /// use std::time::Duration;
+    ///
+    /// assert_eq!(
+    ///     GraphFault::parse("churn:3:0.5-1.5").unwrap(),
+    ///     GraphFault::Churn {
+    ///         client: 3,
+    ///         leave: Duration::from_secs_f64(0.5),
+    ///         rejoin: Some(Duration::from_secs_f64(1.5)),
+    ///     }
+    /// );
+    /// assert!(matches!(
+    ///     GraphFault::parse("graph-cut:0.2-0.8:mincut").unwrap(),
+    ///     GraphFault::EdgeCut { cut: CutSpec::MinCut, .. }
+    /// ));
+    /// assert!(GraphFault::parse("graph-cut:0.8-0.2:mincut").is_err());
+    /// ```
+    pub fn parse(s: &str) -> Result<GraphFault> {
+        let secs = |v: &str, what: &str| -> Result<Duration> {
+            let x: f64 = v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("graph fault {s:?}: bad {what} {v:?}"))?;
+            // The upper bound (~31 years) keeps Duration::from_secs_f64
+            // from panicking on absurd inputs — the parser's whole job is
+            // to return errors, not crash on them.
+            anyhow::ensure!(
+                x.is_finite() && (0.0..=1.0e9).contains(&x),
+                "graph fault {s:?}: {what} must be a time in [0, 1e9] seconds"
+            );
+            Ok(Duration::from_secs_f64(x))
+        };
+        let mut parts = s.splitn(3, ':');
+        let kind = parts.next().unwrap_or("");
+        match kind {
+            "graph-cut" | "cut" => {
+                let window = parts.next().context("graph-cut: missing START-END window")?;
+                let (a, b) = window
+                    .split_once('-')
+                    .with_context(|| format!("graph fault {s:?}: window wants START-END"))?;
+                let (start, end) = (secs(a, "window start")?, secs(b, "window end")?);
+                anyhow::ensure!(end > start, "graph fault {s:?}: window must end after it starts");
+                let spec = parts.next().context("graph-cut: missing mincut|edge list")?;
+                let cut = if spec == "mincut" {
+                    CutSpec::MinCut
+                } else {
+                    let edges = spec
+                        .split(',')
+                        .filter(|e| !e.is_empty())
+                        .map(|e| {
+                            let (x, y) = e
+                                .split_once('-')
+                                .with_context(|| format!("graph fault {s:?}: edge {e:?} wants A-B"))?;
+                            let a: ClientId = x.parse().with_context(|| format!("edge {e:?}"))?;
+                            let b: ClientId = y.parse().with_context(|| format!("edge {e:?}"))?;
+                            anyhow::ensure!(a != b, "graph fault {s:?}: self-loop edge {e:?}");
+                            Ok((a.min(b), a.max(b)))
+                        })
+                        .collect::<Result<Vec<_>>>()?;
+                    anyhow::ensure!(!edges.is_empty(), "graph fault {s:?}: empty edge list");
+                    CutSpec::Edges(edges)
+                };
+                Ok(GraphFault::EdgeCut { start, end, cut })
+            }
+            "churn" => {
+                let client: ClientId = parts
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .with_context(|| format!("graph fault {s:?}: missing/bad client id"))?;
+                let times = parts.next().context("churn: missing LEAVE[-REJOIN] times")?;
+                let (leave, rejoin) = match times.split_once('-') {
+                    Some((l, r)) => (secs(l, "leave time")?, Some(secs(r, "rejoin time")?)),
+                    None => (secs(times, "leave time")?, None),
+                };
+                if let Some(r) = rejoin {
+                    anyhow::ensure!(r > leave, "graph fault {s:?}: rejoin must follow leave");
+                }
+                Ok(GraphFault::Churn { client, leave, rejoin })
+            }
+            _ => bail!(
+                "unknown graph fault {s:?} (want graph-cut:START-END:mincut|A-B,… or churn:CLIENT:LEAVE[-REJOIN])"
+            ),
+        }
+    }
+
+    /// Parse a `;`-separated schedule (the `--fault` flag's value).
+    pub fn parse_list(s: &str) -> Result<Vec<GraphFault>> {
+        s.split(';').filter(|p| !p.trim().is_empty()).map(|p| GraphFault::parse(p.trim())).collect()
+    }
+
+    /// The CLI spelling (round-trips through [`GraphFault::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            GraphFault::EdgeCut { start, end, cut } => {
+                let spec = match cut {
+                    CutSpec::MinCut => "mincut".to_string(),
+                    CutSpec::Edges(edges) => edges
+                        .iter()
+                        .map(|(a, b)| format!("{a}-{b}"))
+                        .collect::<Vec<_>>()
+                        .join(","),
+                };
+                format!("graph-cut:{}-{}:{spec}", start.as_secs_f64(), end.as_secs_f64())
+            }
+            GraphFault::Churn { client, leave, rejoin } => match rejoin {
+                Some(r) => format!("churn:{client}:{}-{}", leave.as_secs_f64(), r.as_secs_f64()),
+                None => format!("churn:{client}:{}", leave.as_secs_f64()),
+            },
+        }
+    }
+
+    /// Does this fault reference only clients below `n`?  (The shrinker
+    /// drops faults that would dangle when the client count shrinks.)
+    pub fn fits(&self, n: usize) -> bool {
+        match self {
+            GraphFault::EdgeCut { cut: CutSpec::Edges(edges), .. } => {
+                edges.iter().all(|&(a, b)| (a as usize) < n && (b as usize) < n)
+            }
+            GraphFault::EdgeCut { cut: CutSpec::MinCut, .. } => true,
+            GraphFault::Churn { client, .. } => (*client as usize) < n,
         }
     }
 }
@@ -177,5 +353,56 @@ mod tests {
         let plans = max_fault_schedule(8, 3, 30);
         assert!(plans[3].crash.is_none());
         assert_eq!(plans.iter().filter(|p| p.crash.is_some()).count(), 7);
+    }
+
+    #[test]
+    fn graph_fault_parse_round_trips() {
+        for s in [
+            "graph-cut:0.2-0.8:mincut",
+            "graph-cut:0.5-1:3-7,0-9",
+            "churn:4:0.3",
+            "churn:4:0.3-0.9",
+        ] {
+            let f = GraphFault::parse(s).unwrap();
+            assert_eq!(GraphFault::parse(&f.name()).unwrap(), f, "{s}");
+        }
+        let list = GraphFault::parse_list("graph-cut:0.2-0.8:mincut; churn:1:0.5").unwrap();
+        assert_eq!(list.len(), 2);
+        assert!(GraphFault::parse_list("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn graph_fault_parse_normalizes_and_rejects() {
+        // edge endpoints normalized ascending
+        match GraphFault::parse("graph-cut:0-1:9-3").unwrap() {
+            GraphFault::EdgeCut { cut: CutSpec::Edges(e), .. } => assert_eq!(e, vec![(3, 9)]),
+            other => panic!("wrong parse: {other:?}"),
+        }
+        for bad in [
+            "",
+            "graph-cut",
+            "graph-cut:0.8-0.2:mincut", // inverted window
+            "graph-cut:0.2-0.8:",       // empty edge list
+            "graph-cut:0.2-0.8:3-3",    // self loop
+            "graph-cut:x-1:mincut",
+            "churn:4",
+            "churn:4:0.9-0.3", // rejoin before leave
+            "churn:x:0.3",
+            "churn:3:1e20",            // would overflow Duration
+            "graph-cut:0-1e300:mincut", // likewise
+            "meteor:1:2",
+        ] {
+            assert!(GraphFault::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn graph_fault_fits_tracks_referenced_clients() {
+        assert!(GraphFault::parse("churn:4:0.3").unwrap().fits(5));
+        assert!(!GraphFault::parse("churn:4:0.3").unwrap().fits(4));
+        let cut = GraphFault::parse("graph-cut:0-1:3-7").unwrap();
+        assert!(cut.fits(8));
+        assert!(!cut.fits(7));
+        assert!(GraphFault::parse("graph-cut:0-1:mincut").unwrap().fits(1));
     }
 }

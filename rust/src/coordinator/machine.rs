@@ -70,6 +70,20 @@
 //! directly, and the extra sends would perturb the seeded per-link RNG
 //! streams that make full-overlay runs byte-identical to the
 //! pre-topology protocol.
+//!
+//! # Graph faults (DESIGN.md §10)
+//!
+//! Under a graph-fault schedule the overlay *changes mid-run*: the
+//! machine polls [`Transport::topology_generation`] once per round and,
+//! on a change, re-scopes its cached neighborhood structure — the
+//! [`PeerTable`] tracked set (and with it the quorum denominator) via
+//! `retrack`, and the relay gate.  Two churn-safety rules ride along:
+//! the CRT relay *re-arms* toward a revived neighbor (the one-shot
+//! flood dedup would otherwise strand a peer that was away while the
+//! flood passed), and an overlay-isolated client (zero tracked
+//! neighbors on a dynamic overlay) paces its rounds through the window
+//! and never counts them toward the CCC streak — no solo convergence
+//! while disconnected from the graph.
 
 use std::collections::BTreeMap;
 use std::time::Duration;
@@ -77,12 +91,12 @@ use std::time::Duration;
 use anyhow::{bail, Result};
 
 use super::async_client::{AsyncClient, ClientData};
-use super::config::ProtocolConfig;
+use super::config::{ProtocolConfig, QuorumSpec};
 use super::failure::{IdSet, PeerTable};
 use super::fault::FaultPlan;
 use super::sync::{SyncClient, SYNC_GRACE};
 use super::termination::{
-    quorum_crash_free, ConvergenceMonitor, TerminationCause, TerminationState,
+    quorum_crash_free, ConvergenceMonitor, QuorumController, TerminationCause, TerminationState,
 };
 use crate::metrics::{ClientReport, RoundRecord};
 use crate::model::ParamVector;
@@ -290,13 +304,30 @@ pub struct AsyncMachine<'a> {
     started: SimTime,
     params: Vec<f32>,
     peer_table: PeerTable,
+    /// Overlay change counter last seen ([`Transport::topology_generation`]):
+    /// a mismatch at the top of a round means graph faults rewired the
+    /// neighborhood, and the peer table / quorum denominator resync.
+    overlay_gen: u64,
+    /// Does the overlay carry a graph-fault schedule?  Gates the
+    /// churn-aware paths so static deployments stay byte-identical.
+    overlay_dynamic: bool,
     /// Relay first-seen terminate flags onward?  True only on a sparse
     /// overlay (on the full mesh the relay is disabled; see the module
-    /// docs on byte-identity).
+    /// docs on byte-identity).  Refreshed on overlay resync.
     relay_sparse: bool,
     /// Has this client already forwarded a flagged update? (The sender
     /// side of the relay dedup: at most one forward per client per run.)
     relayed: bool,
+    /// The first flagged update seen (what the relay forwarded), kept so
+    /// the relay can *re-arm* toward a peer that revives after missing
+    /// the flood — a crashed-and-rejoined neighbor lost its in-flight
+    /// flags, and every other copy it could have heard is spent (its
+    /// neighbors relayed once, flagged clients finished).  Without the
+    /// re-send the flood provably never reaches it again.
+    relay_msg: Option<ModelUpdate>,
+    /// Per-client quorum auto-tuner ([`QuorumSpec::Auto`]); idle under a
+    /// fixed quorum.
+    quorum_ctl: QuorumController,
     /// Origins whose flagged update we already processed (the receiver
     /// side of the relay dedup): the flood can deliver the same flagged
     /// broadcast several times — direct plus relayed copies — and only
@@ -326,6 +357,11 @@ impl<'a> AsyncMachine<'a> {
         let neighbors = c.transport.neighbors();
         let peer_table = PeerTable::new(&neighbors);
         let relay_sparse = neighbors.len() < c.transport.n_peers();
+        let overlay_dynamic = c.transport.topology_is_dynamic();
+        let quorum_ctl = QuorumController::new(match c.cfg.quorum {
+            QuorumSpec::Auto { q_min } => q_min,
+            QuorumSpec::Fixed(_) => 0.0, // constructed but never consulted
+        });
         let monitor = ConvergenceMonitor::new(c.cfg.count_threshold, c.cfg.conv_threshold_rel);
         AsyncMachine {
             id: c.id,
@@ -344,8 +380,12 @@ impl<'a> AsyncMachine<'a> {
             started: SimTime::ZERO,
             params: Vec::new(),
             peer_table,
+            overlay_gen: 0,
+            overlay_dynamic,
             relay_sparse,
             relayed: false,
+            relay_msg: None,
+            quorum_ctl,
             flagged_seen: IdSet::new(),
             term: TerminationState::new(),
             monitor,
@@ -454,8 +494,36 @@ impl<'a> AsyncMachine<'a> {
         }
     }
 
-    /// Post-training: CRT fast path, broadcast, open the wait window.
+    /// Graph-fault awareness: once per round, check whether the overlay
+    /// changed under us (cuts, churn, repairs) and re-scope every cached
+    /// neighborhood structure — the tracked peer set (and with it the
+    /// quorum denominator) and the relay gate.  On a static overlay the
+    /// generation is pinned at 0 and this is a branch-not-taken.
+    ///
+    /// An *alive entrant* (a neighbor the rewiring just connected us to —
+    /// a rejoined churn client, or a repair edge's new endpoint) gets the
+    /// stored terminate flag re-sent immediately: it may have been
+    /// outside the flood's reach while the flag circulated, and the
+    /// one-shot relay dedup means nobody else will repeat it.  This is
+    /// the churn-side twin of the revival re-arm in `rearm_relay`.
+    fn resync_overlay(&mut self) {
+        let gen = self.transport.topology_generation();
+        if gen == self.overlay_gen {
+            return;
+        }
+        self.overlay_gen = gen;
+        let neighbors = self.transport.neighbors();
+        self.relay_sparse = neighbors.len() < self.transport.n_peers();
+        let entered_alive = self.peer_table.retrack(&neighbors);
+        for peer in entered_alive {
+            self.rearm_relay(peer);
+        }
+    }
+
+    /// Post-training: overlay resync, CRT fast path, broadcast, open the
+    /// wait window.
     fn after_train(&mut self) -> Result<Flow> {
+        self.resync_overlay();
         // CRT fast path: flag already known -> final broadcast.
         if self.term.is_set() {
             self.broadcast_model(true);
@@ -464,8 +532,11 @@ impl<'a> AsyncMachine<'a> {
         }
         self.broadcast_model(false);
         // Degenerate neighborless deployment (single client): nothing to
-        // wait for.
-        if self.peer_table.tracked() == 0 {
+        // wait for.  Under graph faults a zero-neighbor state means the
+        // client is churned *out*, not alone in the world: it idles
+        // through the window (pacing its rounds, catching the rejoin)
+        // instead of spinning straight to the round cap.
+        if self.peer_table.tracked() == 0 && !self.overlay_dynamic {
             let w = Window::open(self.clock.now(), &self.peer_table);
             return self.close_window(w);
         }
@@ -513,17 +584,27 @@ impl<'a> AsyncMachine<'a> {
                     self.relay_terminate(&u);
                 }
                 if tracked && fresh {
-                    self.peer_table.record_message(sender, self.round, u.terminate);
+                    let revived =
+                        self.peer_table.record_message(sender, self.round, u.terminate);
+                    let carried_flag = u.terminate;
                     w.heard.insert(sender);
                     w.resolve(sender);
                     w.stash(sender, u, self.meta.k_max.saturating_sub(1));
+                    // A revival whose own message carried the flag needs no
+                    // re-arm — that peer terminated knowingly.
+                    if revived && !carried_flag {
+                        self.rearm_relay(sender);
+                    }
                 }
             }
             Msg::Hello { .. } => {
                 if tracked {
-                    self.peer_table.record_message(sender, self.round, false);
+                    let revived = self.peer_table.record_message(sender, self.round, false);
                     w.heard.insert(sender);
                     w.resolve(sender);
+                    if revived {
+                        self.rearm_relay(sender);
+                    }
                 }
             }
             Msg::Bye { .. } => {
@@ -551,12 +632,38 @@ impl<'a> AsyncMachine<'a> {
     /// there every peer hears the origin directly, and extra sends would
     /// shift the seeded link streams.
     fn relay_terminate(&mut self, u: &ModelUpdate) {
-        if self.relayed || !self.relay_sparse {
+        if !self.relay_sparse {
+            return;
+        }
+        if self.relay_msg.is_none() {
+            // Keep the first flagged update for the re-arm path below,
+            // whether or not we are the one who forwards the flood.
+            self.relay_msg = Some(u.clone());
+        }
+        if self.relayed {
             return;
         }
         self.relayed = true;
         // Best-effort, like every send under the crash model.
         let _ = self.transport.broadcast(&Msg::Update(u.clone()));
+    }
+
+    /// Relay re-arm (bugfix, DESIGN.md §10): the flood's dedup is
+    /// one-shot — each client forwards at most once — so a neighbor that
+    /// crashed with `rejoin_after` set and drained its mailbox on resume
+    /// can have missed every copy of the terminate flag with nobody left
+    /// to repeat it (flagged clients finish one round after flagging).
+    /// A *revival* of a tracked peer is exactly that situation becoming
+    /// visible, so the stored flagged update is re-sent to the revived
+    /// peer directly.  Sparse-overlay only (`relay_msg` is never stored
+    /// on the full mesh, where the origin's broadcast already reached
+    /// every peer and extra sends would break byte-identity); duplicate
+    /// deliveries are harmless — the receiver-side per-origin dedup
+    /// ignores all but the first copy.
+    fn rearm_relay(&mut self, peer: ClientId) {
+        if let Some(flag) = &self.relay_msg {
+            let _ = self.transport.send(peer, &Msg::Update(flag.clone()));
+        }
     }
 
     /// End of window: suspect sweep, aggregate, evaluate, CCC — the
@@ -583,12 +690,29 @@ impl<'a> AsyncMachine<'a> {
         let probe_acc = correct as f32 / self.data.eval.eval_ys.len() as f32;
         // CCC check (Alg. 2 lines 23-34), condition (a) generalized to the
         // neighborhood quorum: at q = 1.0 this is exactly the paper's
-        // `newly_crashed.is_empty()`.
-        let crash_free = quorum_crash_free(
-            newly_crashed.len(),
-            self.peer_table.tracked(),
-            self.cfg.quorum,
-        );
+        // `newly_crashed.is_empty()`.  Under `--quorum auto` the q is the
+        // controller's, derived from *previous* windows only (this
+        // window's sweep is folded in after judging it, so a fresh
+        // mass-crash spike is always judged against the pre-spike
+        // tolerance).
+        let tracked = self.peer_table.tracked();
+        let q = match self.cfg.quorum {
+            QuorumSpec::Fixed(q) => q,
+            QuorumSpec::Auto { .. } => self.quorum_ctl.q(tracked),
+        };
+        let mut crash_free = quorum_crash_free(newly_crashed.len(), tracked, q);
+        if let QuorumSpec::Auto { .. } = self.cfg.quorum {
+            self.quorum_ctl.observe(newly_crashed.len(), tracked);
+        }
+        // A churned-out client (zero tracked neighbors on a dynamic
+        // overlay) has no quorum to confirm anything with: its solo
+        // rounds never count toward the stability streak, so it cannot
+        // self-converge and terminate while disconnected from the graph.
+        // The static neighborless case (a genuine single-client
+        // deployment) keeps the pre-fault always-crash-free behaviour.
+        if self.overlay_dynamic && tracked == 0 {
+            crash_free = false;
+        }
         let avg = ParamVector(self.params.clone());
         let ccc = self.monitor.observe(&avg, crash_free, aggregated);
         self.history.push(RoundRecord {

@@ -17,7 +17,8 @@
 //!   Termination (CRT) flag state; on sparse overlays the flag also
 //!   relays hop-by-hop ([`machine`]).
 //! * [`fault`] — crash schedules and fault injection used by the
-//!   experiments (Experiments 1–3).
+//!   experiments (Experiments 1–3), plus the topology-aware
+//!   [`fault::GraphFault`] family (edge cuts, churn — DESIGN.md §10).
 //! * [`config`] — protocol constants (TIMEOUT, MINIMUM_ROUNDS,
 //!   COUNT_THRESHOLD, convergence threshold, R_PRIME, learning rate).
 
@@ -30,11 +31,12 @@ pub mod sync;
 pub mod termination;
 
 pub use async_client::{AsyncClient, ClientData, EvalTensors};
-pub use config::ProtocolConfig;
+pub use config::{ProtocolConfig, QuorumSpec};
 pub use failure::{IdSet, PeerStatus, PeerTable};
-pub use fault::{CrashPoint, FaultPlan};
+pub use fault::{CrashPoint, CutSpec, FaultPlan, GraphFault};
 pub use machine::{ClientStateMachine, Input, Step};
 pub use sync::SyncClient;
 pub use termination::{
-    quorum_crash_free, ConvergenceMonitor, TerminationCause, TerminationState,
+    quorum_crash_free, quorum_tolerated, ConvergenceMonitor, QuorumController,
+    TerminationCause, TerminationState,
 };

@@ -78,10 +78,40 @@ impl TerminationState {
     }
 }
 
+/// The exact number of fresh suspicions a `quorum`-fraction condition (a)
+/// tolerates over a `neighborhood`-sized tracked set: `⌊(1 − q) · n⌋`,
+/// computed without floating-point rounding anywhere near the boundary.
+///
+/// `q` is fixed-pointed to parts-per-million first (recovering the
+/// decimal the caller wrote — f32 carries ~7 significant digits, so every
+/// CLI-expressible quorum survives the round exactly) and the floor is
+/// then pure integer arithmetic.  The previous formulation compared
+/// `newly as f64 <= (1 − q) · n + ε·n`: the epsilon that absorbed the
+/// f32→f64 widening error could also push a product sitting just *below*
+/// an integer over it (and at n ≥ 1e6 tolerated 1 even for q = 1.0),
+/// admitting one extra suspicion vs the documented `⌊(1 − q) · n⌋`.
+///
+/// ```
+/// use dfl::coordinator::termination::quorum_tolerated;
+///
+/// assert_eq!(quorum_tolerated(199, 0.85), 29);   // ⌊0.15·199⌋
+/// assert_eq!(quorum_tolerated(20, 0.85), 3);     // ⌊0.15·20⌋, exactly
+/// assert_eq!(quorum_tolerated(10_000_000, 1.0), 0);
+/// ```
+pub fn quorum_tolerated(neighborhood: usize, quorum: f32) -> usize {
+    let q = quorum.clamp(0.0, 1.0);
+    // f32 → ppm is exact for any quorum written with ≤ 6 decimals; the
+    // rest is integer floor division, so no boundary can drift.
+    let keep_ppm = (q as f64 * 1_000_000.0).round() as u128;
+    let cut_ppm = 1_000_000u128 - keep_ppm.min(1_000_000);
+    (cut_ppm * neighborhood as u128 / 1_000_000) as usize
+}
+
 /// Quorum-CCC condition (a) for one round: did at least a `quorum`
 /// fraction of the (`neighborhood`-sized) tracked peer set go unsuspected
-/// this round?  Equivalently: were at most `⌊(1 − q) · neighborhood⌋`
-/// peers *newly* marked crashed by this round's sweep?
+/// this round?  Equivalently: were at most [`quorum_tolerated`]
+/// (`⌊(1 − q) · neighborhood⌋`) peers *newly* marked crashed by this
+/// round's sweep?
 ///
 /// * `q = 1.0` tolerates zero fresh suspicions — exactly the paper's
 ///   strict "no crash detected this round", so full-overlay runs with the
@@ -107,16 +137,82 @@ impl TerminationState {
 /// assert!(!quorum_crash_free(30, 199, 0.85));
 /// ```
 pub fn quorum_crash_free(newly_suspected: usize, neighborhood: usize, quorum: f32) -> bool {
-    let q = quorum.clamp(0.0, 1.0) as f64;
-    if q >= 1.0 {
-        // Exact zero-tolerance at any neighborhood size (the epsilon
-        // below would otherwise tolerate 1 at n >= 1e6).
-        return newly_suspected == 0;
+    newly_suspected <= quorum_tolerated(neighborhood, quorum)
+}
+
+/// Suspicion-driven quorum auto-tuning (`--quorum auto`, DESIGN.md §10):
+/// derives condition (a)'s `q` per client from the *measured* per-window
+/// fresh-suspicion rate instead of a hand-picked deployment constant.
+///
+/// The controller keeps an EWMA of `newly_suspected / neighborhood` per
+/// closed window and tolerates the smoothed rate plus a 3σ binomial
+/// margin — precisely the derivation that hand-picked q = 0.85 for the
+/// 200-client 10%-loss deployment (mean ≈ 0.085 of 199 tracked peers,
+/// σ = √(r(1−r)/n) ≈ 0.02, tolerance ≈ mean + 3σ).  The derived `q` is
+/// clamped to `[q_min, 1.0]`:
+///
+/// * while no suspicion has ever been observed the controller returns
+///   exactly `1.0`, so a loss-free `auto` run makes the identical
+///   decisions (and sends the identical bytes) as the paper-strict fixed
+///   quorum;
+/// * a sudden mass-crash still trips condition (a): the tolerance tracks
+///   the *historical* rate, and the controller only folds a round in
+///   *after* that round was judged, so a fresh spike is always judged
+///   against the pre-spike quorum.
+///
+/// Everything is a pure fold over the observation sequence — no RNG, no
+/// clock — so auto-quorum runs stay byte-identical per seed.
+#[derive(Clone, Debug)]
+pub struct QuorumController {
+    q_min: f32,
+    /// Smoothed fresh-suspicion fraction per window.
+    ewma: f64,
+    /// Has any window been folded in yet?
+    primed: bool,
+}
+
+/// EWMA smoothing factor: ~5-round memory, fast enough to adapt inside
+/// one `COUNT_THRESHOLD` streak, slow enough to ride out single spikes.
+const QUORUM_EWMA_ALPHA: f64 = 0.2;
+/// Binomial tolerance margin above the smoothed rate (mean + 3σ).
+const QUORUM_SIGMA_MARGIN: f64 = 3.0;
+
+impl QuorumController {
+    pub fn new(q_min: f32) -> Self {
+        QuorumController { q_min: q_min.clamp(0.0, 1.0), ewma: 0.0, primed: false }
     }
-    // The epsilon absorbs the f32→f64 widening error of q (≈1.2e-7·n)
-    // so e.g. q = 0.8 over 10 peers tolerates the intended 2, not 1.
-    let tolerated = ((1.0 - q) * neighborhood as f64 + 1e-6 * neighborhood as f64).floor();
-    (newly_suspected as f64) <= tolerated
+
+    /// The quorum to judge the *next* window with, from every window
+    /// observed so far.  Strict (`1.0`) until the first suspicion.
+    pub fn q(&self, neighborhood: usize) -> f32 {
+        if !self.primed || neighborhood == 0 || self.ewma <= 0.0 {
+            return 1.0;
+        }
+        let sigma = (self.ewma * (1.0 - self.ewma) / neighborhood as f64).sqrt();
+        let tolerance = self.ewma + QUORUM_SIGMA_MARGIN * sigma;
+        ((1.0 - tolerance) as f32).clamp(self.q_min, 1.0)
+    }
+
+    /// Fold one closed window's sweep result into the EWMA.  Call *after*
+    /// judging the window with [`QuorumController::q`] so a spike never
+    /// raises its own tolerance.
+    pub fn observe(&mut self, newly_suspected: usize, neighborhood: usize) {
+        if neighborhood == 0 {
+            return;
+        }
+        let rate = (newly_suspected.min(neighborhood) as f64) / neighborhood as f64;
+        if self.primed {
+            self.ewma = (1.0 - QUORUM_EWMA_ALPHA) * self.ewma + QUORUM_EWMA_ALPHA * rate;
+        } else {
+            self.ewma = rate;
+            self.primed = true;
+        }
+    }
+
+    /// The smoothed suspicion rate (diagnostics).
+    pub fn rate(&self) -> f64 {
+        self.ewma
+    }
 }
 
 /// The CCC stability monitor over successive aggregated (global-average)
@@ -277,6 +373,106 @@ mod tests {
         assert!(quorum_crash_free(0, 10, 1.5));
         assert!(!quorum_crash_free(1, 10, 1.5));
         assert!(quorum_crash_free(10, 10, -0.2));
+    }
+
+    /// The satellite bugfix contract: across q ∈ {0.50, 0.51, …, 1.00}
+    /// and n ∈ {1..1000}, the tolerated count is *exactly* the integer
+    /// `((100 − j) · n) / 100` for q = j/100 — an independent rational
+    /// derivation, no floats — and `quorum_crash_free` flips precisely at
+    /// that boundary.  The old epsilon formulation admitted one extra
+    /// suspicion whenever `(1−q)·n` sat within ε·n below an integer.
+    #[test]
+    fn quorum_boundary_is_the_exact_integer_floor() {
+        for j in 50..=100u32 {
+            let q = j as f32 / 100.0;
+            for n in 1..=1000usize {
+                let expect = ((100 - j) as usize * n) / 100;
+                assert_eq!(
+                    quorum_tolerated(n, q),
+                    expect,
+                    "q={q} n={n}: tolerated must be ⌊(1−q)·n⌋ exactly"
+                );
+                assert!(quorum_crash_free(expect, n, q), "q={q} n={n} at boundary");
+                assert!(!quorum_crash_free(expect + 1, n, q), "q={q} n={n} above boundary");
+            }
+        }
+    }
+
+    #[test]
+    fn quorum_tolerated_is_monotone_and_bounded() {
+        for j in (50..=100u32).step_by(5) {
+            let q = j as f32 / 100.0;
+            let mut prev = 0usize;
+            for n in 1..=1000usize {
+                let t = quorum_tolerated(n, q);
+                assert!(t <= n, "tolerated can never exceed the neighborhood");
+                assert!(t >= prev, "tolerated must grow with the neighborhood");
+                prev = t;
+            }
+        }
+        // q = 1.0 tolerates zero at any size (the old epsilon admitted 1
+        // at n >= 1e6 — the regression the strict special case guarded).
+        assert_eq!(quorum_tolerated(10_000_000, 1.0), 0);
+        assert_eq!(quorum_tolerated(usize::MAX / 2, 1.0), 0);
+    }
+
+    #[test]
+    fn quorum_controller_is_strict_until_suspicion_appears() {
+        let mut c = QuorumController::new(0.5);
+        assert_eq!(c.q(199), 1.0, "no evidence yet: paper-strict");
+        c.observe(0, 199);
+        c.observe(0, 199);
+        assert_eq!(c.q(199), 1.0, "zero observed rate stays strict");
+        assert_eq!(c.rate(), 0.0);
+    }
+
+    #[test]
+    fn quorum_controller_derives_the_hand_picked_loss_quorum() {
+        // Feed the 200-client 10%-loss regime (≈17 of 199 tracked peers
+        // falsely suspected per window): the derived q must land in the
+        // neighborhood of the hand-picked 0.85 — mean + 3σ ≈ 0.85/0.84 —
+        // and the tolerance it implies must absorb the per-round noise.
+        let mut c = QuorumController::new(0.5);
+        for _ in 0..30 {
+            c.observe(17, 199);
+        }
+        let q = c.q(199);
+        assert!((0.80..0.90).contains(&q), "derived q = {q}, want ≈0.85");
+        let tol = quorum_tolerated(199, q);
+        assert!((25..40).contains(&tol), "tolerance {tol} must absorb ≈17 ± 3σ");
+        assert!(
+            !quorum_crash_free(60, 199, q),
+            "a mass-crash event must still trip condition (a)"
+        );
+    }
+
+    #[test]
+    fn quorum_controller_clamps_to_q_min_and_adapts_back() {
+        let mut c = QuorumController::new(0.8);
+        for _ in 0..50 {
+            c.observe(100, 200); // 50% suspicion rate: wants q ≈ 0.4
+        }
+        assert_eq!(c.q(200), 0.8, "q must clamp at q_min");
+        for _ in 0..100 {
+            c.observe(0, 200); // quiet again: EWMA decays, q recovers
+        }
+        assert!(c.q(200) > 0.9, "q must recover toward strict, got {}", c.q(200));
+    }
+
+    #[test]
+    fn quorum_controller_is_a_pure_fold() {
+        // Same observation sequence ⇒ same derived q, bit for bit (the
+        // byte-identity contract of `--quorum auto` per seed).
+        let run = || {
+            let mut c = QuorumController::new(0.5);
+            let mut qs = Vec::new();
+            for i in 0..40usize {
+                qs.push(c.q(64).to_bits());
+                c.observe(i % 7, 64);
+            }
+            qs
+        };
+        assert_eq!(run(), run());
     }
 
     #[test]

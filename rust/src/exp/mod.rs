@@ -1,6 +1,7 @@
 //! Experiment drivers — one per table/figure of the paper's §4, plus the
-//! beyond-paper network-scenario matrix ([`scenarios()`]) and sparse-
-//! overlay topology sweep ([`topologies()`]).
+//! beyond-paper network-scenario matrix ([`scenarios()`]), sparse-
+//! overlay topology sweep ([`topologies()`]), and graph-fault sweep
+//! ([`faults()`]).
 //!
 //! Each driver runs the relevant deployments through [`crate::sim`] and
 //! returns a [`Table`] shaped like the paper's (same rows/series), so
@@ -20,6 +21,7 @@ mod baseline;
 mod exp1;
 mod exp2;
 mod exp3;
+mod faults;
 mod phase1;
 mod scenarios;
 mod termination;
@@ -28,12 +30,14 @@ pub use baseline::table2;
 pub use exp1::fig3_4;
 pub use exp2::fig5_6;
 pub use exp3::fig7_8;
+pub use faults::faults;
 pub use phase1::{table3, table4};
 pub use scenarios::{scenarios, topologies};
 pub use termination::termination_reliability;
 
 use std::time::Duration;
 
+use crate::coordinator::config::QuorumSpec;
 use crate::coordinator::ProtocolConfig;
 use crate::net::{NetPreset, TopologySpec};
 use crate::runtime::{Meta, Trainer};
@@ -77,9 +81,10 @@ pub struct ExpScale {
     /// own default, the paper's full mesh).  Phase-1 drivers ignore it —
     /// their barrier requires the full mesh.
     pub topology: Option<TopologySpec>,
-    /// Override the quorum-CCC fraction `q` of condition (a)
-    /// (None = 1.0, the paper-strict condition).
-    pub quorum: Option<f32>,
+    /// Override quorum-CCC's condition (a) (None = `Fixed(1.0)`, the
+    /// paper-strict condition; `Auto` enables suspicion-driven
+    /// auto-tuning — the CLI's `--quorum auto`).
+    pub quorum: Option<QuorumSpec>,
 }
 
 impl Default for ExpScale {
@@ -142,7 +147,7 @@ impl ExpScale {
             weight_by_samples: false,
             early_window_exit: true,
             crt_enabled: true,
-            quorum: self.quorum.unwrap_or(1.0),
+            quorum: self.quorum.unwrap_or(QuorumSpec::STRICT),
         }
     }
 
@@ -222,6 +227,10 @@ pub fn run_all(trainer: &(dyn Trainer + Sync), scale: ExpScale) -> Vec<(String, 
         (
             "Topology sweep — sparse overlays (beyond paper)".into(),
             topologies(trainer, scale),
+        ),
+        (
+            "Fault sweep — graph faults + quorum auto-tuning (beyond paper)".into(),
+            faults(trainer, scale),
         ),
     ]
 }

@@ -26,14 +26,10 @@ use dfl::sim::{self, Partition, SimConfig};
 use dfl::util::cli::Flags;
 use dfl::util::Rng;
 
-/// Parse + range-check a `--quorum` value (shared by `sim` and `reproduce`).
-fn parse_quorum(a: &dfl::util::cli::Args) -> Result<f32> {
-    let quorum = a.f32("quorum")?;
-    anyhow::ensure!(
-        (0.0..=1.0).contains(&quorum),
-        "--quorum must be in [0, 1], got {quorum}"
-    );
-    Ok(quorum)
+/// Parse a `--quorum` value — a fraction in [0, 1], `auto`, or
+/// `auto:Q_MIN` (shared by `sim` and `reproduce`).
+fn parse_quorum(a: &dfl::util::cli::Args) -> Result<dfl::coordinator::QuorumSpec> {
+    dfl::coordinator::QuorumSpec::parse(a.str("quorum"))
 }
 
 fn artifacts_dir(config: &str) -> PathBuf {
@@ -83,7 +79,8 @@ fn cmd_sim(args: Vec<String>) -> Result<()> {
         .opt("train-n", Some("0"), "global train set size (0 = auto)")
         .opt("net", Some("lan"), "network preset (ideal|lan|wan|asym|lossy-burst)")
         .opt("topology", Some("full"), "peer overlay: full | ring:K | k-regular:D | small-world:D:P")
-        .opt("quorum", Some("1.0"), "quorum-CCC fraction q of the neighborhood for condition (a); 1.0 = paper-strict")
+        .opt("quorum", Some("1.0"), "quorum-CCC condition (a): fraction q (1.0 = paper-strict), auto, or auto:Q_MIN (suspicion-driven)")
+        .opt("fault", Some(""), "graph-fault schedule, ';'-separated: graph-cut:T1-T2:mincut|A-B,... and churn:CLIENT:LEAVE[-REJOIN] (seconds)")
         .opt("train-cost-ms", Some("20"), "modeled per-round train cost under --virtual")
         .opt("exec", Some("events"), "--virtual executor: events (state machines, zero per-client threads) or threads")
         .switch("virtual", "deterministic virtual clock instead of wall time")
@@ -110,6 +107,7 @@ fn cmd_sim(args: Vec<String>) -> Result<()> {
     cfg.net = dfl::net::NetworkModel::preset(a.str("net"), cfg.seed)?;
     cfg.topology = dfl::net::TopologySpec::parse(a.str("topology"))?;
     cfg.protocol.quorum = parse_quorum(&a)?;
+    cfg.graph_faults = dfl::coordinator::GraphFault::parse_list(a.str("fault"))?;
     cfg.virtual_time = a.bool("virtual");
     cfg.exec = dfl::sim::ExecMode::parse(a.str("exec"))?;
     cfg.train_cost = std::time::Duration::from_millis(a.u64("train-cost-ms")?);
@@ -138,14 +136,15 @@ fn cmd_sim(args: Vec<String>) -> Result<()> {
         );
     }
     println!(
-        "running {} clients ({}), {} machines, {} crashes, net {}, topology {} (q={}), {} clock{}, seed {}",
+        "running {} clients ({}), {} machines, {} crashes, {} graph faults, net {}, topology {} (q={}), {} clock{}, seed {}",
         n,
         if cfg.sync { "phase 1 sync" } else { "phase 2 async" },
         cfg.machines,
         crashes,
+        cfg.graph_faults.len(),
         a.str("net"),
         cfg.topology.name(),
-        cfg.protocol.quorum,
+        cfg.protocol.quorum.name(),
         if cfg.virtual_time { "virtual" } else { "wall" },
         if cfg.virtual_time {
             format!(" ({} executor)", cfg.exec.name())
@@ -284,7 +283,7 @@ fn cmd_reproduce(args: Vec<String>) -> Result<()> {
         .opt("seed", Some("2025"), "experiment seed (same seed ⇒ identical tables)")
         .opt("net", Some(""), "override every driver's network with a preset (ideal|lan|wan|asym|lossy-burst)")
         .opt("topology", Some(""), "override every async driver's peer overlay (full|ring:K|k-regular:D|small-world:D:P)")
-        .opt("quorum", Some(""), "override the quorum-CCC fraction q (condition (a)); empty = 1.0, paper-strict")
+        .opt("quorum", Some(""), "override quorum-CCC condition (a): a fraction, auto, or auto:Q_MIN; empty = 1.0, paper-strict")
         .opt("train-cost-ms", Some("20"), "modeled per-round train cost under virtual time")
         .opt("exec", Some("events"), "virtual-time executor: events or threads")
         .switch("full", "full grids (slower) instead of quick mode")
@@ -330,8 +329,11 @@ fn cmd_reproduce(args: Vec<String>) -> Result<()> {
         "topologies" | "topo" => {
             vec![("Topology sweep".into(), exp::topologies(&engine, scale))]
         }
+        "faults" | "graph-faults" => {
+            vec![("Fault sweep".into(), exp::faults(&engine, scale))]
+        }
         other => bail!(
-            "unknown experiment {other:?}; want all|table2|table3|table4|fig3_4|fig5_6|fig7_8|termination|scenarios|topologies"
+            "unknown experiment {other:?}; want all|table2|table3|table4|fig3_4|fig5_6|fig7_8|termination|scenarios|topologies|faults"
         ),
     };
     let mut md = String::new();

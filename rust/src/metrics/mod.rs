@@ -92,6 +92,12 @@ pub struct NetStats {
     pub msgs_delivered: u64,
     pub msgs_dropped: u64,
     pub bytes_sent: u64,
+    /// Overlay edges severed by the deployment's fault schedule: the
+    /// crossing counts of every validated `NetSplit` window plus every
+    /// edge a graph fault (cut or churn departure) actually removed —
+    /// the measured "how hard was the graph attacked" axis of the
+    /// `exp::faults` sweep.  Zero on a fault-free run.
+    pub edges_severed: u64,
 }
 
 impl NetStats {
@@ -124,7 +130,13 @@ mod tests {
 
     #[test]
     fn net_stats_per_round_guards_zero_rounds() {
-        let s = NetStats { msgs_sent: 120, msgs_delivered: 100, msgs_dropped: 20, bytes_sent: 1200 };
+        let s = NetStats {
+            msgs_sent: 120,
+            msgs_delivered: 100,
+            msgs_dropped: 20,
+            bytes_sent: 1200,
+            edges_severed: 0,
+        };
         assert_eq!(s.msgs_per_round(10), 12.0);
         assert_eq!(s.bytes_per_round(10), 120.0);
         assert_eq!(s.msgs_per_round(0), 120.0, "0 rounds must not divide by zero");

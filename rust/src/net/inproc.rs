@@ -44,6 +44,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::message::{ClientId, Msg};
+use super::overlay::Overlay;
 use super::topology::Topology;
 use super::Transport;
 use crate::metrics::NetStats;
@@ -82,6 +83,9 @@ impl NetCounters {
             msgs_delivered: delivered,
             msgs_dropped: sent.saturating_sub(delivered),
             bytes_sent: self.bytes.load(Ordering::Relaxed),
+            // Severed-edge accounting is schedule-side, not hub-side:
+            // `sim::run` fills it from the validated splits + overlay.
+            edges_severed: 0,
         }
     }
 }
@@ -488,10 +492,12 @@ struct HubShared {
     /// globally unique).
     seq: Mutex<u64>,
     blocked: Mutex<HashSet<(ClientId, ClientId)>>,
-    /// Hub creation time: the reference point for `NetSplit` windows.
+    /// Hub creation time: the reference point for `NetSplit` windows and
+    /// the overlay's graph-fault schedule.
     epoch: Instant,
-    /// Peer overlay: which peers each endpoint's broadcasts reach.
-    topology: Arc<Topology>,
+    /// Peer overlay: which peers each endpoint's broadcasts reach —
+    /// time-aware when a graph-fault schedule is attached.
+    overlay: Arc<Overlay>,
     stats: NetCounters,
 }
 
@@ -523,7 +529,14 @@ impl InProcHub {
     /// `send` to any peer stays possible — the overlay scopes
     /// *dissemination*, it is not a reachability firewall.
     pub fn with_topology(n: usize, model: NetworkModel, topology: Arc<Topology>) -> Self {
-        assert_eq!(topology.n(), n, "topology built for a different deployment size");
+        Self::with_overlay(n, model, Arc::new(Overlay::immutable(topology)))
+    }
+
+    /// A hub on a (possibly mutable) [`Overlay`] — the graph-fault path:
+    /// neighbors are read at send time, so cuts, churn, and repairs take
+    /// effect mid-run.
+    pub fn with_overlay(n: usize, model: NetworkModel, overlay: Arc<Overlay>) -> Self {
+        assert_eq!(overlay.n(), n, "overlay built for a different deployment size");
         let mut inboxes = Vec::with_capacity(n);
         let mut receivers = Vec::with_capacity(n);
         for _ in 0..n {
@@ -541,7 +554,7 @@ impl InProcHub {
             seq: Mutex::new(0),
             blocked: Mutex::new(HashSet::new()),
             epoch: Instant::now(),
-            topology,
+            overlay,
             stats: NetCounters::default(),
         });
         let timer = {
@@ -636,7 +649,15 @@ impl Transport for Endpoint {
     }
 
     fn neighbors(&self) -> Vec<ClientId> {
-        self.shared.topology.neighbors(self.id)
+        self.shared.overlay.neighbors(self.shared.epoch.elapsed(), self.id)
+    }
+
+    fn topology_generation(&self) -> u64 {
+        self.shared.overlay.generation(self.shared.epoch.elapsed())
+    }
+
+    fn topology_is_dynamic(&self) -> bool {
+        self.shared.overlay.is_dynamic()
     }
 
     fn send(&self, to: ClientId, msg: &Msg) -> Result<()> {
@@ -696,8 +717,10 @@ struct VirtualHubShared {
     clock: Arc<VirtualClock>,
     links: Mutex<BTreeMap<(ClientId, ClientId), LinkState>>,
     blocked: Mutex<HashSet<(ClientId, ClientId)>>,
-    /// Peer overlay: which peers each endpoint's broadcasts reach.
-    topology: Arc<Topology>,
+    /// Peer overlay: which peers each endpoint's broadcasts reach —
+    /// time-aware (on the shared virtual clock) when a graph-fault
+    /// schedule is attached.
+    overlay: Arc<Overlay>,
     stats: NetCounters,
 }
 
@@ -725,7 +748,18 @@ impl VirtualHub {
         clock: Arc<VirtualClock>,
         topology: Arc<Topology>,
     ) -> Self {
-        assert_eq!(topology.n(), n, "topology built for a different deployment size");
+        Self::with_overlay(n, model, clock, Arc::new(Overlay::immutable(topology)))
+    }
+
+    /// A virtual hub on a (possibly mutable) [`Overlay`] — the
+    /// graph-fault path (see [`InProcHub::with_overlay`]).
+    pub fn with_overlay(
+        n: usize,
+        model: NetworkModel,
+        clock: Arc<VirtualClock>,
+        overlay: Arc<Overlay>,
+    ) -> Self {
+        assert_eq!(overlay.n(), n, "overlay built for a different deployment size");
         VirtualHub {
             shared: Arc::new(VirtualHubShared {
                 n,
@@ -733,7 +767,7 @@ impl VirtualHub {
                 clock,
                 links: Mutex::new(BTreeMap::new()),
                 blocked: Mutex::new(HashSet::new()),
-                topology,
+                overlay,
                 stats: NetCounters::default(),
             }),
             claimed: Mutex::new(vec![false; n]),
@@ -831,7 +865,15 @@ impl Transport for VirtualEndpoint {
     }
 
     fn neighbors(&self) -> Vec<ClientId> {
-        self.shared.topology.neighbors(self.id)
+        self.shared.overlay.neighbors(self.shared.clock.now(), self.id)
+    }
+
+    fn topology_generation(&self) -> u64 {
+        self.shared.overlay.generation(self.shared.clock.now())
+    }
+
+    fn topology_is_dynamic(&self) -> bool {
+        self.shared.overlay.is_dynamic()
     }
 
     fn send(&self, to: ClientId, msg: &Msg) -> Result<()> {
@@ -840,13 +882,15 @@ impl Transport for VirtualEndpoint {
         Ok(())
     }
 
-    /// Encode once, post per overlay neighbor (same per-link sampling and
-    /// ascending order as the default per-peer `send` loop — on a full
-    /// mesh the neighbor list *is* the ascending peer list, so the
-    /// network schedule is unchanged; only the allocations are).
+    /// Encode once, post per *current* overlay neighbor (same per-link
+    /// sampling and ascending order as the default per-peer `send` loop —
+    /// on a full mesh the neighbor list *is* the ascending peer list, so
+    /// the network schedule is unchanged; only the allocations are).
+    /// Under a graph-fault schedule the neighborhood is read at send
+    /// time, so a broadcast never reaches across a cut that is open *now*.
     fn broadcast(&self, msg: &Msg) -> Result<()> {
         let wire: Arc<[u8]> = msg.encode().into();
-        self.shared.topology.for_each_neighbor(self.id, |p| {
+        self.shared.overlay.for_each_neighbor(self.shared.clock.now(), self.id, |p| {
             self.send_encoded(p, &wire);
         });
         Ok(())

@@ -21,6 +21,7 @@
 
 pub mod inproc;
 pub mod message;
+pub mod overlay;
 pub mod tcp;
 pub mod topology;
 
@@ -28,6 +29,7 @@ pub use inproc::{
     GilbertElliott, InProcHub, NetPreset, NetSplit, NetworkModel, VirtualEndpoint, VirtualHub,
 };
 pub use message::{ClientId, ModelUpdate, Msg};
+pub use overlay::{GraphAction, GraphEvent, Overlay};
 pub use tcp::TcpTransport;
 pub use topology::{Topology, TopologySpec};
 
@@ -69,8 +71,31 @@ pub trait Transport: Send {
     /// return the neighbor set instead, and protocol code that used to
     /// range over `peers()` (liveness tracking, wait windows, broadcasts)
     /// ranges over this.
+    ///
+    /// Since the graph-fault subsystem (DESIGN.md §10) this is
+    /// *time-aware*: on a transport backed by a mutable
+    /// [`overlay::Overlay`] the answer reflects the overlay at the
+    /// transport's current clock time (cuts, churn, repairs applied) —
+    /// callers that cache it should watch
+    /// [`Transport::topology_generation`] for staleness.
     fn neighbors(&self) -> Vec<ClientId> {
         self.peers()
+    }
+
+    /// Monotonic overlay-change counter: increments every time a graph
+    /// fault rewires the overlay, constant `0` on a static one.  Protocol
+    /// code polls this once per round and refreshes its cached
+    /// neighborhood structure (tracked peer set, quorum denominator) on a
+    /// change.
+    fn topology_generation(&self) -> u64 {
+        0
+    }
+
+    /// Does this transport's overlay carry a graph-fault schedule?
+    /// Static overlays answer false, letting protocol code keep its
+    /// pre-fault degenerate paths byte-identical.
+    fn topology_is_dynamic(&self) -> bool {
+        false
     }
 
     /// Send to one peer. Returns Ok even if the peer never receives it

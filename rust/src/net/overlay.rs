@@ -1,0 +1,460 @@
+//! The mutable peer overlay — a [`Topology`] plus a deterministic
+//! schedule of graph faults (DESIGN.md §10).
+//!
+//! PR 4 made the overlay a pure value built once at deployment setup;
+//! the graph-fault subsystem makes it *time-dependent*: edge cuts open
+//! and heal, churned clients depart (edges torn down, orphans repaired)
+//! and rejoin (edges regenerated).  [`Overlay`] is the single shared
+//! source of truth both in-proc hubs read at **send time** — so
+//! broadcasts, [`crate::net::Transport::neighbors`], and the CRT relay
+//! always see the *current* neighborhood — and its generation counter is
+//! how protocol code ([`crate::coordinator::machine`]) notices that its
+//! cached neighborhood structure (PeerTable tracked set, quorum
+//! denominator) went stale.
+//!
+//! # Determinism
+//!
+//! The schedule is compiled before the run (`sim::run`) and applied
+//! *lazily*: any query at logical time `t` first applies every event with
+//! `at <= t`.  Under the virtual clock, queries happen at deterministic
+//! logical times in a deterministic order (both executors make identical
+//! scheduler transitions), so the entire overlay history is a pure
+//! function of `(topology, schedule, seed)` — byte-identical across
+//! executors and re-runs.
+//!
+//! # The static fast path
+//!
+//! A deployment without graph faults wraps its topology in
+//! [`Overlay::immutable`]: no lock, no events, generation pinned at 0,
+//! and every query forwards to the shared immutable [`Topology`] — the
+//! byte-identity guarantee for fault-free runs is structural, not
+//! behavioural.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use super::message::ClientId;
+use super::topology::Topology;
+use crate::util::time::SimTime;
+
+/// One scheduled overlay change, applied when the hub clock first reaches
+/// `at`.
+#[derive(Clone, Debug)]
+pub struct GraphEvent {
+    pub at: SimTime,
+    pub action: GraphAction,
+}
+
+/// What a [`GraphEvent`] does to the overlay.
+#[derive(Clone, Debug)]
+pub enum GraphAction {
+    /// Sever the listed edges (cut window opening).  `cut_id` pairs the
+    /// cut with its [`GraphAction::Restore`] so healing re-adds exactly
+    /// the edges that were actually removed.
+    Cut { cut_id: usize, edges: Vec<(ClientId, ClientId)> },
+    /// Heal cut `cut_id`: re-add its severed edges (skipping any whose
+    /// endpoint has meanwhile departed).
+    Restore { cut_id: usize },
+    /// Churn departure: tear down the client's edges and repair its
+    /// orphaned neighbors ([`Topology::depart`]).
+    Depart(ClientId),
+    /// Churn arrival: deterministically regenerate the client's edges
+    /// ([`Topology::regenerate`]), seeded per rejoin event.
+    Rejoin(ClientId),
+}
+
+/// Per-edge cut bookkeeping: how many open cut windows currently claim
+/// the edge, and whether any of them physically removed it (as opposed
+/// to claiming an edge a departure had already torn down — those are
+/// the rejoin path's to rebuild, not the heal path's).
+#[derive(Clone, Copy, Default)]
+struct CutRef {
+    refs: u32,
+    removed_by_cut: bool,
+}
+
+/// Mutable state behind the lock (present only on fault schedules).
+struct DynState {
+    topo: Topology,
+    /// Sorted ascending by `at` (stable, so the compile order breaks
+    /// ties — a zero-length cut still cuts before it restores).
+    events: Vec<GraphEvent>,
+    next: usize,
+    generation: u64,
+    /// Edges claimed per cut (filled at apply time, consumed by the
+    /// matching restore).
+    claims: Vec<Vec<(ClientId, ClientId)>>,
+    /// Refcounts over every currently-claimed edge: an edge heals only
+    /// when its *last* claiming window closes, so overlapping cuts that
+    /// share edges (two `mincut`s of the same graph, say) compose
+    /// instead of the first heal silently negating the second window.
+    /// Also the "do not bridge an open cut" source of truth for the
+    /// churn repair/regeneration paths.
+    cut_refs: BTreeMap<(ClientId, ClientId), CutRef>,
+    /// Clients currently departed (their edges must not be restored).
+    departed: Vec<bool>,
+    /// Per-client rejoin counter: varies the regeneration stream across
+    /// successive rejoins of the same client.
+    rejoins: Vec<u32>,
+    /// Total overlay edges severed so far (cuts + departures) — surfaced
+    /// as `edges_severed` on [`crate::metrics::NetStats`].
+    edges_severed: u64,
+    seed: u64,
+}
+
+/// The two shapes an overlay can take.  An enum (rather than an optional
+/// lock next to an always-present base graph) makes the "the static
+/// topology is never consulted on the dynamic path" invariant
+/// structural: there is no stale base for a future accessor to read by
+/// mistake.
+enum OverlayState {
+    /// Shared immutable topology: no schedule, no lock.
+    Static(Arc<Topology>),
+    /// Materialized topology plus its fault schedule, behind a lock.
+    Dynamic(Mutex<DynState>),
+}
+
+/// The time-aware overlay shared by both hubs.  See the module docs.
+pub struct Overlay {
+    n: usize,
+    state: OverlayState,
+}
+
+impl Overlay {
+    /// The static fast path: no schedule, no lock, generation forever 0.
+    pub fn immutable(topology: Arc<Topology>) -> Overlay {
+        Overlay { n: topology.n(), state: OverlayState::Static(topology) }
+    }
+
+    /// An overlay that will apply `events` as the hub clock reaches them.
+    /// `n_cuts` is the number of distinct `cut_id`s in the schedule;
+    /// `seed` feeds the per-rejoin regeneration streams.  The topology is
+    /// materialized up front so a full mesh can be cut too.
+    pub fn with_events(
+        mut topology: Topology,
+        mut events: Vec<GraphEvent>,
+        n_cuts: usize,
+        seed: u64,
+    ) -> Overlay {
+        let n = topology.n();
+        topology.materialize();
+        events.sort_by_key(|e| e.at); // stable: compile order breaks ties
+        Overlay {
+            n,
+            state: OverlayState::Dynamic(Mutex::new(DynState {
+                topo: topology,
+                events,
+                next: 0,
+                generation: 0,
+                claims: vec![Vec::new(); n_cuts],
+                cut_refs: BTreeMap::new(),
+                departed: vec![false; n],
+                rejoins: vec![0; n],
+                edges_severed: 0,
+                seed,
+            })),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Does this overlay carry a fault schedule?  Protocol code uses this
+    /// to keep the static degenerate paths (e.g. the neighborless
+    /// single-client round) byte-identical.
+    pub fn is_dynamic(&self) -> bool {
+        matches!(self.state, OverlayState::Dynamic(_))
+    }
+
+    /// The neighbor set of `id` at time `at`, ascending.
+    pub fn neighbors(&self, at: SimTime, id: ClientId) -> Vec<ClientId> {
+        match &self.state {
+            OverlayState::Static(topo) => topo.neighbors(id),
+            OverlayState::Dynamic(state) => {
+                let mut state = state.lock().unwrap();
+                Self::advance(&mut state, at);
+                state.topo.neighbors(id)
+            }
+        }
+    }
+
+    /// Visit `id`'s neighbors at time `at` in ascending order (the
+    /// encode-once broadcast path).
+    pub fn for_each_neighbor(&self, at: SimTime, id: ClientId, mut f: impl FnMut(ClientId)) {
+        match &self.state {
+            OverlayState::Static(topo) => topo.for_each_neighbor(id, f),
+            OverlayState::Dynamic(state) => {
+                let mut state = state.lock().unwrap();
+                Self::advance(&mut state, at);
+                // Collect before calling out: `f` sends messages, which
+                // re-enter the hub (but never the overlay lock) — keep the
+                // critical section to the graph read regardless.
+                let nbrs = state.topo.neighbors(id);
+                drop(state);
+                nbrs.into_iter().for_each(&mut f);
+            }
+        }
+    }
+
+    /// Monotonic change counter at time `at`: 0 until the first event
+    /// applies (and forever on a static overlay).  Cheap enough to poll
+    /// once per protocol round.
+    pub fn generation(&self, at: SimTime) -> u64 {
+        match &self.state {
+            OverlayState::Static(_) => 0,
+            OverlayState::Dynamic(state) => {
+                let mut state = state.lock().unwrap();
+                Self::advance(&mut state, at);
+                state.generation
+            }
+        }
+    }
+
+    /// Total overlay edges severed by applied events so far.
+    pub fn edges_severed(&self) -> u64 {
+        match &self.state {
+            OverlayState::Static(_) => 0,
+            OverlayState::Dynamic(state) => state.lock().unwrap().edges_severed,
+        }
+    }
+
+    fn advance(state: &mut DynState, at: SimTime) {
+        while state.next < state.events.len() && state.events[state.next].at <= at {
+            let event = state.events[state.next].clone();
+            state.next += 1;
+            state.generation += 1;
+            match event.action {
+                GraphAction::Cut { cut_id, edges } => {
+                    let mut claims = Vec::with_capacity(edges.len());
+                    for (a, b) in edges {
+                        let e = (a.min(b), a.max(b));
+                        let entry = state.cut_refs.entry(e).or_default();
+                        entry.refs += 1;
+                        if state.topo.remove_edge(e.0, e.1) {
+                            entry.removed_by_cut = true;
+                            state.edges_severed += 1;
+                        }
+                        claims.push(e);
+                    }
+                    state.claims[cut_id] = claims;
+                }
+                GraphAction::Restore { cut_id } => {
+                    for (a, b) in std::mem::take(&mut state.claims[cut_id]) {
+                        let entry =
+                            state.cut_refs.get_mut(&(a, b)).expect("claimed edge has a refcount");
+                        entry.refs -= 1;
+                        if entry.refs > 0 {
+                            continue; // another cut window still holds the edge down
+                        }
+                        let heal = entry.removed_by_cut
+                            && !state.departed[a as usize]
+                            && !state.departed[b as usize];
+                        state.cut_refs.remove(&(a, b));
+                        if heal {
+                            state.topo.add_edge(a, b);
+                        }
+                    }
+                }
+                GraphAction::Depart(c) => {
+                    state.departed[c as usize] = true;
+                    let removed = state.topo.depart(c);
+                    state.edges_severed += removed.len() as u64;
+                    Self::enforce_open_cuts(state);
+                }
+                GraphAction::Rejoin(c) => {
+                    state.departed[c as usize] = false;
+                    let nth = state.rejoins[c as usize] as u64;
+                    state.rejoins[c as usize] += 1;
+                    // Vary the regeneration stream per rejoin event so a
+                    // client that churns twice does not rebuild the same
+                    // chords both times.
+                    state.topo.regenerate(state.seed ^ (nth << 48), c);
+                    Self::enforce_open_cuts(state);
+                }
+            }
+        }
+    }
+
+    /// Churn repair and rejoin regeneration pick edges by graph shape,
+    /// not by fault schedule — either can innocently re-create an edge an
+    /// open cut window deliberately severed, silently bridging the
+    /// partition under test.  Strip any currently-claimed edge they
+    /// re-added; the eventual restore re-heals it through the normal
+    /// refcounted path.  (Stripped re-creations are not counted as
+    /// severed: the cut already paid for them when it opened.)
+    fn enforce_open_cuts(state: &mut DynState) {
+        let claimed: Vec<(ClientId, ClientId)> =
+            state.cut_refs.iter().filter(|(_, r)| r.refs > 0).map(|(&e, _)| e).collect();
+        for (a, b) in claimed {
+            if state.topo.remove_edge(a, b) {
+                // The strip is a cut-caused removal: mark it so the heal
+                // path gives the edge back when the window closes.
+                if let Some(r) = state.cut_refs.get_mut(&(a, b)) {
+                    r.removed_by_cut = true;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::topology::TopologySpec;
+    use std::time::Duration;
+
+    fn ms(v: u64) -> SimTime {
+        Duration::from_millis(v)
+    }
+
+    #[test]
+    fn static_overlay_never_changes() {
+        let topo = Arc::new(TopologySpec::Ring { k: 1 }.build(6, 1).unwrap());
+        let ov = Overlay::immutable(Arc::clone(&topo));
+        assert!(!ov.is_dynamic());
+        assert_eq!(ov.generation(ms(10_000)), 0);
+        assert_eq!(ov.neighbors(ms(10_000), 0), topo.neighbors(0));
+        assert_eq!(ov.edges_severed(), 0);
+    }
+
+    #[test]
+    fn cut_window_opens_and_heals_lazily() {
+        let topo = TopologySpec::Ring { k: 1 }.build(6, 1).unwrap();
+        let events = vec![
+            GraphEvent {
+                at: ms(100),
+                action: GraphAction::Cut { cut_id: 0, edges: vec![(0, 1), (3, 4)] },
+            },
+            GraphEvent { at: ms(200), action: GraphAction::Restore { cut_id: 0 } },
+        ];
+        let ov = Overlay::with_events(topo, events, 1, 7);
+        assert!(ov.is_dynamic());
+        assert_eq!(ov.neighbors(ms(0), 0), vec![1, 5], "before the window");
+        assert_eq!(ov.generation(ms(99)), 0);
+        assert_eq!(ov.neighbors(ms(100), 0), vec![5], "window start is inclusive");
+        assert_eq!(ov.generation(ms(100)), 1);
+        assert_eq!(ov.edges_severed(), 2);
+        assert_eq!(ov.neighbors(ms(200), 0), vec![1, 5], "healed at window end");
+        assert_eq!(ov.generation(ms(200)), 2);
+        assert_eq!(ov.edges_severed(), 2, "healing does not re-count");
+    }
+
+    #[test]
+    fn a_skipped_queried_time_still_applies_every_due_event() {
+        // Lazy application: a single late query applies the whole prefix.
+        let topo = TopologySpec::Ring { k: 1 }.build(6, 1).unwrap();
+        let events = vec![
+            GraphEvent {
+                at: ms(10),
+                action: GraphAction::Cut { cut_id: 0, edges: vec![(0, 1)] },
+            },
+            GraphEvent { at: ms(20), action: GraphAction::Restore { cut_id: 0 } },
+            GraphEvent { at: ms(30), action: GraphAction::Depart(3) },
+        ];
+        let ov = Overlay::with_events(topo, events, 1, 7);
+        assert_eq!(ov.neighbors(ms(1_000), 0), vec![1, 5]);
+        assert_eq!(ov.neighbors(ms(1_000), 3), Vec::<ClientId>::new());
+        assert_eq!(ov.generation(ms(1_000)), 3);
+    }
+
+    #[test]
+    fn churn_departure_and_rejoin_rewire_deterministically() {
+        let make = || {
+            let topo = TopologySpec::KRegular { d: 4 }.build(12, 5).unwrap();
+            let events = vec![
+                GraphEvent { at: ms(50), action: GraphAction::Depart(4) },
+                GraphEvent { at: ms(150), action: GraphAction::Rejoin(4) },
+            ];
+            Overlay::with_events(topo, events, 0, 99)
+        };
+        let ov = make();
+        let before = ov.neighbors(ms(0), 4);
+        assert!(!before.is_empty());
+        assert_eq!(ov.neighbors(ms(60), 4), Vec::<ClientId>::new(), "departed");
+        assert!(ov.edges_severed() >= before.len() as u64);
+        let after = ov.neighbors(ms(160), 4);
+        assert!(after.len() >= 2, "rejoin must regenerate edges: {after:?}");
+        // neighbors see the rejoined client symmetrically
+        for &p in &after {
+            assert!(ov.neighbors(ms(160), p).contains(&4));
+        }
+        // the whole history is a pure function of (topology, schedule, seed)
+        let again = make();
+        again.generation(ms(1_000));
+        assert_eq!(again.neighbors(ms(1_000), 4), ov.neighbors(ms(1_000), 4));
+    }
+
+    #[test]
+    fn overlapping_cuts_sharing_edges_compose_instead_of_cancelling() {
+        // Two cut windows claiming the same edge (what two `mincut`
+        // faults of one seed always do): the first heal must NOT re-add
+        // the edge while the second window is still open — the edge
+        // heals only when its last claiming window closes.
+        let topo = TopologySpec::Ring { k: 1 }.build(6, 1).unwrap();
+        let shared = vec![(0u32, 1u32)];
+        let events = vec![
+            GraphEvent {
+                at: ms(10),
+                action: GraphAction::Cut { cut_id: 0, edges: shared.clone() },
+            },
+            GraphEvent {
+                at: ms(30),
+                action: GraphAction::Cut { cut_id: 1, edges: shared },
+            },
+            GraphEvent { at: ms(50), action: GraphAction::Restore { cut_id: 0 } },
+            GraphEvent { at: ms(90), action: GraphAction::Restore { cut_id: 1 } },
+        ];
+        let ov = Overlay::with_events(topo, events, 2, 7);
+        assert!(!ov.neighbors(ms(20), 0).contains(&1), "first window open");
+        assert!(
+            !ov.neighbors(ms(60), 0).contains(&1),
+            "first heal must not breach the still-open second window"
+        );
+        assert!(ov.neighbors(ms(90), 0).contains(&1), "healed at the last window's end");
+        assert_eq!(ov.edges_severed(), 1, "one physical removal, however many claims");
+    }
+
+    #[test]
+    fn churn_repair_cannot_bridge_an_open_cut() {
+        // ring:2 on 8: departing client 3 orphans {1, 2, 4, 5}, and the
+        // repair cycle over them would re-create (2, 4) — which the open
+        // cut window deliberately severed.  The overlay must keep the
+        // claimed edge down for the rest of the window, then heal it.
+        let topo = TopologySpec::Ring { k: 2 }.build(8, 1).unwrap();
+        assert!(topo.has_edge(2, 4), "test premise: (2,4) is an overlay edge");
+        let events = vec![
+            GraphEvent {
+                at: ms(10),
+                action: GraphAction::Cut { cut_id: 0, edges: vec![(2, 4)] },
+            },
+            GraphEvent { at: ms(20), action: GraphAction::Depart(3) },
+            GraphEvent { at: ms(100), action: GraphAction::Restore { cut_id: 0 } },
+        ];
+        let ov = Overlay::with_events(topo, events, 1, 7);
+        assert!(
+            !ov.neighbors(ms(30), 2).contains(&4),
+            "the repair cycle must not breach the open cut window"
+        );
+        assert!(ov.neighbors(ms(100), 2).contains(&4), "cut heals at window end");
+    }
+
+    #[test]
+    fn restore_skips_edges_into_a_departed_client() {
+        let topo = TopologySpec::Ring { k: 1 }.build(6, 1).unwrap();
+        let events = vec![
+            GraphEvent {
+                at: ms(10),
+                action: GraphAction::Cut { cut_id: 0, edges: vec![(0, 1)] },
+            },
+            GraphEvent { at: ms(20), action: GraphAction::Depart(1) },
+            GraphEvent { at: ms(30), action: GraphAction::Restore { cut_id: 0 } },
+        ];
+        let ov = Overlay::with_events(topo, events, 1, 7);
+        assert!(
+            !ov.neighbors(ms(40), 0).contains(&1),
+            "healing must not resurrect a departed client's edge"
+        );
+        assert_eq!(ov.neighbors(ms(40), 1), Vec::<ClientId>::new());
+    }
+}

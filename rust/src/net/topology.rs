@@ -23,6 +23,14 @@
 //! client `i` is exactly the ascending all-peers list the pre-topology
 //! transports produced, so a full-overlay run is byte-identical to the
 //! pre-refactor behaviour.
+//!
+//! Since the graph-fault subsystem (DESIGN.md §10) the built graph is no
+//! longer necessarily immutable: the mutable-overlay API
+//! ([`Topology::add_edge`] / [`Topology::remove_edge`] /
+//! [`Topology::depart`] / [`Topology::regenerate`] / [`Topology::min_cut`])
+//! lets [`super::overlay::Overlay`] apply a deterministic schedule of edge
+//! cuts and churn.  Deployments without graph faults never touch it, so
+//! the determinism contract above is unchanged for them.
 
 use std::collections::BTreeSet;
 
@@ -34,6 +42,12 @@ use crate::util::Rng;
 /// Salt separating the graph-construction RNG stream from every other
 /// consumer of the deployment seed.
 const TOPO_SALT: u64 = 0x7090_1060_0000;
+
+/// Salt of the churn edge-regeneration streams ([`Topology::regenerate`]).
+const REGEN_SALT: u64 = 0x4E6E_2070_0000;
+
+/// Salt of the seeded min-cut search ([`Topology::min_cut`]).
+const MINCUT_SALT: u64 = 0x3C07_C070_0000;
 
 /// Which overlay to build (the `--topology` flag).  `Full` reproduces the
 /// paper's all-to-all dissemination exactly; the sparse presets trade
@@ -351,6 +365,272 @@ impl Topology {
         }
         count == self.n
     }
+
+    // --- mutable-overlay API (graph faults, DESIGN.md §10) -----------------
+    //
+    // The methods below are the substrate of [`super::overlay::Overlay`]:
+    // edge cuts, churn departures with repair, and deterministic edge
+    // regeneration for rejoining clients.  Static deployments never call
+    // any of them, which is what keeps fault-free runs byte-identical.
+
+    /// How many overlay edges the [`super::NetSplit`]-style bisection
+    /// `side_a` (vs the complement) would sever — the setup-time
+    /// validation of partition faults: a "cut" crossing zero overlay
+    /// edges is a no-op on this graph (ids outside `0..n` are ignored, so
+    /// a side made only of unknown ids counts as empty).
+    pub fn split_crossing_edges(&self, side_a: &[ClientId]) -> usize {
+        let mut in_a = vec![false; self.n];
+        for &c in side_a {
+            if let Some(slot) = in_a.get_mut(c as usize) {
+                *slot = true;
+            }
+        }
+        let a_count = in_a.iter().filter(|x| **x).count();
+        match &self.adj {
+            None => a_count * (self.n - a_count),
+            Some(adj) => (0..self.n)
+                .filter(|&i| in_a[i])
+                .map(|i| adj[i].iter().filter(|&&j| !in_a[j as usize]).count())
+                .sum(),
+        }
+    }
+
+    /// Turn the implicit full mesh into an explicit adjacency so edges
+    /// can be mutated (no-op on an already-sparse graph).  After this the
+    /// graph is no longer [`Topology::is_full`] even before any cut.
+    pub fn materialize(&mut self) {
+        if self.adj.is_some() {
+            return;
+        }
+        self.adj = Some(
+            (0..self.n as ClientId)
+                .map(|i| (0..self.n as ClientId).filter(|&p| p != i).collect())
+                .collect(),
+        );
+    }
+
+    /// Is `a — b` currently an overlay edge?
+    pub fn has_edge(&self, a: ClientId, b: ClientId) -> bool {
+        if a == b || a as usize >= self.n || b as usize >= self.n {
+            return false;
+        }
+        match &self.adj {
+            None => true,
+            Some(adj) => adj[a as usize].binary_search(&b).is_ok(),
+        }
+    }
+
+    /// Add the undirected edge `a — b` (materializing first if needed).
+    /// Returns true if the edge was actually new.
+    pub fn add_edge(&mut self, a: ClientId, b: ClientId) -> bool {
+        if a == b || a as usize >= self.n || b as usize >= self.n {
+            return false;
+        }
+        self.materialize();
+        let adj = self.adj.as_mut().expect("just materialized");
+        match adj[a as usize].binary_search(&b) {
+            Ok(_) => false,
+            Err(pos) => {
+                adj[a as usize].insert(pos, b);
+                let pos = adj[b as usize].binary_search(&a).unwrap_err();
+                adj[b as usize].insert(pos, a);
+                true
+            }
+        }
+    }
+
+    /// Remove the undirected edge `a — b` (materializing first if
+    /// needed).  Returns true if the edge existed.
+    pub fn remove_edge(&mut self, a: ClientId, b: ClientId) -> bool {
+        if a == b || a as usize >= self.n || b as usize >= self.n {
+            return false;
+        }
+        self.materialize();
+        let adj = self.adj.as_mut().expect("just materialized");
+        match adj[a as usize].binary_search(&b) {
+            Err(_) => false,
+            Ok(pos) => {
+                adj[a as usize].remove(pos);
+                let pos = adj[b as usize].binary_search(&a).expect("symmetric adjacency");
+                adj[b as usize].remove(pos);
+                true
+            }
+        }
+    }
+
+    /// Churn departure with repair: tear down every edge of `client` and
+    /// re-attach its orphaned neighbors in a cycle, so (a) any path that
+    /// used to route through the departed client can route around it —
+    /// the graph cannot disconnect at the departure — and (b) each
+    /// orphan's degree (the quorum denominator of its tracked set) drops
+    /// by at most one net.  Returns the removed edges.
+    pub fn depart(&mut self, client: ClientId) -> Vec<(ClientId, ClientId)> {
+        if client as usize >= self.n {
+            return Vec::new();
+        }
+        let nbrs = self.neighbors(client);
+        let mut removed = Vec::with_capacity(nbrs.len());
+        for &p in &nbrs {
+            if self.remove_edge(client, p) {
+                removed.push((client.min(p), client.max(p)));
+            }
+        }
+        if nbrs.len() >= 2 {
+            for w in nbrs.windows(2) {
+                self.add_edge(w[0], w[1]);
+            }
+            if nbrs.len() > 2 {
+                self.add_edge(nbrs[nbrs.len() - 1], nbrs[0]);
+            }
+        }
+        removed
+    }
+
+    /// Deterministic edge regeneration for a (re)joining client: connect
+    /// it to its nearest present neighbor on each side of the id ring
+    /// (connectivity: the rest of the graph is connected, so one edge to
+    /// any present client reconnects the joiner) and then to a seeded
+    /// sample of present clients until it reaches the graph's mean degree
+    /// (degree bound: the joiner never exceeds ⌈mean⌉, and each chosen
+    /// peer gains exactly one edge).  "Present" = currently has at least
+    /// one edge — a departed client has none by construction.  Pure
+    /// function of `(self, seed, client)`; callers vary `seed` per rejoin
+    /// event to decorrelate successive regenerations.  Returns the edges
+    /// added.
+    pub fn regenerate(&mut self, seed: u64, client: ClientId) -> Vec<(ClientId, ClientId)> {
+        if client as usize >= self.n {
+            return Vec::new();
+        }
+        self.materialize();
+        let present: Vec<ClientId> = (0..self.n as ClientId)
+            .filter(|&i| i != client && self.degree(i) > 0)
+            .collect();
+        if present.is_empty() {
+            return Vec::new();
+        }
+        let deg_sum: usize = present.iter().map(|&i| self.degree(i)).sum();
+        let mean_deg = (deg_sum + present.len() - 1) / present.len(); // ⌈mean⌉
+        // max-then-min rather than clamp: with a single present client the
+        // bounds cross (2 > 1) and Ord::clamp would panic; the degenerate
+        // target is simply "the one edge there is to make".
+        let target = mean_deg.max(2).min(present.len());
+        let mut added = Vec::new();
+        let mut add = |topo: &mut Topology, p: ClientId, added: &mut Vec<_>| {
+            if topo.add_edge(client, p) {
+                added.push((client.min(p), client.max(p)));
+            }
+        };
+        // Ring anchors: the nearest present id above and below (cyclic),
+        // mirroring the construction-time offset-1 ring.
+        let n64 = self.n as u64;
+        let above = present
+            .iter()
+            .copied()
+            .min_by_key(|&p| (p as u64 + n64 - client as u64) % n64);
+        let below = present
+            .iter()
+            .copied()
+            .min_by_key(|&p| (client as u64 + n64 - p as u64) % n64);
+        for anchor in [above, below].into_iter().flatten() {
+            add(self, anchor, &mut added);
+        }
+        // Seeded fill to the mean degree.
+        let mut rng = Rng::new(seed ^ REGEN_SALT ^ (client as u64).wrapping_mul(0x9E37_79B9));
+        let mut pool = present;
+        while self.degree(client) < target && !pool.is_empty() {
+            let p = pool.swap_remove(rng.below(pool.len()));
+            add(self, p, &mut added);
+        }
+        added
+    }
+
+    /// Seeded approximate min-cut (Karger's randomized contraction, a
+    /// fixed number of trials, best cut kept): the `--fault
+    /// graph-cut:…:mincut` resolver, severing the overlay where it is
+    /// thinnest.  Deterministic in `(self, seed)`.  Returns the cut's
+    /// edges (each `(lo, hi)`, ascending); empty only when the graph has
+    /// fewer than two non-isolated vertices.
+    pub fn min_cut(&self, seed: u64) -> Vec<(ClientId, ClientId)> {
+        let mut edges: Vec<(ClientId, ClientId)> = Vec::new();
+        for i in 0..self.n as ClientId {
+            self.for_each_neighbor(i, |j| {
+                if i < j {
+                    edges.push((i, j));
+                }
+            });
+        }
+        let vertices = {
+            let mut seen = vec![false; self.n];
+            for &(a, b) in &edges {
+                seen[a as usize] = true;
+                seen[b as usize] = true;
+            }
+            seen.iter().filter(|x| **x).count()
+        };
+        if vertices < 2 {
+            return Vec::new();
+        }
+        let mut rng = Rng::new(seed ^ MINCUT_SALT);
+        let mut best: Option<Vec<(ClientId, ClientId)>> = None;
+        for trial in 0..MINCUT_TRIALS {
+            let mut order = edges.clone();
+            let mut trial_rng = rng.fork(trial);
+            trial_rng.shuffle(&mut order);
+            // Contract shuffled edges until two super-nodes remain.
+            let mut dsu = Dsu::new(self.n);
+            let mut components = vertices;
+            for &(a, b) in &order {
+                if components == 2 {
+                    break;
+                }
+                if dsu.union(a as usize, b as usize) {
+                    components -= 1;
+                }
+            }
+            let cut: Vec<(ClientId, ClientId)> = edges
+                .iter()
+                .copied()
+                .filter(|&(a, b)| dsu.find(a as usize) != dsu.find(b as usize))
+                .collect();
+            if best.as_ref().map_or(true, |b| cut.len() < b.len()) {
+                best = Some(cut);
+            }
+        }
+        best.unwrap_or_default()
+    }
+}
+
+/// Karger trial count: enough repetitions that the best of them sits at
+/// or near the true min-cut on the deployment sizes we sweep, while the
+/// whole search stays O(trials · m · α).
+const MINCUT_TRIALS: u64 = 24;
+
+/// Union-find for the contraction trials.
+struct Dsu {
+    parent: Vec<usize>,
+}
+
+impl Dsu {
+    fn new(n: usize) -> Dsu {
+        Dsu { parent: (0..n).collect() }
+    }
+
+    fn find(&mut self, mut x: usize) -> usize {
+        while self.parent[x] != x {
+            self.parent[x] = self.parent[self.parent[x]]; // path halving
+            x = self.parent[x];
+        }
+        x
+    }
+
+    fn union(&mut self, a: usize, b: usize) -> bool {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return false;
+        }
+        self.parent[ra.max(rb)] = ra.min(rb);
+        true
+    }
 }
 
 #[cfg(test)]
@@ -512,5 +792,180 @@ mod tests {
             let t = TopologySpec::KRegular { d: 4 }.build(n, 9).unwrap();
             assert!(t.is_full(), "n={n}");
         }
+    }
+
+    // --- mutable-overlay API ------------------------------------------------
+
+    #[test]
+    fn materialized_full_mesh_matches_the_implicit_one() {
+        let mut t = Topology::full(6);
+        t.materialize();
+        assert!(!t.is_full(), "materialized mesh is mutable, not implicit");
+        for i in 0..6 {
+            assert_eq!(t.neighbors(i), Topology::full(6).neighbors(i));
+        }
+        assert_eq!(t.edges(), 15);
+        assert_undirected(&t);
+    }
+
+    #[test]
+    fn add_remove_edge_round_trip() {
+        let mut t = TopologySpec::Ring { k: 1 }.build(6, 1).unwrap();
+        assert!(t.has_edge(0, 1));
+        assert!(t.remove_edge(0, 1));
+        assert!(!t.has_edge(0, 1) && !t.has_edge(1, 0));
+        assert!(!t.remove_edge(0, 1), "double remove must be a no-op");
+        assert!(t.add_edge(0, 1));
+        assert!(!t.add_edge(0, 1), "double add must be a no-op");
+        assert!(t.has_edge(1, 0), "edges are undirected");
+        assert!(!t.add_edge(3, 3), "self loops rejected");
+        assert!(!t.add_edge(0, 99), "out-of-range rejected");
+        assert_undirected(&t);
+        // neighbor lists stay sorted through mutation
+        for i in 0..6 {
+            let nbrs = t.neighbors(i);
+            let mut sorted = nbrs.clone();
+            sorted.sort_unstable();
+            assert_eq!(nbrs, sorted, "adjacency of {i} lost its order");
+        }
+    }
+
+    #[test]
+    fn depart_repairs_connectivity_and_bounds_degree_loss() {
+        let t0 = TopologySpec::KRegular { d: 4 }.build(20, 5).unwrap();
+        let mut t = t0.clone();
+        let victim = 7;
+        let nbrs = t.neighbors(victim);
+        let removed = t.depart(victim);
+        assert_eq!(removed.len(), nbrs.len(), "every edge of the victim removed");
+        assert_eq!(t.degree(victim), 0, "departed client is isolated");
+        // connectivity survives among the remaining n−1 clients: reachability
+        // from client 0 must cover everyone except the victim.
+        let mut seen = vec![false; 20];
+        let mut stack = vec![0u32];
+        seen[0] = true;
+        while let Some(i) = stack.pop() {
+            for j in t.neighbors(i) {
+                if !seen[j as usize] {
+                    seen[j as usize] = true;
+                    stack.push(j);
+                }
+            }
+        }
+        let reached = seen.iter().filter(|x| **x).count();
+        assert_eq!(reached, 19, "repair must keep the survivors connected");
+        // repair bound: each orphan loses 1 edge and regains up to 2,
+        // so its degree moves by at most 1 net in either direction... the
+        // cycle re-attachment guarantees no orphan drops by more than 1.
+        for &p in &nbrs {
+            assert!(
+                t.degree(p) + 1 >= t0.degree(p),
+                "orphan {p}: degree {} fell more than 1 below {}",
+                t.degree(p),
+                t0.degree(p)
+            );
+        }
+        assert_undirected(&t);
+    }
+
+    #[test]
+    fn regenerate_is_deterministic_connected_and_degree_bounded() {
+        let mut a = TopologySpec::KRegular { d: 4 }.build(20, 5).unwrap();
+        let mut b = a.clone();
+        a.depart(7);
+        b.depart(7);
+        let ea = a.regenerate(99, 7);
+        let eb = b.regenerate(99, 7);
+        assert_eq!(ea, eb, "same seed must regenerate the same edges");
+        assert!(!ea.is_empty());
+        assert!(a.degree(7) >= 2, "rejoined client must get ring anchors");
+        assert!(
+            a.degree(7) <= a.max_degree(),
+            "regeneration must respect the graph's degree regime"
+        );
+        assert!(a.is_connected(), "rejoin must reconnect the graph");
+        assert_undirected(&a);
+        // a different seed may pick different chords
+        let mut c = TopologySpec::KRegular { d: 4 }.build(20, 5).unwrap();
+        c.depart(7);
+        let ec = c.regenerate(100, 7);
+        assert_eq!(ec.len(), ea.len(), "target degree is seed-independent");
+    }
+
+    #[test]
+    fn regenerate_into_empty_graph_is_a_noop() {
+        let mut t = Topology::full(1);
+        assert!(t.regenerate(3, 0).is_empty());
+        // single present peer: the crossed bounds (target 2 vs 1 available)
+        // must degrade gracefully, not panic in clamp
+        let mut pair = Topology::full(2);
+        pair.materialize();
+        assert!(pair.regenerate(3, 0).is_empty(), "edge 0-1 already exists");
+        pair.remove_edge(0, 1);
+        assert!(pair.regenerate(3, 0).is_empty(), "peer 1 is isolated: nobody present");
+        let mut lonely = TopologySpec::Ring { k: 1 }.build(4, 1).unwrap();
+        for c in 0..4 {
+            lonely.depart(c);
+        }
+        assert!(lonely.regenerate(3, 2).is_empty(), "nobody present to join");
+    }
+
+    #[test]
+    fn min_cut_of_a_cycle_is_exactly_two_edges() {
+        // Every contraction of a cycle keeps its components contiguous
+        // arcs, and two arcs of a cycle always share exactly two boundary
+        // edges — so on ring:1 *every* trial yields a true min-cut and
+        // the assertion is exact, not probabilistic.
+        let t = TopologySpec::Ring { k: 1 }.build(8, 3).unwrap();
+        let cut = t.min_cut(42);
+        assert_eq!(cut.len(), 2, "a cycle's min-cut is two edges: {cut:?}");
+        for &(a, b) in &cut {
+            assert!(a < b, "cut edges normalized ascending");
+            assert!(t.has_edge(a, b), "cut edge {a}-{b} not in the graph");
+        }
+        let mut severed = t.clone();
+        for &(a, b) in &cut {
+            severed.remove_edge(a, b);
+        }
+        assert!(!severed.is_connected(), "a min-cut must disconnect when removed");
+        assert_eq!(t.min_cut(42), cut, "seeded min-cut must be deterministic");
+    }
+
+    #[test]
+    fn min_cut_is_a_valid_cut_on_any_graph() {
+        // Guaranteed-by-construction properties on a denser overlay: the
+        // returned edges exist, removing them disconnects the graph, and
+        // the search is a pure function of (graph, seed).
+        let t = TopologySpec::KRegular { d: 4 }.build(20, 5).unwrap();
+        let cut = t.min_cut(7);
+        assert!(!cut.is_empty());
+        for &(a, b) in &cut {
+            assert!(t.has_edge(a, b));
+        }
+        let mut severed = t.clone();
+        for &(a, b) in &cut {
+            severed.remove_edge(a, b);
+        }
+        assert!(!severed.is_connected());
+        assert_eq!(t.min_cut(7), cut);
+        // degenerate graphs yield no cut instead of panicking
+        assert!(Topology::full(1).min_cut(1).is_empty());
+        assert!(Topology::full(0).min_cut(1).is_empty());
+    }
+
+    #[test]
+    fn split_crossing_edges_counts_the_overlay_not_the_id_space() {
+        let full = Topology::full(6);
+        assert_eq!(full.split_crossing_edges(&[0, 1, 2]), 9, "3×3 on the mesh");
+        assert_eq!(full.split_crossing_edges(&[]), 0);
+        assert_eq!(full.split_crossing_edges(&[0, 1, 2, 3, 4, 5]), 0);
+        assert_eq!(full.split_crossing_edges(&[77, 99]), 0, "unknown ids are no side");
+        let ring = TopologySpec::Ring { k: 1 }.build(6, 1).unwrap();
+        assert_eq!(
+            ring.split_crossing_edges(&[0, 1, 2]),
+            2,
+            "a contiguous arc cuts exactly its two boundary edges"
+        );
+        assert_eq!(ring.split_crossing_edges(&[0, 2, 4]), 6, "alternating cut");
     }
 }

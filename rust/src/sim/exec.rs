@@ -25,7 +25,7 @@ use crate::coordinator::sync::SyncClient;
 use crate::data::Dataset;
 use crate::metrics::{ClientReport, NetStats};
 use crate::net::inproc::decode_delivery;
-use crate::net::{Topology, VirtualHub};
+use crate::net::{Overlay, VirtualHub};
 use crate::runtime::Trainer;
 use crate::util::time::{DriverRecv, SimTime, VirtualClock};
 use crate::util::Rng;
@@ -55,12 +55,12 @@ pub(super) fn run_events(
     parts: Vec<Vec<usize>>,
     train: &Arc<Dataset>,
     eval: &EvalTensors,
-    topology: &Arc<Topology>,
+    overlay: &Arc<Overlay>,
 ) -> Result<(Vec<ClientReport>, NetStats)> {
     let n = cfg.n_clients;
     let clock = VirtualClock::new(n);
     let hub =
-        VirtualHub::with_topology(n, cfg.net.clone(), Arc::clone(&clock), Arc::clone(topology));
+        VirtualHub::with_overlay(n, cfg.net.clone(), Arc::clone(&clock), Arc::clone(overlay));
 
     let mut machines: Vec<ClientStateMachine> = Vec::with_capacity(n);
     for (i, indices) in parts.into_iter().enumerate() {

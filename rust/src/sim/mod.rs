@@ -38,12 +38,15 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::async_client::{AsyncClient, ClientData, EvalTensors};
 use crate::coordinator::config::ProtocolConfig;
-use crate::coordinator::fault::FaultPlan;
+use crate::coordinator::fault::{CutSpec, FaultPlan, GraphFault};
 use crate::coordinator::sync::SyncClient;
 use crate::coordinator::termination::TerminationCause;
 use crate::data::{dirichlet_partition, fixed_chunk, iid_partition, skewed_chunk, Dataset};
 use crate::metrics::{ClientReport, NetStats};
-use crate::net::{InProcHub, NetworkModel, Topology, TopologySpec, Transport, VirtualHub};
+use crate::net::{
+    GraphAction, GraphEvent, InProcHub, NetworkModel, Overlay, Topology, TopologySpec,
+    Transport, VirtualHub,
+};
 use crate::runtime::Trainer;
 use crate::util::time::VirtualClock;
 use crate::util::Rng;
@@ -117,6 +120,12 @@ pub struct SimConfig {
     pub net: NetworkModel,
     /// Per-client crash schedule (empty = fault-free).
     pub faults: Vec<FaultPlan>,
+    /// Topology-aware fault schedule (`--fault`, DESIGN.md §10): edge-cut
+    /// windows and churn applied to the built overlay mid-run.  Empty =
+    /// the overlay is immutable and fault-free runs stay byte-identical
+    /// to the pre-fault protocol.  Requires Phase 2 (`sync` keeps the
+    /// barrier's static full mesh).
+    pub graph_faults: Vec<GraphFault>,
     pub seed: u64,
     /// Peer overlay (DESIGN.md §9): `Full` (default) is the paper's
     /// all-to-all dissemination; sparse presets cut per-round message
@@ -148,6 +157,7 @@ impl SimConfig {
             test_n: trainer_meta_test_batches,
             net: NetworkModel::lan(7),
             faults: Vec::new(),
+            graph_faults: Vec::new(),
             seed: 7,
             topology: TopologySpec::Full,
             virtual_time: false,
@@ -169,6 +179,78 @@ impl SimConfig {
     /// code that wants to describe the graph a config will actually use.
     pub fn build_topology(&self) -> Result<Topology> {
         self.topology.build(self.n_clients, self.seed)
+    }
+
+    /// Compile the graph-fault schedule against the built topology into
+    /// the shared [`Overlay`] both hubs read (DESIGN.md §10), validating
+    /// every fault at setup time:
+    ///
+    /// * an [`GraphFault::EdgeCut`] with an explicit edge list must name
+    ///   only existing overlay edges (a cut of absent edges is a silent
+    ///   no-op — the class of bug the `NetSplit` validation below also
+    ///   rejects); `mincut` resolves through the seeded
+    ///   [`Topology::min_cut`] and is rejected if the graph has no cut;
+    /// * a [`GraphFault::Churn`] client must exist.
+    ///
+    /// With an empty schedule the result is the static
+    /// [`Overlay::immutable`] fast path — structurally incapable of
+    /// perturbing a fault-free run.
+    fn compile_overlay(&self, topology: &Arc<Topology>) -> Result<Overlay> {
+        if self.graph_faults.is_empty() {
+            return Ok(Overlay::immutable(Arc::clone(topology)));
+        }
+        let mut events = Vec::new();
+        let mut n_cuts = 0usize;
+        for fault in &self.graph_faults {
+            match fault {
+                GraphFault::EdgeCut { start, end, cut } => {
+                    anyhow::ensure!(end > start, "graph cut window must end after it starts");
+                    let edges = match cut {
+                        CutSpec::Edges(edges) => {
+                            for &(a, b) in edges {
+                                anyhow::ensure!(
+                                    topology.has_edge(a, b),
+                                    "graph cut names {a}-{b}, which is not an edge of the \
+                                     built {} overlay — a cut that severs nothing is a no-op, \
+                                     not a fault",
+                                    self.topology.name()
+                                );
+                            }
+                            edges.clone()
+                        }
+                        CutSpec::MinCut => {
+                            let cut = topology.min_cut(self.seed);
+                            anyhow::ensure!(
+                                !cut.is_empty(),
+                                "mincut fault: the {} overlay has no cut to sever",
+                                self.topology.name()
+                            );
+                            cut
+                        }
+                    };
+                    events.push(GraphEvent {
+                        at: *start,
+                        action: GraphAction::Cut { cut_id: n_cuts, edges },
+                    });
+                    events
+                        .push(GraphEvent { at: *end, action: GraphAction::Restore { cut_id: n_cuts } });
+                    n_cuts += 1;
+                }
+                GraphFault::Churn { client, leave, rejoin } => {
+                    anyhow::ensure!(
+                        (*client as usize) < self.n_clients,
+                        "churn fault names client {client}, deployment has {}",
+                        self.n_clients
+                    );
+                    events.push(GraphEvent { at: *leave, action: GraphAction::Depart(*client) });
+                    if let Some(rejoin) = rejoin {
+                        anyhow::ensure!(rejoin > leave, "churn rejoin must follow the departure");
+                        events.push(GraphEvent { at: *rejoin, action: GraphAction::Rejoin(*client) });
+                    }
+                }
+            }
+        }
+        Ok(Overlay::with_events((**topology).clone(), events, n_cuts, self.seed))
     }
 
     fn machine_of(&self, client: usize) -> usize {
@@ -263,6 +345,32 @@ pub fn run(trainer: &(dyn Trainer + Sync), cfg: &SimConfig) -> Result<SimResult>
         "Phase 1 (sync) waits on every peer each round and requires --topology full, got {}",
         cfg.topology.name()
     );
+    anyhow::ensure!(
+        cfg.graph_faults.is_empty() || !cfg.sync,
+        "Phase 1 (sync) assumes a static full mesh; graph faults need Phase 2"
+    );
+    // NetSplit validation (DESIGN.md §10): a scheduled partition must
+    // actually sever overlay edges.  A client-ID bisection that crosses
+    // zero edges of the built graph — an empty/complete/unknown-id side —
+    // is a silent no-op the run would then mis-report as "survived a
+    // partition"; reject it at setup instead.  The crossing counts feed
+    // `NetStats::edges_severed` (but only for windows that actually open
+    // before the run ends — fault pressure is measured, not assumed).
+    let mut split_crossings: Vec<(Duration, u64)> = Vec::new();
+    for (i, split) in cfg.net.splits.iter().enumerate() {
+        let crossing = topology.split_crossing_edges(&split.side_a);
+        anyhow::ensure!(
+            crossing > 0,
+            "NetSplit #{i} ({:?} vs the rest) severs zero edges of the {} overlay — \
+             a no-op partition; name a side that actually cuts the graph",
+            split.side_a,
+            cfg.topology.name()
+        );
+        split_crossings.push((split.start, crossing as u64));
+    }
+    // Graph faults compile against the built topology into the shared
+    // time-aware overlay (the static fast path when the schedule is empty).
+    let overlay = Arc::new(cfg.compile_overlay(&topology)?);
 
     // --- data --------------------------------------------------------------
     let test_n = cfg.test_n.max(meta.nb_eval_full * meta.batch);
@@ -285,10 +393,10 @@ pub fn run(trainer: &(dyn Trainer + Sync), cfg: &SimConfig) -> Result<SimResult>
 
     // --- executors ----------------------------------------------------------
     let t0 = Instant::now();
-    let (reports, net) = if cfg.virtual_time && cfg.exec == ExecMode::Events {
-        exec::run_events(trainer, cfg, parts, &train, &eval, &topology)?
+    let (reports, mut net) = if cfg.virtual_time && cfg.exec == ExecMode::Events {
+        exec::run_events(trainer, cfg, parts, &train, &eval, &overlay)?
     } else {
-        run_threads(trainer, cfg, parts, &train, &eval, &topology)?
+        run_threads(trainer, cfg, parts, &train, &eval, &overlay)?
     };
     // Virtual runs report logical time: the deployment "took" as long as
     // its slowest client's simulated schedule, not the compute wall time.
@@ -297,6 +405,17 @@ pub fn run(trainer: &(dyn Trainer + Sync), cfg: &SimConfig) -> Result<SimResult>
     } else {
         t0.elapsed()
     };
+    // Severed-edge accounting: crossings of every NetSplit window that
+    // opened within the run, plus whatever the graph-fault schedule
+    // actually cut (overlay events apply lazily, so a window the run
+    // never reached counts nothing).  Deterministic per seed — both
+    // executors see the identical logical schedule.
+    net.edges_severed = overlay.edges_severed()
+        + split_crossings
+            .iter()
+            .filter(|(start, _)| *start <= wall)
+            .map(|(_, crossing)| crossing)
+            .sum::<u64>();
     Ok(SimResult {
         wall,
         machines: cfg.machines.clamp(1, 3),
@@ -314,7 +433,7 @@ fn run_threads(
     parts: Vec<Vec<usize>>,
     train: &Arc<Dataset>,
     eval: &EvalTensors,
-    topology: &Arc<Topology>,
+    overlay: &Arc<Overlay>,
 ) -> Result<(Vec<ClientReport>, NetStats)> {
     enum Net {
         Real(InProcHub),
@@ -323,19 +442,19 @@ fn run_threads(
     let net = if cfg.virtual_time {
         let clock = VirtualClock::new(cfg.n_clients);
         Net::Virtual(
-            VirtualHub::with_topology(
+            VirtualHub::with_overlay(
                 cfg.n_clients,
                 cfg.net.clone(),
                 Arc::clone(&clock),
-                Arc::clone(topology),
+                Arc::clone(overlay),
             ),
             clock,
         )
     } else {
-        Net::Real(InProcHub::with_topology(
+        Net::Real(InProcHub::with_overlay(
             cfg.n_clients,
             cfg.net.clone(),
-            Arc::clone(topology),
+            Arc::clone(overlay),
         ))
     };
 

@@ -46,14 +46,20 @@ pub struct Shrunk {
 }
 
 /// Minimize a failing [`SimConfig`] against `fails` (true = the failure
-/// still reproduces).  Three passes, all preserving the `faults` invariant
-/// (empty or one plan per client):
+/// still reproduces).  Four passes, all preserving the `faults` invariant
+/// (empty or one plan per client) and never leaving a graph fault
+/// dangling off the end of the client range:
 ///
 /// 1. **Client bisection** — binary-search the smallest prefix of clients
-///    (faults truncated alongside) that still fails.
+///    (faults truncated alongside, graph faults referencing dropped
+///    clients removed) that still fails.
 /// 2. **Fault pruning** — try clearing the fault list outright, else
 ///    disable surviving fault plans one at a time.
-/// 3. **Topology shrinking** — halve the overlay degree while the failure
+/// 3. **Graph-fault pruning** — try clearing the graph-fault schedule
+///    outright (a failure independent of the overlay dynamics is the
+///    cheapest repro), else drop surviving cut/churn entries one at a
+///    time.
+/// 4. **Topology shrinking** — halve the overlay degree while the failure
 ///    holds ([`TopologySpec::shrink_degree`]), then try the trivial
 ///    preset (`full`) outright: a failure that survives on the mesh is
 ///    independent of the overlay, which is the most useful thing a
@@ -72,6 +78,9 @@ where
         if !cand.faults.is_empty() {
             cand.faults.truncate(n);
         }
+        // A graph fault naming a client beyond the shrunken range would
+        // make the candidate invalid, not smaller.
+        cand.graph_faults.retain(|f| f.fits(n));
         cand
     }
 
@@ -117,7 +126,29 @@ where
         }
     }
 
-    // 3. Shrink the topology: degree first, then the preset toward `full`.
+    // 3. Prune the graph-fault schedule.
+    if !best.graph_faults.is_empty() {
+        let mut cand = best.clone();
+        cand.graph_faults.clear();
+        tests_run += 1;
+        if fails(&cand) {
+            best = cand;
+        } else {
+            let mut i = 0;
+            while i < best.graph_faults.len() {
+                let mut cand = best.clone();
+                cand.graph_faults.remove(i);
+                tests_run += 1;
+                if fails(&cand) {
+                    best = cand; // entry was irrelevant; same index now names the next one
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+
+    // 4. Shrink the topology: degree first, then the preset toward `full`.
     while let Some(smaller) = best.topology.shrink_degree() {
         let mut cand = best.clone();
         cand.topology = smaller;
@@ -156,6 +187,7 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::fault::GraphFault;
 
     #[test]
     fn passes_trivial_property() {
@@ -239,6 +271,48 @@ mod tests {
         assert!(
             shrunk.config.faults.is_empty(),
             "faults play no role and must be cleared"
+        );
+    }
+
+    #[test]
+    fn shrink_prunes_graph_fault_lists() {
+        let mut cfg = SimConfig::new(32, 128);
+        cfg.topology = TopologySpec::KRegular { d: 4 };
+        cfg.graph_faults = vec![
+            GraphFault::parse("graph-cut:0.1-0.5:mincut").unwrap(),
+            GraphFault::parse("churn:3:0.2-0.6").unwrap(),
+            GraphFault::parse("churn:30:0.2").unwrap(), // dangles below 31 clients
+        ];
+        // The "bug" needs >= 8 clients and at least one churn entry; the
+        // cut and the out-of-range churn are noise the shrinker must drop.
+        let fails = |c: &SimConfig| {
+            c.n_clients >= 8
+                && c.graph_faults.iter().any(|f| matches!(f, GraphFault::Churn { .. }))
+        };
+        let shrunk = shrink_sim_config(&cfg, fails);
+        assert!(fails(&shrunk.config), "shrinking must preserve the failure");
+        assert_eq!(shrunk.config.n_clients, 8, "client bisection still runs first");
+        assert_eq!(
+            shrunk.config.graph_faults,
+            vec![GraphFault::parse("churn:3:0.2-0.6").unwrap()],
+            "only the load-bearing graph fault survives"
+        );
+        // every surviving graph fault fits the shrunken client range
+        assert!(shrunk.config.graph_faults.iter().all(|f| f.fits(8)));
+    }
+
+    #[test]
+    fn shrink_clears_irrelevant_graph_fault_schedule_outright() {
+        let mut cfg = SimConfig::new(16, 128);
+        cfg.graph_faults = vec![
+            GraphFault::parse("churn:1:0.2").unwrap(),
+            GraphFault::parse("churn:2:0.3").unwrap(),
+        ];
+        let shrunk = shrink_sim_config(&cfg, |c| c.n_clients >= 4);
+        assert_eq!(shrunk.config.n_clients, 4);
+        assert!(
+            shrunk.config.graph_faults.is_empty(),
+            "graph faults play no role and must be cleared"
         );
     }
 

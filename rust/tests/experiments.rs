@@ -188,10 +188,44 @@ fn topology_sweep_measures_the_message_volume_gap() {
 }
 
 #[test]
+fn fault_sweep_measures_graph_attacks_and_is_deterministic() {
+    let t = MockTrainer::tiny();
+    let table = exp::faults(&t, scale());
+    let md = table.markdown();
+    let rows: Vec<&str> = md.lines().skip(2).collect();
+    assert_eq!(rows.len(), 4, "control + 3 graph-fault rows:\n{md}");
+    for name in ["none", "edge-cut", "churn", "cut+churn"] {
+        assert!(md.contains(name), "missing fault row {name}:\n{md}");
+    }
+    let cells_of = |row: &str| -> Vec<String> {
+        row.trim_matches('|').split('|').map(|c| c.trim().to_string()).collect()
+    };
+    for row in &rows {
+        let cells = cells_of(row);
+        assert_eq!(cells.len(), 6, "{row}");
+        let severed: u64 = cells[1].parse().unwrap();
+        cells[4].parse::<usize>().expect("suspicion count");
+        let acc = parse_pct(&cells[5]);
+        assert!((0.0..=100.0).contains(&acc), "{row}");
+        if cells[0] == "none" {
+            assert_eq!(severed, 0, "control row must sever nothing: {row}");
+            // fault-free on the auto quorum: nothing can prevent adaptive
+            // termination (this is the topologies-sweep situation)
+            assert_eq!(parse_pct(&cells[3]), 100.0, "non-adaptive control: {row}");
+        } else {
+            assert!(severed > 0, "fault row severed no edges: {row}");
+        }
+    }
+    // graph-fault application is part of the determinism contract: same
+    // seed ⇒ the whole sweep reproduces byte-for-byte
+    assert_eq!(md, exp::faults(&t, scale()).markdown());
+}
+
+#[test]
 fn run_all_produces_every_experiment() {
     let t = MockTrainer::tiny();
     let all = exp::run_all(&t, scale());
-    assert_eq!(all.len(), 9);
+    assert_eq!(all.len(), 10);
     let titles: Vec<&str> = all.iter().map(|(t, _)| t.as_str()).collect();
     let needles = [
         "Table 2",
@@ -203,6 +237,7 @@ fn run_all_produces_every_experiment() {
         "Termination",
         "Scenario matrix",
         "Topology sweep",
+        "Fault sweep",
     ];
     for needle in needles {
         assert!(titles.iter().any(|t| t.contains(needle)), "missing {needle}");

@@ -12,7 +12,7 @@ use std::time::Duration;
 
 use dfl::coordinator::fault::{variable_crash_schedule, FaultPlan};
 use dfl::coordinator::termination::TerminationCause;
-use dfl::coordinator::ProtocolConfig;
+use dfl::coordinator::{ProtocolConfig, QuorumSpec};
 use dfl::net::NetworkModel;
 use dfl::runtime::{MockTrainer, Trainer};
 use dfl::sim::{self, Partition, SimConfig};
@@ -35,7 +35,7 @@ fn base_cfg(n: usize, seed: u64) -> SimConfig {
         weight_by_samples: false,
         early_window_exit: true,
         crt_enabled: true,
-        quorum: 1.0,
+        quorum: QuorumSpec::STRICT,
     };
     cfg.train_n = 60 * n;
     cfg.net = NetworkModel::lan(seed);

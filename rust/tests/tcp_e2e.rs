@@ -10,7 +10,7 @@ use std::time::Duration;
 use dfl::coordinator::async_client::{AsyncClient, ClientData};
 use dfl::coordinator::fault::FaultPlan;
 use dfl::coordinator::termination::TerminationCause;
-use dfl::coordinator::ProtocolConfig;
+use dfl::coordinator::{ProtocolConfig, QuorumSpec};
 use dfl::data::{dirichlet_partition, Dataset};
 use dfl::net::TcpTransport;
 use dfl::runtime::{MockTrainer, Trainer};
@@ -44,7 +44,7 @@ fn four_tcp_clients_with_one_crash_terminate() {
         weight_by_samples: false,
         early_window_exit: true,
         crt_enabled: true,
-        quorum: 1.0,
+        quorum: QuorumSpec::STRICT,
     };
 
     let reports: Vec<_> = std::thread::scope(|scope| {

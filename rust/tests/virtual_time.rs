@@ -8,9 +8,9 @@ mod common;
 use std::time::{Duration, Instant};
 
 use common::fingerprint;
-use dfl::coordinator::fault::FaultPlan;
+use dfl::coordinator::fault::{FaultPlan, GraphFault};
 use dfl::coordinator::termination::TerminationCause;
-use dfl::coordinator::ProtocolConfig;
+use dfl::coordinator::{ProtocolConfig, QuorumSpec};
 use dfl::net::{NetSplit, NetworkModel, TopologySpec};
 use dfl::runtime::{MockTrainer, Trainer};
 use dfl::sim::{self, ExecMode, SimConfig};
@@ -29,7 +29,7 @@ fn base_cfg(n: usize, seed: u64) -> SimConfig {
         weight_by_samples: false,
         early_window_exit: true,
         crt_enabled: true,
-        quorum: 1.0,
+        quorum: QuorumSpec::STRICT,
     };
     cfg.train_n = 60 * n;
     cfg.net = NetworkModel::lan(seed);
@@ -117,7 +117,7 @@ fn explicit_full_topology_and_strict_quorum_match_the_defaults() {
     let a = sim::run(&trainer, &defaults).unwrap();
     let mut explicit = defaults.clone();
     explicit.topology = TopologySpec::Full;
-    explicit.protocol.quorum = 1.0;
+    explicit.protocol.quorum = QuorumSpec::Fixed(1.0);
     let b = sim::run(&trainer, &explicit).unwrap();
     let fa: Vec<u64> = a.reports.iter().map(fingerprint).collect();
     let fb: Vec<u64> = b.reports.iter().map(fingerprint).collect();
@@ -135,7 +135,7 @@ fn sparse_topology_executors_are_byte_identical() {
     let mut cfg = base_cfg(8, 4321);
     cfg.net = NetworkModel::lossy(0.10, 4321);
     cfg.topology = TopologySpec::SmallWorld { d: 4, p: 0.2 };
-    cfg.protocol.quorum = 0.75;
+    cfg.protocol.quorum = QuorumSpec::Fixed(0.75);
     cfg.protocol.min_rounds = 6;
     cfg.faults = vec![FaultPlan::none(); 8];
     cfg.faults[3] = FaultPlan::at_round(4);
@@ -149,6 +149,146 @@ fn sparse_topology_executors_are_byte_identical() {
     assert_eq!(fe, ft, "executors diverged on a sparse overlay");
     assert_eq!(ev.wall, th.wall);
     assert_eq!(ev.net, th.net, "executors offered different traffic");
+}
+
+#[test]
+fn graph_fault_schedules_are_byte_identical_across_executors() {
+    // The tentpole's cross-executor contract (DESIGN.md §10): a churn
+    // schedule plus an edge-cut window on a sparse overlay — the mutable
+    // overlay, peer-table retracking, and repair/regeneration paths all
+    // active — must leave events vs threads in byte agreement, traffic
+    // counters and severed-edge accounting included.
+    let trainer = MockTrainer::tiny();
+    let mut cfg = base_cfg(10, 4242);
+    cfg.net = NetworkModel::lossy(0.05, 4242);
+    cfg.topology = TopologySpec::Ring { k: 2 };
+    cfg.protocol.min_rounds = 30;
+    cfg.protocol.max_rounds = 80;
+    cfg.graph_faults = vec![
+        GraphFault::parse("graph-cut:0.15-0.45:mincut").unwrap(),
+        GraphFault::parse("churn:4:0.12-0.4").unwrap(),
+    ];
+    cfg.exec = ExecMode::Events;
+    let ev = sim::run(&trainer, &cfg).unwrap();
+    cfg.exec = ExecMode::Threads;
+    let th = sim::run(&trainer, &cfg).unwrap();
+    let fe: Vec<u64> = ev.reports.iter().map(fingerprint).collect();
+    let ft: Vec<u64> = th.reports.iter().map(fingerprint).collect();
+    assert_eq!(fe, ft, "executors diverged under graph faults");
+    assert_eq!(ev.wall, th.wall);
+    assert_eq!(ev.net, th.net, "executors applied different overlay histories");
+    assert!(
+        ev.net.edges_severed > 0,
+        "the schedule must have actually cut edges: {:?}",
+        ev.net
+    );
+    // churn is a graph fault, not a client crash
+    assert_eq!(ev.crashed(), 0);
+    assert_eq!(ev.reports.len(), 10);
+    // and the whole history is reproducible per seed
+    cfg.exec = ExecMode::Events;
+    let again = sim::run(&trainer, &cfg).unwrap();
+    let fa: Vec<u64> = again.reports.iter().map(fingerprint).collect();
+    assert_eq!(fe, fa, "same seed, same graph-fault history");
+    assert_eq!(ev.net, again.net);
+}
+
+#[test]
+fn zero_edge_net_split_is_rejected_and_crossings_are_recorded() {
+    // Satellite bugfix: a NetSplit that severs zero overlay edges (an
+    // all-clients side, or a side of unknown ids) used to be silently
+    // accepted and the run then mis-read as "survived a partition" —
+    // it must be rejected at setup.
+    let trainer = MockTrainer::tiny();
+    let split = |side: Vec<u32>| {
+        NetSplit {
+            start: Duration::from_millis(40),
+            end: Duration::from_millis(200),
+            side_a: side,
+        }
+    };
+    let mut cfg = base_cfg(6, 510);
+    cfg.net = NetworkModel::lan(510).with_splits(vec![split((0..6).collect())]);
+    let err = sim::run(&trainer, &cfg).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("severs zero edges"),
+        "wrong error: {err:#}"
+    );
+    cfg.net = NetworkModel::lan(510).with_splits(vec![split(vec![77, 99])]);
+    assert!(sim::run(&trainer, &cfg).is_err(), "unknown-id side is a no-op split");
+    // a real bisection is accepted, and its crossing count is recorded
+    cfg.net = NetworkModel::lan(510).with_splits(vec![split(vec![0, 1, 2])]);
+    let res = sim::run(&trainer, &cfg).unwrap();
+    assert_eq!(res.net.edges_severed, 9, "3×3 bisection of the 6-client mesh");
+    assert_eq!(res.reports.len(), 6);
+}
+
+#[test]
+fn quorum_auto_matches_strict_byte_for_byte_on_a_clean_network() {
+    // `--quorum auto` starts strict and stays strict while no suspicion
+    // is ever observed (LAN, loss-free, fault-free), and the controller
+    // is a pure fold that never touches the RNG streams — so the run
+    // must fingerprint identically to the paper-strict fixed quorum.
+    let trainer = MockTrainer::tiny();
+    let strict = base_cfg(5, 1234);
+    let a = sim::run(&trainer, &strict).unwrap();
+    let mut auto = strict.clone();
+    auto.protocol.quorum = QuorumSpec::parse("auto").unwrap();
+    let b = sim::run(&trainer, &auto).unwrap();
+    let fa: Vec<u64> = a.reports.iter().map(fingerprint).collect();
+    let fb: Vec<u64> = b.reports.iter().map(fingerprint).collect();
+    assert_eq!(fa, fb, "suspicion-free auto must equal the strict quorum");
+    assert_eq!(a.net, b.net);
+}
+
+#[test]
+fn quorum_auto_is_deterministic_under_loss() {
+    // Under loss the controller actually moves (suspicions happen);
+    // determinism per seed must survive the moving quorum.
+    let trainer = MockTrainer::tiny();
+    let mut cfg = base_cfg(8, 777);
+    cfg.net = NetworkModel::lossy(0.10, 777);
+    cfg.protocol.quorum = QuorumSpec::parse("auto").unwrap();
+    cfg.protocol.min_rounds = 8;
+    let a = sim::run(&trainer, &cfg).unwrap();
+    let b = sim::run(&trainer, &cfg).unwrap();
+    let fa: Vec<u64> = a.reports.iter().map(fingerprint).collect();
+    let fb: Vec<u64> = b.reports.iter().map(fingerprint).collect();
+    assert_eq!(fa, fb, "auto-quorum runs must be bit-reproducible");
+    // and both executors still agree
+    cfg.exec = ExecMode::Threads;
+    let th = sim::run(&trainer, &cfg).unwrap();
+    let ft: Vec<u64> = th.reports.iter().map(fingerprint).collect();
+    assert_eq!(fa, ft, "auto-quorum diverged across executors");
+}
+
+#[test]
+fn crt_relay_rearms_toward_a_rejoined_middle_hop() {
+    // Satellite bugfix regression (ring:1, crash+rejoin the middle hop):
+    // a client that crashes with rejoin_after set drains its mailbox on
+    // resume, losing any in-flight terminate flags, and the relay dedup
+    // means no neighbor ever repeats the flood toward it.  The re-arm
+    // path re-sends the stored flagged update when a suspected neighbor
+    // revives, so the flood still reaches the rejoined hop and every
+    // client concludes adaptively.
+    let trainer = MockTrainer::tiny();
+    let mut cfg = base_cfg(6, 2121);
+    cfg.topology = TopologySpec::Ring { k: 1 };
+    // MINIMUM_ROUNDS holds convergence open well past the outage, so the
+    // hop is back (and must be re-integrated into the flood's reach)
+    // before any flag exists — the schedule the dedup bug used to strand.
+    cfg.protocol.min_rounds = 12;
+    cfg.protocol.max_rounds = 80;
+    cfg.faults = vec![FaultPlan::none(); 6];
+    cfg.faults[3] = FaultPlan::transient(3, Duration::from_millis(100));
+    let res = sim::run(&trainer, &cfg).unwrap();
+    assert_eq!(res.crashed(), 0, "the outage is transient");
+    assert!(
+        res.all_terminated_adaptively(),
+        "the rejoined middle hop must still learn of termination; causes {:?}",
+        res.reports.iter().map(|r| (r.id, r.cause)).collect::<Vec<_>>()
+    );
+    assert!(res.reports[3].final_accuracy.is_some());
 }
 
 #[test]
