@@ -1,7 +1,7 @@
 //! Bench: the beyond-paper sweeps — the network-scenario matrix
 //! (DESIGN.md §3.4), the sparse-overlay topology sweep (DESIGN.md §9),
-//! and the graph-fault sweep (DESIGN.md §10), all under the
-//! deterministic virtual clock.
+//! the graph-fault sweep (DESIGN.md §10), and the Byzantine sweep
+//! (DESIGN.md §11), all under the deterministic virtual clock.
 
 mod common;
 
@@ -13,4 +13,6 @@ fn main() {
     table.print("Topology sweep — sparse overlays (beyond paper)");
     let table = dfl::exp::faults(&engine, common::scale());
     table.print("Fault sweep — graph faults + quorum auto-tuning (beyond paper)");
+    let table = dfl::exp::byzantine(&engine, common::scale());
+    table.print("Byzantine sweep — adversaries vs robust aggregation (beyond paper)");
 }

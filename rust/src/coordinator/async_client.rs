@@ -19,7 +19,7 @@ use std::time::Duration;
 use anyhow::Result;
 
 use super::config::ProtocolConfig;
-use super::fault::FaultPlan;
+use super::fault::{AdversaryKind, FaultPlan};
 use super::machine::{AsyncMachine, ClientStateMachine};
 use crate::data::Dataset;
 use crate::metrics::ClientReport;
@@ -93,6 +93,10 @@ pub struct AsyncClient<'a> {
     pub cfg: ProtocolConfig,
     pub data: ClientData,
     pub fault: FaultPlan,
+    /// Byzantine role (`None` = honest): the client runs the full
+    /// protocol but its broadcasts lie per [`AdversaryKind`]
+    /// (DESIGN.md §11).  Assigned by `sim::run` from `--adversary`.
+    pub adversary: Option<AdversaryKind>,
     pub rng: Rng,
     /// Artificial per-round slowdown factor ≥ 0 (heterogeneous-machine
     /// contention model; 0 = full speed). Sleeps `factor × train_time`.

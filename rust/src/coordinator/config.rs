@@ -4,6 +4,8 @@ use std::time::Duration;
 
 use anyhow::Result;
 
+use crate::runtime::AggregationRule;
+
 /// How quorum-CCC's condition (a) picks its `q` (the `--quorum` flag).
 ///
 /// * [`QuorumSpec::Fixed`] — a hand-picked fraction; `1.0` (the default)
@@ -116,6 +118,13 @@ pub struct ProtocolConfig {
     /// (DESIGN.md §9); [`QuorumSpec::Auto`] derives `q` per client from
     /// the measured suspicion rate (DESIGN.md §10).
     pub quorum: QuorumSpec,
+    /// How wait-window rows are combined (`--agg`, DESIGN.md §11):
+    /// [`AggregationRule::FedAvg`] (default) is the trainer's weighted
+    /// mean — byte-identical per seed to the pre-rule protocol — while
+    /// `trimmed-mean:F` / `coord-median` / `krum:F` are Byzantine-robust
+    /// order statistics that bound what any `--adversary` client can do
+    /// to the aggregate.
+    pub agg: AggregationRule,
 }
 
 impl Default for ProtocolConfig {
@@ -136,6 +145,7 @@ impl Default for ProtocolConfig {
             early_window_exit: true,
             crt_enabled: true,
             quorum: QuorumSpec::STRICT,
+            agg: AggregationRule::FedAvg,
         }
     }
 }
@@ -170,6 +180,11 @@ mod tests {
             c.quorum,
             QuorumSpec::Fixed(1.0),
             "default must be the paper-strict condition"
+        );
+        assert_eq!(
+            c.agg,
+            AggregationRule::FedAvg,
+            "default must be the byte-identical pre-rule path"
         );
     }
 

@@ -21,6 +21,17 @@
 //! against the built [`crate::net::Topology`] at sim setup and applied by
 //! the shared [`crate::net::Overlay`] as the deployment clock reaches
 //! them.
+//!
+//! [`AdversarySpec`]s break the benign-failure assumption entirely
+//! (DESIGN.md §11): an adversarial client stays *live* but sends wrong
+//! data — scaled/inverted models ([`AdversaryKind::Poison`]), different
+//! models to different neighbors ([`AdversaryKind::Equivocate`]), an old
+//! model under fresh round tags ([`AdversaryKind::StaleReplay`]), or
+//! manufactured suspicion churn aimed at stalling CCC/CRT
+//! ([`AdversaryKind::ForgeSuspicion`]).  Specs are parsed from
+//! `dfl sim --adversary` and compiled/validated in [`crate::sim::run`]
+//! like graph faults; the counter-measure is the robust
+//! [`crate::runtime::AggregationRule`] family.
 
 use std::time::Duration;
 
@@ -245,6 +256,164 @@ impl GraphFault {
     }
 }
 
+/// What a Byzantine client *does* (DESIGN.md §11).  Unlike the benign
+/// [`FaultPlan`] crash model, an adversary stays live — it trains,
+/// receives, and participates in termination — but its outgoing updates
+/// lie.  Honest clients cannot tell an adversary from a peer with odd
+/// data, which is exactly why the counter-measure lives in the
+/// aggregation rule rather than in detection.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AdversaryKind {
+    /// Send *different* models to different neighbors each round (a
+    /// split-brain attack on model agreement: neighbors can never
+    /// converge to one another because each sees a distinct lie).
+    Equivocate,
+    /// Send the true local model with every coordinate multiplied by
+    /// `scale` (negative values invert the gradient direction; large
+    /// magnitudes dominate a mean-based aggregate).
+    Poison { scale: f32 },
+    /// Snapshot the first model ever broadcast and re-send it forever
+    /// under fresh round tags — freshness checks pass, content is stale.
+    StaleReplay,
+    /// Manufacture suspicion churn: stay live but go selectively silent
+    /// toward alternating halves of the neighborhood each round, so every
+    /// neighbor perpetually re-suspects and revives this client.  (The
+    /// protocol has no explicit suspicion frames to forge — suspicion is
+    /// local and timeout-derived — so fabricated *silence* is the attack
+    /// surface; see DESIGN.md §11 for what this can and cannot stall.)
+    ForgeSuspicion,
+}
+
+/// One adversary assignment: a behavior and the clients playing it
+/// (`dfl sim --adversary 'poison:-10:C1,C2;equivocate:C3'`).  Compiled
+/// and validated in [`crate::sim::run`] like graph faults: ids must be in
+/// range and no client may play two roles.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdversarySpec {
+    pub kind: AdversaryKind,
+    pub clients: Vec<ClientId>,
+}
+
+impl AdversarySpec {
+    /// Parse one CLI spelling:
+    ///
+    /// * `poison:SCALE:IDS` — scaled/inverted model updates
+    /// * `equivocate:IDS` — per-neighbor divergent updates
+    /// * `stale-replay:IDS` — first model re-sent under fresh round tags
+    /// * `forge-suspicion:IDS` — manufactured suspicion flapping
+    ///
+    /// `IDS` is a comma-separated client list; a leading `C`/`c` per id is
+    /// accepted (`C1,C2` and `1,2` both work).
+    ///
+    /// ```
+    /// use dfl::coordinator::fault::{AdversaryKind, AdversarySpec};
+    ///
+    /// assert_eq!(
+    ///     AdversarySpec::parse("poison:-10:C1,C2").unwrap(),
+    ///     AdversarySpec { kind: AdversaryKind::Poison { scale: -10.0 }, clients: vec![1, 2] }
+    /// );
+    /// assert!(AdversarySpec::parse("poison:inf:1").is_err());
+    /// ```
+    pub fn parse(s: &str) -> Result<AdversarySpec> {
+        let ids = |v: &str| -> Result<Vec<ClientId>> {
+            let clients = v
+                .split(',')
+                .filter(|p| !p.trim().is_empty())
+                .map(|p| {
+                    let p = p.trim();
+                    let digits = p.strip_prefix(['C', 'c']).unwrap_or(p);
+                    digits
+                        .parse::<ClientId>()
+                        .map_err(|_| anyhow::anyhow!("adversary {s:?}: bad client id {p:?}"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            anyhow::ensure!(!clients.is_empty(), "adversary {s:?}: empty client list");
+            Ok(clients)
+        };
+        let mut parts = s.splitn(3, ':');
+        let kind = parts.next().unwrap_or("");
+        match kind {
+            "poison" => {
+                let scale_str = parts.next().context("poison: missing SCALE")?;
+                let scale: f32 = scale_str
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("adversary {s:?}: bad scale {scale_str:?}"))?;
+                anyhow::ensure!(scale.is_finite(), "adversary {s:?}: scale must be finite");
+                let clients = ids(parts.next().context("poison: missing client list")?)?;
+                Ok(AdversarySpec { kind: AdversaryKind::Poison { scale }, clients })
+            }
+            "equivocate" | "stale-replay" | "forge-suspicion" => {
+                let list = parts.next().with_context(|| format!("{kind}: missing client list"))?;
+                anyhow::ensure!(
+                    parts.next().is_none(),
+                    "adversary {s:?}: {kind} takes exactly one :IDS field"
+                );
+                let clients = ids(list)?;
+                let kind = match kind {
+                    "equivocate" => AdversaryKind::Equivocate,
+                    "stale-replay" => AdversaryKind::StaleReplay,
+                    _ => AdversaryKind::ForgeSuspicion,
+                };
+                Ok(AdversarySpec { kind, clients })
+            }
+            _ => bail!(
+                "unknown adversary {s:?} (want poison:SCALE:IDS, equivocate:IDS, stale-replay:IDS, or forge-suspicion:IDS)"
+            ),
+        }
+    }
+
+    /// Parse a `;`-separated roster (the `--adversary` flag's value).
+    pub fn parse_list(s: &str) -> Result<Vec<AdversarySpec>> {
+        s.split(';')
+            .filter(|p| !p.trim().is_empty())
+            .map(|p| AdversarySpec::parse(p.trim()))
+            .collect()
+    }
+
+    /// The CLI spelling (round-trips through [`AdversarySpec::parse`]).
+    pub fn name(&self) -> String {
+        let ids =
+            self.clients.iter().map(|c| c.to_string()).collect::<Vec<_>>().join(",");
+        match self.kind {
+            AdversaryKind::Poison { scale } => format!("poison:{scale}:{ids}"),
+            AdversaryKind::Equivocate => format!("equivocate:{ids}"),
+            AdversaryKind::StaleReplay => format!("stale-replay:{ids}"),
+            AdversaryKind::ForgeSuspicion => format!("forge-suspicion:{ids}"),
+        }
+    }
+
+    /// Does this spec reference only clients below `n`?  (Same contract
+    /// as [`GraphFault::fits`] — the shrinker drops dangling specs.)
+    pub fn fits(&self, n: usize) -> bool {
+        self.clients.iter().all(|&c| (c as usize) < n)
+    }
+}
+
+/// Compile a roster of specs into a per-client role table, validating id
+/// range and rejecting double role assignment.  `roles[i]` is what client
+/// `i` does; `None` = honest.
+pub fn compile_adversaries(
+    specs: &[AdversarySpec],
+    n: usize,
+) -> Result<Vec<Option<AdversaryKind>>> {
+    let mut roles: Vec<Option<AdversaryKind>> = vec![None; n];
+    for spec in specs {
+        for &c in &spec.clients {
+            anyhow::ensure!(
+                (c as usize) < n,
+                "adversary {:?} references client {c} but the sim has only {n} clients",
+                spec.name()
+            );
+            anyhow::ensure!(
+                roles[c as usize].is_none(),
+                "client {c} is assigned two adversary roles"
+            );
+            roles[c as usize] = Some(spec.kind);
+        }
+    }
+    Ok(roles)
+}
+
 /// Experiment 1 — crash `k` of `n` clients, staggered uniformly across
 /// rounds `[min_round, max_round)`.  Which clients crash is seeded.
 pub fn variable_crash_schedule(
@@ -404,5 +573,71 @@ mod tests {
         assert!(cut.fits(8));
         assert!(!cut.fits(7));
         assert!(GraphFault::parse("graph-cut:0-1:mincut").unwrap().fits(1));
+    }
+
+    #[test]
+    fn adversary_parse_round_trips() {
+        for s in [
+            "poison:-10:1,2",
+            "poison:0.5:7",
+            "equivocate:3",
+            "stale-replay:0,4",
+            "forge-suspicion:2,5,8",
+        ] {
+            let a = AdversarySpec::parse(s).unwrap();
+            assert_eq!(AdversarySpec::parse(&a.name()).unwrap(), a, "{s}");
+        }
+        // issue spelling: C-prefixed ids, ;-separated roster
+        let list = AdversarySpec::parse_list("poison:-10:C1,C2; equivocate:C3").unwrap();
+        assert_eq!(list.len(), 2);
+        assert_eq!(list[0].clients, vec![1, 2]);
+        assert_eq!(list[0].kind, AdversaryKind::Poison { scale: -10.0 });
+        assert_eq!(list[1].clients, vec![3]);
+        assert!(AdversarySpec::parse_list("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn adversary_parse_rejects() {
+        for bad in [
+            "",
+            "poison",
+            "poison:-10",          // missing ids
+            "poison:inf:1",        // non-finite scale
+            "poison:nan:1",
+            "poison:x:1",
+            "poison:2:",           // empty id list
+            "equivocate",
+            "equivocate:",
+            "equivocate:1:2",      // extra field
+            "stale-replay:Cx",     // bad id
+            "forge-suspicion:1-2", // not comma-separated
+            "meteor:1",
+        ] {
+            assert!(AdversarySpec::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn adversary_fits_and_compile() {
+        let spec = AdversarySpec::parse("poison:-1:2,5").unwrap();
+        assert!(spec.fits(6));
+        assert!(!spec.fits(5));
+
+        let roles =
+            compile_adversaries(&AdversarySpec::parse_list("poison:-10:1;equivocate:3").unwrap(), 5)
+                .unwrap();
+        assert_eq!(roles.len(), 5);
+        assert_eq!(roles[1], Some(AdversaryKind::Poison { scale: -10.0 }));
+        assert_eq!(roles[3], Some(AdversaryKind::Equivocate));
+        assert!(roles[0].is_none() && roles[2].is_none() && roles[4].is_none());
+
+        // out-of-range id
+        assert!(compile_adversaries(&AdversarySpec::parse_list("equivocate:9").unwrap(), 5).is_err());
+        // double role assignment
+        assert!(compile_adversaries(
+            &AdversarySpec::parse_list("poison:2:1;stale-replay:1").unwrap(),
+            5
+        )
+        .is_err());
     }
 }

@@ -93,7 +93,7 @@ use anyhow::{bail, Result};
 use super::async_client::{AsyncClient, ClientData};
 use super::config::{ProtocolConfig, QuorumSpec};
 use super::failure::{IdSet, PeerTable};
-use super::fault::FaultPlan;
+use super::fault::{AdversaryKind, FaultPlan};
 use super::sync::{SyncClient, SYNC_GRACE};
 use super::termination::{
     quorum_crash_free, ConvergenceMonitor, QuorumController, TerminationCause, TerminationState,
@@ -294,6 +294,14 @@ pub struct AsyncMachine<'a> {
     cfg: ProtocolConfig,
     data: ClientData,
     fault: FaultPlan,
+    /// Byzantine role (`--adversary`, DESIGN.md §11): `None` = honest.
+    /// An adversary runs the full protocol — it trains, receives, and
+    /// terminates like anyone else — but [`AsyncMachine::broadcast_model`]
+    /// sends lies on its behalf.
+    adversary: Option<AdversaryKind>,
+    /// [`AdversaryKind::StaleReplay`]'s frozen payload: the first model
+    /// this client ever broadcast, re-sent forever under fresh round tags.
+    stale_params: Option<Vec<f32>>,
     rng: Rng,
     slowdown: f32,
     train_cost: Option<Duration>,
@@ -349,8 +357,12 @@ impl<'a> AsyncMachine<'a> {
     pub(super) fn new(c: AsyncClient<'a>) -> AsyncMachine<'a> {
         let clock = c.transport.clock();
         let meta = c.trainer.meta().clone();
+        // The `.max(1)` floor keeps a zero-sample partition from claiming
+        // weight 0, which the decode-side weight validation (net/message)
+        // rejects as unusable aggregation input; the default unweighted
+        // path is 1.0 either way, byte-identical to the pre-floor code.
         let my_weight =
-            if c.cfg.weight_by_samples { c.data.indices.len() as f32 } else { 1.0 };
+            if c.cfg.weight_by_samples { c.data.indices.len().max(1) as f32 } else { 1.0 };
         // Liveness (and therefore quorum-CCC) is neighborhood-scoped: on
         // the full mesh `neighbors()` is the all-peers list and nothing
         // changes; on a sparse overlay only the d neighbors are tracked.
@@ -370,6 +382,8 @@ impl<'a> AsyncMachine<'a> {
             cfg: c.cfg,
             data: c.data,
             fault: c.fault,
+            adversary: c.adversary,
+            stale_params: None,
             rng: c.rng,
             slowdown: c.slowdown,
             train_cost: c.train_cost,
@@ -671,13 +685,16 @@ impl<'a> AsyncMachine<'a> {
     fn close_window(&mut self, w: Window) -> Result<Flow> {
         // Crash detection (Alg. 2 lines 14-19).
         let newly_crashed = self.peer_table.mark_missing(self.round, &w.heard);
-        // Aggregate own + received (Alg. 2 lines 20-21).
+        // Aggregate own + received (Alg. 2 lines 20-21), through the
+        // configured rule: `fedavg` is the trainer's weighted mean
+        // (byte-identical pre-rule path); the robust rules bound what a
+        // Byzantine row can do to the result (DESIGN.md §11).
         let (aggregated, new_params) = {
             let mut rows: Vec<(&[f32], f32)> = vec![(&self.params, self.my_weight)];
             for u in w.kept.values() {
                 rows.push((u.params.as_slice(), u.weight.max(0.0)));
             }
-            (rows.len(), self.trainer.aggregate(&rows)?)
+            (rows.len(), self.trainer.aggregate_with(&rows, &self.cfg.agg)?)
         };
         self.params = new_params;
         // Evaluate (Alg. 2 line 22).
@@ -778,16 +795,68 @@ impl<'a> AsyncMachine<'a> {
         Ok(Flow::Yield(Step::Done(Box::new(report))))
     }
 
-    fn broadcast_model(&self, terminate: bool) {
-        let msg = Msg::Update(ModelUpdate {
-            sender: self.id,
-            round: self.round,
-            terminate,
-            weight: self.my_weight,
-            params: ParamVector(self.params.clone()),
-        });
-        // Best-effort: unreachable peers are handled by the crash model.
-        let _ = self.transport.broadcast(&msg);
+    /// Broadcast this round's model — or, for a Byzantine client, this
+    /// round's lie (DESIGN.md §11).  The adversary branches touch only
+    /// *this* client's RNG stream and sends: honest clients' seeded
+    /// streams are untouched, so an all-honest run stays byte-identical
+    /// per seed whether or not the adversary machinery exists.
+    fn broadcast_model(&mut self, terminate: bool) {
+        let update = |params: Vec<f32>, sender: ClientId, round: u32, weight: f32| {
+            Msg::Update(ModelUpdate {
+                sender,
+                round,
+                terminate,
+                weight,
+                params: ParamVector(params),
+            })
+        };
+        match self.adversary {
+            // Honest path: the true model to the whole neighborhood.
+            // Best-effort: unreachable peers are handled by the crash model.
+            None => {
+                let msg = update(self.params.clone(), self.id, self.round, self.my_weight);
+                let _ = self.transport.broadcast(&msg);
+            }
+            // Every coordinate scaled (negative = inverted direction):
+            // dominates a mean, gets trimmed/out-voted by robust rules.
+            Some(AdversaryKind::Poison { scale }) => {
+                let lie: Vec<f32> = self.params.iter().map(|v| v * scale).collect();
+                let msg = update(lie, self.id, self.round, self.my_weight);
+                let _ = self.transport.broadcast(&msg);
+            }
+            // The first model ever broadcast, frozen, re-sent under this
+            // round's fresh tag — freshness checks pass, content is stale.
+            Some(AdversaryKind::StaleReplay) => {
+                let stale = self.stale_params.get_or_insert_with(|| self.params.clone()).clone();
+                let msg = update(stale, self.id, self.round, self.my_weight);
+                let _ = self.transport.broadcast(&msg);
+            }
+            // A different lie to every neighbor: each gets the true model
+            // scaled by an independent draw from this client's own seeded
+            // stream, so no two neighbors can agree on what we said.
+            Some(AdversaryKind::Equivocate) => {
+                for peer in self.transport.neighbors() {
+                    let factor = self.rng.range_f32(-2.0, 2.0);
+                    let lie: Vec<f32> = self.params.iter().map(|v| v * factor).collect();
+                    let msg = update(lie, self.id, self.round, self.my_weight);
+                    let _ = self.transport.send(peer, &msg);
+                }
+            }
+            // Manufactured suspicion churn: the true model, but only to
+            // alternating halves of the neighborhood each round — every
+            // neighbor perpetually timeout-suspects us, then revives us on
+            // the next round's message.  Under strict quorum (q = 1.0)
+            // each fresh suspicion resets the CCC streak; `--quorum auto`
+            // learns the flap rate instead (DESIGN.md §11).
+            Some(AdversaryKind::ForgeSuspicion) => {
+                let msg = update(self.params.clone(), self.id, self.round, self.my_weight);
+                for (idx, peer) in self.transport.neighbors().into_iter().enumerate() {
+                    if (idx as u32 + self.round) % 2 == 0 {
+                        let _ = self.transport.send(peer, &msg);
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -848,8 +917,9 @@ impl<'a> SyncMachine<'a> {
     pub(super) fn new(c: SyncClient<'a>) -> SyncMachine<'a> {
         let clock = c.transport.clock();
         let meta = c.trainer.meta().clone();
+        // Same zero-sample floor as the async machine (see there).
         let my_weight =
-            if c.cfg.weight_by_samples { c.data.indices.len() as f32 } else { 1.0 };
+            if c.cfg.weight_by_samples { c.data.indices.len().max(1) as f32 } else { 1.0 };
         let n_peers = c.transport.n_peers();
         let monitor = ConvergenceMonitor::new(c.cfg.count_threshold, c.cfg.conv_threshold_rel);
         SyncMachine {
@@ -1020,13 +1090,14 @@ impl<'a> SyncMachine<'a> {
         got: BTreeMap<ClientId, ModelUpdate>,
         terminate_seen: bool,
     ) -> Result<Flow> {
-        // Aggregate own + all peers (Algorithm 1 line 12).
+        // Aggregate own + all peers (Algorithm 1 line 12), through the
+        // configured rule (fedavg default = the pre-rule weighted mean).
         let (aggregated, new_params) = {
             let mut rows: Vec<(&[f32], f32)> = vec![(&self.params, self.my_weight)];
             for u in got.values().take(self.meta.k_max - 1) {
                 rows.push((u.params.as_slice(), u.weight.max(0.0)));
             }
-            (rows.len(), self.trainer.aggregate(&rows)?)
+            (rows.len(), self.trainer.aggregate_with(&rows, &self.cfg.agg)?)
         };
         self.params = new_params;
         let (correct, _) = self.trainer.eval(

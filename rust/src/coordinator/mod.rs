@@ -18,7 +18,9 @@
 //!   relays hop-by-hop ([`machine`]).
 //! * [`fault`] — crash schedules and fault injection used by the
 //!   experiments (Experiments 1–3), plus the topology-aware
-//!   [`fault::GraphFault`] family (edge cuts, churn — DESIGN.md §10).
+//!   [`fault::GraphFault`] family (edge cuts, churn — DESIGN.md §10) and
+//!   the Byzantine [`fault::AdversarySpec`] roster (equivocation,
+//!   poisoning, stale replay, forged suspicion — DESIGN.md §11).
 //! * [`config`] — protocol constants (TIMEOUT, MINIMUM_ROUNDS,
 //!   COUNT_THRESHOLD, convergence threshold, R_PRIME, learning rate).
 
@@ -33,7 +35,9 @@ pub mod termination;
 pub use async_client::{AsyncClient, ClientData, EvalTensors};
 pub use config::{ProtocolConfig, QuorumSpec};
 pub use failure::{IdSet, PeerStatus, PeerTable};
-pub use fault::{CrashPoint, CutSpec, FaultPlan, GraphFault};
+pub use fault::{
+    compile_adversaries, AdversaryKind, AdversarySpec, CrashPoint, CutSpec, FaultPlan, GraphFault,
+};
 pub use machine::{ClientStateMachine, Input, Step};
 pub use sync::SyncClient;
 pub use termination::{

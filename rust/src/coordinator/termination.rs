@@ -460,6 +460,28 @@ mod tests {
     }
 
     #[test]
+    fn quorum_controller_ignores_an_empty_neighborhood() {
+        // Regression: a client whose neighborhood empties mid-churn calls
+        // observe(_, 0).  An unguarded division would compute 0/0 = NaN,
+        // and the NaN would stick in the EWMA for the rest of the run —
+        // every later q() comparison silently false.  The guard makes the
+        // empty window a no-op instead.
+        let mut c = QuorumController::new(0.5);
+        c.observe(0, 0);
+        c.observe(3, 0);
+        assert_eq!(c.rate(), 0.0, "empty windows must not touch the EWMA");
+        assert_eq!(c.q(64), 1.0, "controller must stay unprimed (strict)");
+        assert!(c.rate().is_finite());
+        // a later real observation still primes and adapts normally
+        for _ in 0..30 {
+            c.observe(16, 64);
+        }
+        assert!(c.rate().is_finite());
+        assert!((0.2..0.3).contains(&c.rate()), "rate {} must track 16/64", c.rate());
+        assert!(c.q(64) < 1.0, "controller must adapt after real evidence");
+    }
+
+    #[test]
     fn quorum_controller_is_a_pure_fold() {
         // Same observation sequence ⇒ same derived q, bit for bit (the
         // byte-identity contract of `--quorum auto` per seed).

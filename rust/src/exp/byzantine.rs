@@ -1,0 +1,104 @@
+//! Byzantine sweep (DESIGN.md §11) — adversaries vs robust aggregation,
+//! measured.
+//!
+//! The paper's fault model is crash-only: a faulty client falls silent
+//! and the timeout detector excludes it.  Asynchronous Byzantine FL
+//! (arXiv:2406.01438) studies the complementary adversary — a client
+//! that stays live but *lies*.  This driver pits the adversary roster
+//! ([`crate::coordinator::AdversarySpec`]) against the aggregation rules
+//! ([`crate::runtime::AggregationRule`]) on one fixed substrate: a
+//! `k-regular:6` overlay, Dirichlet(0.6) partitions, LAN network,
+//! `--quorum auto`, ~25% of clients adversarial at ids spread evenly
+//! through the ring so every neighborhood sees some of them.  Rows —
+//!
+//! * `fedavg / none` — the control: the byte-identical default path;
+//! * `fedavg / poison:-10` — the attack succeeding: sign-flipped
+//!   amplified updates averaged straight into every honest neighbor;
+//! * `trimmed-mean:2`, `coord-median`, `krum:2` vs the same poison —
+//!   the defense: order statistics discard the outlier rows;
+//! * `fedavg / forge-suspicion` — the termination attack: selective
+//!   silence flaps the suspect/revive detector to stall strict-quorum
+//!   CCC; `--quorum auto` learns the flap rate instead.
+//!
+//! Health columns count *honest* clients only (an adversary's own report
+//! is not a claim this table defends): adaptive-termination share and
+//! mean final accuracy, plus rounds as the termination-cost axis.
+
+use super::{clear_latency_ceiling, pct, ExpScale};
+use crate::coordinator::config::QuorumSpec;
+use crate::coordinator::fault::{AdversaryKind, AdversarySpec};
+use crate::coordinator::termination::TerminationCause;
+use crate::net::{ClientId, NetworkModel, TopologySpec};
+use crate::runtime::{AggregationRule, Trainer};
+use crate::sim::{self, Partition, SimConfig};
+use crate::util::benchkit::Table;
+
+pub fn byzantine(trainer: &(dyn Trainer + Sync), scale: ExpScale) -> Table {
+    let meta = trainer.meta().clone();
+    let n = if scale.quick { 24 } else { 48 };
+    // ~25% adversaries, spread every 4th id so each k-regular:6
+    // neighborhood (ring + chords) contains some but never a majority.
+    let adv_ids: Vec<ClientId> = (0..n as ClientId).filter(|i| i % 4 == 2).collect();
+    let roster = |kind: AdversaryKind| vec![AdversarySpec { kind, clients: adv_ids.clone() }];
+    let poison = AdversaryKind::Poison { scale: -10.0 };
+    let rows: [(&str, &str, Vec<AdversarySpec>); 6] = [
+        ("fedavg", "none", vec![]),
+        ("fedavg", "poison:-10", roster(poison)),
+        ("trimmed-mean:2", "poison:-10", roster(poison)),
+        ("coord-median", "poison:-10", roster(poison)),
+        ("krum:2", "poison:-10", roster(poison)),
+        ("fedavg", "forge-suspicion", roster(AdversaryKind::ForgeSuspicion)),
+    ];
+    let mut table = Table::new(&[
+        "Rule",
+        "Adversary",
+        "Advs",
+        "Honest Adaptive (%)",
+        "Rounds",
+        "Honest Acc. (%)",
+    ]);
+    for (rule, adversary, adversaries) in rows {
+        let mut cfg = SimConfig::for_meta(n, &meta);
+        cfg.partition = Partition::Dirichlet(0.6);
+        scale.configure(&mut cfg, &meta);
+        if scale.net.is_none() {
+            cfg.net = NetworkModel::lan(scale.seed);
+            clear_latency_ceiling(&mut cfg, &meta);
+        }
+        if scale.topology.is_none() {
+            cfg.topology = TopologySpec::KRegular { d: 6 };
+        }
+        if scale.quorum.is_none() {
+            cfg.protocol.quorum = QuorumSpec::parse("auto").expect("auto quorum");
+        }
+        // The rule is this sweep's variable, so it overrides the scale's
+        // `--agg` (configure() just applied it); everything else a CLI
+        // flag set still wins above.
+        cfg.protocol.agg = AggregationRule::parse(rule).expect("sweep rule");
+        let n_adv = adversaries.iter().map(|a| a.clients.len()).sum::<usize>();
+        cfg.adversaries = adversaries;
+        cfg.seed = scale.seed;
+        let res = sim::run(trainer, &cfg).expect("byzantine-sweep run");
+        let honest: Vec<_> = res
+            .reports
+            .iter()
+            .filter(|r| !adv_ids.contains(&r.id) || adversary == "none")
+            .collect();
+        let adaptive = honest
+            .iter()
+            .filter(|r| {
+                matches!(r.cause, TerminationCause::Converged | TerminationCause::Signaled)
+            })
+            .count();
+        let acc = crate::metrics::mean(honest.iter().filter_map(|r| r.final_accuracy));
+        table.row(&[
+            rule.to_string(),
+            adversary.to_string(),
+            n_adv.to_string(),
+            format!("{:.0}", 100.0 * adaptive as f32 / honest.len().max(1) as f32),
+            res.rounds().to_string(),
+            pct(acc),
+        ]);
+    }
+    table
+}

@@ -1,7 +1,7 @@
 //! Experiment drivers — one per table/figure of the paper's §4, plus the
 //! beyond-paper network-scenario matrix ([`scenarios()`]), sparse-
-//! overlay topology sweep ([`topologies()`]), and graph-fault sweep
-//! ([`faults()`]).
+//! overlay topology sweep ([`topologies()`]), graph-fault sweep
+//! ([`faults()`]), and Byzantine-adversary sweep ([`byzantine()`]).
 //!
 //! Each driver runs the relevant deployments through [`crate::sim`] and
 //! returns a [`Table`] shaped like the paper's (same rows/series), so
@@ -18,6 +18,7 @@
 //! original wall-clock behaviour.
 
 mod baseline;
+mod byzantine;
 mod exp1;
 mod exp2;
 mod exp3;
@@ -27,6 +28,7 @@ mod scenarios;
 mod termination;
 
 pub use baseline::table2;
+pub use byzantine::byzantine;
 pub use exp1::fig3_4;
 pub use exp2::fig5_6;
 pub use exp3::fig7_8;
@@ -40,7 +42,7 @@ use std::time::Duration;
 use crate::coordinator::config::QuorumSpec;
 use crate::coordinator::ProtocolConfig;
 use crate::net::{NetPreset, TopologySpec};
-use crate::runtime::{Meta, Trainer};
+use crate::runtime::{AggregationRule, Meta, Trainer};
 use crate::sim::{ExecMode, SimConfig};
 use crate::util::benchkit::Table;
 
@@ -85,6 +87,10 @@ pub struct ExpScale {
     /// paper-strict condition; `Auto` enables suspicion-driven
     /// auto-tuning — the CLI's `--quorum auto`).
     pub quorum: Option<QuorumSpec>,
+    /// Override the aggregation rule (None = `FedAvg`, the byte-identical
+    /// pre-rule path; the CLI's `--agg`).  The byzantine driver sweeps
+    /// rules itself and ignores this override within its rule column.
+    pub agg: Option<AggregationRule>,
 }
 
 impl Default for ExpScale {
@@ -102,6 +108,7 @@ impl Default for ExpScale {
             net: None,
             topology: None,
             quorum: None,
+            agg: None,
         }
     }
 }
@@ -148,6 +155,7 @@ impl ExpScale {
             early_window_exit: true,
             crt_enabled: true,
             quorum: self.quorum.unwrap_or(QuorumSpec::STRICT),
+            agg: self.agg.unwrap_or(AggregationRule::FedAvg),
         }
     }
 
@@ -231,6 +239,10 @@ pub fn run_all(trainer: &(dyn Trainer + Sync), scale: ExpScale) -> Vec<(String, 
         (
             "Fault sweep — graph faults + quorum auto-tuning (beyond paper)".into(),
             faults(trainer, scale),
+        ),
+        (
+            "Byzantine sweep — adversaries vs robust aggregation (beyond paper)".into(),
+            byzantine(trainer, scale),
         ),
     ]
 }

@@ -81,6 +81,8 @@ fn cmd_sim(args: Vec<String>) -> Result<()> {
         .opt("topology", Some("full"), "peer overlay: full | ring:K | k-regular:D | small-world:D:P")
         .opt("quorum", Some("1.0"), "quorum-CCC condition (a): fraction q (1.0 = paper-strict), auto, or auto:Q_MIN (suspicion-driven)")
         .opt("fault", Some(""), "graph-fault schedule, ';'-separated: graph-cut:T1-T2:mincut|A-B,... and churn:CLIENT:LEAVE[-REJOIN] (seconds)")
+        .opt("adversary", Some(""), "Byzantine roster, ';'-separated: poison:SCALE:IDS, equivocate:IDS, stale-replay:IDS, forge-suspicion:IDS (IDS = C1,C2,...)")
+        .opt("agg", Some("fedavg"), "aggregation rule: fedavg | trimmed-mean:F | coord-median | krum:F")
         .opt("train-cost-ms", Some("20"), "modeled per-round train cost under --virtual")
         .opt("exec", Some("events"), "--virtual executor: events (state machines, zero per-client threads) or threads")
         .switch("virtual", "deterministic virtual clock instead of wall time")
@@ -107,7 +109,9 @@ fn cmd_sim(args: Vec<String>) -> Result<()> {
     cfg.net = dfl::net::NetworkModel::preset(a.str("net"), cfg.seed)?;
     cfg.topology = dfl::net::TopologySpec::parse(a.str("topology"))?;
     cfg.protocol.quorum = parse_quorum(&a)?;
+    cfg.protocol.agg = dfl::runtime::AggregationRule::parse(a.str("agg"))?;
     cfg.graph_faults = dfl::coordinator::GraphFault::parse_list(a.str("fault"))?;
+    cfg.adversaries = dfl::coordinator::AdversarySpec::parse_list(a.str("adversary"))?;
     cfg.virtual_time = a.bool("virtual");
     cfg.exec = dfl::sim::ExecMode::parse(a.str("exec"))?;
     cfg.train_cost = std::time::Duration::from_millis(a.u64("train-cost-ms")?);
@@ -136,12 +140,14 @@ fn cmd_sim(args: Vec<String>) -> Result<()> {
         );
     }
     println!(
-        "running {} clients ({}), {} machines, {} crashes, {} graph faults, net {}, topology {} (q={}), {} clock{}, seed {}",
+        "running {} clients ({}), {} machines, {} crashes, {} graph faults, {} adversaries, agg {}, net {}, topology {} (q={}), {} clock{}, seed {}",
         n,
         if cfg.sync { "phase 1 sync" } else { "phase 2 async" },
         cfg.machines,
         crashes,
         cfg.graph_faults.len(),
+        cfg.adversaries.iter().map(|s| s.clients.len()).sum::<usize>(),
+        cfg.protocol.agg.name(),
         a.str("net"),
         cfg.topology.name(),
         cfg.protocol.quorum.name(),
@@ -261,6 +267,7 @@ fn cmd_client(args: Vec<String>) -> Result<()> {
         } else {
             dfl::coordinator::FaultPlan::none()
         },
+        adversary: None,
         rng: Rng::new(seed ^ (0xC11E << 8) ^ id as u64),
         slowdown: 0.0,
         train_cost: None,
@@ -284,6 +291,7 @@ fn cmd_reproduce(args: Vec<String>) -> Result<()> {
         .opt("net", Some(""), "override every driver's network with a preset (ideal|lan|wan|asym|lossy-burst)")
         .opt("topology", Some(""), "override every async driver's peer overlay (full|ring:K|k-regular:D|small-world:D:P)")
         .opt("quorum", Some(""), "override quorum-CCC condition (a): a fraction, auto, or auto:Q_MIN; empty = 1.0, paper-strict")
+        .opt("agg", Some(""), "override the aggregation rule (fedavg|trimmed-mean:F|coord-median|krum:F); empty = fedavg")
         .opt("train-cost-ms", Some("20"), "modeled per-round train cost under virtual time")
         .opt("exec", Some("events"), "virtual-time executor: events or threads")
         .switch("full", "full grids (slower) instead of quick mode")
@@ -304,6 +312,9 @@ fn cmd_reproduce(args: Vec<String>) -> Result<()> {
     }
     if !a.str("quorum").is_empty() {
         scale.quorum = Some(parse_quorum(&a)?);
+    }
+    if !a.str("agg").is_empty() {
+        scale.agg = Some(dfl::runtime::AggregationRule::parse(a.str("agg"))?);
     }
 
     let runs: Vec<(String, dfl::util::benchkit::Table)> = match what {
@@ -332,8 +343,11 @@ fn cmd_reproduce(args: Vec<String>) -> Result<()> {
         "faults" | "graph-faults" => {
             vec![("Fault sweep".into(), exp::faults(&engine, scale))]
         }
+        "byzantine" | "adversaries" => {
+            vec![("Byzantine sweep".into(), exp::byzantine(&engine, scale))]
+        }
         other => bail!(
-            "unknown experiment {other:?}; want all|table2|table3|table4|fig3_4|fig5_6|fig7_8|termination|scenarios|topologies|faults"
+            "unknown experiment {other:?}; want all|table2|table3|table4|fig3_4|fig5_6|fig7_8|termination|scenarios|topologies|faults|byzantine"
         ),
     };
     let mut md = String::new();

@@ -78,13 +78,25 @@ impl Msg {
         let mut r = Reader::new(bytes);
         let tag = r.u8()?;
         let msg = match tag {
-            TAG_UPDATE => Msg::Update(ModelUpdate {
-                sender: r.u32()?,
-                round: r.u32()?,
-                terminate: r.bool()?,
-                weight: r.f32()?,
-                params: ParamVector::decode(&mut r)?,
-            }),
+            TAG_UPDATE => {
+                let sender = r.u32()?;
+                let round = r.u32()?;
+                let terminate = r.bool()?;
+                let weight = r.f32()?;
+                // A NaN/zero/negative weight from one peer would poison or
+                // zero the neighborhood weighted average — unusable
+                // aggregation input, rejected at the trust boundary.
+                if !weight.is_finite() || weight <= 0.0 {
+                    bail!("update from client {sender} carries invalid aggregation weight {weight}");
+                }
+                Msg::Update(ModelUpdate {
+                    sender,
+                    round,
+                    terminate,
+                    weight,
+                    params: ParamVector::decode(&mut r)?,
+                })
+            }
             TAG_HELLO => Msg::Hello { sender: r.u32()? },
             TAG_BYE => Msg::Bye { sender: r.u32()? },
             t => bail!("unknown message tag {t}"),
@@ -131,6 +143,31 @@ mod tests {
     }
 
     #[test]
+    fn decode_rejects_invalid_weights() {
+        // encode() doesn't judge (a Byzantine sender controls its own
+        // bytes anyway); decode is the trust boundary that must.
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 0.0, -1.0] {
+            let msg = Msg::Update(ModelUpdate {
+                sender: 5,
+                round: 2,
+                terminate: false,
+                weight: bad,
+                params: ParamVector(vec![1.0]),
+            });
+            assert!(Msg::decode(&msg.encode()).is_err(), "weight {bad} must be rejected");
+        }
+        // the boundary itself: tiny positive weights are legitimate
+        let msg = Msg::Update(ModelUpdate {
+            sender: 5,
+            round: 2,
+            terminate: false,
+            weight: f32::MIN_POSITIVE,
+            params: ParamVector(vec![1.0]),
+        });
+        assert!(Msg::decode(&msg.encode()).is_ok());
+    }
+
+    #[test]
     fn roundtrip_property() {
         forall(
             0x4E55,
@@ -141,7 +178,8 @@ mod tests {
                     sender: r.next_u32() % 64,
                     round: r.next_u32() % 10_000,
                     terminate: r.below(2) == 1,
-                    weight: r.f32() * 100.0,
+                    // strictly positive: decode rejects weight <= 0
+                    weight: 0.1 + r.f32() * 100.0,
                     params: ParamVector((0..n).map(|_| r.normal()).collect()),
                 })
             },

@@ -173,7 +173,7 @@ impl Transport for TcpTransport {
     }
 
     fn send(&self, to: ClientId, msg: &Msg) -> Result<()> {
-        let bytes = codec::frame(&msg.encode());
+        let bytes = codec::frame(&msg.encode())?;
         let mut conns = self.conns.lock().unwrap();
         // reuse the cached connection, else dial
         if let Some(stream) = conns.get_mut(&to) {

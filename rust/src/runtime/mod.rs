@@ -16,9 +16,11 @@ mod engine;
 #[path = "engine_stub.rs"]
 mod engine;
 mod mock;
+mod robust;
 
 pub use engine::{Engine, SharedEngine};
 pub use mock::MockTrainer;
+pub use robust::AggregationRule;
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -123,6 +125,22 @@ pub trait Trainer: Send + Sync {
     /// Masked FedAvg: `rows` are (model, weight) pairs; at most
     /// `meta().k_max` rows participate (the caller enforces this).
     fn aggregate(&self, rows: &[(&[f32], f32)]) -> Result<Vec<f32>>;
+
+    /// Rule-dispatched aggregation ([`AggregationRule`]): `fedavg`
+    /// delegates to [`Trainer::aggregate`] — the byte-identical pre-PR
+    /// path — while the robust rules run the shared order-statistic
+    /// implementations behind [`AggregationRule`] (unweighted; an
+    /// adversary controls its own claimed weight).  Provided so every
+    /// Trainer gets the robust family for free.
+    fn aggregate_with(&self, rows: &[(&[f32], f32)], rule: &AggregationRule) -> Result<Vec<f32>> {
+        match rule {
+            AggregationRule::FedAvg => self.aggregate(rows),
+            _ => {
+                check_aggregate_rows(self.meta(), rows)?;
+                robust::apply(rows, rule)
+            }
+        }
+    }
 }
 
 /// Validate row shapes shared by both Trainer impls.

@@ -1,0 +1,267 @@
+//! Byzantine-robust aggregation rules (DESIGN.md §11).
+//!
+//! [`AggregationRule`] selects how a wait-window's `(model, weight)` rows
+//! are combined.  `fedavg` delegates to [`crate::runtime::Trainer::aggregate`]
+//! unchanged — the byte-identical default — while the robust rules are
+//! order statistics computed here, *unweighted*: an adversary controls
+//! its own claimed weight, so any weight-respecting robust rule hands the
+//! attacker a second dial.  Dropping weights costs nothing in the
+//! all-honest equal-weight case (every rule then agrees with FedAvg on
+//! identical inputs) and removes the dial under attack.
+//!
+//! * **trimmed-mean:F** — per coordinate, drop the `F` lowest and `F`
+//!   highest values, average the rest (tolerates `F` outliers per side).
+//! * **coord-median** — per-coordinate median (mean of the two middle
+//!   values for even row counts, so the result is deterministic and
+//!   permutation-invariant).
+//! * **krum:F** — pick the single row minimizing the summed squared
+//!   distance to its `n − F − 2` nearest peers (Blanchard et al., NeurIPS
+//!   2017): a poisoned outlier is far from the honest cluster, so it can
+//!   never win the score.
+
+use anyhow::{bail, Result};
+
+/// How the wait-window rows are combined (`ProtocolConfig::agg`,
+/// `dfl sim --agg`).  Parsed/printed via [`AggregationRule::parse`] /
+/// [`AggregationRule::name`] like [`crate::coordinator::QuorumSpec`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AggregationRule {
+    /// Weighted FedAvg via the trainer's own `aggregate` — the pre-PR
+    /// path, byte-identical by construction.
+    #[default]
+    FedAvg,
+    /// Per-coordinate trimmed mean dropping `f` values per side.
+    TrimmedMean { f: usize },
+    /// Per-coordinate median.
+    CoordMedian,
+    /// Multi-Krum with `f` presumed adversaries (selects one row).
+    Krum { f: usize },
+}
+
+impl AggregationRule {
+    /// Parse the CLI spelling: `fedavg | trimmed-mean:F | coord-median |
+    /// krum:F`.
+    ///
+    /// ```
+    /// use dfl::runtime::AggregationRule;
+    /// assert_eq!(AggregationRule::parse("fedavg").unwrap(), AggregationRule::FedAvg);
+    /// assert_eq!(
+    ///     AggregationRule::parse("trimmed-mean:2").unwrap(),
+    ///     AggregationRule::TrimmedMean { f: 2 }
+    /// );
+    /// assert!(AggregationRule::parse("krum").is_err());
+    /// ```
+    pub fn parse(s: &str) -> Result<AggregationRule> {
+        let f_of = |v: Option<&str>, kind: &str| -> Result<usize> {
+            v.and_then(|x| x.parse::<usize>().ok())
+                .ok_or_else(|| anyhow::anyhow!("aggregation rule {s:?}: {kind} wants {kind}:F"))
+        };
+        let (kind, rest) = match s.split_once(':') {
+            Some((k, r)) => (k, Some(r)),
+            None => (s, None),
+        };
+        match kind {
+            "fedavg" if rest.is_none() => Ok(AggregationRule::FedAvg),
+            "coord-median" | "median" if rest.is_none() => Ok(AggregationRule::CoordMedian),
+            "trimmed-mean" => Ok(AggregationRule::TrimmedMean { f: f_of(rest, "trimmed-mean")? }),
+            "krum" => Ok(AggregationRule::Krum { f: f_of(rest, "krum")? }),
+            _ => bail!("unknown aggregation rule {s:?} (want fedavg|trimmed-mean:F|coord-median|krum:F)"),
+        }
+    }
+
+    /// The CLI spelling (round-trips through [`AggregationRule::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            AggregationRule::FedAvg => "fedavg".into(),
+            AggregationRule::TrimmedMean { f } => format!("trimmed-mean:{f}"),
+            AggregationRule::CoordMedian => "coord-median".into(),
+            AggregationRule::Krum { f } => format!("krum:{f}"),
+        }
+    }
+}
+
+/// Shape check shared by the robust rules (they bypass the trainer's
+/// `aggregate`, so they validate on their own).
+fn check_rows(rows: &[(&[f32], f32)]) -> Result<usize> {
+    let Some(&(first, _)) = rows.first() else {
+        bail!("robust aggregate called with zero rows");
+    };
+    for (i, (p, _)) in rows.iter().enumerate() {
+        if p.len() != first.len() {
+            bail!("robust aggregate row {i} has {} params, want {}", p.len(), first.len());
+        }
+    }
+    Ok(first.len())
+}
+
+/// Apply a non-FedAvg rule to the rows.  Callers reach this through
+/// [`crate::runtime::Trainer::aggregate_with`], which routes FedAvg to
+/// the trainer instead.
+pub(crate) fn apply(rows: &[(&[f32], f32)], rule: &AggregationRule) -> Result<Vec<f32>> {
+    match *rule {
+        AggregationRule::FedAvg => bail!("fedavg is handled by the trainer, not the robust path"),
+        AggregationRule::TrimmedMean { f } => trimmed_mean(rows, f),
+        AggregationRule::CoordMedian => coord_median(rows),
+        AggregationRule::Krum { f } => krum(rows, f),
+    }
+}
+
+/// Per-coordinate trimmed mean.  `f` is clamped so at least one value
+/// survives the trim (`f ≤ (n−1)/2`): a window smaller than the
+/// configured tolerance degrades toward the median instead of erroring,
+/// which matters because wait-window sizes vary round to round.
+pub fn trimmed_mean(rows: &[(&[f32], f32)], f: usize) -> Result<Vec<f32>> {
+    let dim = check_rows(rows)?;
+    let n = rows.len();
+    let f = f.min((n - 1) / 2);
+    let keep = (n - 2 * f) as f32;
+    let mut out = vec![0.0f32; dim];
+    let mut col = vec![0.0f32; n];
+    for (j, o) in out.iter_mut().enumerate() {
+        for (i, (p, _)) in rows.iter().enumerate() {
+            col[i] = p[j];
+        }
+        // total_cmp: NaN sorts deterministically instead of panicking, so
+        // a poisoned NaN coordinate lands at the top and gets trimmed.
+        col.sort_unstable_by(f32::total_cmp);
+        *o = col[f..n - f].iter().sum::<f32>() / keep;
+    }
+    Ok(out)
+}
+
+/// Per-coordinate median; even row counts average the two middle values.
+pub fn coord_median(rows: &[(&[f32], f32)]) -> Result<Vec<f32>> {
+    let dim = check_rows(rows)?;
+    let n = rows.len();
+    let mut out = vec![0.0f32; dim];
+    let mut col = vec![0.0f32; n];
+    for (j, o) in out.iter_mut().enumerate() {
+        for (i, (p, _)) in rows.iter().enumerate() {
+            col[i] = p[j];
+        }
+        col.sort_unstable_by(f32::total_cmp);
+        *o = if n % 2 == 1 { col[n / 2] } else { (col[n / 2 - 1] + col[n / 2]) / 2.0 };
+    }
+    Ok(out)
+}
+
+/// Krum: return the row with the smallest summed squared distance to its
+/// `max(1, n − f − 2)` nearest peers (clamped to the `n − 1` available).
+/// Ties break toward the lower row index, so the result is deterministic.
+pub fn krum(rows: &[(&[f32], f32)], f: usize) -> Result<Vec<f32>> {
+    check_rows(rows)?;
+    let n = rows.len();
+    if n == 1 {
+        return Ok(rows[0].0.to_vec());
+    }
+    let closest = n.saturating_sub(f + 2).max(1).min(n - 1);
+    let mut best: Option<(f64, usize)> = None;
+    let mut dists = vec![0.0f64; n - 1];
+    for i in 0..n {
+        let mut k = 0;
+        for j in 0..n {
+            if i == j {
+                continue;
+            }
+            let d: f64 = rows[i]
+                .0
+                .iter()
+                .zip(rows[j].0)
+                .map(|(a, b)| {
+                    let d = (*a as f64) - (*b as f64);
+                    d * d
+                })
+                .sum();
+            dists[k] = d;
+            k += 1;
+        }
+        dists.sort_unstable_by(f64::total_cmp);
+        let score: f64 = dists[..closest].iter().sum();
+        if best.map_or(true, |(s, _)| score < s) {
+            best = Some((score, i));
+        }
+    }
+    Ok(rows[best.expect("n >= 2 rows scored").1].0.to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rule_parse_round_trips() {
+        for s in ["fedavg", "trimmed-mean:2", "coord-median", "krum:1"] {
+            let r = AggregationRule::parse(s).unwrap();
+            assert_eq!(AggregationRule::parse(&r.name()).unwrap(), r, "{s}");
+        }
+        assert_eq!(AggregationRule::parse("median").unwrap(), AggregationRule::CoordMedian);
+        assert_eq!(AggregationRule::default(), AggregationRule::FedAvg);
+        for bad in ["", "krum", "trimmed-mean", "trimmed-mean:x", "fedavg:1", "mode"] {
+            assert!(AggregationRule::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn identical_rows_pass_through_every_rule() {
+        let row = [1.0f32, -2.0, 3.5];
+        let rows: Vec<(&[f32], f32)> = (0..5).map(|_| (&row[..], 1.0)).collect();
+        for rule in [
+            AggregationRule::TrimmedMean { f: 1 },
+            AggregationRule::CoordMedian,
+            AggregationRule::Krum { f: 1 },
+        ] {
+            assert_eq!(apply(&rows, &rule).unwrap(), row.to_vec(), "{}", rule.name());
+        }
+    }
+
+    #[test]
+    fn trimmed_mean_drops_extremes() {
+        let rows: Vec<Vec<f32>> =
+            vec![vec![0.0], vec![1.0], vec![2.0], vec![3.0], vec![100.0]];
+        let refs: Vec<(&[f32], f32)> = rows.iter().map(|r| (r.as_slice(), 1.0)).collect();
+        assert_eq!(trimmed_mean(&refs, 1).unwrap(), vec![2.0]);
+        // f too large for the window: clamps to (n-1)/2 = 2 → median-like
+        assert_eq!(trimmed_mean(&refs, 10).unwrap(), vec![2.0]);
+        // NaN sorts high under total_cmp and gets trimmed away
+        let poisoned: Vec<Vec<f32>> =
+            vec![vec![1.0], vec![2.0], vec![3.0], vec![f32::NAN]];
+        let refs: Vec<(&[f32], f32)> = poisoned.iter().map(|r| (r.as_slice(), 1.0)).collect();
+        assert!(trimmed_mean(&refs, 1).unwrap()[0].is_finite());
+    }
+
+    #[test]
+    fn median_even_and_odd() {
+        let rows: Vec<Vec<f32>> = vec![vec![1.0], vec![5.0], vec![3.0]];
+        let refs: Vec<(&[f32], f32)> = rows.iter().map(|r| (r.as_slice(), 1.0)).collect();
+        assert_eq!(coord_median(&refs).unwrap(), vec![3.0]);
+        let rows: Vec<Vec<f32>> = vec![vec![1.0], vec![5.0], vec![3.0], vec![7.0]];
+        let refs: Vec<(&[f32], f32)> = rows.iter().map(|r| (r.as_slice(), 1.0)).collect();
+        assert_eq!(coord_median(&refs).unwrap(), vec![4.0]);
+    }
+
+    #[test]
+    fn krum_picks_the_cluster() {
+        let rows: Vec<Vec<f32>> = vec![
+            vec![1.0, 1.0],
+            vec![1.1, 0.9],
+            vec![0.9, 1.1],
+            vec![-50.0, 80.0], // the outlier can never win
+        ];
+        let refs: Vec<(&[f32], f32)> = rows.iter().map(|r| (r.as_slice(), 1.0)).collect();
+        let out = krum(&refs, 1).unwrap();
+        assert!(rows[..3].iter().any(|r| r.as_slice() == out.as_slice()));
+        // single row: trivially itself
+        let one: Vec<(&[f32], f32)> = vec![(rows[0].as_slice(), 1.0)];
+        assert_eq!(krum(&one, 1).unwrap(), rows[0]);
+    }
+
+    #[test]
+    fn robust_rules_reject_bad_shapes() {
+        assert!(coord_median(&[]).is_err());
+        let a = [1.0f32, 2.0];
+        let b = [1.0f32];
+        let rows: Vec<(&[f32], f32)> = vec![(&a, 1.0), (&b, 1.0)];
+        assert!(trimmed_mean(&rows, 0).is_err());
+        assert!(krum(&rows, 0).is_err());
+    }
+}

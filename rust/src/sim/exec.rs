@@ -56,6 +56,7 @@ pub(super) fn run_events(
     train: &Arc<Dataset>,
     eval: &EvalTensors,
     overlay: &Arc<Overlay>,
+    adversary_roles: &[Option<crate::coordinator::fault::AdversaryKind>],
 ) -> Result<(Vec<ClientReport>, NetStats)> {
     let n = cfg.n_clients;
     let clock = VirtualClock::new(n);
@@ -66,6 +67,7 @@ pub(super) fn run_events(
     for (i, indices) in parts.into_iter().enumerate() {
         let data = ClientData::with_eval(Arc::clone(train), indices, eval.clone());
         let fault = cfg.faults.get(i).copied().unwrap_or_default();
+        let adversary = adversary_roles.get(i).copied().flatten();
         let rng = Rng::new(cfg.seed ^ (0xC11E << 8) ^ i as u64);
         let slowdown = cfg.slowdown_of(i);
         let transport = Box::new(hub.endpoint(i as u32));
@@ -90,6 +92,7 @@ pub(super) fn run_events(
                 cfg: cfg.protocol.clone(),
                 data,
                 fault,
+                adversary,
                 rng,
                 slowdown,
                 train_cost,

@@ -38,7 +38,9 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::async_client::{AsyncClient, ClientData, EvalTensors};
 use crate::coordinator::config::ProtocolConfig;
-use crate::coordinator::fault::{CutSpec, FaultPlan, GraphFault};
+use crate::coordinator::fault::{
+    compile_adversaries, AdversarySpec, CutSpec, FaultPlan, GraphFault,
+};
 use crate::coordinator::sync::SyncClient;
 use crate::coordinator::termination::TerminationCause;
 use crate::data::{dirichlet_partition, fixed_chunk, iid_partition, skewed_chunk, Dataset};
@@ -126,6 +128,12 @@ pub struct SimConfig {
     /// to the pre-fault protocol.  Requires Phase 2 (`sync` keeps the
     /// barrier's static full mesh).
     pub graph_faults: Vec<GraphFault>,
+    /// Byzantine roster (`--adversary`, DESIGN.md §11): which clients lie
+    /// and how.  Compiled into per-client roles at setup (ids validated,
+    /// double assignment rejected).  Empty = all honest, byte-identical
+    /// to the pre-adversary protocol.  Requires Phase 2 — Phase 1 assumes
+    /// a fault-free system.
+    pub adversaries: Vec<AdversarySpec>,
     pub seed: u64,
     /// Peer overlay (DESIGN.md §9): `Full` (default) is the paper's
     /// all-to-all dissemination; sparse presets cut per-round message
@@ -158,6 +166,7 @@ impl SimConfig {
             net: NetworkModel::lan(7),
             faults: Vec::new(),
             graph_faults: Vec::new(),
+            adversaries: Vec::new(),
             seed: 7,
             topology: TopologySpec::Full,
             virtual_time: false,
@@ -349,6 +358,13 @@ pub fn run(trainer: &(dyn Trainer + Sync), cfg: &SimConfig) -> Result<SimResult>
         cfg.graph_faults.is_empty() || !cfg.sync,
         "Phase 1 (sync) assumes a static full mesh; graph faults need Phase 2"
     );
+    anyhow::ensure!(
+        cfg.adversaries.is_empty() || !cfg.sync,
+        "Phase 1 (sync) assumes a fault-free system; Byzantine adversaries need Phase 2"
+    );
+    // Byzantine roster compiled (and validated: ids in range, no double
+    // role) once, shared by both executors (DESIGN.md §11).
+    let adversary_roles = compile_adversaries(&cfg.adversaries, cfg.n_clients)?;
     // NetSplit validation (DESIGN.md §10): a scheduled partition must
     // actually sever overlay edges.  A client-ID bisection that crosses
     // zero edges of the built graph — an empty/complete/unknown-id side —
@@ -394,9 +410,9 @@ pub fn run(trainer: &(dyn Trainer + Sync), cfg: &SimConfig) -> Result<SimResult>
     // --- executors ----------------------------------------------------------
     let t0 = Instant::now();
     let (reports, mut net) = if cfg.virtual_time && cfg.exec == ExecMode::Events {
-        exec::run_events(trainer, cfg, parts, &train, &eval, &overlay)?
+        exec::run_events(trainer, cfg, parts, &train, &eval, &overlay, &adversary_roles)?
     } else {
-        run_threads(trainer, cfg, parts, &train, &eval, &overlay)?
+        run_threads(trainer, cfg, parts, &train, &eval, &overlay, &adversary_roles)?
     };
     // Virtual runs report logical time: the deployment "took" as long as
     // its slowest client's simulated schedule, not the compute wall time.
@@ -434,6 +450,7 @@ fn run_threads(
     train: &Arc<Dataset>,
     eval: &EvalTensors,
     overlay: &Arc<Overlay>,
+    adversary_roles: &[Option<crate::coordinator::fault::AdversaryKind>],
 ) -> Result<(Vec<ClientReport>, NetStats)> {
     enum Net {
         Real(InProcHub),
@@ -476,6 +493,7 @@ fn run_threads(
         for (i, indices) in parts.into_iter().enumerate() {
             let data = ClientData::with_eval(Arc::clone(train), indices, eval.clone());
             let fault = cfg.faults.get(i).copied().unwrap_or_default();
+            let adversary = adversary_roles.get(i).copied().flatten();
             let protocol = cfg.protocol.clone();
             let client_rng = Rng::new(cfg.seed ^ (0xC11E << 8) ^ i as u64);
             let slowdown = cfg.slowdown_of(i);
@@ -503,6 +521,7 @@ fn run_threads(
                         cfg: protocol,
                         data,
                         fault,
+                        adversary,
                         rng: client_rng,
                         slowdown,
                         train_cost,

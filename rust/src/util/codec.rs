@@ -189,15 +189,25 @@ impl<'a> Reader<'a> {
 // Framing
 // ---------------------------------------------------------------------------
 
+/// Checked conversion of a payload length to the frame header's `u32`.
+/// A bare `as u32` cast would silently truncate a > 4 GiB payload, and
+/// the receiver would then mis-frame every byte after the lie.
+fn frame_len(payload_len: usize) -> Result<u32> {
+    u32::try_from(payload_len)
+        .map_err(|_| anyhow::anyhow!("payload of {payload_len} bytes exceeds the u32 frame limit"))
+}
+
 /// Wrap a payload in the `[magic][version][len][payload][crc]` frame.
-pub fn frame(payload: &[u8]) -> Vec<u8> {
+/// Errors if the payload exceeds the header's `u32` length field.
+pub fn frame(payload: &[u8]) -> Result<Vec<u8>> {
+    let len = frame_len(payload.len())?;
     let mut out = Vec::with_capacity(payload.len() + 13);
     out.extend_from_slice(&MAGIC.to_le_bytes());
     out.push(VERSION);
-    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&len.to_le_bytes());
     out.extend_from_slice(payload);
     out.extend_from_slice(&crc32(payload).to_le_bytes());
-    out
+    Ok(out)
 }
 
 /// Parse one frame from `buf`. Returns `(payload, consumed)` or `None` if
@@ -262,15 +272,28 @@ mod tests {
     #[test]
     fn frame_roundtrip() {
         let payload = b"the payload";
-        let framed = frame(payload);
+        let framed = frame(payload).unwrap();
         let (got, used) = deframe(&framed).unwrap().unwrap();
         assert_eq!(got, payload);
         assert_eq!(used, framed.len());
     }
 
     #[test]
+    fn frame_len_boundary() {
+        // Exercise the length check without allocating 4 GiB: the header
+        // cast is what the bug was, so test the cast in isolation.
+        assert_eq!(frame_len(0).unwrap(), 0);
+        assert_eq!(frame_len(u32::MAX as usize).unwrap(), u32::MAX);
+        #[cfg(target_pointer_width = "64")]
+        {
+            assert!(frame_len(u32::MAX as usize + 1).is_err());
+            assert!(frame_len(usize::MAX).is_err());
+        }
+    }
+
+    #[test]
     fn deframe_partial_returns_none() {
-        let framed = frame(b"abcdef");
+        let framed = frame(b"abcdef").unwrap();
         for cut in 0..framed.len() {
             assert!(deframe(&framed[..cut]).unwrap().is_none(), "cut={cut}");
         }
@@ -278,7 +301,7 @@ mod tests {
 
     #[test]
     fn deframe_detects_corruption() {
-        let mut framed = frame(b"abcdef");
+        let mut framed = frame(b"abcdef").unwrap();
         let n = framed.len();
         framed[n - 6] ^= 0x40; // flip a payload bit
         assert!(deframe(&framed).is_err());
@@ -286,7 +309,7 @@ mod tests {
 
     #[test]
     fn deframe_rejects_bad_magic() {
-        let mut framed = frame(b"x");
+        let mut framed = frame(b"x").unwrap();
         framed[0] ^= 0xFF;
         assert!(deframe(&framed).is_err());
     }

@@ -59,7 +59,11 @@ pub struct Shrunk {
 ///    outright (a failure independent of the overlay dynamics is the
 ///    cheapest repro), else drop surviving cut/churn entries one at a
 ///    time.
-/// 4. **Topology shrinking** — halve the overlay degree while the failure
+/// 4. **Adversary pruning** — try clearing the Byzantine roster
+///    outright, else drop surviving specs one at a time, then thin each
+///    surviving spec's client list client by client (a one-adversary
+///    repro beats a six-adversary one).
+/// 5. **Topology shrinking** — halve the overlay degree while the failure
 ///    holds ([`TopologySpec::shrink_degree`]), then try the trivial
 ///    preset (`full`) outright: a failure that survives on the mesh is
 ///    independent of the overlay, which is the most useful thing a
@@ -81,6 +85,13 @@ where
         // A graph fault naming a client beyond the shrunken range would
         // make the candidate invalid, not smaller.
         cand.graph_faults.retain(|f| f.fits(n));
+        // Adversary specs are per-client lists: drop the out-of-range ids
+        // (and any spec emptied by that) instead of the whole roster, so
+        // a failure needing one low-id adversary survives the bisection.
+        for a in &mut cand.adversaries {
+            a.clients.retain(|&c| (c as usize) < n);
+        }
+        cand.adversaries.retain(|a| !a.clients.is_empty());
         cand
     }
 
@@ -148,7 +159,47 @@ where
         }
     }
 
-    // 4. Shrink the topology: degree first, then the preset toward `full`.
+    // 4. Prune the Byzantine roster: schedule, then specs, then clients.
+    if !best.adversaries.is_empty() {
+        let mut cand = best.clone();
+        cand.adversaries.clear();
+        tests_run += 1;
+        if fails(&cand) {
+            best = cand;
+        } else {
+            let mut i = 0;
+            while i < best.adversaries.len() {
+                let mut cand = best.clone();
+                cand.adversaries.remove(i);
+                tests_run += 1;
+                if fails(&cand) {
+                    best = cand;
+                } else {
+                    i += 1;
+                }
+            }
+            // thin each surviving spec: every client whose removal keeps
+            // the failure is noise (specs never shrink to empty — the
+            // spec-removal pass above already ruled that out)
+            for s in 0..best.adversaries.len() {
+                let mut c = 0;
+                while best.adversaries[s].clients.len() > 1
+                    && c < best.adversaries[s].clients.len()
+                {
+                    let mut cand = best.clone();
+                    cand.adversaries[s].clients.remove(c);
+                    tests_run += 1;
+                    if fails(&cand) {
+                        best = cand;
+                    } else {
+                        c += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    // 5. Shrink the topology: degree first, then the preset toward `full`.
     while let Some(smaller) = best.topology.shrink_degree() {
         let mut cand = best.clone();
         cand.topology = smaller;
@@ -313,6 +364,52 @@ mod tests {
         assert!(
             shrunk.config.graph_faults.is_empty(),
             "graph faults play no role and must be cleared"
+        );
+    }
+
+    #[test]
+    fn shrink_prunes_adversary_rosters() {
+        use crate::coordinator::fault::AdversarySpec;
+        let mut cfg = SimConfig::new(32, 128);
+        cfg.adversaries = vec![
+            AdversarySpec::parse("poison:-10:C2,C6,C10,C30").unwrap(),
+            AdversarySpec::parse("equivocate:C5,C13").unwrap(),
+        ];
+        // The "bug" needs >= 8 clients and at least one poisoner; the
+        // equivocators, the out-of-range id 30, and all but one poisoner
+        // are noise the shrinker must drop.
+        let fails = |c: &SimConfig| {
+            use crate::coordinator::fault::AdversaryKind;
+            c.n_clients >= 8
+                && c.adversaries
+                    .iter()
+                    .any(|a| matches!(a.kind, AdversaryKind::Poison { .. }))
+        };
+        let shrunk = shrink_sim_config(&cfg, fails);
+        assert!(fails(&shrunk.config), "shrinking must preserve the failure");
+        assert_eq!(shrunk.config.n_clients, 8, "client bisection still runs first");
+        assert_eq!(shrunk.config.adversaries.len(), 1, "equivocate spec pruned");
+        assert_eq!(
+            shrunk.config.adversaries[0].clients.len(),
+            1,
+            "poison roster thinned to a single client"
+        );
+        assert!(
+            shrunk.config.adversaries[0].fits(8),
+            "surviving adversary fits the shrunken client range"
+        );
+    }
+
+    #[test]
+    fn shrink_clears_irrelevant_adversaries_outright() {
+        use crate::coordinator::fault::AdversarySpec;
+        let mut cfg = SimConfig::new(16, 128);
+        cfg.adversaries = vec![AdversarySpec::parse("stale-replay:C1,C2").unwrap()];
+        let shrunk = shrink_sim_config(&cfg, |c| c.n_clients >= 4);
+        assert_eq!(shrunk.config.n_clients, 4);
+        assert!(
+            shrunk.config.adversaries.is_empty(),
+            "adversaries play no role and must be cleared"
         );
     }
 

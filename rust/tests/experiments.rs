@@ -222,10 +222,48 @@ fn fault_sweep_measures_graph_attacks_and_is_deterministic() {
 }
 
 #[test]
+fn byzantine_sweep_pits_rules_against_adversaries_and_is_deterministic() {
+    let t = MockTrainer::tiny();
+    let table = exp::byzantine(&t, scale());
+    let md = table.markdown();
+    let rows: Vec<&str> = md.lines().skip(2).collect();
+    assert_eq!(rows.len(), 6, "control + 4 attacked + 1 termination row:\n{md}");
+    for name in ["fedavg", "trimmed-mean:2", "coord-median", "krum:2"] {
+        assert!(md.contains(name), "missing rule row {name}:\n{md}");
+    }
+    for name in ["none", "poison:-10", "forge-suspicion"] {
+        assert!(md.contains(name), "missing adversary column value {name}:\n{md}");
+    }
+    let cells_of = |row: &str| -> Vec<String> {
+        row.trim_matches('|').split('|').map(|c| c.trim().to_string()).collect()
+    };
+    for row in &rows {
+        let cells = cells_of(row);
+        assert_eq!(cells.len(), 6, "{row}");
+        let advs: usize = cells[2].parse().unwrap();
+        cells[4].parse::<u32>().expect("rounds");
+        let acc = parse_pct(&cells[5]);
+        assert!((0.0..=100.0).contains(&acc), "{row}");
+        if cells[1] == "none" {
+            assert_eq!(advs, 0, "control row must run all-honest: {row}");
+            // all-honest fedavg on the auto quorum: adaptive termination
+            // is the topologies-sweep situation and must be total
+            assert_eq!(parse_pct(&cells[3]), 100.0, "non-adaptive control: {row}");
+        } else {
+            // 24 quick-mode clients, every 4th adversarial
+            assert_eq!(advs, 6, "attacked rows run a 25% roster: {row}");
+        }
+    }
+    // adversary branches draw only from the adversary's own RNG stream:
+    // the whole sweep must regenerate byte-for-byte under one seed
+    assert_eq!(md, exp::byzantine(&t, scale()).markdown());
+}
+
+#[test]
 fn run_all_produces_every_experiment() {
     let t = MockTrainer::tiny();
     let all = exp::run_all(&t, scale());
-    assert_eq!(all.len(), 10);
+    assert_eq!(all.len(), 11);
     let titles: Vec<&str> = all.iter().map(|(t, _)| t.as_str()).collect();
     let needles = [
         "Table 2",
@@ -238,6 +276,7 @@ fn run_all_produces_every_experiment() {
         "Scenario matrix",
         "Topology sweep",
         "Fault sweep",
+        "Byzantine sweep",
     ];
     for needle in needles {
         assert!(titles.iter().any(|t| t.contains(needle)), "missing {needle}");

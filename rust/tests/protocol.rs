@@ -14,7 +14,7 @@ use dfl::coordinator::fault::{variable_crash_schedule, FaultPlan};
 use dfl::coordinator::termination::TerminationCause;
 use dfl::coordinator::{ProtocolConfig, QuorumSpec};
 use dfl::net::NetworkModel;
-use dfl::runtime::{MockTrainer, Trainer};
+use dfl::runtime::{AggregationRule, MockTrainer, Trainer};
 use dfl::sim::{self, Partition, SimConfig};
 use dfl::util::Rng;
 
@@ -36,6 +36,7 @@ fn base_cfg(n: usize, seed: u64) -> SimConfig {
         early_window_exit: true,
         crt_enabled: true,
         quorum: QuorumSpec::STRICT,
+        agg: AggregationRule::FedAvg,
     };
     cfg.train_n = 60 * n;
     cfg.net = NetworkModel::lan(seed);

@@ -1,0 +1,232 @@
+//! Aggregation-path acceptance tests for the Byzantine repertoire
+//! (DESIGN.md §11): every robust rule must agree with FedAvg on honest
+//! inputs, the `fedavg` default must stay byte-identical to the plain
+//! trainer path, and adversarial deployments must stay deterministic
+//! across both virtual-time executors.
+
+mod common;
+
+use std::time::Duration;
+
+use common::fingerprint;
+use dfl::coordinator::fault::{AdversaryKind, AdversarySpec};
+use dfl::coordinator::{ProtocolConfig, QuorumSpec};
+use dfl::net::{NetworkModel, TopologySpec};
+use dfl::runtime::{AggregationRule, MockTrainer, Trainer};
+use dfl::sim::{self, ExecMode, SimConfig};
+use dfl::util::quickcheck::forall;
+use dfl::util::Rng;
+
+fn base_cfg(n: usize, seed: u64) -> SimConfig {
+    let trainer = MockTrainer::tiny();
+    let mut cfg = SimConfig::for_meta(n, trainer.meta());
+    cfg.protocol = ProtocolConfig {
+        timeout: Duration::from_millis(80),
+        min_rounds: 4,
+        count_threshold: 2,
+        conv_threshold_rel: 0.12,
+        max_rounds: 30,
+        lr: 0.08,
+        model_seed: 42,
+        weight_by_samples: false,
+        early_window_exit: true,
+        crt_enabled: true,
+        quorum: QuorumSpec::STRICT,
+        agg: AggregationRule::FedAvg,
+    };
+    cfg.train_n = 60 * n;
+    cfg.net = NetworkModel::lan(seed);
+    cfg.seed = seed;
+    cfg.virtual_time = true;
+    cfg.train_cost = Duration::from_millis(5);
+    cfg
+}
+
+fn poison(clients: Vec<u32>) -> Vec<AdversarySpec> {
+    vec![AdversarySpec { kind: AdversaryKind::Poison { scale: -10.0 }, clients }]
+}
+
+/// Satellite 4a, exact half: when every honest row is the *same* vector,
+/// order statistics have nothing to trim, the median is that vector, and
+/// Krum returns it — all four rules must equal FedAvg to the bit.
+#[test]
+fn every_rule_equals_fedavg_on_identical_honest_rows() {
+    let trainer = MockTrainer::tiny();
+    let n_params = trainer.meta().n_params;
+    let mut rng = Rng::new(0xA66);
+    let row: Vec<f32> = (0..n_params).map(|_| rng.normal()).collect();
+    let rows: Vec<(&[f32], f32)> = (0..5).map(|_| (row.as_slice(), 1.0)).collect();
+    let want = trainer.aggregate_with(&rows, &AggregationRule::FedAvg).unwrap();
+    for rule in [
+        AggregationRule::TrimmedMean { f: 1 },
+        AggregationRule::CoordMedian,
+        AggregationRule::Krum { f: 1 },
+    ] {
+        let got = trainer.aggregate_with(&rows, &rule).unwrap();
+        assert_eq!(
+            got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "{rule:?} must equal FedAvg bit-for-bit on identical rows"
+        );
+    }
+}
+
+/// Satellite 4a, tolerance half: on all-honest equal-weight inputs every
+/// robust rule stays inside the per-coordinate [min, max] envelope of the
+/// rows, hence within one coordinate-spread of the FedAvg mean.  (This is
+/// the strongest rule-agnostic bound: trimmed mean and median are order
+/// statistics, Krum returns one of the rows.)
+#[test]
+fn robust_rules_track_fedavg_within_the_honest_envelope() {
+    let trainer = MockTrainer::tiny();
+    let n_params = trainer.meta().n_params;
+    forall(
+        0xB1Fu64,
+        20,
+        |r| {
+            let k = 3 + r.below(6); // 3..=8 rows
+            let base: Vec<f32> = (0..n_params).map(|_| r.normal()).collect();
+            (0..k)
+                .map(|_| base.iter().map(|v| v + r.normal() * 0.05).collect::<Vec<f32>>())
+                .collect::<Vec<_>>()
+        },
+        |rows| {
+            let borrowed: Vec<(&[f32], f32)> =
+                rows.iter().map(|p| (p.as_slice(), 1.0)).collect();
+            let trainer = MockTrainer::tiny();
+            let mean = trainer
+                .aggregate_with(&borrowed, &AggregationRule::FedAvg)
+                .map_err(|e| e.to_string())?;
+            for rule in [
+                AggregationRule::TrimmedMean { f: 1 },
+                AggregationRule::CoordMedian,
+                AggregationRule::Krum { f: 1 },
+            ] {
+                let out = trainer
+                    .aggregate_with(&borrowed, &rule)
+                    .map_err(|e| e.to_string())?;
+                for c in 0..n_params {
+                    let lo = rows.iter().map(|p| p[c]).fold(f32::INFINITY, f32::min);
+                    let hi = rows.iter().map(|p| p[c]).fold(f32::NEG_INFINITY, f32::max);
+                    let spread = hi - lo;
+                    if out[c] < lo - 1e-5 || out[c] > hi + 1e-5 {
+                        return Err(format!(
+                            "{rule:?} coord {c}: {} outside honest envelope [{lo}, {hi}]",
+                            out[c]
+                        ));
+                    }
+                    if (out[c] - mean[c]).abs() > spread + 1e-5 {
+                        return Err(format!(
+                            "{rule:?} coord {c}: {} drifts more than the spread {spread} \
+                             from FedAvg {}",
+                            out[c], mean[c]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Satellite 4b: the `fedavg` rule is a pure delegation — same bits as
+/// calling the trainer's own weighted average, weights included.  This is
+/// the in-process pin that rule plumbing left the default path untouched.
+#[test]
+fn fedavg_rule_delegates_byte_identically_to_the_trainer() {
+    let trainer = MockTrainer::tiny();
+    let n_params = trainer.meta().n_params;
+    let mut rng = Rng::new(0xFEDA);
+    for _ in 0..10 {
+        let k = 1 + rng.below(8);
+        let rows: Vec<(Vec<f32>, f32)> = (0..k)
+            .map(|_| {
+                let p: Vec<f32> = (0..n_params).map(|_| rng.normal()).collect();
+                (p, 0.5 + rng.f32() * 10.0)
+            })
+            .collect();
+        let borrowed: Vec<(&[f32], f32)> =
+            rows.iter().map(|(p, w)| (p.as_slice(), *w)).collect();
+        let direct = trainer.aggregate(&borrowed).unwrap();
+        let via_rule = trainer.aggregate_with(&borrowed, &AggregationRule::FedAvg).unwrap();
+        assert_eq!(
+            direct.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            via_rule.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        );
+    }
+}
+
+/// Satellite 4b at deployment scope: a clean fedavg run is byte-identical
+/// across both executors — the executor-identity acceptance criterion
+/// survives the aggregation-rule threading.
+#[test]
+fn clean_fedavg_run_is_byte_identical_across_executors() {
+    let trainer = MockTrainer::tiny();
+    let mut cfg = base_cfg(5, 4242);
+    cfg.exec = ExecMode::Events;
+    let ev = sim::run(&trainer, &cfg).unwrap();
+    cfg.exec = ExecMode::Threads;
+    let th = sim::run(&trainer, &cfg).unwrap();
+    let fe: Vec<u64> = ev.reports.iter().map(fingerprint).collect();
+    let ft: Vec<u64> = th.reports.iter().map(fingerprint).collect();
+    assert_eq!(fe, ft, "fedavg default must stay executor-byte-identical");
+}
+
+/// A poisoning adversary must actually perturb the deployment: same seed,
+/// same config, one client flipped to `poison:-10` ⇒ different report
+/// fingerprints.  (Guards against the adversary branch silently sending
+/// the honest model.)
+#[test]
+fn poison_adversary_changes_the_run_fingerprint() {
+    let trainer = MockTrainer::tiny();
+    let clean_cfg = base_cfg(6, 777);
+    let clean = sim::run(&trainer, &clean_cfg).unwrap();
+    let mut attacked_cfg = base_cfg(6, 777);
+    attacked_cfg.adversaries = poison(vec![2]);
+    let attacked = sim::run(&trainer, &attacked_cfg).unwrap();
+    let fc: Vec<u64> = clean.reports.iter().map(fingerprint).collect();
+    let fa: Vec<u64> = attacked.reports.iter().map(fingerprint).collect();
+    assert_ne!(fc, fa, "a -10x poisoner must not leave the run untouched");
+}
+
+/// Adversarial deployments stay deterministic: poison + trimmed-mean on a
+/// sparse overlay produces byte-identical reports under both executors.
+#[test]
+fn adversary_and_robust_rule_are_byte_identical_across_executors() {
+    let trainer = MockTrainer::tiny();
+    let mut cfg = base_cfg(8, 909);
+    cfg.topology = TopologySpec::KRegular { d: 4 };
+    cfg.protocol.agg = AggregationRule::parse("trimmed-mean:1").unwrap();
+    cfg.adversaries = poison(vec![2, 5]);
+    cfg.exec = ExecMode::Events;
+    let ev = sim::run(&trainer, &cfg).unwrap();
+    cfg.exec = ExecMode::Threads;
+    let th = sim::run(&trainer, &cfg).unwrap();
+    let fe: Vec<u64> = ev.reports.iter().map(fingerprint).collect();
+    let ft: Vec<u64> = th.reports.iter().map(fingerprint).collect();
+    assert_eq!(fe, ft, "adversary paths must be executor-byte-identical");
+}
+
+/// Adversaries are a Phase-2 construct: the sync barrier assumes a
+/// fault-free system, so `--sync` + `--adversary` must be rejected at
+/// validation, not silently ignored.
+#[test]
+fn sync_phase_rejects_adversaries() {
+    let trainer = MockTrainer::tiny();
+    let mut cfg = base_cfg(4, 11);
+    cfg.sync = true;
+    cfg.adversaries = poison(vec![1]);
+    let err = sim::run(&trainer, &cfg).err().expect("sync + adversaries must fail");
+    assert!(err.to_string().contains("Phase"), "{err}");
+}
+
+/// Role compilation is part of `sim::run` validation: an adversary id
+/// outside the client range fails loudly at setup.
+#[test]
+fn out_of_range_adversary_is_rejected() {
+    let trainer = MockTrainer::tiny();
+    let mut cfg = base_cfg(4, 12);
+    cfg.adversaries = poison(vec![9]);
+    let err = sim::run(&trainer, &cfg).err().expect("id 9 of 4 clients must fail");
+    assert!(err.to_string().contains('9'), "{err}");
+}

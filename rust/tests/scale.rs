@@ -16,7 +16,7 @@ use dfl::coordinator::fault::{variable_crash_schedule, GraphFault};
 use dfl::coordinator::termination::TerminationCause;
 use dfl::coordinator::{ProtocolConfig, QuorumSpec};
 use dfl::net::{NetworkModel, TopologySpec};
-use dfl::runtime::{MockTrainer, Trainer};
+use dfl::runtime::{AggregationRule, MockTrainer, Trainer};
 use dfl::sim::{self, ExecMode, Partition, SimConfig};
 use dfl::util::Rng;
 
@@ -34,6 +34,7 @@ fn scale_cfg(trainer: &MockTrainer, n: usize, seed: u64) -> SimConfig {
         early_window_exit: true,
         crt_enabled: true,
         quorum: QuorumSpec::STRICT,
+        agg: AggregationRule::FedAvg,
     };
     cfg.train_n = 20 * n;
     cfg.net = NetworkModel::lan(seed);
@@ -314,6 +315,7 @@ fn ten_thousand_clients_event_executor_with_crashes_and_drops() {
         early_window_exit: true,
         crt_enabled: true,
         quorum: QuorumSpec::STRICT,
+        agg: AggregationRule::FedAvg,
     };
     // Tiny independent chunks: partitioning 10k clients must not dominate
     // the benchmark, and every client needs a non-empty slice.

@@ -13,7 +13,7 @@ use dfl::coordinator::termination::TerminationCause;
 use dfl::coordinator::{ProtocolConfig, QuorumSpec};
 use dfl::data::{dirichlet_partition, Dataset};
 use dfl::net::TcpTransport;
-use dfl::runtime::{MockTrainer, Trainer};
+use dfl::runtime::{AggregationRule, MockTrainer, Trainer};
 use dfl::util::Rng;
 
 fn free_addr() -> SocketAddr {
@@ -45,6 +45,7 @@ fn four_tcp_clients_with_one_crash_terminate() {
         early_window_exit: true,
         crt_enabled: true,
         quorum: QuorumSpec::STRICT,
+        agg: AggregationRule::FedAvg,
     };
 
     let reports: Vec<_> = std::thread::scope(|scope| {
@@ -66,6 +67,7 @@ fn four_tcp_clients_with_one_crash_terminate() {
                     cfg,
                     data,
                     fault: if i == 3 { FaultPlan::at_round(2) } else { FaultPlan::none() },
+                    adversary: None,
                     rng: Rng::new(seed + i as u64),
                     slowdown: 0.0,
                     train_cost: None,

@@ -12,7 +12,7 @@ use dfl::coordinator::fault::{FaultPlan, GraphFault};
 use dfl::coordinator::termination::TerminationCause;
 use dfl::coordinator::{ProtocolConfig, QuorumSpec};
 use dfl::net::{NetSplit, NetworkModel, TopologySpec};
-use dfl::runtime::{MockTrainer, Trainer};
+use dfl::runtime::{AggregationRule, MockTrainer, Trainer};
 use dfl::sim::{self, ExecMode, SimConfig};
 
 fn base_cfg(n: usize, seed: u64) -> SimConfig {
@@ -30,6 +30,7 @@ fn base_cfg(n: usize, seed: u64) -> SimConfig {
         early_window_exit: true,
         crt_enabled: true,
         quorum: QuorumSpec::STRICT,
+        agg: AggregationRule::FedAvg,
     };
     cfg.train_n = 60 * n;
     cfg.net = NetworkModel::lan(seed);
