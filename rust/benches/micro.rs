@@ -1,8 +1,9 @@
 //! Micro-benchmarks of the hot path (DESIGN.md §6):
 //! PJRT call latencies (train/eval/aggregate), codec encode/decode at model
 //! size, in-proc broadcast fan-out, virtual-scheduler context-switch
-//! throughput (thread-backed vs event-driven at 100 / 1 000 / 10 000
-//! tokens), and one full protocol round under each executor.
+//! throughput (thread-backed vs event-driven vs sharded-parallel at
+//! 100 / 1 000 / 10 000 tokens), and one full protocol round under each
+//! executor.
 
 mod common;
 
@@ -38,6 +39,74 @@ fn sched_events(n: usize, wakes_per_token: usize) -> f64 {
             clock.driver_sleep(t, stagger(t));
         }
     }
+    switches as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Sharded parallel mode: S worker threads each pump a shard-local clock
+/// through bounded lookahead windows while a coordinator advances the
+/// horizon — the same barrier protocol as `ExecMode::Parallel`, minus the
+/// network.  The lookahead sits just below the smallest stagger so every
+/// window carries work.
+fn sched_parallel(n: usize, wakes_per_token: usize, shards: usize) -> f64 {
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::sync::Barrier;
+
+    let s = shards.clamp(1, n);
+    let members: Vec<Vec<usize>> = (0..s)
+        .map(|sh| (0..n).filter(|t| t % s == sh).collect())
+        .collect();
+    let clocks: Vec<_> = members.iter().map(|m| VirtualClock::with_members(n, m)).collect();
+    let lookahead = Duration::from_micros(40);
+    let barrier = Barrier::new(s + 1);
+    let horizon_nanos = AtomicU64::new(0);
+    let done = AtomicBool::new(false);
+    let t0 = Instant::now();
+    let switches: u64 = std::thread::scope(|scope| {
+        let handles: Vec<_> = clocks
+            .iter()
+            .map(|clock| {
+                let (barrier, horizon_nanos, done) = (&barrier, &horizon_nanos, &done);
+                scope.spawn(move || {
+                    let mut remaining = vec![wakes_per_token; n];
+                    let mut switches = 0u64;
+                    loop {
+                        barrier.wait();
+                        if done.load(Ordering::Acquire) {
+                            break switches;
+                        }
+                        let h = Duration::from_nanos(horizon_nanos.load(Ordering::Acquire));
+                        while let Some(t) = clock.driver_next_before(h) {
+                            switches += 1;
+                            if remaining[t] == 0 {
+                                clock.detach(t);
+                            } else {
+                                remaining[t] -= 1;
+                                clock.driver_sleep(t, stagger(t));
+                            }
+                        }
+                        barrier.wait();
+                    }
+                })
+            })
+            .collect();
+        loop {
+            match clocks.iter().filter_map(|c| c.pending_lower_bound()).min() {
+                None => {
+                    done.store(true, Ordering::Release);
+                    barrier.wait();
+                    break;
+                }
+                Some(t) => {
+                    let h = t + lookahead;
+                    horizon_nanos
+                        .store(u64::try_from(h.as_nanos()).unwrap_or(u64::MAX), Ordering::Release);
+                    barrier.wait(); // release the window
+                    barrier.wait(); // wait for every shard to drain it
+                }
+            }
+        }
+        handles.into_iter().map(|h| h.join().expect("join bench shard")).sum()
+    });
     switches as f64 / t0.elapsed().as_secs_f64()
 }
 
@@ -123,6 +192,7 @@ fn main() {
     for &n in &[100usize, 1_000, 10_000] {
         let wakes = (200_000 / n).max(4);
         println!("sched/events_{n}: {:>12.0} switches/s", sched_events(n, wakes));
+        println!("sched/parallel4_{n}: {:>12.0} switches/s", sched_parallel(n, wakes, 4));
         println!("sched/threads_{n}: {:>12.0} switches/s", sched_threads(n, wakes));
     }
 
@@ -140,6 +210,10 @@ fn main() {
     cfg.virtual_time = true;
     cfg.exec = dfl::sim::ExecMode::Events;
     bench_for("e2e/one_round_4_clients_events", Duration::from_secs(4), || {
+        black_box(dfl::sim::run(engine_ref, &cfg).unwrap());
+    });
+    cfg.exec = dfl::sim::ExecMode::Parallel { shards: 2 };
+    bench_for("e2e/one_round_4_clients_parallel2", Duration::from_secs(4), || {
         black_box(dfl::sim::run(engine_ref, &cfg).unwrap());
     });
     cfg.exec = dfl::sim::ExecMode::Threads;

@@ -68,9 +68,10 @@ pub struct ExpScale {
     pub virtual_time: bool,
     /// Which executor drives virtual-time deployments (CLI: `--exec`).
     /// [`ExecMode::Events`] (default) runs every client as a state machine
-    /// on one thread; [`ExecMode::Threads`] is the thread-backed
-    /// compatibility mode — both produce byte-identical tables for the
-    /// same seed.
+    /// on one thread; [`ExecMode::Parallel`] shards those machines across
+    /// worker threads behind conservative lookahead windows; and
+    /// [`ExecMode::Threads`] is the thread-backed compatibility mode — all
+    /// three produce byte-identical tables for the same seed.
     pub exec: ExecMode,
     /// Modeled per-round training cost (ms) under virtual time, scaled by
     /// each client's machine slowdown; ignored on the wall clock, where

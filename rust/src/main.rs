@@ -84,7 +84,7 @@ fn cmd_sim(args: Vec<String>) -> Result<()> {
         .opt("adversary", Some(""), "Byzantine roster, ';'-separated: poison:SCALE:IDS, equivocate:IDS, stale-replay:IDS, forge-suspicion:IDS (IDS = C1,C2,...)")
         .opt("agg", Some("fedavg"), "aggregation rule: fedavg | trimmed-mean:F | coord-median | krum:F")
         .opt("train-cost-ms", Some("20"), "modeled per-round train cost under --virtual")
-        .opt("exec", Some("events"), "--virtual executor: events (state machines, zero per-client threads) or threads")
+        .opt("exec", Some("events"), "--virtual executor: events (single-threaded reference), parallel[:S] (S shard threads, byte-identical), or threads")
         .switch("virtual", "deterministic virtual clock instead of wall time")
         .switch("iid", "IID split instead of Dirichlet")
         .switch("verbose", "print per-round mean loss/accuracy")
@@ -293,7 +293,7 @@ fn cmd_reproduce(args: Vec<String>) -> Result<()> {
         .opt("quorum", Some(""), "override quorum-CCC condition (a): a fraction, auto, or auto:Q_MIN; empty = 1.0, paper-strict")
         .opt("agg", Some(""), "override the aggregation rule (fedavg|trimmed-mean:F|coord-median|krum:F); empty = fedavg")
         .opt("train-cost-ms", Some("20"), "modeled per-round train cost under virtual time")
-        .opt("exec", Some("events"), "virtual-time executor: events or threads")
+        .opt("exec", Some("events"), "virtual-time executor: events, parallel[:S], or threads")
         .switch("full", "full grids (slower) instead of quick mode")
         .switch("real-time", "wall-clock deployments (the paper's regime; minutes instead of seconds)");
     let a = flags.parse(args)?;

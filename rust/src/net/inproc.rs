@@ -300,6 +300,19 @@ impl NetworkModel {
             + self.transfer_time(payload_bytes)
     }
 
+    /// The guaranteed minimum one-way delay of *any* message under this
+    /// model: the base delay scaled by the fastest possible direction
+    /// multiplier.  Jitter, bandwidth serialization, and the asymmetric
+    /// spread only ever *add* delay, so every per-link delay draw is ≥
+    /// this floor — which makes it the conservative lookahead bound
+    /// the parallel executor's null-message windows rely on
+    /// (`sim::exec::run_parallel`, DESIGN.md §12).  Zero exactly when
+    /// `base_delay` is zero (e.g. the `ideal` preset), in which case
+    /// conservative parallel simulation admits no concurrency at all.
+    pub fn latency_floor(&self) -> Duration {
+        self.base_delay.mul_f64(1.0 - self.asymmetry.clamp(0.0, MAX_ASYMMETRY))
+    }
+
     /// The static delay multiplier of the directed link `from → to`: a
     /// pure function of `(seed, from, to)`, uniform in
     /// `[1 − asymmetry, 1 + asymmetry]`.
@@ -711,10 +724,67 @@ impl Transport for Endpoint {
     }
 }
 
+/// How a virtual hub maps client ids onto virtual clocks.  The classic
+/// executors drive every client on one shared clock; the sharded
+/// parallel executor (`sim::exec::run_parallel`, DESIGN.md §12) gives
+/// each shard its own clock and routes cross-shard deliveries as
+/// absolute-time posts on the destination's clock.
+enum ClockBinding {
+    /// Every client on one shared clock.
+    Single(Arc<VirtualClock>),
+    /// One clock per shard; `shard_of[id]` is each client's home shard.
+    Sharded { clocks: Vec<Arc<VirtualClock>>, shard_of: Vec<usize> },
+}
+
+impl ClockBinding {
+    /// The clock that owns client `id`'s mailbox and timers.
+    fn clock_of(&self, id: ClientId) -> &Arc<VirtualClock> {
+        match self {
+            ClockBinding::Single(c) => c,
+            ClockBinding::Sharded { clocks, shard_of } => &clocks[shard_of[id as usize]],
+        }
+    }
+
+    /// "Now" as client `id` observes it: its own (shard's) clock.
+    fn now_for(&self, id: ClientId) -> SimTime {
+        self.clock_of(id).now()
+    }
+
+    /// Deliver `wire` to `to` at `at + delay`, where `at` is the sending
+    /// client's current instant (frozen while the sender holds its
+    /// scheduler turn, so relative and absolute posting agree).
+    fn post(
+        &self,
+        from: ClientId,
+        to: ClientId,
+        at: SimTime,
+        delay: Duration,
+        key: (ClientId, ClientId, u64),
+        wire: Arc<[u8]>,
+    ) {
+        match self {
+            ClockBinding::Single(c) => c.post(to as usize, delay, key, wire),
+            ClockBinding::Sharded { clocks, shard_of } => {
+                let (fs, ts) = (shard_of[from as usize], shard_of[to as usize]);
+                if fs == ts {
+                    clocks[fs].post(to as usize, delay, key, wire);
+                } else {
+                    // Absolute due on the destination shard's clock.  The
+                    // conservative window protocol guarantees the due
+                    // instant sits at or beyond the destination's current
+                    // horizon, because `delay` is ≥ the model's
+                    // [`NetworkModel::latency_floor`] (DESIGN.md §12).
+                    clocks[ts].post_at(to as usize, at + delay, key, wire);
+                }
+            }
+        }
+    }
+}
+
 struct VirtualHubShared {
     n: usize,
     model: NetworkModel,
-    clock: Arc<VirtualClock>,
+    clock: ClockBinding,
     links: Mutex<BTreeMap<(ClientId, ClientId), LinkState>>,
     blocked: Mutex<HashSet<(ClientId, ClientId)>>,
     /// Peer overlay: which peers each endpoint's broadcasts reach —
@@ -760,6 +830,37 @@ impl VirtualHub {
         overlay: Arc<Overlay>,
     ) -> Self {
         assert_eq!(overlay.n(), n, "overlay built for a different deployment size");
+        Self::with_binding(n, model, ClockBinding::Single(clock), overlay)
+    }
+
+    /// A virtual hub over per-shard clocks — the parallel executor's
+    /// network (`sim::exec::run_parallel`, DESIGN.md §12).  `shard_of`
+    /// maps every client id to its home shard; `clocks[s]` must have been
+    /// built with [`VirtualClock::with_members`] over exactly the clients
+    /// with `shard_of[id] == s`.  Cross-shard sends land as absolute-time
+    /// posts on the destination shard's clock.
+    pub fn with_sharded(
+        n: usize,
+        model: NetworkModel,
+        clocks: Vec<Arc<VirtualClock>>,
+        shard_of: Vec<usize>,
+        overlay: Arc<Overlay>,
+    ) -> Self {
+        assert_eq!(shard_of.len(), n, "shard map built for a different deployment size");
+        assert!(
+            shard_of.iter().all(|&s| s < clocks.len()),
+            "shard map points past the clock list"
+        );
+        Self::with_binding(n, model, ClockBinding::Sharded { clocks, shard_of }, overlay)
+    }
+
+    fn with_binding(
+        n: usize,
+        model: NetworkModel,
+        clock: ClockBinding,
+        overlay: Arc<Overlay>,
+    ) -> Self {
+        assert_eq!(overlay.n(), n, "overlay built for a different deployment size");
         VirtualHub {
             shared: Arc::new(VirtualHubShared {
                 n,
@@ -794,9 +895,16 @@ impl VirtualHub {
         }
     }
 
-    /// The clock this network schedules on.
+    /// The clock this network schedules on.  Panics on a sharded hub,
+    /// which has no single clock — the parallel executor owns the shard
+    /// clocks it passed to [`VirtualHub::with_sharded`].
     pub fn clock(&self) -> Arc<VirtualClock> {
-        Arc::clone(&self.shared.clock)
+        match &self.shared.clock {
+            ClockBinding::Single(c) => Arc::clone(c),
+            ClockBinding::Sharded { .. } => {
+                panic!("sharded hub has no single clock (see VirtualHub::with_sharded)")
+            }
+        }
     }
 
     /// Snapshot the hub's traffic counters.
@@ -832,7 +940,7 @@ impl VirtualEndpoint {
         if sh.blocked.lock().unwrap().contains(&(self.id, to)) {
             return; // injected link failure: message lost
         }
-        let at = sh.clock.now();
+        let at = sh.clock.now_for(self.id);
         if sh.model.splits.iter().any(|sp| sp.severs(at, self.id, to)) {
             return; // partitioned: message lost
         }
@@ -843,7 +951,7 @@ impl VirtualEndpoint {
         // The codec round-trip happens decode-side (recv_timeout), keeping
         // parity with the wall-clock hub's coverage of the wire format.
         sh.stats.count_delivered();
-        sh.clock.post(to as usize, delay, (self.id, to, seq), Arc::clone(wire));
+        sh.clock.post(self.id, to, at, delay, (self.id, to, seq), Arc::clone(wire));
     }
 }
 
@@ -853,7 +961,7 @@ impl Transport for VirtualEndpoint {
     }
 
     fn clock(&self) -> Clock {
-        Clock::virtual_for(Arc::clone(&self.shared.clock), self.id as usize)
+        Clock::virtual_for(Arc::clone(self.shared.clock.clock_of(self.id)), self.id as usize)
     }
 
     fn peers(&self) -> Vec<ClientId> {
@@ -865,11 +973,11 @@ impl Transport for VirtualEndpoint {
     }
 
     fn neighbors(&self) -> Vec<ClientId> {
-        self.shared.overlay.neighbors(self.shared.clock.now(), self.id)
+        self.shared.overlay.neighbors(self.shared.clock.now_for(self.id), self.id)
     }
 
     fn topology_generation(&self) -> u64 {
-        self.shared.overlay.generation(self.shared.clock.now())
+        self.shared.overlay.generation(self.shared.clock.now_for(self.id))
     }
 
     fn topology_is_dynamic(&self) -> bool {
@@ -890,19 +998,20 @@ impl Transport for VirtualEndpoint {
     /// time, so a broadcast never reaches across a cut that is open *now*.
     fn broadcast(&self, msg: &Msg) -> Result<()> {
         let wire: Arc<[u8]> = msg.encode().into();
-        self.shared.overlay.for_each_neighbor(self.shared.clock.now(), self.id, |p| {
+        self.shared.overlay.for_each_neighbor(self.shared.clock.now_for(self.id), self.id, |p| {
             self.send_encoded(p, &wire);
         });
         Ok(())
     }
 
     fn recv_timeout(&self, timeout: Duration) -> Option<Msg> {
-        let bytes = self.shared.clock.recv_deadline(self.id as usize, timeout)?;
+        let bytes =
+            self.shared.clock.clock_of(self.id).recv_deadline(self.id as usize, timeout)?;
         Some(decode_delivery(&bytes))
     }
 
     fn try_recv(&self) -> Option<Msg> {
-        let bytes = self.shared.clock.try_recv(self.id as usize)?;
+        let bytes = self.shared.clock.clock_of(self.id).try_recv(self.id as usize)?;
         Some(decode_delivery(&bytes))
     }
 }

@@ -14,24 +14,40 @@
 //!
 //! # Determinism
 //!
-//! The schedule is compiled before the run (`sim::run`) and applied
-//! *lazily*: any query at logical time `t` first applies every event with
-//! `at <= t`.  Under the virtual clock, queries happen at deterministic
-//! logical times in a deterministic order (both executors make identical
-//! scheduler transitions), so the entire overlay history is a pure
-//! function of `(topology, schedule, seed)` — byte-identical across
-//! executors and re-runs.
+//! The schedule is compiled before the run (`sim::run`) and **replayed
+//! once at construction** into a vector of immutable topology snapshots,
+//! one per event.  A query at logical time `t` binary-searches for the
+//! last snapshot with `at <= t` — a pure, lock-free read.  This makes
+//! every query a function of `t` alone, *independent of the order
+//! queries arrive in*: the single-clock executors always query at
+//! non-decreasing times, but the sharded parallel executor
+//! (`sim::exec::run_parallel`, DESIGN.md §12) has S worker threads
+//! querying at interleaved shard-local times within a synchronization
+//! window, and a lazily-advanced overlay would hand them whatever state
+//! the wall-clock-racy *maximum* queried time had forced.  Snapshots
+//! reduce the entire overlay history to a pure function of
+//! `(topology, schedule, seed)` — byte-identical across executors,
+//! thread interleavings, and re-runs.
+//!
+//! The one time-cursor that survives is [`Overlay::edges_severed`],
+//! which reports the severed count *as of the latest time any query has
+//! reached* — kept as a lock-free atomic high-water over queried times.
+//! The *set* of query times in a run is deterministic (every send and
+//! neighborhood poll happens at a seed-determined logical instant), so
+//! its maximum — and therefore the reported count — is too, even though
+//! the wall-clock order the high-water is bumped in is not.
 //!
 //! # The static fast path
 //!
 //! A deployment without graph faults wraps its topology in
-//! [`Overlay::immutable`]: no lock, no events, generation pinned at 0,
-//! and every query forwards to the shared immutable [`Topology`] — the
-//! byte-identity guarantee for fault-free runs is structural, not
+//! [`Overlay::immutable`]: no snapshots, no events, generation pinned at
+//! 0, and every query forwards to the shared immutable [`Topology`] —
+//! the byte-identity guarantee for fault-free runs is structural, not
 //! behavioural.
 
 use std::collections::BTreeMap;
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use super::message::ClientId;
 use super::topology::Topology;
@@ -73,14 +89,33 @@ struct CutRef {
     removed_by_cut: bool,
 }
 
-/// Mutable state behind the lock (present only on fault schedules).
-struct DynState {
+/// The overlay as of one applied event: the instant it applied, the
+/// graph after it, and the cumulative severed-edge count.
+struct Snapshot {
+    /// `GraphEvent::at` in nanos.  Ascending but not strictly — equal
+    /// instants keep compile order, and a query takes the *last* one due.
+    at_nanos: u64,
+    topo: Arc<Topology>,
+    /// Cuts + departures applied so far (healing does not re-count) —
+    /// surfaced as `edges_severed` on [`crate::metrics::NetStats`].
+    severed: u64,
+}
+
+/// A compiled fault schedule: the pre-event base graph, one snapshot per
+/// event, and the queried-time high-water that anchors
+/// [`Overlay::edges_severed`].
+struct Compiled {
+    base: Arc<Topology>,
+    snaps: Vec<Snapshot>,
+    /// Latest queried time, stored as `nanos + 1` (0 = never queried),
+    /// advanced with a relaxed `fetch_max` by every query.
+    hw: AtomicU64,
+}
+
+/// Replay state used once, inside [`Overlay::with_events`], to turn the
+/// event list into snapshots.
+struct Replay {
     topo: Topology,
-    /// Sorted ascending by `at` (stable, so the compile order breaks
-    /// ties — a zero-length cut still cuts before it restores).
-    events: Vec<GraphEvent>,
-    next: usize,
-    generation: u64,
     /// Edges claimed per cut (filled at apply time, consumed by the
     /// matching restore).
     claims: Vec<Vec<(ClientId, ClientId)>>,
@@ -96,22 +131,25 @@ struct DynState {
     /// Per-client rejoin counter: varies the regeneration stream across
     /// successive rejoins of the same client.
     rejoins: Vec<u32>,
-    /// Total overlay edges severed so far (cuts + departures) — surfaced
-    /// as `edges_severed` on [`crate::metrics::NetStats`].
-    edges_severed: u64,
+    /// Cumulative overlay edges severed (cuts + departures).
+    severed: u64,
     seed: u64,
 }
 
-/// The two shapes an overlay can take.  An enum (rather than an optional
-/// lock next to an always-present base graph) makes the "the static
+/// The two shapes an overlay can take.  An enum (rather than optional
+/// snapshots next to an always-present base graph) makes the "the static
 /// topology is never consulted on the dynamic path" invariant
 /// structural: there is no stale base for a future accessor to read by
 /// mistake.
 enum OverlayState {
-    /// Shared immutable topology: no schedule, no lock.
+    /// Shared immutable topology: no schedule, no snapshots.
     Static(Arc<Topology>),
-    /// Materialized topology plus its fault schedule, behind a lock.
-    Dynamic(Mutex<DynState>),
+    /// Pre-replayed fault schedule: lock-free snapshot lookups.
+    Dynamic(Compiled),
+}
+
+fn nanos(at: SimTime) -> u64 {
+    u64::try_from(at.as_nanos()).unwrap_or(u64::MAX)
 }
 
 /// The time-aware overlay shared by both hubs.  See the module docs.
@@ -126,10 +164,12 @@ impl Overlay {
         Overlay { n: topology.n(), state: OverlayState::Static(topology) }
     }
 
-    /// An overlay that will apply `events` as the hub clock reaches them.
-    /// `n_cuts` is the number of distinct `cut_id`s in the schedule;
-    /// `seed` feeds the per-rejoin regeneration streams.  The topology is
-    /// materialized up front so a full mesh can be cut too.
+    /// An overlay that applies `events` as the querying clock reaches
+    /// them.  `n_cuts` is the number of distinct `cut_id`s in the
+    /// schedule; `seed` feeds the per-rejoin regeneration streams.  The
+    /// topology is materialized up front so a full mesh can be cut too,
+    /// and the whole schedule is replayed here, once, into per-event
+    /// snapshots (see the module docs).
     pub fn with_events(
         mut topology: Topology,
         mut events: Vec<GraphEvent>,
@@ -139,20 +179,31 @@ impl Overlay {
         let n = topology.n();
         topology.materialize();
         events.sort_by_key(|e| e.at); // stable: compile order breaks ties
+        let mut replay = Replay {
+            topo: topology.clone(),
+            claims: vec![Vec::new(); n_cuts],
+            cut_refs: BTreeMap::new(),
+            departed: vec![false; n],
+            rejoins: vec![0; n],
+            severed: 0,
+            seed,
+        };
+        let mut snaps = Vec::with_capacity(events.len());
+        for event in events {
+            replay.apply(event.action);
+            snaps.push(Snapshot {
+                at_nanos: nanos(event.at),
+                topo: Arc::new(replay.topo.clone()),
+                severed: replay.severed,
+            });
+        }
         Overlay {
             n,
-            state: OverlayState::Dynamic(Mutex::new(DynState {
-                topo: topology,
-                events,
-                next: 0,
-                generation: 0,
-                claims: vec![Vec::new(); n_cuts],
-                cut_refs: BTreeMap::new(),
-                departed: vec![false; n],
-                rejoins: vec![0; n],
-                edges_severed: 0,
-                seed,
-            })),
+            state: OverlayState::Dynamic(Compiled {
+                base: Arc::new(topology),
+                snaps,
+                hw: AtomicU64::new(0),
+            }),
         }
     }
 
@@ -171,107 +222,123 @@ impl Overlay {
     pub fn neighbors(&self, at: SimTime, id: ClientId) -> Vec<ClientId> {
         match &self.state {
             OverlayState::Static(topo) => topo.neighbors(id),
-            OverlayState::Dynamic(state) => {
-                let mut state = state.lock().unwrap();
-                Self::advance(&mut state, at);
-                state.topo.neighbors(id)
-            }
+            OverlayState::Dynamic(c) => c.topo_at(at).neighbors(id),
         }
     }
 
     /// Visit `id`'s neighbors at time `at` in ascending order (the
-    /// encode-once broadcast path).
-    pub fn for_each_neighbor(&self, at: SimTime, id: ClientId, mut f: impl FnMut(ClientId)) {
+    /// encode-once broadcast path).  Lock-free on both paths, so `f` may
+    /// re-enter the hub — or the overlay — freely.
+    pub fn for_each_neighbor(&self, at: SimTime, id: ClientId, f: impl FnMut(ClientId)) {
         match &self.state {
             OverlayState::Static(topo) => topo.for_each_neighbor(id, f),
-            OverlayState::Dynamic(state) => {
-                let mut state = state.lock().unwrap();
-                Self::advance(&mut state, at);
-                // Collect before calling out: `f` sends messages, which
-                // re-enter the hub (but never the overlay lock) — keep the
-                // critical section to the graph read regardless.
-                let nbrs = state.topo.neighbors(id);
-                drop(state);
-                nbrs.into_iter().for_each(&mut f);
-            }
+            OverlayState::Dynamic(c) => c.topo_at(at).for_each_neighbor(id, f),
         }
     }
 
-    /// Monotonic change counter at time `at`: 0 until the first event
-    /// applies (and forever on a static overlay).  Cheap enough to poll
-    /// once per protocol round.
+    /// Monotonic change counter at time `at`: the number of schedule
+    /// events due by `at` — 0 until the first event applies (and forever
+    /// on a static overlay).  Cheap enough to poll once per protocol
+    /// round.
     pub fn generation(&self, at: SimTime) -> u64 {
         match &self.state {
             OverlayState::Static(_) => 0,
-            OverlayState::Dynamic(state) => {
-                let mut state = state.lock().unwrap();
-                Self::advance(&mut state, at);
-                state.generation
+            OverlayState::Dynamic(c) => {
+                let t = c.touch(at);
+                c.snaps.partition_point(|s| s.at_nanos <= t) as u64
             }
         }
     }
 
-    /// Total overlay edges severed by applied events so far.
+    /// Total overlay edges severed by the events due at the latest time
+    /// any query has reached (the atomic high-water — see module docs).
     pub fn edges_severed(&self) -> u64 {
         match &self.state {
             OverlayState::Static(_) => 0,
-            OverlayState::Dynamic(state) => state.lock().unwrap().edges_severed,
+            OverlayState::Dynamic(c) => match c.hw.load(Ordering::Relaxed) {
+                0 => 0,
+                hw1 => {
+                    let idx = c.snaps.partition_point(|s| s.at_nanos <= hw1 - 1);
+                    if idx == 0 {
+                        0
+                    } else {
+                        c.snaps[idx - 1].severed
+                    }
+                }
+            },
         }
     }
+}
 
-    fn advance(state: &mut DynState, at: SimTime) {
-        while state.next < state.events.len() && state.events[state.next].at <= at {
-            let event = state.events[state.next].clone();
-            state.next += 1;
-            state.generation += 1;
-            match event.action {
-                GraphAction::Cut { cut_id, edges } => {
-                    let mut claims = Vec::with_capacity(edges.len());
-                    for (a, b) in edges {
-                        let e = (a.min(b), a.max(b));
-                        let entry = state.cut_refs.entry(e).or_default();
-                        entry.refs += 1;
-                        if state.topo.remove_edge(e.0, e.1) {
-                            entry.removed_by_cut = true;
-                            state.edges_severed += 1;
-                        }
-                        claims.push(e);
+impl Compiled {
+    /// Bump the queried-time high-water, returning `at` in nanos.
+    fn touch(&self, at: SimTime) -> u64 {
+        let t = nanos(at);
+        self.hw.fetch_max(t.saturating_add(1), Ordering::Relaxed);
+        t
+    }
+
+    /// The graph as of time `at`: the last snapshot due, or the base.
+    fn topo_at(&self, at: SimTime) -> &Arc<Topology> {
+        let t = self.touch(at);
+        let idx = self.snaps.partition_point(|s| s.at_nanos <= t);
+        if idx == 0 {
+            &self.base
+        } else {
+            &self.snaps[idx - 1].topo
+        }
+    }
+}
+
+impl Replay {
+    fn apply(&mut self, action: GraphAction) {
+        match action {
+            GraphAction::Cut { cut_id, edges } => {
+                let mut claims = Vec::with_capacity(edges.len());
+                for (a, b) in edges {
+                    let e = (a.min(b), a.max(b));
+                    let entry = self.cut_refs.entry(e).or_default();
+                    entry.refs += 1;
+                    if self.topo.remove_edge(e.0, e.1) {
+                        entry.removed_by_cut = true;
+                        self.severed += 1;
                     }
-                    state.claims[cut_id] = claims;
+                    claims.push(e);
                 }
-                GraphAction::Restore { cut_id } => {
-                    for (a, b) in std::mem::take(&mut state.claims[cut_id]) {
-                        let entry =
-                            state.cut_refs.get_mut(&(a, b)).expect("claimed edge has a refcount");
-                        entry.refs -= 1;
-                        if entry.refs > 0 {
-                            continue; // another cut window still holds the edge down
-                        }
-                        let heal = entry.removed_by_cut
-                            && !state.departed[a as usize]
-                            && !state.departed[b as usize];
-                        state.cut_refs.remove(&(a, b));
-                        if heal {
-                            state.topo.add_edge(a, b);
-                        }
+                self.claims[cut_id] = claims;
+            }
+            GraphAction::Restore { cut_id } => {
+                for (a, b) in std::mem::take(&mut self.claims[cut_id]) {
+                    let entry =
+                        self.cut_refs.get_mut(&(a, b)).expect("claimed edge has a refcount");
+                    entry.refs -= 1;
+                    if entry.refs > 0 {
+                        continue; // another cut window still holds the edge down
+                    }
+                    let heal = entry.removed_by_cut
+                        && !self.departed[a as usize]
+                        && !self.departed[b as usize];
+                    self.cut_refs.remove(&(a, b));
+                    if heal {
+                        self.topo.add_edge(a, b);
                     }
                 }
-                GraphAction::Depart(c) => {
-                    state.departed[c as usize] = true;
-                    let removed = state.topo.depart(c);
-                    state.edges_severed += removed.len() as u64;
-                    Self::enforce_open_cuts(state);
-                }
-                GraphAction::Rejoin(c) => {
-                    state.departed[c as usize] = false;
-                    let nth = state.rejoins[c as usize] as u64;
-                    state.rejoins[c as usize] += 1;
-                    // Vary the regeneration stream per rejoin event so a
-                    // client that churns twice does not rebuild the same
-                    // chords both times.
-                    state.topo.regenerate(state.seed ^ (nth << 48), c);
-                    Self::enforce_open_cuts(state);
-                }
+            }
+            GraphAction::Depart(c) => {
+                self.departed[c as usize] = true;
+                let removed = self.topo.depart(c);
+                self.severed += removed.len() as u64;
+                self.enforce_open_cuts();
+            }
+            GraphAction::Rejoin(c) => {
+                self.departed[c as usize] = false;
+                let nth = self.rejoins[c as usize] as u64;
+                self.rejoins[c as usize] += 1;
+                // Vary the regeneration stream per rejoin event so a
+                // client that churns twice does not rebuild the same
+                // chords both times.
+                self.topo.regenerate(self.seed ^ (nth << 48), c);
+                self.enforce_open_cuts();
             }
         }
     }
@@ -283,14 +350,14 @@ impl Overlay {
     /// re-added; the eventual restore re-heals it through the normal
     /// refcounted path.  (Stripped re-creations are not counted as
     /// severed: the cut already paid for them when it opened.)
-    fn enforce_open_cuts(state: &mut DynState) {
+    fn enforce_open_cuts(&mut self) {
         let claimed: Vec<(ClientId, ClientId)> =
-            state.cut_refs.iter().filter(|(_, r)| r.refs > 0).map(|(&e, _)| e).collect();
+            self.cut_refs.iter().filter(|(_, r)| r.refs > 0).map(|(&e, _)| e).collect();
         for (a, b) in claimed {
-            if state.topo.remove_edge(a, b) {
+            if self.topo.remove_edge(a, b) {
                 // The strip is a cut-caused removal: mark it so the heal
                 // path gives the edge back when the window closes.
-                if let Some(r) = state.cut_refs.get_mut(&(a, b)) {
+                if let Some(r) = self.cut_refs.get_mut(&(a, b)) {
                     r.removed_by_cut = true;
                 }
             }

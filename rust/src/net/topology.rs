@@ -32,6 +32,7 @@
 //! cuts and churn.  Deployments without graph faults never touch it, so
 //! the determinism contract above is unchanged for them.
 
+use std::cmp::Reverse;
 use std::collections::BTreeSet;
 
 use anyhow::{bail, Result};
@@ -48,6 +49,9 @@ const REGEN_SALT: u64 = 0x4E6E_2070_0000;
 
 /// Salt of the seeded min-cut search ([`Topology::min_cut`]).
 const MINCUT_SALT: u64 = 0x3C07_C070_0000;
+
+/// Salt of the shard-partition search ([`Topology::partition_shards`]).
+const SHARD_SALT: u64 = 0x5D42_D070_0000;
 
 /// Which overlay to build (the `--topology` flag).  `Full` reproduces the
 /// paper's all-to-all dissemination exactly; the sparse presets trade
@@ -598,6 +602,104 @@ impl Topology {
         }
         best.unwrap_or_default()
     }
+
+    /// Partition the clients into at most `s` shards for the parallel
+    /// executor (`--exec parallel:S`, DESIGN.md §12), minimizing the
+    /// cross-shard (cut) edge count over a deterministic candidate set.
+    /// Returns `shard_of`: one shard index in `0..s_eff` per client,
+    /// where `s_eff = min(max(s, 1), n)`; every shard in `0..s_eff` is
+    /// non-empty.  Pure function of `(self, s, seed)` — same inputs,
+    /// same partition, the determinism contract the cross-executor
+    /// conformance suite relies on.
+    ///
+    /// Candidates (best cut wins, earliest candidate breaks ties):
+    ///
+    /// 1. Balanced contiguous id chunks — near-optimal for the circulant
+    ///    presets, whose edges are short ring offsets.
+    /// 2. Size-capped randomized edge contraction — the Karger/[`Dsu`]
+    ///    machinery of [`Topology::min_cut`] re-targeted at partitioning:
+    ///    contract seeded shuffled edges while components stay ≤ ⌊n/s⌋,
+    ///    then bin-pack the components onto shards largest-first into
+    ///    the lightest shard.  Contraction merges along edges, so
+    ///    tightly-coupled clients land on one worker.
+    /// 3. Seeded balanced shuffles — the random-partition baseline, kept
+    ///    in the candidate set so the result can never lose to it.
+    pub fn partition_shards(&self, s: usize, seed: u64) -> Vec<usize> {
+        let n = self.n;
+        if n == 0 {
+            return Vec::new();
+        }
+        let s = s.max(1).min(n);
+        if s == 1 {
+            return vec![0; n];
+        }
+        let crossing = |assign: &[usize]| -> usize {
+            let mut cut = 0;
+            for i in 0..n as ClientId {
+                self.for_each_neighbor(i, |j| {
+                    if i < j && assign[i as usize] != assign[j as usize] {
+                        cut += 1;
+                    }
+                });
+            }
+            cut
+        };
+        // candidate 1: balanced contiguous chunks (sizes differ by ≤ 1)
+        let mut best: Vec<usize> = (0..n).map(|i| i * s / n).collect();
+        let mut best_cut = crossing(&best);
+        let mut edges: Vec<(ClientId, ClientId)> = Vec::new();
+        for i in 0..n as ClientId {
+            self.for_each_neighbor(i, |j| {
+                if i < j {
+                    edges.push((i, j));
+                }
+            });
+        }
+        // ⌊n/s⌋ ≥ 1 caps every component, so ≥ s components always come
+        // out of a contraction and no shard packs empty.
+        let cap = n / s;
+        let mut rng = Rng::new(seed ^ SHARD_SALT);
+        for trial in 0..SHARD_CONTRACTION_TRIALS + SHARD_SHUFFLE_TRIALS {
+            let mut trial_rng = rng.fork(trial);
+            let cand: Vec<usize> = if trial < SHARD_CONTRACTION_TRIALS {
+                // candidate 2: capped contraction + largest-first packing
+                let mut order = edges.clone();
+                trial_rng.shuffle(&mut order);
+                let mut dsu = Dsu::new(n);
+                for &(a, b) in &order {
+                    dsu.union_capped(a as usize, b as usize, cap);
+                }
+                let roots: Vec<usize> = (0..n).filter(|&v| dsu.find(v) == v).collect();
+                let mut comps: Vec<(usize, usize)> =
+                    roots.iter().map(|&r| (dsu.size[r], r)).collect();
+                comps.sort_by_key(|&(size, root)| (Reverse(size), root));
+                let mut weight = vec![0usize; s];
+                let mut shard_of_root = vec![0usize; n];
+                for (size, root) in comps {
+                    let lightest =
+                        (0..s).min_by_key(|&sh| (weight[sh], sh)).expect("s >= 2");
+                    weight[lightest] += size;
+                    shard_of_root[root] = lightest;
+                }
+                (0..n).map(|v| shard_of_root[dsu.find(v)]).collect()
+            } else {
+                // candidate 3: a balanced chunking of a seeded shuffle
+                let mut ids: Vec<usize> = (0..n).collect();
+                trial_rng.shuffle(&mut ids);
+                let mut cand = vec![0usize; n];
+                for (pos, &id) in ids.iter().enumerate() {
+                    cand[id] = pos * s / n;
+                }
+                cand
+            };
+            let cut = crossing(&cand);
+            if cut < best_cut {
+                best_cut = cut;
+                best = cand;
+            }
+        }
+        best
+    }
 }
 
 /// Karger trial count: enough repetitions that the best of them sits at
@@ -605,14 +707,21 @@ impl Topology {
 /// whole search stays O(trials · m · α).
 const MINCUT_TRIALS: u64 = 24;
 
+/// [`Topology::partition_shards`] candidate counts: capped-contraction
+/// trials and balanced-shuffle (random baseline) trials.
+const SHARD_CONTRACTION_TRIALS: u64 = 8;
+const SHARD_SHUFFLE_TRIALS: u64 = 4;
+
 /// Union-find for the contraction trials.
 struct Dsu {
     parent: Vec<usize>,
+    /// Component size, valid at roots only.
+    size: Vec<usize>,
 }
 
 impl Dsu {
     fn new(n: usize) -> Dsu {
-        Dsu { parent: (0..n).collect() }
+        Dsu { parent: (0..n).collect(), size: vec![1; n] }
     }
 
     fn find(&mut self, mut x: usize) -> usize {
@@ -623,12 +732,32 @@ impl Dsu {
         x
     }
 
+    /// Merge two distinct roots; the smaller index survives as root (so
+    /// root choice is deterministic regardless of merge order).
+    fn link(&mut self, ra: usize, rb: usize) {
+        let (keep, absorb) = (ra.min(rb), ra.max(rb));
+        self.parent[absorb] = keep;
+        self.size[keep] += self.size[absorb];
+    }
+
     fn union(&mut self, a: usize, b: usize) -> bool {
         let (ra, rb) = (self.find(a), self.find(b));
         if ra == rb {
             return false;
         }
-        self.parent[ra.max(rb)] = ra.min(rb);
+        self.link(ra, rb);
+        true
+    }
+
+    /// Union, refused when the merged component would exceed `cap` —
+    /// the contraction step of [`Topology::partition_shards`], which
+    /// needs every component to still fit inside one shard.
+    fn union_capped(&mut self, a: usize, b: usize, cap: usize) -> bool {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra == rb || self.size[ra] + self.size[rb] > cap {
+            return false;
+        }
+        self.link(ra, rb);
         true
     }
 }
@@ -967,5 +1096,129 @@ mod tests {
             "a contiguous arc cuts exactly its two boundary edges"
         );
         assert_eq!(ring.split_crossing_edges(&[0, 2, 4]), 6, "alternating cut");
+    }
+
+    // --- shard partitioner (parallel executor) ------------------------------
+
+    fn crossing(t: &Topology, assign: &[usize]) -> usize {
+        let mut cut = 0;
+        for i in 0..t.n() as ClientId {
+            t.for_each_neighbor(i, |j| {
+                if i < j && assign[i as usize] != assign[j as usize] {
+                    cut += 1;
+                }
+            });
+        }
+        cut
+    }
+
+    #[test]
+    fn partition_covers_every_client_once_respects_s_and_is_deterministic() {
+        use crate::util::quickcheck::forall;
+        let specs = [
+            TopologySpec::Full,
+            TopologySpec::Ring { k: 2 },
+            TopologySpec::KRegular { d: 6 },
+            TopologySpec::SmallWorld { d: 4, p: 0.1 },
+        ];
+        forall(
+            0x5A4D,
+            24,
+            |r| {
+                let n = 8 + r.below(57);
+                let s = 2 + r.below(7);
+                let spec = specs[r.below(specs.len())];
+                let seed = r.next_u64();
+                (n, s, spec, seed)
+            },
+            |&(n, s, spec, seed)| {
+                let t = spec.build(n, seed).map_err(|e| e.to_string())?;
+                let assign = t.partition_shards(s, seed);
+                if assign.len() != n {
+                    return Err(format!("{} assignments for {n} clients", assign.len()));
+                }
+                let s_eff = s.min(n);
+                let mut sizes = vec![0usize; s_eff];
+                for (i, &sh) in assign.iter().enumerate() {
+                    if sh >= s_eff {
+                        return Err(format!("client {i} on shard {sh} >= {s_eff}"));
+                    }
+                    sizes[sh] += 1;
+                }
+                if let Some(empty) = sizes.iter().position(|&c| c == 0) {
+                    return Err(format!("shard {empty} is empty: {sizes:?}"));
+                }
+                if t.partition_shards(s, seed) != assign {
+                    return Err("same (graph, s, seed) gave a different partition".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn partition_cut_beats_a_random_balanced_baseline() {
+        // Local topologies only: on the full mesh an *unbalanced* random
+        // partition can legitimately cut fewer edges than any balanced
+        // one (Σ|Sᵢ|² grows as balance improves), so "beats random" is
+        // only a meaningful yardstick where locality exists to exploit.
+        let specs = [
+            TopologySpec::Ring { k: 2 },
+            TopologySpec::Ring { k: 3 },
+            TopologySpec::SmallWorld { d: 4, p: 0.1 },
+        ];
+        use crate::util::quickcheck::forall;
+        forall(
+            0x5A4E,
+            16,
+            |r| {
+                let n = 24 + r.below(41);
+                let s = 2 + r.below(5);
+                let spec = specs[r.below(specs.len())];
+                let seed = r.next_u64();
+                (n, s, spec, seed)
+            },
+            |&(n, s, spec, seed)| {
+                let t = spec.build(n, seed).map_err(|e| e.to_string())?;
+                let assign = t.partition_shards(s, seed);
+                let cut = crossing(&t, &assign);
+                // random balanced baseline: seeded shuffle, chunked
+                let mut ids: Vec<usize> = (0..n).collect();
+                Rng::new(seed ^ 0xBA5E).shuffle(&mut ids);
+                let mut baseline = vec![0usize; n];
+                for (pos, &id) in ids.iter().enumerate() {
+                    baseline[id] = pos * s.min(n) / n;
+                }
+                let base_cut = crossing(&t, &baseline);
+                if cut > base_cut {
+                    return Err(format!(
+                        "partitioner cut {cut} worse than random baseline {base_cut}"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn partition_clamps_and_degenerates_sanely() {
+        let t = TopologySpec::Ring { k: 1 }.build(6, 3).unwrap();
+        assert_eq!(t.partition_shards(1, 9), vec![0; 6], "s=1 is the whole graph");
+        assert_eq!(t.partition_shards(0, 9), vec![0; 6], "s=0 clamps to 1");
+        let singletons = t.partition_shards(64, 9);
+        let mut sorted = singletons.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..6).collect::<Vec<_>>(), "s>n degenerates to singletons");
+        assert!(Topology::full(0).partition_shards(4, 1).is_empty());
+        // a 24-cycle into 4 shards: contiguous arcs cut exactly 4 edges,
+        // and the candidate set contains the contiguous chunking — so the
+        // best cut can never exceed it.
+        let ring = TopologySpec::Ring { k: 1 }.build(24, 3).unwrap();
+        let assign = ring.partition_shards(4, 7);
+        assert!(
+            crossing(&ring, &assign) <= 4,
+            "cycle into 4 arcs cuts at most 4 edges, got {}",
+            crossing(&ring, &assign)
+        );
     }
 }

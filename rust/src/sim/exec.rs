@@ -1,31 +1,41 @@
-//! Event-driven deployment executor: every client is a poll-style state
-//! machine ([`ClientStateMachine`]) and one thread pumps all of them
-//! through the virtual clock's driver API — zero per-client OS threads.
+//! Event-driven deployment executors: every client is a poll-style state
+//! machine ([`ClientStateMachine`]) pumped through a virtual clock's
+//! driver API — zero per-client OS threads.
 //!
-//! This is [`SimConfig::exec`](super::SimConfig) = [`ExecMode::Events`]
-//! (virtual time only; wall-clock deployments need real threads to really
-//! block).  The executor makes exactly the scheduler transitions the
-//! thread-backed path makes — [`Step::Sleep`] ⇒
-//! [`VirtualClock::driver_sleep`], [`Step::Recv`] ⇒
-//! [`VirtualClock::driver_recv`] / resume — so a same-seed run is
-//! byte-identical across the two modes (asserted in `tests/virtual_time.rs`
-//! and at 200 clients in `tests/scale.rs`).  What changes is the resource
-//! envelope: a 10 000-client deployment is one thread, one clock, and ten
-//! thousand small state structs.
+//! Two shapes ([`SimConfig::exec`](super::SimConfig), virtual time only;
+//! wall-clock deployments need real threads to really block):
+//!
+//! * [`ExecMode::Events`] — one thread, one clock, the byte-exact
+//!   reference.  The executor makes exactly the scheduler transitions
+//!   the thread-backed path makes — [`Step::Sleep`] ⇒
+//!   [`VirtualClock::driver_sleep`], [`Step::Recv`] ⇒
+//!   [`VirtualClock::driver_recv`] / resume — so a same-seed run is
+//!   byte-identical across the two modes (asserted in
+//!   `tests/virtual_time.rs` and at 200 clients in `tests/scale.rs`).
+//! * [`ExecMode::Parallel`] — S worker threads over S shard-local
+//!   clocks, synchronized by conservative lookahead windows
+//!   ([`run_parallel`], DESIGN.md §12).  Byte-identical to `Events` per
+//!   seed (asserted across the whole matrix in `tests/conformance.rs`);
+//!   what changes is wall-clock, which is what turns 10 000-client
+//!   sweeps into overnight 100k–1M-client sweeps.
 //!
 //! [`ExecMode::Events`]: super::ExecMode
+//! [`ExecMode::Parallel`]: super::ExecMode
 
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::async_client::{AsyncClient, ClientData, EvalTensors};
+use crate::coordinator::fault::AdversaryKind;
 use crate::coordinator::machine::{ClientStateMachine, Input, Step};
 use crate::coordinator::sync::SyncClient;
 use crate::data::Dataset;
 use crate::metrics::{ClientReport, NetStats};
 use crate::net::inproc::decode_delivery;
-use crate::net::{Overlay, VirtualHub};
+use crate::net::{Overlay, Topology, VirtualHub};
 use crate::runtime::Trainer;
 use crate::util::time::{DriverRecv, SimTime, VirtualClock};
 use crate::util::Rng;
@@ -45,25 +55,20 @@ enum Pending {
     Receiving { deadline: SimTime },
 }
 
-/// Run one virtual-time deployment on the event executor.  Mirrors the
-/// thread-backed path's client construction exactly (same per-client RNG
-/// streams, same endpoint claim order) so the two executors diverge in
-/// nothing but how turns are granted.
-pub(super) fn run_events(
-    trainer: &(dyn Trainer + Sync),
+/// Build every client's state machine in ascending id order — the one
+/// construction both event-driven executors share, and the mirror of the
+/// thread-backed path (same per-client RNG streams, same endpoint claim
+/// order), so all executors diverge in nothing but how turns are granted.
+fn build_machines<'a>(
+    trainer: &'a (dyn Trainer + Sync),
     cfg: &SimConfig,
     parts: Vec<Vec<usize>>,
     train: &Arc<Dataset>,
     eval: &EvalTensors,
-    overlay: &Arc<Overlay>,
-    adversary_roles: &[Option<crate::coordinator::fault::AdversaryKind>],
-) -> Result<(Vec<ClientReport>, NetStats)> {
-    let n = cfg.n_clients;
-    let clock = VirtualClock::new(n);
-    let hub =
-        VirtualHub::with_overlay(n, cfg.net.clone(), Arc::clone(&clock), Arc::clone(overlay));
-
-    let mut machines: Vec<ClientStateMachine> = Vec::with_capacity(n);
+    hub: &VirtualHub,
+    adversary_roles: &[Option<AdversaryKind>],
+) -> Vec<ClientStateMachine<'a>> {
+    let mut machines: Vec<ClientStateMachine<'a>> = Vec::with_capacity(cfg.n_clients);
     for (i, indices) in parts.into_iter().enumerate() {
         let data = ClientData::with_eval(Arc::clone(train), indices, eval.clone());
         let fault = cfg.faults.get(i).copied().unwrap_or_default();
@@ -100,15 +105,33 @@ pub(super) fn run_events(
             .into_machine()
         });
     }
+    machines
+}
 
-    let mut pending: Vec<Pending> = vec![Pending::Fresh; n];
-    let mut reports: Vec<Option<ClientReport>> = (0..n).map(|_| None).collect();
-    let mut failures: Vec<Option<anyhow::Error>> = (0..n).map(|_| None).collect();
+/// One worker's pump state: the machines it owns (indexed by token; a
+/// shard worker owns only its members), their parked reasons, and the
+/// per-client outcome slots merged by [`finish`].
+struct Pump<'a> {
+    machines: Vec<Option<ClientStateMachine<'a>>>,
+    pending: Vec<Pending>,
+    reports: Vec<Option<ClientReport>>,
+    failures: Vec<Option<anyhow::Error>>,
+}
 
-    // The pump: take the next turn, translate the wakeup into the machine's
-    // input, then step the machine until it parks again.
-    while let Some(token) = clock.driver_next() {
-        let mut input = match pending[token] {
+impl<'a> Pump<'a> {
+    fn new(n: usize) -> Pump<'a> {
+        Pump {
+            machines: (0..n).map(|_| None).collect(),
+            pending: vec![Pending::Fresh; n],
+            reports: (0..n).map(|_| None).collect(),
+            failures: (0..n).map(|_| None).collect(),
+        }
+    }
+
+    /// One granted turn: translate the wakeup into the machine's input,
+    /// then step the machine until it parks again.
+    fn pump(&mut self, clock: &VirtualClock, token: usize) {
+        let mut input = match self.pending[token] {
             Pending::Fresh => Input::Start,
             Pending::Sleeping => Input::SleepElapsed,
             Pending::Receiving { deadline } => {
@@ -118,29 +141,31 @@ pub(super) fn run_events(
                     // Re-parked (defensive; a wakeup always carries mail or
                     // the deadline).
                     DriverRecv::Parked { deadline } => {
-                        pending[token] = Pending::Receiving { deadline };
-                        continue;
+                        self.pending[token] = Pending::Receiving { deadline };
+                        return;
                     }
                 }
             }
         };
+        let machine =
+            self.machines[token].as_mut().expect("turn granted to a token without a machine");
         loop {
-            match machines[token].step(input) {
+            match machine.step(input) {
                 Ok(Step::Sleep(d)) => {
                     clock.driver_sleep(token, d);
-                    pending[token] = Pending::Sleeping;
+                    self.pending[token] = Pending::Sleeping;
                     break;
                 }
                 Ok(Step::Recv(timeout)) => match clock.driver_recv(token, timeout) {
                     DriverRecv::Delivered(bytes) => input = Input::Msg(decode_delivery(&bytes)),
                     DriverRecv::TimedOut => input = Input::Timeout,
                     DriverRecv::Parked { deadline } => {
-                        pending[token] = Pending::Receiving { deadline };
+                        self.pending[token] = Pending::Receiving { deadline };
                         break;
                     }
                 },
                 Ok(Step::Done(report)) => {
-                    reports[token] = Some(*report);
+                    self.reports[token] = Some(*report);
                     clock.detach(token);
                     break;
                 }
@@ -148,14 +173,37 @@ pub(super) fn run_events(
                 // thread would: detached, its error surfaced after the
                 // survivors finish.
                 Err(e) => {
-                    failures[token] = Some(e);
+                    self.failures[token] = Some(e);
                     clock.detach(token);
                     break;
                 }
             }
         }
     }
+}
 
+/// Merge every worker's outcome slots and surface them exactly as the
+/// single-threaded executor does: the lowest-id failure first, then any
+/// client the scheduler never completed.
+fn finish(
+    pumps: Vec<Pump<'_>>,
+    hub: &VirtualHub,
+    n: usize,
+) -> Result<(Vec<ClientReport>, NetStats)> {
+    let mut reports: Vec<Option<ClientReport>> = (0..n).map(|_| None).collect();
+    let mut failures: Vec<Option<anyhow::Error>> = (0..n).map(|_| None).collect();
+    for pump in pumps {
+        for (i, r) in pump.reports.into_iter().enumerate() {
+            if let Some(r) = r {
+                reports[i] = Some(r);
+            }
+        }
+        for (i, e) in pump.failures.into_iter().enumerate() {
+            if let Some(e) = e {
+                failures[i] = Some(e);
+            }
+        }
+    }
     for (i, failure) in failures.iter_mut().enumerate() {
         if let Some(e) = failure.take() {
             return Err(e).with_context(|| format!("client {i} failed"));
@@ -167,4 +215,165 @@ pub(super) fn run_events(
         .map(|(i, r)| r.with_context(|| format!("client {i} never completed (scheduler stall)")))
         .collect();
     Ok((reports?, hub.net_stats()))
+}
+
+/// Run one virtual-time deployment on the single-threaded event executor
+/// (the byte-exact reference both other executors are measured against).
+pub(super) fn run_events(
+    trainer: &(dyn Trainer + Sync),
+    cfg: &SimConfig,
+    parts: Vec<Vec<usize>>,
+    train: &Arc<Dataset>,
+    eval: &EvalTensors,
+    overlay: &Arc<Overlay>,
+    adversary_roles: &[Option<AdversaryKind>],
+) -> Result<(Vec<ClientReport>, NetStats)> {
+    let n = cfg.n_clients;
+    let clock = VirtualClock::new(n);
+    let hub =
+        VirtualHub::with_overlay(n, cfg.net.clone(), Arc::clone(&clock), Arc::clone(overlay));
+    let machines = build_machines(trainer, cfg, parts, train, eval, &hub, adversary_roles);
+    let mut pump = Pump::new(n);
+    pump.machines = machines.into_iter().map(Some).collect();
+    while let Some(token) = clock.driver_next() {
+        pump.pump(&clock, token);
+    }
+    finish(vec![pump], &hub, n)
+}
+
+/// Run one virtual-time deployment on the sharded parallel executor
+/// (DESIGN.md §12): clients are partitioned into `shards` per-core
+/// shards by minimum overlay edge-cut ([`Topology::partition_shards`]),
+/// each shard's ready queue runs on its own worker thread against a
+/// shard-local clock ([`VirtualClock::with_members`]), and shards
+/// synchronize only at conservative lookahead windows.
+///
+/// # The window protocol (null messages, batched)
+///
+/// Let `L` be the network's guaranteed minimum one-way delay
+/// ([`NetworkModel::latency_floor`](crate::net::NetworkModel::latency_floor)).
+/// Per round, while every worker is parked at the release barrier, the
+/// coordinator computes `T_min` = the minimum
+/// [`VirtualClock::pending_lower_bound`] over all shards — the earliest
+/// instant anything in the whole deployment can happen — and releases
+/// the workers to drain everything due strictly before the horizon
+/// `H = T_min + L` ([`VirtualClock::driver_next_before`]).  Any message
+/// a shard sends during the window is due at or after `now + L ≥
+/// T_min + L = H`, so nothing a worker does can create work *inside*
+/// another worker's current window: each shard's window is causally
+/// closed, and pumping it in shard-local `(due, token)` order makes
+/// every client observe exactly the mailbox/timer sequence the global
+/// single-clock order would have produced.  This is the classic
+/// conservative (Chandy–Misra–Bryant) scheme with the per-link null
+/// messages batched into one barrier exchange per window.
+///
+/// Zero lookahead (e.g. the `ideal` preset) admits no conservative
+/// parallelism — every cross-shard message could be due "now" — so the
+/// shard count collapses to 1 and the run degenerates to a bounded
+/// single-worker pump with no windows at all.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn run_parallel(
+    trainer: &(dyn Trainer + Sync),
+    cfg: &SimConfig,
+    parts: Vec<Vec<usize>>,
+    train: &Arc<Dataset>,
+    eval: &EvalTensors,
+    overlay: &Arc<Overlay>,
+    adversary_roles: &[Option<AdversaryKind>],
+    topology: &Topology,
+    shards: usize,
+) -> Result<(Vec<ClientReport>, NetStats)> {
+    let n = cfg.n_clients;
+    let lookahead = cfg.net.latency_floor();
+    let shards = if lookahead.is_zero() { 1 } else { shards };
+    let shard_of = topology.partition_shards(shards, cfg.seed);
+    let s = shard_of.iter().copied().max().map_or(1, |top| top + 1);
+    let mut members: Vec<Vec<usize>> = vec![Vec::new(); s];
+    for (id, &sh) in shard_of.iter().enumerate() {
+        members[sh].push(id);
+    }
+    let clocks: Vec<Arc<VirtualClock>> =
+        members.iter().map(|m| VirtualClock::with_members(n, m)).collect();
+    let hub = VirtualHub::with_sharded(
+        n,
+        cfg.net.clone(),
+        clocks.clone(),
+        shard_of.clone(),
+        Arc::clone(overlay),
+    );
+    let machines = build_machines(trainer, cfg, parts, train, eval, &hub, adversary_roles);
+    let mut pumps: Vec<Pump> = (0..s).map(|_| Pump::new(n)).collect();
+    for (i, machine) in machines.into_iter().enumerate() {
+        pumps[shard_of[i]].machines[i] = Some(machine);
+    }
+
+    if s == 1 {
+        // Single shard (requested, clamped, or zero-lookahead collapse):
+        // no windows, no extra threads — the reference pump on this
+        // shard's clock.
+        let clock = &clocks[0];
+        let mut pump = pumps.pop().expect("one shard");
+        while let Some(token) = clock.driver_next() {
+            pump.pump(clock, token);
+        }
+        return finish(vec![pump], &hub, n);
+    }
+
+    let barrier = Barrier::new(s + 1);
+    // Written by the coordinator only while every worker is parked at the
+    // release barrier, so relaxed-ordering concerns do not arise — the
+    // barrier is the synchronization edge.
+    let horizon_nanos = AtomicU64::new(0);
+    let done = AtomicBool::new(false);
+
+    let pumps: Vec<Pump> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(s);
+        for (sh, mut pump) in pumps.into_iter().enumerate() {
+            let clock = Arc::clone(&clocks[sh]);
+            let barrier = &barrier;
+            let horizon_nanos = &horizon_nanos;
+            let done = &done;
+            let handle = std::thread::Builder::new()
+                .name(format!("shard-{sh}"))
+                .spawn_scoped(scope, move || {
+                    loop {
+                        barrier.wait(); // window release
+                        if done.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let h = Duration::from_nanos(horizon_nanos.load(Ordering::SeqCst));
+                        while let Some(token) = clock.driver_next_before(h) {
+                            pump.pump(&clock, token);
+                        }
+                        barrier.wait(); // window drained: rejoin
+                    }
+                    pump
+                })
+                .expect("spawn shard worker");
+            handles.push(handle);
+        }
+        // The coordinator: one lower-bound exchange and one window per
+        // iteration, until no shard has anything left to do.
+        loop {
+            let t_min = clocks.iter().filter_map(|c| c.pending_lower_bound()).min();
+            match t_min {
+                None => {
+                    done.store(true, Ordering::SeqCst);
+                    barrier.wait(); // final release: workers exit
+                    break;
+                }
+                Some(t) => {
+                    let h = t + lookahead;
+                    horizon_nanos.store(
+                        u64::try_from(h.as_nanos()).unwrap_or(u64::MAX),
+                        Ordering::SeqCst,
+                    );
+                    barrier.wait(); // release into the window
+                    barrier.wait(); // every shard drained below the horizon
+                }
+            }
+        }
+        handles.into_iter().map(|h| h.join().expect("shard worker panicked")).collect()
+    });
+    finish(pumps, &hub, n)
 }

@@ -30,6 +30,11 @@
 //!   mode: one small-stack, cooperatively-scheduled OS thread per client.
 //!   Same seed ⇒ byte-identical [`SimResult`] across both executors
 //!   (asserted in `tests/virtual_time.rs` and `tests/scale.rs`).
+//! * [`ExecMode::Parallel`] — the sharded parallel executor (DESIGN.md
+//!   §12): min-edge-cut client shards on per-core worker threads with
+//!   shard-local clocks, synchronized by conservative lookahead windows.
+//!   Same seed ⇒ byte-identical to [`ExecMode::Events`] across the whole
+//!   scenario matrix (`tests/conformance.rs`).
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -78,25 +83,55 @@ pub enum ExecMode {
     /// mode; the only option before the event executor existed).
     Threads,
     /// Single-threaded event executor over client state machines
-    /// ([`exec`]): no per-client OS threads at all.
+    /// ([`exec`]): no per-client OS threads at all.  The byte-exact
+    /// reference the other executors are measured against.
     Events,
+    /// Sharded parallel event executor (DESIGN.md §12): clients
+    /// partitioned into `shards` min-edge-cut shards, one worker thread
+    /// and one shard-local clock each, synchronized by conservative
+    /// lookahead windows.  Byte-identical to [`ExecMode::Events`] per
+    /// seed (`tests/conformance.rs`).
+    Parallel {
+        /// Worker count; clamped to the client count, and collapsed to 1
+        /// when the network model has a zero latency floor (conservative
+        /// simulation admits no parallelism at zero lookahead).
+        shards: usize,
+    },
 }
 
 impl ExecMode {
     /// The CLI spelling (`dfl sim --exec`).
-    pub fn name(self) -> &'static str {
+    pub fn name(self) -> String {
         match self {
-            ExecMode::Threads => "threads",
-            ExecMode::Events => "events",
+            ExecMode::Threads => "threads".into(),
+            ExecMode::Events => "events".into(),
+            ExecMode::Parallel { shards } => format!("parallel:{shards}"),
         }
     }
 
-    /// Parse a CLI spelling.
+    /// Parse a CLI spelling: `threads`, `events`, `parallel` (one shard
+    /// per available core), or `parallel:S`.
     pub fn parse(name: &str) -> Result<ExecMode> {
         match name {
             "threads" => Ok(ExecMode::Threads),
             "events" => Ok(ExecMode::Events),
-            other => anyhow::bail!("unknown executor {other:?} (want threads|events)"),
+            "parallel" => Ok(ExecMode::Parallel {
+                // Resolved at parse time so the config (and its banner /
+                // reproduce line) pins the actual shard count.
+                shards: std::thread::available_parallelism().map_or(1, |p| p.get()),
+            }),
+            other => match other.strip_prefix("parallel:") {
+                Some(s) => {
+                    let shards: usize = s
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad shard count in {other:?}"))?;
+                    anyhow::ensure!(shards >= 1, "parallel executor needs at least one shard");
+                    Ok(ExecMode::Parallel { shards })
+                }
+                None => anyhow::bail!(
+                    "unknown executor {other:?} (want threads|events|parallel[:S])"
+                ),
+            },
         }
     }
 }
@@ -409,10 +444,23 @@ pub fn run(trainer: &(dyn Trainer + Sync), cfg: &SimConfig) -> Result<SimResult>
 
     // --- executors ----------------------------------------------------------
     let t0 = Instant::now();
-    let (reports, mut net) = if cfg.virtual_time && cfg.exec == ExecMode::Events {
-        exec::run_events(trainer, cfg, parts, &train, &eval, &overlay, &adversary_roles)?
-    } else {
-        run_threads(trainer, cfg, parts, &train, &eval, &overlay, &adversary_roles)?
+    let (reports, mut net) = match (cfg.virtual_time, cfg.exec) {
+        (true, ExecMode::Events) => {
+            exec::run_events(trainer, cfg, parts, &train, &eval, &overlay, &adversary_roles)?
+        }
+        (true, ExecMode::Parallel { shards }) => exec::run_parallel(
+            trainer,
+            cfg,
+            parts,
+            &train,
+            &eval,
+            &overlay,
+            &adversary_roles,
+            &topology,
+            shards,
+        )?,
+        // Threads — and every wall-clock run, where blocking is real.
+        _ => run_threads(trainer, cfg, parts, &train, &eval, &overlay, &adversary_roles)?,
     };
     // Virtual runs report logical time: the deployment "took" as long as
     // its slowest client's simulated schedule, not the compute wall time.
@@ -423,9 +471,10 @@ pub fn run(trainer: &(dyn Trainer + Sync), cfg: &SimConfig) -> Result<SimResult>
     };
     // Severed-edge accounting: crossings of every NetSplit window that
     // opened within the run, plus whatever the graph-fault schedule
-    // actually cut (overlay events apply lazily, so a window the run
-    // never reached counts nothing).  Deterministic per seed — both
-    // executors see the identical logical schedule.
+    // actually cut (the overlay reports cuts up to the latest *queried*
+    // time, so a window the run never reached counts nothing).
+    // Deterministic per seed — every executor queries the identical
+    // logical schedule.
     net.edges_severed = overlay.edges_severed()
         + split_crossings
             .iter()

@@ -14,7 +14,7 @@
 use super::rng::Rng;
 use crate::coordinator::fault::FaultPlan;
 use crate::net::TopologySpec;
-use crate::sim::SimConfig;
+use crate::sim::{ExecMode, SimConfig};
 
 /// Run `cases` property checks. `generate` builds an input from a seeded RNG;
 /// `property` returns `Err(reason)` on violation.
@@ -46,7 +46,7 @@ pub struct Shrunk {
 }
 
 /// Minimize a failing [`SimConfig`] against `fails` (true = the failure
-/// still reproduces).  Four passes, all preserving the `faults` invariant
+/// still reproduces).  Six passes, all preserving the `faults` invariant
 /// (empty or one plan per client) and never leaving a graph fault
 /// dangling off the end of the client range:
 ///
@@ -68,6 +68,12 @@ pub struct Shrunk {
 ///    preset (`full`) outright: a failure that survives on the mesh is
 ///    independent of the overlay, which is the most useful thing a
 ///    repro can learn.
+/// 6. **Executor shrinking** — for [`ExecMode::Parallel`] configs, first
+///    try the single-threaded [`ExecMode::Events`] reference outright (a
+///    failure that survives there is a simulator bug, not an executor
+///    race, and replays with zero threads), else halve the shard count
+///    toward 1 while the failure holds: a two-shard repro of a window
+///    race beats a sixteen-shard one.
 ///
 /// Like every shrinker this is greedy: for non-monotone predicates the
 /// result is a local minimum (still failing, never larger than the
@@ -216,6 +222,29 @@ where
         tests_run += 1;
         if fails(&cand) {
             best = cand;
+        }
+    }
+
+    // 6. Shrink the executor: reference first, then halve the shards.
+    if let ExecMode::Parallel { shards } = best.exec {
+        let mut cand = best.clone();
+        cand.exec = ExecMode::Events;
+        tests_run += 1;
+        if fails(&cand) {
+            best = cand; // executor-independent: the zero-thread repro wins
+        } else {
+            let mut s = shards;
+            while s > 1 {
+                let mut cand = best.clone();
+                cand.exec = ExecMode::Parallel { shards: s / 2 };
+                tests_run += 1;
+                if fails(&cand) {
+                    s /= 2;
+                    best = cand;
+                } else {
+                    break;
+                }
+            }
         }
     }
     Shrunk { config: best, tests_run }
@@ -445,6 +474,41 @@ mod tests {
             shrunk.config.topology,
             TopologySpec::Full,
             "an overlay the failure does not need must shrink to full"
+        );
+    }
+
+    #[test]
+    fn shrink_halves_parallel_shards_toward_the_failing_minimum() {
+        let mut cfg = SimConfig::new(16, 128);
+        cfg.exec = ExecMode::Parallel { shards: 16 };
+        // The "bug" is a window race needing real parallelism: it must
+        // not reproduce on the reference, and needs at least two shards.
+        let fails = |c: &SimConfig| {
+            c.n_clients >= 4
+                && matches!(c.exec, ExecMode::Parallel { shards } if shards >= 2)
+        };
+        let shrunk = shrink_sim_config(&cfg, fails);
+        assert!(fails(&shrunk.config), "shrinking must preserve the failure");
+        assert_eq!(shrunk.config.n_clients, 4, "client bisection still runs first");
+        assert_eq!(
+            shrunk.config.exec,
+            ExecMode::Parallel { shards: 2 },
+            "shards must halve 16 -> 8 -> 4 -> 2 and stop before 1"
+        );
+    }
+
+    #[test]
+    fn shrink_collapses_irrelevant_executor_to_the_reference() {
+        let mut cfg = SimConfig::new(16, 128);
+        cfg.exec = ExecMode::Parallel { shards: 8 };
+        // Failure depends only on the client count: the executor must be
+        // walked all the way back to the zero-thread reference.
+        let shrunk = shrink_sim_config(&cfg, |c| c.n_clients >= 4);
+        assert_eq!(shrunk.config.n_clients, 4);
+        assert_eq!(
+            shrunk.config.exec,
+            ExecMode::Events,
+            "an executor the failure does not need must shrink to events"
         );
     }
 

@@ -35,6 +35,14 @@
 //!   participant's state (the pre-refactor O(n) bottleneck at four-digit
 //!   client counts).  The `gen` tag makes superseded timer entries — a
 //!   receive deadline whose mail arrived first — cheap to discard lazily.
+//! * **The `(due, token, gen)` tuple order is a pinned contract,** not an
+//!   incidental field layout: timers tied on `due` pop in ascending
+//!   *token* order (then arming order via `gen`), which — together with
+//!   the ready set's lowest-token grant — is the tie-break every executor
+//!   (threads, events, and the sharded parallel merge, DESIGN.md §12)
+//!   relies on for byte-identical schedules.  The regression test
+//!   `equal_deadline_timers_drain_in_token_order` pins it; reordering the
+//!   tuple fields is a determinism break, not a refactor.
 //! * **Time advances only when no token is ready.**  The scheduler fires
 //!   every delivery and timer due at or before the earliest pending
 //!   instant, advances `now` to it, and wakes the lowest ready token.
@@ -54,7 +62,7 @@
 //!   receive, preserving the seed behaviour of exercising the codec on
 //!   every in-process message.
 //!
-//! # Two ways to drive the scheduler
+//! # Three ways to drive the scheduler
 //!
 //! *Thread-backed* (compatibility mode): each participant is an OS thread
 //! that gates on [`VirtualClock::attach`] and parks on a condvar whenever
@@ -63,7 +71,15 @@
 //! through the non-parking driver API ([`VirtualClock::driver_next`],
 //! [`VirtualClock::driver_sleep`], [`VirtualClock::driver_recv`]) — same
 //! `VcState` transitions, zero per-client threads, byte-identical
-//! schedules.
+//! schedules.  *Sharded parallel* (`sim::exec::run_parallel`): S worker
+//! threads each own one clock built by [`VirtualClock::with_members`]
+//! over a disjoint client shard and pump it through the *bounded* driver
+//! API ([`VirtualClock::driver_next_before`]) up to a conservative
+//! horizon the coordinator derives from every shard's
+//! [`VirtualClock::pending_lower_bound`] plus the network's latency
+//! floor; cross-shard traffic lands via [`VirtualClock::post_at`] at an
+//! absolute instant at or beyond that horizon, so no shard ever receives
+//! a message from its own past (the null-message bound, DESIGN.md §12).
 //!
 //! Liveness: every blocking call carries a finite due instant (windows and
 //! barriers always have deadlines), so the scheduler can always advance; a
@@ -214,6 +230,13 @@ struct VcState {
     current: Option<usize>,
     /// Tokens not yet `Done`.
     live: usize,
+    /// Bounded-window mode (parallel executor): when set, the scheduler
+    /// never advances `now` to or past this instant — it returns with no
+    /// grant instead, leaving everything due at or beyond the horizon
+    /// pending for the next window.  Sticky across the internal
+    /// reschedules that [`VirtualClock::detach`] and the blocking calls
+    /// perform, so a mid-window detach cannot leak past the horizon.
+    horizon: Option<u64>,
 }
 
 impl VcState {
@@ -311,12 +334,52 @@ impl VirtualClock {
             ready: BTreeSet::new(),
             current: None,
             live: n,
+            horizon: None,
         };
         for t in 0..n {
             state.arm_timer(t, 0);
         }
         let cvs: Vec<Condvar> = (0..n).map(|_| Condvar::new()).collect();
         Self::schedule(&mut state, &cvs);
+        Arc::new(VirtualClock { state: Mutex::new(state), cvs })
+    }
+
+    /// A shard-local clock over the full token space `0..n` in which only
+    /// `members` are live participants (the parallel executor's per-shard
+    /// clock, DESIGN.md §12).  Non-members are `Done` from birth — never
+    /// armed, never granted a turn, and mail addressed to them here is
+    /// swallowed (the hub routes every delivery to its owner shard's
+    /// clock, so that never happens in practice).  Keeping the full token
+    /// space means global client ids index mailboxes and thread states
+    /// directly on every shard.
+    ///
+    /// Unlike [`VirtualClock::new`], no turn is granted eagerly: the first
+    /// [`VirtualClock::driver_next_before`] performs the initial bounded
+    /// schedule, so time cannot move before the first window's horizon is
+    /// known.
+    pub fn with_members(n: usize, members: &[usize]) -> Arc<VirtualClock> {
+        let mut state = VcState {
+            now: 0,
+            threads: (0..n).map(|_| ThreadState::Done).collect(),
+            mailboxes: (0..n).map(|_| VecDeque::new()).collect(),
+            events: BinaryHeap::new(),
+            timers: BinaryHeap::new(),
+            wait_gen: vec![0; n],
+            ready: BTreeSet::new(),
+            current: None,
+            live: 0,
+            horizon: None,
+        };
+        for &t in members {
+            debug_assert!(
+                matches!(state.threads[t], ThreadState::Done),
+                "duplicate shard member {t}"
+            );
+            state.threads[t] = ThreadState::Asleep { due: 0 };
+            state.live += 1;
+            state.arm_timer(t, 0);
+        }
+        let cvs: Vec<Condvar> = (0..n).map(|_| Condvar::new()).collect();
         Arc::new(VirtualClock { state: Mutex::new(state), cvs })
     }
 
@@ -380,6 +443,25 @@ impl VirtualClock {
         s.events.push(Reverse(VcEvent { due, key, to, payload }));
     }
 
+    /// [`post`](VirtualClock::post) at an *absolute* instant — the
+    /// cross-shard delivery path (DESIGN.md §12): a sender on another
+    /// shard's clock computes `due = its own now + link delay` and lands
+    /// the event here, on the recipient's clock.  The conservative-window
+    /// protocol guarantees `due ≥` this shard's current horizon, so the
+    /// event can never be in this clock's past (debug-asserted); the
+    /// `(due, key)` total order of the event heap then makes the pop
+    /// sequence independent of cross-thread push timing.  Mail to a
+    /// `Done` token is swallowed, exactly like `post`.
+    pub fn post_at(&self, to: usize, due: SimTime, key: (u32, u32, u64), payload: Arc<[u8]>) {
+        let mut s = self.state.lock().unwrap();
+        if matches!(s.threads[to], ThreadState::Done) {
+            return;
+        }
+        let due = to_nanos(due);
+        debug_assert!(due >= s.now, "post_at into the destination shard's past");
+        s.events.push(Reverse(VcEvent { due, key, to, payload }));
+    }
+
     /// Pop the next delivered payload, or block until one arrives or
     /// logical `timeout` elapses (then `None`).  Thread-backed mode; the
     /// event-driven equivalent is [`VirtualClock::driver_recv`].
@@ -426,10 +508,61 @@ impl VirtualClock {
     /// [`driver_recv`](VirtualClock::driver_recv) or detaches.
     pub fn driver_next(&self) -> Option<usize> {
         let mut s = self.state.lock().unwrap();
+        s.horizon = None;
         if s.current.is_none() {
             Self::schedule(&mut s, &self.cvs);
         }
         s.current
+    }
+
+    /// Bounded [`driver_next`](VirtualClock::driver_next) — the parallel
+    /// executor's per-window pump (DESIGN.md §12).  Grants turns and fires
+    /// events exactly like `driver_next`, but never advances `now` to or
+    /// past `horizon`: once everything strictly before the horizon has
+    /// drained, returns `None` with all remaining work (dues ≥ horizon)
+    /// left pending for the next window.  The horizon is sticky until the
+    /// next bounded (or unbounded) call, so the internal reschedule a
+    /// mid-window [`detach`](VirtualClock::detach) performs cannot leak
+    /// past it.
+    ///
+    /// `None` from this call therefore means "window drained", not "run
+    /// over" — the coordinator distinguishes the two with
+    /// [`pending_lower_bound`](VirtualClock::pending_lower_bound).
+    pub fn driver_next_before(&self, horizon: SimTime) -> Option<usize> {
+        let mut s = self.state.lock().unwrap();
+        s.horizon = Some(to_nanos(horizon));
+        if s.current.is_none() {
+            Self::schedule(&mut s, &self.cvs);
+        }
+        s.current
+    }
+
+    /// Earliest instant at which this clock has any pending work — the
+    /// minimum over live timers and undelivered events — or `None` when
+    /// nothing is pending (every member detached, or the remaining members
+    /// are stalled with no wakeup, the error case the executor surfaces).
+    /// This is each shard's contribution to the coordinator's lower-bound
+    /// timestamp exchange: the next window's horizon is
+    /// `min over shards + lookahead` (DESIGN.md §12).
+    ///
+    /// Only meaningful at a window barrier (no token ready or running —
+    /// defensively, `now` is returned if one is).
+    pub fn pending_lower_bound(&self) -> Option<SimTime> {
+        let mut s = self.state.lock().unwrap();
+        if s.live == 0 {
+            return None;
+        }
+        if s.current.is_some() || !s.ready.is_empty() {
+            return Some(Duration::from_nanos(s.now));
+        }
+        let timer = Self::next_timer_due(&mut s);
+        let event = s.events.peek().map(|Reverse(e)| e.due);
+        match (timer, event) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, None) => a,
+            (None, b) => b,
+        }
+        .map(Duration::from_nanos)
     }
 
     /// Non-parking [`sleep`](VirtualClock::sleep): block `token` for `d` of
@@ -571,8 +704,13 @@ impl VirtualClock {
                 (None, b) => b,
             };
             match next_due {
-                // Nothing ready: jump to the earliest pending instant.
-                Some(d) if d > s.now => s.now = d,
+                // Nothing ready: jump to the earliest pending instant —
+                // unless a bounded window forbids crossing the horizon
+                // (the pending instant then waits for the next window).
+                Some(d) if d > s.now => match s.horizon {
+                    Some(h) if d >= h => return,
+                    _ => s.now = d,
+                },
                 // No pending work at all — every live participant is racing
                 // to detach, or the simulation is over.
                 _ => return,
@@ -827,6 +965,105 @@ mod tests {
         assert_eq!(clock.driver_next(), None);
         // The receiver's 60 s deadline must not hold the clock hostage.
         assert_eq!(clock.now(), 5 * MS, "stale deadline advanced the clock");
+    }
+
+    /// Satellite regression (the invariant the parallel merge relies on):
+    /// timers tied on `due` must drain in ascending *token* order no
+    /// matter the order they were armed in, and a same-instant delivery
+    /// must ready its receiver into the same token-ordered grant sequence.
+    /// Pins the `(due, token, gen)` tuple layout of the timer heap — see
+    /// the module DESIGN notes; reordering those fields breaks this test.
+    #[test]
+    fn equal_deadline_timers_drain_in_token_order() {
+        let clock = VirtualClock::new(4);
+        // Park everyone with a common due of 7 ms, arming token 0's timer
+        // *last* (it first sleeps 1 ms, wakes alone, then re-arms to 7 ms)
+        // so arm order is 1, 2, 3, 0 — drain order must still be 0..4.
+        assert_eq!(clock.driver_next(), Some(0));
+        clock.driver_sleep(0, MS);
+        assert_eq!(clock.driver_next(), Some(1));
+        clock.driver_sleep(1, 7 * MS);
+        assert_eq!(clock.driver_next(), Some(2));
+        clock.driver_sleep(2, 7 * MS);
+        assert_eq!(clock.driver_next(), Some(3));
+        let d3 = match clock.driver_recv(3, Duration::from_secs(60)) {
+            DriverRecv::Parked { deadline } => deadline,
+            _ => panic!("no mail yet"),
+        };
+        assert_eq!(clock.driver_next(), Some(0));
+        assert_eq!(clock.now(), MS);
+        // a delivery due at the same 7 ms instant readies token 3 (whose
+        // own deadline is an hour out) into the same tie-broken sequence
+        clock.post(3, 6 * MS, (0, 3, 1), bytes(&[9]));
+        clock.driver_sleep(0, 6 * MS); // due 7 ms, armed after 1 and 2
+        for expect in 0..4usize {
+            assert_eq!(
+                clock.driver_next(),
+                Some(expect),
+                "equal-deadline drain must be token-ordered"
+            );
+            assert_eq!(clock.now(), 7 * MS);
+            if expect == 3 {
+                match clock.driver_recv_resume(3, d3) {
+                    DriverRecv::Delivered(p) => assert_eq!(&p[..], &[9u8][..]),
+                    _ => panic!("the same-instant delivery was due"),
+                }
+            }
+            clock.detach(expect);
+        }
+        assert_eq!(clock.driver_next(), None);
+        // token 3's superseded 60 s deadline must not have advanced time
+        assert_eq!(clock.now(), 7 * MS);
+    }
+
+    /// The parallel executor's clock shape: a shard clock over the full
+    /// token space with only its members live, pumped through the bounded
+    /// driver API — the horizon is never crossed, cross-shard mail lands
+    /// at absolute instants, and the lower bound reports pending work.
+    #[test]
+    fn bounded_driver_never_crosses_the_horizon() {
+        let clock = VirtualClock::with_members(4, &[1, 3]);
+        // window 1: horizon 5 ms — members drain their t = 0 wakeups
+        assert_eq!(clock.driver_next_before(5 * MS), Some(1));
+        clock.driver_sleep(1, 2 * MS);
+        assert_eq!(clock.driver_next_before(5 * MS), Some(3));
+        clock.driver_sleep(3, 10 * MS);
+        assert_eq!(clock.driver_next_before(5 * MS), Some(1));
+        assert_eq!(clock.now(), 2 * MS);
+        clock.driver_sleep(1, 6 * MS); // due 8 ms ≥ horizon
+        assert_eq!(clock.driver_next_before(5 * MS), None, "window drained");
+        assert_eq!(clock.now(), 2 * MS, "horizon must cap time advance");
+        assert_eq!(clock.pending_lower_bound(), Some(8 * MS));
+        // a cross-shard delivery lands at an absolute instant ≥ horizon
+        clock.post_at(3, 9 * MS, (0, 3, 1), bytes(&[5]));
+        assert_eq!(clock.pending_lower_bound(), Some(8 * MS));
+        // window 2: horizon 9 ms — token 1 wakes at 8 ms and detaches;
+        // the 9 ms event sits exactly on the horizon and must wait
+        assert_eq!(clock.driver_next_before(9 * MS), Some(1));
+        assert_eq!(clock.now(), 8 * MS);
+        clock.detach(1); // the sticky horizon caps the internal reschedule
+        assert_eq!(clock.driver_next_before(9 * MS), None);
+        assert_eq!(clock.now(), 8 * MS);
+        assert_eq!(clock.pending_lower_bound(), Some(9 * MS));
+        // window 3: a wide horizon delivers the mail and drains token 3
+        assert_eq!(clock.driver_next_before(20 * MS), Some(3));
+        assert_eq!(clock.now(), 10 * MS);
+        assert_eq!(clock.try_recv(3).as_deref(), Some(&[5u8][..]));
+        clock.detach(3);
+        assert_eq!(clock.driver_next_before(20 * MS), None);
+        assert_eq!(clock.pending_lower_bound(), None, "all members done");
+    }
+
+    #[test]
+    fn non_members_are_done_from_birth() {
+        let clock = VirtualClock::with_members(3, &[2]);
+        // posts to non-members are swallowed at post time
+        clock.post_at(0, MS, (9, 0, 1), bytes(&[1]));
+        assert_eq!(clock.driver_next_before(Duration::from_secs(1)), Some(2));
+        assert_eq!(clock.try_recv(2), None);
+        clock.detach(2);
+        assert_eq!(clock.driver_next_before(Duration::from_secs(1)), None);
+        assert_eq!(clock.now(), Duration::ZERO);
     }
 
     #[test]

@@ -1,0 +1,199 @@
+//! Cross-executor conformance: the sharded parallel executor must be a
+//! byte-exact drop-in for the single-threaded events reference (DESIGN.md
+//! §12) — same `ClientReport` fingerprints, same `NetStats` totals, same
+//! virtual wall — across seeds, overlays, network presets, and fault /
+//! adversary scenarios.
+//!
+//! The quick (non-ignored) tests cover the full clean matrix plus a
+//! diagonal of each fault scenario; the `#[ignore]` test is the full
+//! three-executor product that `scripts/tier1.sh` runs as its
+//! executor-matrix leg (skipped under `--fast`).
+
+mod common;
+
+use std::time::Duration;
+
+use common::fingerprint;
+use dfl::coordinator::fault::{AdversarySpec, GraphFault};
+use dfl::coordinator::{ProtocolConfig, QuorumSpec};
+use dfl::net::{NetworkModel, TopologySpec};
+use dfl::runtime::{AggregationRule, MockTrainer, Trainer};
+use dfl::sim::{self, ExecMode, SimConfig};
+
+/// Every overlay shape the simulator supports, as the CLI spells them.
+const TOPOLOGIES: [&str; 4] = ["full", "ring:2", "k-regular:6", "small-world:4:0.1"];
+
+/// The zero-lookahead preset (parallel must collapse to one shard) and the
+/// nastiest lossy one (correlated bursts over LAN latency).
+const NETS: [&str; 2] = ["ideal", "lossy-burst"];
+
+const SEEDS: [u64; 8] = [11, 22, 33, 44, 55, 66, 77, 88];
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Scenario {
+    /// No faults, no adversaries: the pure protocol.
+    Clean,
+    /// A min-cut edge outage window plus one churning client.
+    CutChurn,
+    /// A −10× poisoner held off by trimmed-mean aggregation.
+    Poison,
+}
+
+const SCENARIOS: [Scenario; 3] = [Scenario::Clean, Scenario::CutChurn, Scenario::Poison];
+
+/// One deployment cell of the conformance matrix: 8 clients, adaptive
+/// termination capped low enough that every cell stays cheap.
+fn cell_cfg(seed: u64, topo: &str, net: &str, scenario: Scenario) -> SimConfig {
+    let trainer = MockTrainer::tiny();
+    let mut cfg = SimConfig::for_meta(8, trainer.meta());
+    cfg.protocol = ProtocolConfig {
+        timeout: Duration::from_millis(80),
+        min_rounds: 4,
+        count_threshold: 2,
+        conv_threshold_rel: 0.12,
+        max_rounds: 12,
+        lr: 0.08,
+        model_seed: 42,
+        weight_by_samples: false,
+        early_window_exit: true,
+        crt_enabled: true,
+        quorum: QuorumSpec::STRICT,
+        agg: AggregationRule::FedAvg,
+    };
+    cfg.train_n = 60 * 8;
+    cfg.seed = seed;
+    cfg.virtual_time = true;
+    cfg.train_cost = Duration::from_millis(5);
+    cfg.topology = TopologySpec::parse(topo).expect("matrix topology");
+    cfg.net = NetworkModel::preset(net, seed).expect("matrix net preset");
+    match scenario {
+        Scenario::Clean => {}
+        Scenario::CutChurn => {
+            cfg.graph_faults = vec![
+                GraphFault::parse("graph-cut:0.15-0.45:mincut").unwrap(),
+                GraphFault::parse("churn:4:0.12-0.4").unwrap(),
+            ];
+        }
+        Scenario::Poison => {
+            cfg.adversaries = vec![AdversarySpec::parse("poison:-10:C2").unwrap()];
+            cfg.protocol.agg = AggregationRule::parse("trimmed-mean:1").unwrap();
+        }
+    }
+    cfg
+}
+
+/// Run one cell under `exec`, digesting everything the acceptance
+/// criterion covers: per-client fingerprints, traffic totals, the wall.
+fn run_cell(cfg: &SimConfig, exec: ExecMode) -> (Vec<u64>, dfl::metrics::NetStats, Duration) {
+    let trainer = MockTrainer::tiny();
+    let mut cfg = cfg.clone();
+    cfg.exec = exec;
+    let out = sim::run(&trainer, &cfg).expect("conformance cell must complete");
+    let prints: Vec<u64> = out.reports.iter().map(fingerprint).collect();
+    (prints, out.net, out.wall)
+}
+
+/// Assert two executors agree on a cell, naming the cell on failure.
+fn assert_identical(cfg: &SimConfig, reference: ExecMode, candidate: ExecMode, cell: &str) {
+    let (fe, ne, we) = run_cell(cfg, reference);
+    let (fc, nc, wc) = run_cell(cfg, candidate);
+    assert_eq!(fe, fc, "fingerprints diverged [{cell}] {candidate:?} vs {reference:?}");
+    assert_eq!(ne, nc, "NetStats diverged [{cell}] {candidate:?} vs {reference:?}");
+    assert_eq!(we, wc, "virtual wall diverged [{cell}] {candidate:?} vs {reference:?}");
+}
+
+/// The full clean matrix: every seed × overlay × net, `parallel:3` against
+/// the events reference.  The `ideal` column exercises the zero-lookahead
+/// collapse to one shard; `lossy-burst` exercises real cross-shard windows.
+#[test]
+fn parallel_matches_events_on_the_clean_matrix() {
+    for &seed in &SEEDS {
+        for topo in TOPOLOGIES {
+            for net in NETS {
+                let cfg = cell_cfg(seed, topo, net, Scenario::Clean);
+                let cell = format!("seed {seed}, {topo}, {net}, clean");
+                assert_identical(&cfg, ExecMode::Events, ExecMode::Parallel { shards: 3 }, &cell);
+            }
+        }
+    }
+}
+
+/// Graph cuts + churn across a diagonal of the matrix (every seed, cycling
+/// overlay and net so each appears at least twice).  The dynamic-overlay
+/// snapshot path, severed-edge drops, and rejoin regeneration must all
+/// stay byte-identical when queried from shard threads.
+#[test]
+fn parallel_matches_events_under_graph_cut_and_churn() {
+    for (i, &seed) in SEEDS.iter().enumerate() {
+        let topo = TOPOLOGIES[i % TOPOLOGIES.len()];
+        let net = NETS[i % NETS.len()];
+        let cfg = cell_cfg(seed, topo, net, Scenario::CutChurn);
+        let cell = format!("seed {seed}, {topo}, {net}, cut+churn");
+        assert_identical(&cfg, ExecMode::Events, ExecMode::Parallel { shards: 3 }, &cell);
+    }
+}
+
+/// Poison + trimmed-mean across the same diagonal: the adversary branch
+/// perturbs payload bytes and the robust rule reorders aggregation — both
+/// must be invariant to which shard hosts the poisoner.
+#[test]
+fn parallel_matches_events_under_poison_and_trimmed_mean() {
+    for (i, &seed) in SEEDS.iter().enumerate() {
+        let topo = TOPOLOGIES[i % TOPOLOGIES.len()];
+        let net = NETS[i % NETS.len()];
+        let cfg = cell_cfg(seed, topo, net, Scenario::Poison);
+        let cell = format!("seed {seed}, {topo}, {net}, poison");
+        assert_identical(&cfg, ExecMode::Events, ExecMode::Parallel { shards: 3 }, &cell);
+    }
+}
+
+/// Shard count must never matter: 1 (degenerate fast path), 2, 5, and 16
+/// (more shards than clients — clamped to singletons) all reproduce the
+/// reference on the hardest cell we have.
+#[test]
+fn every_shard_count_reproduces_the_reference() {
+    let cfg = cell_cfg(77, "small-world:4:0.1", "lossy-burst", Scenario::CutChurn);
+    for shards in [1usize, 2, 5, 16] {
+        let cell = format!("seed 77, small-world:4:0.1, lossy-burst, cut+churn, shards {shards}");
+        assert_identical(&cfg, ExecMode::Events, ExecMode::Parallel { shards }, &cell);
+    }
+}
+
+/// `parallel` is itself deterministic run-to-run (not merely equal to the
+/// reference once): repeated runs of the same cell fingerprint identically.
+#[test]
+fn parallel_is_reproducible_run_to_run() {
+    let cfg = cell_cfg(44, "k-regular:6", "lossy-burst", Scenario::Poison);
+    let a = run_cell(&cfg, ExecMode::Parallel { shards: 4 });
+    let b = run_cell(&cfg, ExecMode::Parallel { shards: 4 });
+    assert_eq!(a, b, "parallel executor must be bit-reproducible");
+}
+
+/// The full three-executor product — every seed × overlay × net ×
+/// scenario under `events`, `threads`, and `parallel:3` — is the
+/// executor-matrix leg of `scripts/tier1.sh` (skipped by `--fast`):
+///
+/// ```sh
+/// cargo test -q --release --test conformance -- --ignored
+/// ```
+#[test]
+#[ignore = "full executor matrix (minutes); run by scripts/tier1.sh"]
+fn full_three_executor_matrix_is_byte_identical() {
+    for scenario in SCENARIOS {
+        for &seed in &SEEDS {
+            for topo in TOPOLOGIES {
+                for net in NETS {
+                    let cfg = cell_cfg(seed, topo, net, scenario);
+                    let cell = format!("seed {seed}, {topo}, {net}, {scenario:?}");
+                    assert_identical(&cfg, ExecMode::Events, ExecMode::Threads, &cell);
+                    assert_identical(
+                        &cfg,
+                        ExecMode::Events,
+                        ExecMode::Parallel { shards: 3 },
+                        &cell,
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,8 +1,10 @@
 //! Scale tests (`#[ignore]`-gated — run with `cargo test -q -- --ignored`):
 //! the paper's §3 termination claims at client counts the paper's 12-client
 //! testbed never reached.  Only feasible under the virtual clock, and at
-//! four-digit counts only on the event executor (`ExecMode::Events`): one
-//! thread pumps every client as a state machine, so a 10 000-client
+//! four-digit counts only on the machine-per-struct executors: the event
+//! executor (`ExecMode::Events`) pumps every client as a state machine on
+//! one thread, and the sharded executor (`ExecMode::Parallel`) spreads the
+//! same machines over S worker threads — either way a 10 000-client
 //! deployment costs ten thousand small structs instead of ten thousand OS
 //! threads.
 
@@ -373,5 +375,101 @@ fn ten_thousand_clients_event_executor_with_crashes_and_drops() {
     assert!(
         peak > 0 && peak.saturating_sub(baseline) < 32,
         "expected a threadless deployment: baseline {baseline}, peak {peak}"
+    );
+}
+
+/// The parallel-executor scale acceptance (DESIGN.md §12): 10 000 clients
+/// on `k-regular:8` with 10% uniform loss under `--exec parallel:4` must
+/// (a) fingerprint byte-identically to the events reference, (b) reach
+/// all-Finished *adaptive* termination under `--quorum auto` (the sparse
+/// overlay + loss regime where paper-strict q never holds), and (c) cost
+/// S + O(1) OS threads — four shard workers plus fixed scaffolding, never
+/// anything per-client — asserted by sampling `/proc/self/status` while
+/// the sharded run is live.  Fault-free: crashes would make all-Finished
+/// unassertable, and the loss + churn-free overlay already exercises every
+/// cross-shard path (the conformance suite owns the fault matrix).
+#[test]
+#[ignore = "scale test: 10000 clients × 2 executors, minutes of compute"]
+fn ten_thousand_clients_parallel_executor_matches_events() {
+    let n = 10_000;
+    let shards = 4usize;
+    let budget = Duration::from_secs(
+        std::env::var("DFL_SCALE_BUDGET_SECS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1800),
+    );
+    let trainer = MockTrainer::lean_with_k_max(64);
+    let mut cfg = scale_cfg(&trainer, n, 99);
+    cfg.topology = TopologySpec::KRegular { d: 8 };
+    cfg.net = NetworkModel::lossy(0.10, 99);
+    cfg.protocol.quorum = QuorumSpec::parse("auto").unwrap();
+    cfg.protocol.min_rounds = 3;
+    cfg.protocol.max_rounds = 40;
+    cfg.partition = Partition::FixedChunk(64);
+    cfg.train_n = 2 * n;
+
+    let t0 = Instant::now();
+    cfg.exec = ExecMode::Events;
+    let ev = sim::run(&trainer, &cfg).unwrap();
+
+    // Watch the thread count only while the sharded run is live; the
+    // events baseline above keeps libtest's own workers out of the delta.
+    // Serialize with the other scale tests: `-- --ignored --test-threads=1`.
+    let baseline = current_thread_count().expect("reading /proc/self/status");
+    static STOP: AtomicBool = AtomicBool::new(false);
+    static MAX_THREADS: AtomicUsize = AtomicUsize::new(0);
+    let watcher = std::thread::spawn(|| {
+        while !STOP.load(Ordering::Relaxed) {
+            if let Some(t) = current_thread_count() {
+                MAX_THREADS.fetch_max(t, Ordering::Relaxed);
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    });
+    cfg.exec = ExecMode::Parallel { shards };
+    let pa = sim::run(&trainer, &cfg).unwrap();
+    let elapsed = t0.elapsed();
+    STOP.store(true, Ordering::Relaxed);
+    let _ = watcher.join();
+
+    // (a) byte identity, the whole acceptance criterion in one line each
+    let fe: Vec<u64> = ev.reports.iter().map(fingerprint).collect();
+    let fp: Vec<u64> = pa.reports.iter().map(fingerprint).collect();
+    assert_eq!(fe, fp, "parallel diverged from events at 10k clients");
+    assert_eq!(ev.wall, pa.wall);
+    assert_eq!(ev.net, pa.net, "traffic counters diverged");
+
+    // (b) all-Finished adaptive termination on the reference result
+    assert_eq!(ev.reports.len(), n);
+    assert_eq!(ev.crashed(), 0);
+    for r in &ev.reports {
+        assert!(r.final_accuracy.is_some(), "client {} never finalized", r.id);
+    }
+    assert!(
+        ev.all_terminated_adaptively(),
+        "10k sparse + loss must still finish adaptively; causes: {:?}",
+        ev.reports
+            .iter()
+            .filter(|r| !matches!(
+                r.cause,
+                TerminationCause::Converged | TerminationCause::Signaled
+            ))
+            .map(|r| (r.id, r.cause))
+            .take(10)
+            .collect::<Vec<_>>()
+    );
+    assert!(
+        elapsed < budget,
+        "10k-client double run took {elapsed:?}, budget {budget:?}"
+    );
+
+    // (c) S + O(1) threads: the four shard workers, the watcher, and a
+    // small fixed margin for allocator/runtime helpers.  Anything near n
+    // means the thread-per-client path ran instead.
+    let peak = MAX_THREADS.load(Ordering::Relaxed);
+    assert!(
+        peak > 0 && peak.saturating_sub(baseline) <= shards + 8,
+        "expected S + O(1) threads: baseline {baseline}, peak {peak}, shards {shards}"
     );
 }

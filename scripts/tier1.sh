@@ -3,6 +3,7 @@
 # Referenced by README.md ("Build, test, docs") and ROADMAP.md.
 #
 #   scripts/tier1.sh            # build + tests + doc check + bench build
+#                               # + executor conformance matrix
 #   scripts/tier1.sh --fast     # build + unit tests only (inner-loop mode)
 #   scripts/tier1.sh --scale    # additionally run the opt-in scale tests
 #                               # (200/1000/10000 clients; minutes)
@@ -49,6 +50,12 @@ RUSTDOCFLAGS="${RUSTDOCFLAGS:-} -D warnings" cargo doc --no-deps
 
 echo "==> cargo bench --no-run  (benches must keep compiling)"
 cargo bench --no-run
+
+# Executor-matrix leg: the full cross-executor conformance product
+# (events | threads | parallel over every seed × overlay × net ×
+# scenario cell).  Release mode keeps the ~600 small deployments quick.
+echo "==> cargo test -q --release --test conformance -- --ignored   (executor matrix)"
+cargo test -q --release --test conformance -- --ignored
 
 if [[ "$SCALE" == "1" ]]; then
   echo "==> cargo test -q -- --ignored --test-threads=1   (scale tests)"
