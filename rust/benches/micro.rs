@@ -11,6 +11,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use dfl::model::ParamVector;
+use dfl::net::delta::{DeltaMsg, DeltaRx, DeltaTx};
 use dfl::net::{InProcHub, Msg, ModelUpdate, NetworkModel, Transport};
 use dfl::runtime::Trainer;
 use dfl::util::benchkit::{bench_for, black_box};
@@ -174,6 +175,56 @@ fn main() {
     bench_for("codec/decode_model", budget, || {
         black_box(Msg::decode(&bytes).unwrap());
     });
+
+    // --- delta codec at synthetic model sizes (DESIGN.md §13) ---------------
+    // Steady-state link: the base round is acked, so every iteration pays
+    // the real per-round cost — top-K selection, sparse body build, wire
+    // encode/decode, and receiver reconstruction.  The dense rows run the
+    // same round trip through `Msg::Update` for comparison.
+    for &(dim, label) in &[(10_000usize, "10k"), (100_000usize, "100k")] {
+        let base: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+        // Every coordinate drifts, with varied magnitude, so top-K has a
+        // full candidate set to rank instead of a degenerate prefix.
+        let cur: Vec<f32> =
+            base.iter().enumerate().map(|(i, v)| v + 0.001 * (i % 97) as f32).collect();
+
+        let dense = Msg::Update(ModelUpdate {
+            sender: 1,
+            round: 2,
+            terminate: false,
+            weight: 1.0,
+            params: ParamVector(cur.clone()),
+        });
+        bench_for(&format!("codec/dense_{label}"), budget, || {
+            let bytes = dense.encode();
+            black_box(Msg::decode(&bytes).unwrap());
+        });
+
+        for (q16, name) in [(false, "delta64"), (true, "delta64_q16")] {
+            let mut tx = DeltaTx::new();
+            let mut rx = DeltaRx::new();
+            // Round 1 full snapshot + ack establishes the shared base.
+            let b1 = tx.encode(64, q16, 1, &base);
+            rx.decode(1, &b1).expect("full snapshot decodes");
+            tx.on_ack(&rx.ack());
+            bench_for(&format!("codec/{name}_{label}"), budget, || {
+                let body = tx.encode(64, q16, 2, &cur);
+                let msg = Msg::Delta(DeltaMsg {
+                    sender: 1,
+                    round: 2,
+                    terminate: false,
+                    weight: 1.0,
+                    ack: rx.ack(),
+                    body,
+                });
+                let bytes = msg.encode();
+                let Msg::Delta(dm) = Msg::decode(&bytes).unwrap() else {
+                    unreachable!("delta frames decode as deltas")
+                };
+                black_box(rx.decode(2, &dm.body).expect("acked base is held"));
+            });
+        }
+    }
 
     // --- broadcast fan-out (12 peers, ideal network) ------------------------
     let hub = InProcHub::new(12, NetworkModel::ideal());

@@ -4,6 +4,7 @@ use std::time::Duration;
 
 use anyhow::Result;
 
+use crate::net::CodecSpec;
 use crate::runtime::AggregationRule;
 
 /// How quorum-CCC's condition (a) picks its `q` (the `--quorum` flag).
@@ -125,6 +126,13 @@ pub struct ProtocolConfig {
     /// order statistics that bound what any `--adversary` client can do
     /// to the aggregate.
     pub agg: AggregationRule,
+    /// Model-exchange encoding (`--codec`, DESIGN.md §13):
+    /// [`CodecSpec::Dense`] (default) sends every update as the classic
+    /// dense `Msg::Update` — byte-identical per seed to the pre-codec
+    /// protocol — while `delta:K[,q16]` sends sparse top-K deltas against
+    /// per-link acked bases plus compact CRT flag relays, cutting
+    /// bytes/round by roughly `dim / K` once links are warmed up.
+    pub codec: CodecSpec,
 }
 
 impl Default for ProtocolConfig {
@@ -146,6 +154,7 @@ impl Default for ProtocolConfig {
             crt_enabled: true,
             quorum: QuorumSpec::STRICT,
             agg: AggregationRule::FedAvg,
+            codec: CodecSpec::Dense,
         }
     }
 }
@@ -185,6 +194,11 @@ mod tests {
             c.agg,
             AggregationRule::FedAvg,
             "default must be the byte-identical pre-rule path"
+        );
+        assert_eq!(
+            c.codec,
+            CodecSpec::Dense,
+            "default must be the byte-identical pre-codec path"
         );
     }
 

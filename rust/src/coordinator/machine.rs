@@ -100,7 +100,8 @@ use super::termination::{
 };
 use crate::metrics::{ClientReport, RoundRecord};
 use crate::model::ParamVector;
-use crate::net::{ClientId, ModelUpdate, Msg, Transport};
+use crate::net::delta::{DeltaMsg, DeltaRx, DeltaTx, FlagMsg};
+use crate::net::{ClientId, CodecSpec, ModelUpdate, Msg, Transport};
 use crate::runtime::{Meta, Trainer};
 use crate::util::time::{Clock, SimTime};
 use crate::util::Rng;
@@ -281,6 +282,45 @@ impl Window {
     }
 }
 
+/// Per-link delta-codec state (`--codec delta:K[,q16]`, DESIGN.md §13).
+/// Empty shells under `--codec dense`: no `Msg::Delta`/`Msg::Flag` traffic
+/// exists there, no map entry is ever created, and no send path consults
+/// this struct — which is what keeps dense runs byte-identical per seed to
+/// the pre-codec protocol.
+struct CodecState {
+    /// Sender side: per-neighbor acked-base windows ([`DeltaTx`]).
+    tx: BTreeMap<ClientId, DeltaTx>,
+    /// Receiver side: per-neighbor reconstruction windows ([`DeltaRx`]).
+    rx: BTreeMap<ClientId, DeltaRx>,
+    /// Peers whose own sends carried the terminate flag — they already
+    /// know, so the compact flag relay suppresses the flood toward them.
+    /// (The dense relay cannot do this: its forward doubles as the
+    /// origin's model payload, which the peer may still need.)
+    peers_with_flag: IdSet,
+    /// First flag seen under delta mode, as `(origin, round)` — what
+    /// [`AsyncMachine::relay_flag`] floods and the revival re-arm repeats.
+    /// The delta-mode twin of `relay_msg`, minus the model payload.
+    flag_relay: Option<(ClientId, u32)>,
+}
+
+impl CodecState {
+    fn new() -> CodecState {
+        CodecState {
+            tx: BTreeMap::new(),
+            rx: BTreeMap::new(),
+            peers_with_flag: IdSet::new(),
+            flag_relay: None,
+        }
+    }
+
+    /// The anti-entropy piggyback toward `peer`: what of theirs we hold
+    /// ([`DeltaRx::ack`]), carried on every delta-mode message we send
+    /// them so the reverse direction can promote its base window.
+    fn ack_for(&mut self, peer: ClientId) -> crate::net::delta::Ack {
+        self.rx.entry(peer).or_insert_with(DeltaRx::new).ack()
+    }
+}
+
 /// Phase 2 (Algorithm 2) as a state machine.  Per round: local training →
 /// (CRT check) → broadcast → bounded wait window → timeout crash detection
 /// → aggregate whatever arrived → evaluate → CCC check → next round.  No
@@ -336,6 +376,8 @@ pub struct AsyncMachine<'a> {
     /// Per-client quorum auto-tuner ([`QuorumSpec::Auto`]); idle under a
     /// fixed quorum.
     quorum_ctl: QuorumController,
+    /// Delta-codec link state (empty and untouched under `--codec dense`).
+    codec: CodecState,
     /// Origins whose flagged update we already processed (the receiver
     /// side of the relay dedup): the flood can deliver the same flagged
     /// broadcast several times — direct plus relayed copies — and only
@@ -400,6 +442,7 @@ impl<'a> AsyncMachine<'a> {
             relayed: false,
             relay_msg: None,
             quorum_ctl,
+            codec: CodecState::new(),
             flagged_seen: IdSet::new(),
             term: TerminationState::new(),
             monitor,
@@ -528,6 +571,17 @@ impl<'a> AsyncMachine<'a> {
         self.overlay_gen = gen;
         let neighbors = self.transport.neighbors();
         self.relay_sparse = neighbors.len() < self.transport.n_peers();
+        // Delta-codec base invalidation on churn/cut (DESIGN.md §13):
+        // drop link state for departed neighbors.  Correctness never
+        // depends on this — the acked-base protocol self-heals through
+        // the `need_full` NACK — it bounds memory on churn-heavy runs.
+        // An *entrant* simply has no entry yet, so its first send is a
+        // full snapshot (the "no shared base" rule) via the lazy
+        // `or_insert` on the send path.
+        if self.cfg.codec.is_delta() {
+            self.codec.tx.retain(|p, _| neighbors.contains(p));
+            self.codec.rx.retain(|p, _| neighbors.contains(p));
+        }
         let entered_alive = self.peer_table.retrack(&neighbors);
         for peer in entered_alive {
             self.rearm_relay(peer);
@@ -585,32 +639,9 @@ impl<'a> AsyncMachine<'a> {
         let sender = msg.sender();
         let tracked = self.peer_table.status(sender).is_some();
         match msg {
-            Msg::Update(u) => {
-                // Receiver-side relay dedup: only the first flagged update
-                // per origin carries liveness/aggregation semantics; a
-                // later (relayed) copy would otherwise re-stash the
-                // origin's stale round-r model into a later window.  The
-                // first copy to arrive — direct or relayed, they are
-                // byte-identical — wins.
-                let fresh = !u.terminate || self.flagged_seen.insert(sender);
-                if u.terminate && self.cfg.crt_enabled {
-                    self.term.signal_from(sender, self.round);
-                    self.relay_terminate(&u);
-                }
-                if tracked && fresh {
-                    let revived =
-                        self.peer_table.record_message(sender, self.round, u.terminate);
-                    let carried_flag = u.terminate;
-                    w.heard.insert(sender);
-                    w.resolve(sender);
-                    w.stash(sender, u, self.meta.k_max.saturating_sub(1));
-                    // A revival whose own message carried the flag needs no
-                    // re-arm — that peer terminated knowingly.
-                    if revived && !carried_flag {
-                        self.rearm_relay(sender);
-                    }
-                }
-            }
+            Msg::Update(u) => self.on_update(w, u),
+            Msg::Delta(d) => self.on_delta(w, d),
+            Msg::Flag(f) => self.on_flag(w, f),
             Msg::Hello { .. } => {
                 if tracked {
                     let revived = self.peer_table.record_message(sender, self.round, false);
@@ -632,6 +663,111 @@ impl<'a> AsyncMachine<'a> {
         }
     }
 
+    /// Shared handling of a full model update — dense `Msg::Update`
+    /// traffic, and the synthesized equivalent of a successfully
+    /// reconstructed `Msg::Delta` (one window/liveness/CCC code path for
+    /// both codecs, so the protocol semantics cannot drift between them).
+    fn on_update(&mut self, w: &mut Window, u: ModelUpdate) {
+        let sender = u.sender;
+        let tracked = self.peer_table.status(sender).is_some();
+        if u.terminate {
+            self.codec.peers_with_flag.insert(sender);
+        }
+        // Receiver-side relay dedup: only the first flagged update
+        // per origin carries liveness/aggregation semantics; a
+        // later (relayed) copy would otherwise re-stash the
+        // origin's stale round-r model into a later window.  The
+        // first copy to arrive — direct or relayed, they are
+        // byte-identical — wins.
+        let fresh = !u.terminate || self.flagged_seen.insert(sender);
+        if u.terminate && self.cfg.crt_enabled {
+            self.term.signal_from(sender, self.round);
+            self.relay_terminate(&u);
+        }
+        if tracked && fresh {
+            let revived = self.peer_table.record_message(sender, self.round, u.terminate);
+            let carried_flag = u.terminate;
+            w.heard.insert(sender);
+            w.resolve(sender);
+            w.stash(sender, u, self.meta.k_max.saturating_sub(1));
+            // A revival whose own message carried the flag needs no
+            // re-arm — that peer terminated knowingly.
+            if revived && !carried_flag {
+                self.rearm_relay(sender);
+            }
+        }
+    }
+
+    /// One delta-codec model broadcast (DESIGN.md §13).  The ack
+    /// piggyback advances our sender-side base window for this peer
+    /// whether or not the body reconstructs; a successful reconstruction
+    /// then flows through [`AsyncMachine::on_update`] exactly like a
+    /// dense update.
+    fn on_delta(&mut self, w: &mut Window, d: DeltaMsg) {
+        let sender = d.sender;
+        self.codec.tx.entry(sender).or_insert_with(DeltaTx::new).on_ack(&d.ack);
+        // Bound to a local first: a match scrutinee's temporaries (here the
+        // map `Entry` and its borrow of `self`) live through the arms.
+        let decoded =
+            self.codec.rx.entry(sender).or_insert_with(DeltaRx::new).decode(d.round, &d.body);
+        match decoded {
+            Some(params) => self.on_update(
+                w,
+                ModelUpdate {
+                    sender,
+                    round: d.round,
+                    terminate: d.terminate,
+                    weight: d.weight,
+                    params: ParamVector(params),
+                },
+            ),
+            None => {
+                // No shared base (boot race, NACK window): the ack we
+                // piggyback on our next send carries `need_full`, and the
+                // sender falls back to a snapshot — self-healing.  The
+                // bytes still prove the sender alive, and its terminate
+                // flag still counts: dropping either would turn a codec
+                // miss into a false crash suspicion or a lost flood.
+                if d.terminate {
+                    self.codec.peers_with_flag.insert(sender);
+                    if self.cfg.crt_enabled {
+                        self.term.signal_from(sender, self.round);
+                        self.relay_flag(sender, d.round);
+                    }
+                }
+                if self.peer_table.status(sender).is_some() {
+                    let revived =
+                        self.peer_table.record_message(sender, self.round, d.terminate);
+                    w.heard.insert(sender);
+                    w.resolve(sender);
+                    if revived && !d.terminate {
+                        self.rearm_relay(sender);
+                    }
+                }
+            }
+        }
+    }
+
+    /// A compact CRT flag relay (delta mode's replacement for the dense
+    /// full-model forward): provenance and round tag, no model payload.
+    fn on_flag(&mut self, w: &mut Window, f: FlagMsg) {
+        self.codec.tx.entry(f.sender).or_insert_with(DeltaTx::new).on_ack(&f.ack);
+        // The forwarder evidently knows the flag; so, by construction,
+        // does the origin.
+        self.codec.peers_with_flag.insert(f.sender);
+        self.codec.peers_with_flag.insert(f.origin);
+        if self.cfg.crt_enabled {
+            self.term.signal_from(f.origin, self.round);
+            self.relay_flag(f.origin, f.round);
+        }
+        // First sighting of this origin's flag: the origin is finishing,
+        // so its silence must not hold windows open or read as a crash.
+        if self.peer_table.status(f.origin).is_some() && self.flagged_seen.insert(f.origin) {
+            self.peer_table.record_message(f.origin, self.round, true);
+            w.resolve(f.origin);
+        }
+    }
+
     /// CRT flag relay over a sparse overlay: forward the first flagged
     /// update we see to our whole neighborhood, verbatim (the origin's
     /// sender id and round tag ride along, so provenance and round
@@ -646,6 +782,13 @@ impl<'a> AsyncMachine<'a> {
     /// there every peer hears the origin directly, and extra sends would
     /// shift the seeded link streams.
     fn relay_terminate(&mut self, u: &ModelUpdate) {
+        if self.cfg.codec.is_delta() {
+            // Delta mode relays the flag, not the model: ~20 bytes of
+            // provenance instead of a dense forward (anti-entropy — the
+            // neighborhood already has our model content via deltas).
+            self.relay_flag(u.sender, u.round);
+            return;
+        }
         if !self.relay_sparse {
             return;
         }
@@ -662,6 +805,35 @@ impl<'a> AsyncMachine<'a> {
         let _ = self.transport.broadcast(&Msg::Update(u.clone()));
     }
 
+    /// Delta-mode twin of [`AsyncMachine::relay_terminate`]: flood a
+    /// compact [`FlagMsg`] — suppressed toward peers whose own sends
+    /// already carried the flag (they know; repeating it buys nothing),
+    /// which the dense relay cannot do because its forward is also the
+    /// origin's model payload.  Same one-forward-per-client dedup
+    /// (`relayed`) and same sparse-only gate as the dense path.
+    fn relay_flag(&mut self, origin: ClientId, round: u32) {
+        if !self.relay_sparse {
+            return;
+        }
+        if self.codec.flag_relay.is_none() {
+            // Kept for the revival/entrant re-arm, whether or not we are
+            // the one who forwards the flood (see `relay_msg`).
+            self.codec.flag_relay = Some((origin, round));
+        }
+        if self.relayed {
+            return;
+        }
+        self.relayed = true;
+        for peer in self.transport.neighbors() {
+            if self.codec.peers_with_flag.contains(peer) {
+                continue;
+            }
+            let ack = self.codec.ack_for(peer);
+            let msg = Msg::Flag(FlagMsg { sender: self.id, origin, round, ack });
+            let _ = self.transport.send(peer, &msg);
+        }
+    }
+
     /// Relay re-arm (bugfix, DESIGN.md §10): the flood's dedup is
     /// one-shot — each client forwards at most once — so a neighbor that
     /// crashed with `rejoin_after` set and drained its mailbox on resume
@@ -675,6 +847,16 @@ impl<'a> AsyncMachine<'a> {
     /// deliveries are harmless — the receiver-side per-origin dedup
     /// ignores all but the first copy.
     fn rearm_relay(&mut self, peer: ClientId) {
+        if self.cfg.codec.is_delta() {
+            if let Some((origin, round)) = self.codec.flag_relay {
+                if !self.codec.peers_with_flag.contains(peer) {
+                    let ack = self.codec.ack_for(peer);
+                    let msg = Msg::Flag(FlagMsg { sender: self.id, origin, round, ack });
+                    let _ = self.transport.send(peer, &msg);
+                }
+            }
+            return;
+        }
         if let Some(flag) = &self.relay_msg {
             let _ = self.transport.send(peer, &Msg::Update(flag.clone()));
         }
@@ -814,8 +996,32 @@ impl<'a> AsyncMachine<'a> {
             // Honest path: the true model to the whole neighborhood.
             // Best-effort: unreachable peers are handled by the crash model.
             None => {
-                let msg = update(self.params.clone(), self.id, self.round, self.my_weight);
-                let _ = self.transport.broadcast(&msg);
+                if let CodecSpec::Delta { k, q16 } = self.cfg.codec {
+                    // Per-link bodies: each neighbor's delta is encoded
+                    // against the base *that neighbor* acked, so one
+                    // broadcast becomes d tailored sends (DESIGN.md §13).
+                    for peer in self.transport.neighbors() {
+                        let ack = self.codec.ack_for(peer);
+                        let body = self
+                            .codec
+                            .tx
+                            .entry(peer)
+                            .or_insert_with(DeltaTx::new)
+                            .encode(k, q16, self.round, &self.params);
+                        let msg = Msg::Delta(DeltaMsg {
+                            sender: self.id,
+                            round: self.round,
+                            terminate,
+                            weight: self.my_weight,
+                            ack,
+                            body,
+                        });
+                        let _ = self.transport.send(peer, &msg);
+                    }
+                } else {
+                    let msg = update(self.params.clone(), self.id, self.round, self.my_weight);
+                    let _ = self.transport.broadcast(&msg);
+                }
             }
             // Every coordinate scaled (negative = inverted direction):
             // dominates a mean, gets trimmed/out-voted by robust rules.

@@ -34,6 +34,7 @@ pub mod termination;
 
 pub use async_client::{AsyncClient, ClientData, EvalTensors};
 pub use config::{ProtocolConfig, QuorumSpec};
+pub use crate::net::CodecSpec;
 pub use failure::{IdSet, PeerStatus, PeerTable};
 pub use fault::{
     compile_adversaries, AdversaryKind, AdversarySpec, CrashPoint, CutSpec, FaultPlan, GraphFault,

@@ -41,7 +41,7 @@ use std::time::Duration;
 
 use crate::coordinator::config::QuorumSpec;
 use crate::coordinator::ProtocolConfig;
-use crate::net::{NetPreset, TopologySpec};
+use crate::net::{CodecSpec, NetPreset, TopologySpec};
 use crate::runtime::{AggregationRule, Meta, Trainer};
 use crate::sim::{ExecMode, SimConfig};
 use crate::util::benchkit::Table;
@@ -92,6 +92,11 @@ pub struct ExpScale {
     /// pre-rule path; the CLI's `--agg`).  The byzantine driver sweeps
     /// rules itself and ignores this override within its rule column.
     pub agg: Option<AggregationRule>,
+    /// Override the model-exchange codec (None = `Dense`, the
+    /// byte-identical pre-codec path; the CLI's `--codec`).  Phase-1
+    /// drivers ignore it — `sim::run` rejects delta under sync, so the
+    /// override applies to async deployments only.
+    pub codec: Option<CodecSpec>,
 }
 
 impl Default for ExpScale {
@@ -110,6 +115,7 @@ impl Default for ExpScale {
             topology: None,
             quorum: None,
             agg: None,
+            codec: None,
         }
     }
 }
@@ -157,6 +163,7 @@ impl ExpScale {
             crt_enabled: true,
             quorum: self.quorum.unwrap_or(QuorumSpec::STRICT),
             agg: self.agg.unwrap_or(AggregationRule::FedAvg),
+            codec: self.codec.unwrap_or(CodecSpec::Dense),
         }
     }
 
@@ -171,6 +178,12 @@ impl ExpScale {
     /// per-row seeds) on top.
     pub(crate) fn configure(&self, cfg: &mut SimConfig, meta: &Meta) {
         cfg.protocol = self.protocol(cfg.n_clients);
+        // Phase-1 drivers keep the dense codec: their barrier exchanges
+        // round-tagged full models (`sim::run` rejects delta under sync),
+        // so a global `--codec delta` override applies to async rows only.
+        if cfg.sync {
+            cfg.protocol.codec = CodecSpec::Dense;
+        }
         cfg.train_n = self.train_n(cfg.n_clients);
         cfg.virtual_time = self.virtual_time;
         cfg.exec = self.exec;

@@ -24,7 +24,7 @@
 
 use super::{clear_latency_ceiling, pct, secs, ExpScale};
 use crate::coordinator::termination::TerminationCause;
-use crate::net::{NetPreset, NetworkModel, TopologySpec};
+use crate::net::{CodecSpec, NetPreset, NetworkModel, TopologySpec};
 use crate::runtime::Trainer;
 use crate::sim::{self, Partition, SimConfig};
 use crate::util::benchkit::Table;
@@ -39,8 +39,10 @@ pub fn scenarios(trainer: &(dyn Trainer + Sync), scale: ExpScale) -> Table {
         "Time (s)",
         "Adaptive Term. (%)",
         "False Suspicions",
+        "Codec",
+        "kB/round",
     ]);
-    for preset in NetPreset::ALL {
+    let mut run_row = |label: String, preset: NetPreset, codec: Option<CodecSpec>| {
         // The network is the sweep variable: each row configures through a
         // scale whose preset is forced to the row's own, so a scale-level
         // `--net` neither survives into the sweep nor ratchets any other
@@ -48,7 +50,8 @@ pub fn scenarios(trainer: &(dyn Trainer + Sync), scale: ExpScale) -> Table {
         // identical across rows.  `configure` floors each row's window at
         // its own preset's latency ceiling, so rows measure the network,
         // not the timeout constant.
-        let row_scale = ExpScale { net: Some(preset), ..scale };
+        let row_scale =
+            ExpScale { net: Some(preset), codec: codec.or(scale.codec), ..scale };
         let mut cfg = SimConfig::for_meta(n, &meta);
         cfg.partition = Partition::Dirichlet(0.6);
         row_scale.configure(&mut cfg, &meta);
@@ -71,13 +74,25 @@ pub fn scenarios(trainer: &(dyn Trainer + Sync), scale: ExpScale) -> Table {
             .map(|h| h.crashes_detected.len())
             .sum();
         table.row(&[
-            preset.name().to_string(),
+            label,
             pct(res.mean_accuracy()),
             res.rounds().to_string(),
             secs(res.wall),
             format!("{:.0}", 100.0 * adaptive as f32 / n as f32),
             false_suspicions.to_string(),
+            cfg.protocol.codec.name(),
+            format!("{:.1}", res.net.bytes_per_round(res.rounds()) / 1024.0),
         ]);
+    };
+    for preset in NetPreset::ALL {
+        run_row(preset.name().to_string(), preset, None);
+    }
+    // Codec comparison rows (DESIGN.md §13): the two heaviest presets
+    // re-run under delta:64, so the table shows dense vs delta kB/round on
+    // the same seed — the order-of-magnitude claim, measured not argued.
+    let delta = CodecSpec::Delta { k: 64, q16: false };
+    for preset in [NetPreset::Wan, NetPreset::LossyBurst] {
+        run_row(format!("{}+{}", preset.name(), delta.name()), preset, Some(delta));
     }
     table
 }
@@ -106,6 +121,8 @@ pub fn topologies(trainer: &(dyn Trainer + Sync), scale: ExpScale) -> Table {
         "Rounds",
         "Adaptive Term. (%)",
         "Accuracy (%)",
+        "kB saved/round",
+        "Δ-hit (%)",
     ]);
     for spec in sweep {
         // The overlay is the sweep variable; `scale.topology` (the global
@@ -142,6 +159,13 @@ pub fn topologies(trainer: &(dyn Trainer + Sync), scale: ExpScale) -> Table {
             res.rounds().to_string(),
             format!("{:.0}", 100.0 * adaptive as f32 / n as f32),
             pct(res.mean_accuracy()),
+            // Zero under the default dense codec; a `--codec delta:K`
+            // override turns these into the per-overlay savings columns.
+            format!(
+                "{:.1}",
+                res.net.bytes_saved as f64 / res.rounds().max(1) as f64 / 1024.0
+            ),
+            format!("{:.0}", res.net.delta_hit_rate() * 100.0),
         ]);
     }
     table

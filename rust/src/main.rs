@@ -83,6 +83,7 @@ fn cmd_sim(args: Vec<String>) -> Result<()> {
         .opt("fault", Some(""), "graph-fault schedule, ';'-separated: graph-cut:T1-T2:mincut|A-B,... and churn:CLIENT:LEAVE[-REJOIN] (seconds)")
         .opt("adversary", Some(""), "Byzantine roster, ';'-separated: poison:SCALE:IDS, equivocate:IDS, stale-replay:IDS, forge-suspicion:IDS (IDS = C1,C2,...)")
         .opt("agg", Some("fedavg"), "aggregation rule: fedavg | trimmed-mean:F | coord-median | krum:F")
+        .opt("codec", Some("dense"), "model-exchange codec: dense (byte-identical default) | delta:K[,q16] (sparse top-K deltas + compact flag relays)")
         .opt("train-cost-ms", Some("20"), "modeled per-round train cost under --virtual")
         .opt("exec", Some("events"), "--virtual executor: events (single-threaded reference), parallel[:S] (S shard threads, byte-identical), or threads")
         .switch("virtual", "deterministic virtual clock instead of wall time")
@@ -110,6 +111,7 @@ fn cmd_sim(args: Vec<String>) -> Result<()> {
     cfg.topology = dfl::net::TopologySpec::parse(a.str("topology"))?;
     cfg.protocol.quorum = parse_quorum(&a)?;
     cfg.protocol.agg = dfl::runtime::AggregationRule::parse(a.str("agg"))?;
+    cfg.protocol.codec = dfl::net::CodecSpec::parse(a.str("codec"))?;
     cfg.graph_faults = dfl::coordinator::GraphFault::parse_list(a.str("fault"))?;
     cfg.adversaries = dfl::coordinator::AdversarySpec::parse_list(a.str("adversary"))?;
     cfg.virtual_time = a.bool("virtual");
@@ -140,7 +142,7 @@ fn cmd_sim(args: Vec<String>) -> Result<()> {
         );
     }
     println!(
-        "running {} clients ({}), {} machines, {} crashes, {} graph faults, {} adversaries, agg {}, net {}, topology {} (q={}), {} clock{}, seed {}",
+        "running {} clients ({}), {} machines, {} crashes, {} graph faults, {} adversaries, agg {}, codec {}, net {}, topology {} (q={}), {} clock{}, seed {}",
         n,
         if cfg.sync { "phase 1 sync" } else { "phase 2 async" },
         cfg.machines,
@@ -148,6 +150,7 @@ fn cmd_sim(args: Vec<String>) -> Result<()> {
         cfg.graph_faults.len(),
         cfg.adversaries.iter().map(|s| s.clients.len()).sum::<usize>(),
         cfg.protocol.agg.name(),
+        cfg.protocol.codec.name(),
         a.str("net"),
         cfg.topology.name(),
         cfg.protocol.quorum.name(),
@@ -292,6 +295,7 @@ fn cmd_reproduce(args: Vec<String>) -> Result<()> {
         .opt("topology", Some(""), "override every async driver's peer overlay (full|ring:K|k-regular:D|small-world:D:P)")
         .opt("quorum", Some(""), "override quorum-CCC condition (a): a fraction, auto, or auto:Q_MIN; empty = 1.0, paper-strict")
         .opt("agg", Some(""), "override the aggregation rule (fedavg|trimmed-mean:F|coord-median|krum:F); empty = fedavg")
+        .opt("codec", Some(""), "override the async model-exchange codec (dense|delta:K[,q16]); empty = dense")
         .opt("train-cost-ms", Some("20"), "modeled per-round train cost under virtual time")
         .opt("exec", Some("events"), "virtual-time executor: events, parallel[:S], or threads")
         .switch("full", "full grids (slower) instead of quick mode")
@@ -315,6 +319,9 @@ fn cmd_reproduce(args: Vec<String>) -> Result<()> {
     }
     if !a.str("agg").is_empty() {
         scale.agg = Some(dfl::runtime::AggregationRule::parse(a.str("agg"))?);
+    }
+    if !a.str("codec").is_empty() {
+        scale.codec = Some(dfl::net::CodecSpec::parse(a.str("codec"))?);
     }
 
     let runs: Vec<(String, dfl::util::benchkit::Table)> = match what {

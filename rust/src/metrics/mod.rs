@@ -98,6 +98,16 @@ pub struct NetStats {
     /// the measured "how hard was the graph attacked" axis of the
     /// `exp::faults` sweep.  Zero on a fault-free run.
     pub edges_severed: u64,
+    /// Bytes the delta codec (DESIGN.md §13) kept off the wire: the sum
+    /// over delta-mode sends of `dense_encoding_size − actual_wire_size`.
+    /// Zero under `--codec dense`.
+    pub bytes_saved: u64,
+    /// Delta-mode sends that rode a sparse delta or a compact flag relay
+    /// (the codec doing its job).
+    pub delta_hits: u64,
+    /// Delta-mode sends that fell back to a full snapshot (boot, rejoin,
+    /// cut heal, NACK, non-finite q16 payloads).
+    pub delta_full: u64,
 }
 
 impl NetStats {
@@ -110,6 +120,17 @@ impl NetStats {
     /// Mean bytes offered per protocol round.
     pub fn bytes_per_round(&self, rounds: u32) -> f64 {
         self.bytes_sent as f64 / rounds.max(1) as f64
+    }
+
+    /// Fraction of delta-codec sends that avoided a full snapshot, in
+    /// [0, 1] (0 when the codec never ran, i.e. under `--codec dense`).
+    pub fn delta_hit_rate(&self) -> f64 {
+        let total = self.delta_hits + self.delta_full;
+        if total == 0 {
+            0.0
+        } else {
+            self.delta_hits as f64 / total as f64
+        }
     }
 }
 
@@ -136,10 +157,22 @@ mod tests {
             msgs_dropped: 20,
             bytes_sent: 1200,
             edges_severed: 0,
+            bytes_saved: 0,
+            delta_hits: 0,
+            delta_full: 0,
         };
         assert_eq!(s.msgs_per_round(10), 12.0);
         assert_eq!(s.bytes_per_round(10), 120.0);
         assert_eq!(s.msgs_per_round(0), 120.0, "0 rounds must not divide by zero");
+    }
+
+    #[test]
+    fn delta_hit_rate_guards_empty_and_divides() {
+        let mut s = NetStats::default();
+        assert_eq!(s.delta_hit_rate(), 0.0, "dense runs report 0, not NaN");
+        s.delta_hits = 3;
+        s.delta_full = 1;
+        assert_eq!(s.delta_hit_rate(), 0.75);
     }
 
     #[test]

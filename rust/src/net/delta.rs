@@ -1,0 +1,1193 @@
+//! Sparse delta codec + anti-entropy link state for model exchange
+//! (DESIGN.md §13).
+//!
+//! Under `--codec delta:K[,q16]` a model broadcast no longer ships the
+//! full parameter vector to every neighbor every round.  Each *directed
+//! link* keeps codec state on both ends:
+//!
+//! * the **sender** ([`DeltaTx`]) remembers, per neighbor, the receiver's
+//!   reconstruction at the last round that neighbor *acknowledged* (the
+//!   shadow), plus a short window of reconstructions it has sent but not
+//!   yet seen acked;
+//! * the **receiver** ([`DeltaRx`]) keeps a short window of reconstructed
+//!   rounds, pins whichever round the sender is currently using as its
+//!   delta base, and piggybacks an [`Ack`] — its per-link model version
+//!   vector — on every message it sends back (the scuttlebutt-style
+//!   anti-entropy exchange: each side always tells the other how much of
+//!   its state it already holds, so nothing already-known is resent).
+//!
+//! A sparse body carries the top-K coordinates of `|params − shadow|`,
+//! but the wire carries the **new parameter values** at those indices,
+//! not differences: reconstruction is `shadow` with those coordinates
+//! overwritten, which is bit-exact and makes residual accumulation
+//! implicit — a coordinate not selected this round keeps its full
+//! outstanding drift `|params[i] − shadow[i]|` and stays in contention
+//! until it is transmitted, so dropped or deferred mass is never lost.
+//! The sender records the exact reconstruction the receiver will compute
+//! (for q16, the *dequantized* values), so shadow and reconstruction
+//! agree bit-for-bit on both ends without any second channel.
+//!
+//! When no shared base exists — boot, a rejoin after churn, a cut heal,
+//! or a receiver NACK (`need_full`) — the sender falls back to a full
+//! snapshot, which always decodes.  All state advances in sender/receiver
+//! program order per link, so the executor conformance matrix
+//! (`tests/conformance.rs`) holds byte-for-byte under `delta` exactly as
+//! it does under `dense`.
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+use crate::util::codec::{Reader, SliceWriter};
+
+use super::message::{ClientId, Msg};
+
+/// How many recent reconstructions each link end retains beyond the
+/// pinned delta base.  Acks normally lag one round, so a handful is
+/// plenty; a deeper loss streak falls back to a full snapshot via
+/// `need_full` instead of growing memory.
+const HISTORY: usize = 8;
+
+// ---------------------------------------------------------------------------
+// CodecSpec — the `--codec` knob
+// ---------------------------------------------------------------------------
+
+/// Wire codec for model broadcasts (the `--codec` knob).
+///
+/// ```
+/// use dfl::net::CodecSpec;
+/// assert_eq!(CodecSpec::parse("dense").unwrap(), CodecSpec::Dense);
+/// assert_eq!(
+///     CodecSpec::parse("delta:64").unwrap(),
+///     CodecSpec::Delta { k: 64, q16: false }
+/// );
+/// assert_eq!(
+///     CodecSpec::parse("delta:32,q16").unwrap(),
+///     CodecSpec::Delta { k: 32, q16: true }
+/// );
+/// assert!(CodecSpec::parse("delta:0").is_err());
+/// assert_eq!(CodecSpec::parse("delta:64,q16").unwrap().name(), "delta:64,q16");
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum CodecSpec {
+    /// Full model every message — the paper's wire format, byte-identical
+    /// per seed to every release before the codec existed.
+    #[default]
+    Dense,
+    /// Sparse top-`k` delta against the per-link acknowledged base, with
+    /// optional u16 quantization of the transmitted values.
+    Delta {
+        /// Coordinates transmitted per sparse message.
+        k: usize,
+        /// Quantize transmitted values to u16 against a per-message
+        /// affine range (lossy; halves the payload of the value block).
+        q16: bool,
+    },
+}
+
+impl CodecSpec {
+    pub fn parse(s: &str) -> Result<CodecSpec> {
+        let s = s.trim();
+        if s.is_empty() || s == "dense" {
+            return Ok(CodecSpec::Dense);
+        }
+        if let Some(rest) = s.strip_prefix("delta:") {
+            let (k_str, q16) = match rest.strip_suffix(",q16") {
+                Some(k_str) => (k_str, true),
+                None => (rest, false),
+            };
+            let k: usize = k_str
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad codec k in {s:?}; want delta:K[,q16]"))?;
+            if k == 0 {
+                bail!("codec {s:?}: k must be >= 1");
+            }
+            return Ok(CodecSpec::Delta { k, q16 });
+        }
+        bail!("unknown codec {s:?}; want dense | delta:K[,q16]")
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            CodecSpec::Dense => "dense".into(),
+            CodecSpec::Delta { k, q16: false } => format!("delta:{k}"),
+            CodecSpec::Delta { k, q16: true } => format!("delta:{k},q16"),
+        }
+    }
+
+    pub fn is_delta(&self) -> bool {
+        matches!(self, CodecSpec::Delta { .. })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Wire types
+// ---------------------------------------------------------------------------
+
+/// Per-link anti-entropy acknowledgment, piggybacked on every delta-mode
+/// message: "of *your* model, the highest round I have reconstructed is
+/// `round`" — a one-entry version vector for the reverse direction of the
+/// link.  `need_full` is the NACK: the receiver lost the sender's delta
+/// base and wants a full snapshot.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Ack {
+    pub round: u32,
+    /// False until the first successful reconstruction (and again after a
+    /// churn/cut reset) — tells the peer "assume no shared base".
+    pub have: bool,
+    pub need_full: bool,
+}
+
+impl Ack {
+    pub const NONE: Ack = Ack { round: 0, have: false, need_full: false };
+
+    const WIRE: usize = 4 + 1 + 1;
+
+    fn encode_into(&self, w: &mut SliceWriter) {
+        w.u32(self.round);
+        w.bool(self.have);
+        w.bool(self.need_full);
+    }
+
+    fn decode(r: &mut Reader) -> Result<Ack> {
+        Ok(Ack { round: r.u32()?, have: r.bool()?, need_full: r.bool()? })
+    }
+}
+
+/// Transmitted values of a sparse body.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SparseVals {
+    /// Raw f32 bits — reconstruction is exact at the selected indices.
+    F32(Vec<f32>),
+    /// u16 quantization against a per-message affine range: value `i`
+    /// decodes as `lo + scale * (q[i] / 65535)`.  The sender applies the
+    /// *dequantized* values to its own shadow, so both ends still agree
+    /// bit-for-bit.
+    Q16 { lo: f32, scale: f32, q: Vec<u16> },
+}
+
+/// Body of a delta-mode model message.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DeltaBody {
+    /// Complete parameter vector — the no-shared-base fallback (boot,
+    /// rejoin, cut heal, NACK) and the k ≥ dim degenerate case.
+    Full(Vec<f32>),
+    /// Top-K coordinates against the reconstruction the receiver holds
+    /// for `base_round`; `idx` is strictly ascending, values parallel.
+    Sparse { base_round: u32, dim: u32, idx: Vec<u32>, vals: SparseVals },
+}
+
+const BODY_FULL: u8 = 0;
+const BODY_SPARSE: u8 = 1;
+const VALS_F32: u8 = 0;
+const VALS_Q16: u8 = 1;
+
+/// Indices ride as u16 when the model dimension allows it.
+fn narrow_idx(dim: u32) -> bool {
+    dim <= u16::MAX as u32
+}
+
+impl DeltaBody {
+    /// Model dimension this body reconstructs to.
+    pub fn dim(&self) -> usize {
+        match self {
+            DeltaBody::Full(p) => p.len(),
+            DeltaBody::Sparse { dim, .. } => *dim as usize,
+        }
+    }
+
+    fn wire_len(&self) -> usize {
+        match self {
+            DeltaBody::Full(p) => 1 + 4 + p.len() * 4,
+            DeltaBody::Sparse { dim, idx, vals, .. } => {
+                let idx_w = if narrow_idx(*dim) { 2 } else { 4 };
+                let vals_w = match vals {
+                    SparseVals::F32(v) => v.len() * 4,
+                    SparseVals::Q16 { q, .. } => 4 + 4 + q.len() * 2,
+                };
+                1 + 4 + 4 + 4 + idx.len() * idx_w + 1 + vals_w
+            }
+        }
+    }
+
+    fn encode_into(&self, w: &mut SliceWriter) {
+        match self {
+            DeltaBody::Full(p) => {
+                w.u8(BODY_FULL);
+                w.f32_slice(p);
+            }
+            DeltaBody::Sparse { base_round, dim, idx, vals } => {
+                w.u8(BODY_SPARSE);
+                w.u32(*base_round);
+                w.u32(*dim);
+                w.u32(idx.len() as u32);
+                if narrow_idx(*dim) {
+                    for &i in idx {
+                        w.u16(i as u16);
+                    }
+                } else {
+                    for &i in idx {
+                        w.u32(i);
+                    }
+                }
+                match vals {
+                    SparseVals::F32(v) => {
+                        w.u8(VALS_F32);
+                        for &x in v {
+                            w.f32(x);
+                        }
+                    }
+                    SparseVals::Q16 { lo, scale, q } => {
+                        w.u8(VALS_Q16);
+                        w.f32(*lo);
+                        w.f32(*scale);
+                        for &x in q {
+                            w.u16(x);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn decode(r: &mut Reader) -> Result<DeltaBody> {
+        match r.u8()? {
+            BODY_FULL => Ok(DeltaBody::Full(r.f32_vec()?)),
+            BODY_SPARSE => {
+                let base_round = r.u32()?;
+                let dim = r.u32()?;
+                let count = r.u32()? as usize;
+                // count is attacker-controlled: bound it by what the body
+                // can legitimately carry before sizing any allocation.
+                if count > dim as usize {
+                    bail!("sparse delta claims {count} coords over dim {dim}");
+                }
+                let idx_bytes = count * if narrow_idx(dim) { 2 } else { 4 };
+                if idx_bytes > r.remaining() {
+                    bail!("sparse delta index block truncated");
+                }
+                let mut idx = Vec::with_capacity(count);
+                if narrow_idx(dim) {
+                    for _ in 0..count {
+                        idx.push(r.u16()? as u32);
+                    }
+                } else {
+                    for _ in 0..count {
+                        idx.push(r.u32()?);
+                    }
+                }
+                // Strictly ascending in-range indices: rejects duplicates,
+                // out-of-bounds writes, and non-canonical encodings.
+                for w in idx.windows(2) {
+                    if w[1] <= w[0] {
+                        bail!("sparse delta indices not strictly ascending");
+                    }
+                }
+                if let Some(&last) = idx.last() {
+                    if last >= dim {
+                        bail!("sparse delta index {last} out of range (dim {dim})");
+                    }
+                }
+                let vals = match r.u8()? {
+                    VALS_F32 => {
+                        let mut v = Vec::with_capacity(count);
+                        for _ in 0..count {
+                            v.push(r.f32()?);
+                        }
+                        SparseVals::F32(v)
+                    }
+                    VALS_Q16 => {
+                        let lo = r.f32()?;
+                        let scale = r.f32()?;
+                        let mut q = Vec::with_capacity(count);
+                        for _ in 0..count {
+                            q.push(r.u16()?);
+                        }
+                        SparseVals::Q16 { lo, scale, q }
+                    }
+                    t => bail!("unknown sparse value kind {t}"),
+                };
+                Ok(DeltaBody::Sparse { base_round, dim, idx, vals })
+            }
+            t => bail!("unknown delta body kind {t}"),
+        }
+    }
+}
+
+/// A delta-mode model broadcast: the `Msg::Update` fields plus the
+/// anti-entropy piggyback and the (full or sparse) body.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeltaMsg {
+    pub sender: ClientId,
+    pub round: u32,
+    pub terminate: bool,
+    pub weight: f32,
+    /// Reverse-direction version vector for this link (receiver→sender
+    /// model state), advanced in program order.
+    pub ack: Ack,
+    pub body: DeltaBody,
+}
+
+impl DeltaMsg {
+    pub(crate) fn wire_len(&self) -> usize {
+        4 + 4 + 1 + 4 + Ack::WIRE + self.body.wire_len()
+    }
+
+    pub(crate) fn encode_into(&self, w: &mut SliceWriter) {
+        w.u32(self.sender);
+        w.u32(self.round);
+        w.bool(self.terminate);
+        w.f32(self.weight);
+        self.ack.encode_into(w);
+        self.body.encode_into(w);
+    }
+
+    pub(crate) fn decode(r: &mut Reader) -> Result<DeltaMsg> {
+        let sender = r.u32()?;
+        let round = r.u32()?;
+        let terminate = r.bool()?;
+        let weight = r.f32()?;
+        // Same trust boundary as Msg::Update: an unusable aggregation
+        // weight is rejected before any payload work.
+        if !weight.is_finite() || weight <= 0.0 {
+            bail!("delta update from client {sender} carries invalid aggregation weight {weight}");
+        }
+        let ack = Ack::decode(r)?;
+        let body = DeltaBody::decode(r)?;
+        Ok(DeltaMsg { sender, round, terminate, weight, ack, body })
+    }
+}
+
+/// Compact Client-Responsive Termination flag relay (delta mode only):
+/// replaces the dense path's verbatim full-model forward with ~20 bytes.
+/// Carries whose CCC trigger the flag descends from, the origin's round,
+/// and the link's anti-entropy piggyback.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FlagMsg {
+    /// The relaying peer (the message's author).
+    pub sender: ClientId,
+    /// Whose Client-Confident Convergence trigger this flag descends from.
+    pub origin: ClientId,
+    /// The origin's round when it flagged.
+    pub round: u32,
+    pub ack: Ack,
+}
+
+impl FlagMsg {
+    pub(crate) fn wire_len(&self) -> usize {
+        4 + 4 + 4 + Ack::WIRE
+    }
+
+    pub(crate) fn encode_into(&self, w: &mut SliceWriter) {
+        w.u32(self.sender);
+        w.u32(self.origin);
+        w.u32(self.round);
+        self.ack.encode_into(w);
+    }
+
+    pub(crate) fn decode(r: &mut Reader) -> Result<FlagMsg> {
+        Ok(FlagMsg {
+            sender: r.u32()?,
+            origin: r.u32()?,
+            round: r.u32()?,
+            ack: Ack::decode(r)?,
+        })
+    }
+}
+
+/// Wire size of a dense `Msg::Update` for a model of `dim` parameters —
+/// the baseline the hub's `bytes_saved` counter measures codec wins
+/// against.  Kept in lockstep with the `Msg::Update` layout by a test.
+pub fn dense_wire_size(dim: usize) -> usize {
+    // tag + sender + round + terminate + weight + len prefix + payload
+    1 + 4 + 4 + 1 + 4 + 4 + dim * 4
+}
+
+/// Codec accounting for one encoded message, used by the hub traffic
+/// counters: `Some((bytes_saved, was_full_snapshot))` for delta-mode
+/// messages, `None` for dense traffic.  Flag relays save the cost of the
+/// full-model forward they replace, but the model dimension is not on
+/// their wire, so they count conservatively as a hit with zero savings.
+pub fn codec_accounting(msg: &Msg, wire_len: usize) -> Option<(u64, bool)> {
+    match msg {
+        Msg::Delta(dm) => {
+            let dense = dense_wire_size(dm.body.dim()) as u64;
+            let full = matches!(dm.body, DeltaBody::Full(_));
+            Some((dense.saturating_sub(wire_len as u64), full))
+        }
+        Msg::Flag(_) => Some((0, false)),
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Quantization
+// ---------------------------------------------------------------------------
+
+fn dequant(lo: f32, scale: f32, q: u16) -> f32 {
+    lo + scale * (q as f32 / u16::MAX as f32)
+}
+
+fn quant(lo: f32, scale: f32, v: f32) -> u16 {
+    if scale <= 0.0 {
+        return 0;
+    }
+    let t = (v - lo) / scale * u16::MAX as f32;
+    if t.is_nan() || t < 0.0 {
+        return 0;
+    }
+    t.round().min(u16::MAX as f32) as u16
+}
+
+// ---------------------------------------------------------------------------
+// Per-link sender state
+// ---------------------------------------------------------------------------
+
+/// Sender-side codec state for one directed link (`me → peer`).
+///
+/// The invariant everything rests on (DESIGN.md §13): `acked` is always a
+/// `(round, reconstruction)` pair the *receiver provably holds* — it is
+/// only installed when the receiver's piggybacked [`Ack`] names a round
+/// this sender recorded when it encoded that round.  Sparse bodies are
+/// deltas against `acked` exclusively, never against unacked sends, so an
+/// arbitrary run of message drops can never desynchronize the pair: a
+/// drop merely keeps the base (and the untransmitted residual) where it
+/// was.
+#[derive(Clone, Debug, Default)]
+pub struct DeltaTx {
+    /// The receiver's reconstruction at the last acked round.
+    acked: Option<(u32, Vec<f32>)>,
+    /// Reconstructions sent but not yet acked, oldest first (bounded).
+    sent: VecDeque<(u32, Vec<f32>)>,
+    /// Receiver NACKed (or we have proof it lost state): next message is
+    /// a full snapshot.
+    need_full: bool,
+}
+
+impl DeltaTx {
+    pub fn new() -> Self {
+        DeltaTx::default()
+    }
+
+    /// Encode this round's model for the peer: a sparse top-`k` delta
+    /// when a shared base exists, a full snapshot otherwise.  Records the
+    /// receiver's exact reconstruction so a future ack can promote it to
+    /// the new base.
+    pub fn encode(&mut self, k: usize, q16: bool, round: u32, params: &[f32]) -> DeltaBody {
+        let body = self.encode_inner(k, q16, params);
+        let recon = match &body {
+            DeltaBody::Full(p) => p.clone(),
+            DeltaBody::Sparse { idx, vals, .. } => {
+                let (_, base) = self.acked.as_ref().expect("sparse requires a base");
+                let mut recon = base.clone();
+                apply_sparse(&mut recon, idx, vals);
+                recon
+            }
+        };
+        if matches!(body, DeltaBody::Full(_)) {
+            self.need_full = false;
+        }
+        self.sent.push_back((round, recon));
+        while self.sent.len() > HISTORY {
+            self.sent.pop_front();
+        }
+        body
+    }
+
+    fn encode_inner(&self, k: usize, q16: bool, params: &[f32]) -> DeltaBody {
+        let (base_round, base) = match &self.acked {
+            Some(b) if !self.need_full && b.1.len() == params.len() => (b.0, &b.1),
+            _ => return DeltaBody::Full(params.to_vec()),
+        };
+        if k >= params.len() {
+            // A "sparse" body covering every coordinate is strictly larger
+            // than the full snapshot.
+            return DeltaBody::Full(params.to_vec());
+        }
+        let idx = top_k_indices(params, base, k);
+        if q16 {
+            match quantize(params, &idx) {
+                Some(vals) => DeltaBody::Sparse {
+                    base_round,
+                    dim: params.len() as u32,
+                    idx,
+                    vals,
+                },
+                // Non-finite values don't survive affine quantization;
+                // the full snapshot carries their exact bits instead.
+                None => DeltaBody::Full(params.to_vec()),
+            }
+        } else {
+            let vals = SparseVals::F32(idx.iter().map(|&i| params[i as usize]).collect());
+            DeltaBody::Sparse { base_round, dim: params.len() as u32, idx, vals }
+        }
+    }
+
+    /// Apply the peer's piggybacked ack: promote the acked base and/or
+    /// schedule a full snapshot.
+    pub fn on_ack(&mut self, ack: &Ack) {
+        if ack.need_full {
+            self.need_full = true;
+        }
+        if !ack.have {
+            // The receiver reports no reconstructed state at all — it was
+            // reset (churn rejoin, cut heal).  Any base we hold is for a
+            // link incarnation that no longer exists.
+            self.acked = None;
+            return;
+        }
+        if let Some((r, _)) = &self.acked {
+            if *r >= ack.round {
+                return;
+            }
+        }
+        while let Some((r, _)) = self.sent.front() {
+            if *r < ack.round {
+                self.sent.pop_front();
+            } else if *r == ack.round {
+                self.acked = self.sent.pop_front();
+                break;
+            } else {
+                // The acked round predates our retained window (it was
+                // pruned); keep the old base — still valid, just stale.
+                break;
+            }
+        }
+    }
+
+    /// Drop all link state (the churn/cut invalidation rule): the next
+    /// message will be a full snapshot.
+    pub fn reset(&mut self) {
+        *self = DeltaTx::default();
+    }
+
+    #[cfg(test)]
+    fn last_sent(&self) -> Option<&(u32, Vec<f32>)> {
+        self.sent.back()
+    }
+}
+
+fn apply_sparse(recon: &mut [f32], idx: &[u32], vals: &SparseVals) {
+    match vals {
+        SparseVals::F32(v) => {
+            for (&i, &x) in idx.iter().zip(v) {
+                recon[i as usize] = x;
+            }
+        }
+        SparseVals::Q16 { lo, scale, q } => {
+            for (&i, &x) in idx.iter().zip(q) {
+                recon[i as usize] = dequant(*lo, *scale, x);
+            }
+        }
+    }
+}
+
+/// Indices of the `k` largest `|params − base|`, ascending.  The ordering
+/// key maps NaN drift to +∞ so poisoned coordinates are transmitted (and
+/// thereby resolved) rather than silently pinned at the base value; ties
+/// break on the lower index, making the selected *set* a deterministic
+/// function of the inputs.
+fn top_k_indices(params: &[f32], base: &[f32], k: usize) -> Vec<u32> {
+    debug_assert!(k < params.len());
+    let key = |i: u32| {
+        let d = (params[i as usize] - base[i as usize]).abs();
+        if d.is_nan() {
+            f32::INFINITY
+        } else {
+            d
+        }
+    };
+    let mut idx: Vec<u32> = (0..params.len() as u32).collect();
+    idx.select_nth_unstable_by(k, |&a, &b| key(b).total_cmp(&key(a)).then(a.cmp(&b)));
+    idx.truncate(k);
+    idx.sort_unstable();
+    idx
+}
+
+/// Quantize the selected values; `None` if any is non-finite (the caller
+/// falls back to a full snapshot, which preserves exact bits).
+fn quantize(params: &[f32], idx: &[u32]) -> Option<SparseVals> {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &i in idx {
+        let v = params[i as usize];
+        if !v.is_finite() {
+            return None;
+        }
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    let scale = hi - lo;
+    if !scale.is_finite() {
+        return None;
+    }
+    let q = idx.iter().map(|&i| quant(lo, scale, params[i as usize])).collect();
+    Some(SparseVals::Q16 { lo, scale, q })
+}
+
+// ---------------------------------------------------------------------------
+// Per-link receiver state
+// ---------------------------------------------------------------------------
+
+/// Receiver-side codec state for one directed link (`peer → me`).
+#[derive(Clone, Debug, Default)]
+pub struct DeltaRx {
+    /// Recent reconstructions by round, oldest first (bounded, except the
+    /// pinned base below never evicts).
+    entries: VecDeque<(u32, Vec<f32>)>,
+    /// The base round the sender most recently delta'd against — pinned
+    /// against eviction for as long as the sender keeps using it.
+    pinned: Option<u32>,
+    /// Highest round reconstructed — the ack we piggyback.
+    highest: Option<u32>,
+    /// Set when a sparse body referenced a base we no longer hold; the
+    /// piggybacked NACK stands until a full snapshot arrives.
+    need_full: bool,
+}
+
+impl DeltaRx {
+    pub fn new() -> Self {
+        DeltaRx::default()
+    }
+
+    /// Reconstruct a delta-mode body.  `None` means the body was sparse
+    /// against a base this end does not hold (deep loss streak or a reset
+    /// link) — the caller drops the update and the piggybacked NACK
+    /// requests a full snapshot.
+    pub fn decode(&mut self, round: u32, body: &DeltaBody) -> Option<Vec<f32>> {
+        let recon = match body {
+            DeltaBody::Full(p) => {
+                self.need_full = false;
+                p.clone()
+            }
+            DeltaBody::Sparse { base_round, dim, idx, vals } => {
+                let base = self
+                    .entries
+                    .iter()
+                    .find(|(r, p)| r == base_round && p.len() == *dim as usize);
+                let Some((_, base)) = base else {
+                    self.need_full = true;
+                    return None;
+                };
+                let mut recon = base.clone();
+                apply_sparse(&mut recon, idx, vals);
+                self.pinned = Some(*base_round);
+                recon
+            }
+        };
+        self.entries.retain(|(r, _)| *r != round);
+        self.entries.push_back((round, recon.clone()));
+        self.highest = Some(self.highest.map_or(round, |h| h.max(round)));
+        // Evict oldest unpinned entries beyond the retention window.
+        while self.entries.len() > HISTORY {
+            let Some(pos) = self.entries.iter().position(|(r, _)| Some(*r) != self.pinned)
+            else {
+                break;
+            };
+            if pos + 1 == self.entries.len() {
+                break; // only the newest is unpinned; keep it
+            }
+            self.entries.remove(pos);
+        }
+        Some(recon)
+    }
+
+    /// The anti-entropy piggyback for the reverse direction of this link.
+    pub fn ack(&self) -> Ack {
+        Ack {
+            round: self.highest.unwrap_or(0),
+            have: self.highest.is_some(),
+            need_full: self.need_full,
+        }
+    }
+
+    /// Drop all link state (the churn/cut invalidation rule): the next
+    /// ack reports `have = false`, forcing the peer back to a snapshot.
+    pub fn reset(&mut self) {
+        *self = DeltaRx::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::forall;
+    use crate::util::Rng;
+
+    fn spec_k(k: usize) -> CodecSpec {
+        CodecSpec::Delta { k, q16: false }
+    }
+
+    #[test]
+    fn codec_spec_parses_and_round_trips() {
+        for s in ["dense", "delta:1", "delta:64", "delta:64,q16", "delta:4096,q16"] {
+            let spec = CodecSpec::parse(s).unwrap();
+            assert_eq!(spec.name(), s);
+            assert_eq!(CodecSpec::parse(&spec.name()).unwrap(), spec);
+        }
+        assert_eq!(CodecSpec::parse("").unwrap(), CodecSpec::Dense);
+        for bad in ["delta", "delta:", "delta:0", "delta:x", "delta:8,q8", "sparse:4"] {
+            assert!(CodecSpec::parse(bad).is_err(), "{bad} must not parse");
+        }
+        assert!(spec_k(4).is_delta());
+        assert!(!CodecSpec::Dense.is_delta());
+        assert_eq!(CodecSpec::default(), CodecSpec::Dense);
+    }
+
+    /// One directed link, lossless transport: after every exchange the
+    /// receiver's reconstruction matches the sender's recorded shadow
+    /// bit-for-bit, and acks promote the base.
+    #[test]
+    fn tx_rx_agree_over_a_clean_link() {
+        let mut tx = DeltaTx::new();
+        let mut rx = DeltaRx::new();
+        let mut rng = Rng::new(7);
+        let dim = 40;
+        let mut params: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+        for round in 1..=20u32 {
+            for p in params.iter_mut() {
+                *p += 0.1 * rng.normal();
+            }
+            let body = tx.encode(5, false, round, &params);
+            if round == 1 {
+                assert!(matches!(body, DeltaBody::Full(_)), "boot round must snapshot");
+            } else {
+                assert!(matches!(body, DeltaBody::Sparse { .. }), "round {round}");
+            }
+            let recon = rx.decode(round, &body).expect("clean link must decode");
+            assert_eq!(&recon, &tx.last_sent().unwrap().1, "round {round}");
+            tx.on_ack(&rx.ack());
+        }
+        // With k=5 over dim=40 and a moving target the reconstruction is
+        // an approximation, but the acked base tracks the latest round.
+        assert_eq!(tx.acked.as_ref().unwrap().0, 20);
+    }
+
+    /// k >= dim collapses to full snapshots (a sparse body would be
+    /// strictly bigger), and those decode exactly.
+    #[test]
+    fn oversized_k_degenerates_to_full() {
+        let mut tx = DeltaTx::new();
+        let mut rx = DeltaRx::new();
+        let params = vec![1.0f32, -2.0, 3.0];
+        for round in 1..=3 {
+            let body = tx.encode(10, false, round, &params);
+            assert!(matches!(body, DeltaBody::Full(_)));
+            assert_eq!(rx.decode(round, &body).unwrap(), params);
+            tx.on_ack(&rx.ack());
+        }
+    }
+
+    /// Random sparse masks: whatever subset of coordinates moves, the
+    /// receiver's reconstruction equals the sender's shadow bit-for-bit,
+    /// and every moved coordinate eventually lands once traffic pauses
+    /// (residual accumulation: nothing is ever lost, only deferred).
+    #[test]
+    fn sparse_mask_property() {
+        forall(
+            0xDE17A,
+            40,
+            |r| {
+                let dim = 8 + r.below(64);
+                let k = 1 + r.below(8);
+                let rounds = 4 + r.below(10);
+                let seed = r.next_u32() as u64;
+                (dim, k, rounds, seed)
+            },
+            |&(dim, k, rounds, seed)| {
+                let mut rng = Rng::new(seed);
+                let mut tx = DeltaTx::new();
+                let mut rx = DeltaRx::new();
+                let mut params: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+                for round in 1..=rounds as u32 {
+                    // a random sparse subset of coordinates moves
+                    for p in params.iter_mut() {
+                        if rng.below(4) == 0 {
+                            *p += rng.normal();
+                        }
+                    }
+                    let body = tx.encode(k, false, round, &params);
+                    let recon = rx
+                        .decode(round, &body)
+                        .ok_or("clean link must always decode")?;
+                    if recon != tx.last_sent().unwrap().1 {
+                        return Err(format!("shadow diverged at round {round}"));
+                    }
+                    tx.on_ack(&rx.ack());
+                }
+                // Freeze the model; within ceil(dim/k)+1 more rounds every
+                // outstanding residual must drain to exactness.
+                let settle = dim.div_ceil(k) as u32 + 1;
+                let mut last = Vec::new();
+                for round in 0..settle {
+                    let body = tx.encode(k, false, rounds as u32 + 1 + round, &params);
+                    last = rx.decode(rounds as u32 + 1 + round, &body).unwrap();
+                    tx.on_ack(&rx.ack());
+                }
+                if last != params {
+                    return Err("residuals failed to drain to exactness".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// NaN and ±inf payloads survive the codec: full snapshots carry the
+    /// exact bits, and a NaN drift sorts as infinite so the poisoned
+    /// coordinate is transmitted (raw f32) rather than pinned.
+    #[test]
+    fn non_finite_payloads_roundtrip() {
+        let mut tx = DeltaTx::new();
+        let mut rx = DeltaRx::new();
+        let mut params = vec![1.0f32; 16];
+        let body = tx.encode(4, false, 1, &params);
+        rx.decode(1, &body).unwrap();
+        tx.on_ack(&rx.ack());
+
+        params[3] = f32::NAN;
+        params[7] = f32::INFINITY;
+        params[11] = f32::NEG_INFINITY;
+        let body = tx.encode(4, false, 2, &params);
+        assert!(matches!(body, DeltaBody::Sparse { .. }));
+        let recon = rx.decode(2, &body).unwrap();
+        assert!(recon[3].is_nan());
+        assert_eq!(recon[7], f32::INFINITY);
+        assert_eq!(recon[11], f32::NEG_INFINITY);
+        // bit-exact agreement with the sender's shadow, NaN included
+        let shadow = &tx.last_sent().unwrap().1;
+        assert_eq!(
+            recon.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            shadow.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+
+        // Under q16 the same payload cannot quantize: full-snapshot
+        // fallback, exact bits preserved.
+        let mut txq = DeltaTx::new();
+        let mut rxq = DeltaRx::new();
+        let clean = vec![0.5f32; 16];
+        let body = txq.encode(4, true, 1, &clean);
+        rxq.decode(1, &body).unwrap();
+        txq.on_ack(&rxq.ack());
+        let body = txq.encode(4, true, 2, &params);
+        assert!(matches!(body, DeltaBody::Full(_)), "non-finite q16 must snapshot");
+        let recon = rxq.decode(2, &body).unwrap();
+        assert!(recon[3].is_nan());
+        assert_eq!(recon[7], f32::INFINITY);
+    }
+
+    /// q16 error bound: each transmitted coordinate lands within one
+    /// quantization step of the true value, and the sender's shadow holds
+    /// the same dequantized value the receiver computed.
+    #[test]
+    fn q16_error_bound() {
+        forall(
+            0x9160,
+            40,
+            |r| {
+                let dim = 8 + r.below(64);
+                let seed = r.next_u32() as u64;
+                (dim, seed)
+            },
+            |&(dim, seed)| {
+                let mut rng = Rng::new(seed);
+                let mut tx = DeltaTx::new();
+                let mut rx = DeltaRx::new();
+                let params: Vec<f32> = (0..dim).map(|_| rng.normal() * 3.0).collect();
+                let body = tx.encode(4, true, 1, &params);
+                rx.decode(1, &body).unwrap();
+                tx.on_ack(&rx.ack());
+                let moved: Vec<f32> =
+                    params.iter().map(|p| p + rng.normal() * 0.5).collect();
+                let body = tx.encode(4, true, 2, &moved);
+                let DeltaBody::Sparse { ref idx, vals: SparseVals::Q16 { lo, scale, .. }, .. } =
+                    body
+                else {
+                    return Err("expected a q16 sparse body".into());
+                };
+                let step = (scale as f64 / u16::MAX as f64).abs();
+                let recon = rx.decode(2, &body).ok_or("decode failed")?;
+                for &i in idx {
+                    let err = (recon[i as usize] as f64 - moved[i as usize] as f64).abs();
+                    if err > step + 1e-6 + (lo.abs() as f64 + scale.abs() as f64) * 1e-6 {
+                        return Err(format!(
+                            "coord {i}: err {err} exceeds quantization step {step}"
+                        ));
+                    }
+                }
+                if recon != tx.last_sent().unwrap().1 {
+                    return Err("q16 shadow diverged from receiver".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Delta-chain reconstruction across a simulated drop: the dropped
+    /// round's mass is not lost — because deltas are always taken against
+    /// the *acked* base with fresh residual magnitudes, the next delivered
+    /// message recovers it (or a NACK forces a snapshot).
+    #[test]
+    fn drop_chain_recovers_lost_mass() {
+        let mut rng = Rng::new(99);
+        let mut tx = DeltaTx::new();
+        let mut rx = DeltaRx::new();
+        let dim = 32;
+        let mut params: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+
+        // Round 1 delivered (snapshot), acked.
+        let body = tx.encode(8, false, 1, &params);
+        rx.decode(1, &body).unwrap();
+        tx.on_ack(&rx.ack());
+
+        // Round 2: a large spike on coordinate 5 — encoded, but DROPPED.
+        params[5] += 100.0;
+        let _lost = tx.encode(8, false, 2, &params);
+
+        // Round 3: tiny drift elsewhere; delivered.  The spike's residual
+        // against the acked base is still outstanding, so coordinate 5
+        // must be selected again and the delivered message recovers it.
+        for p in params.iter_mut() {
+            *p += 0.001 * rng.normal();
+        }
+        let body = tx.encode(8, false, 3, &params);
+        let DeltaBody::Sparse { ref idx, .. } = body else {
+            panic!("expected sparse after an acked base");
+        };
+        assert!(idx.contains(&5), "dropped spike must stay in contention: {idx:?}");
+        let recon = rx.decode(3, &body).unwrap();
+        assert_eq!(recon[5], params[5], "lost mass recovered exactly");
+        assert_eq!(&recon, &tx.last_sent().unwrap().1);
+    }
+
+    /// A receiver that lost the sender's base NACKs via the piggyback and
+    /// the sender answers with a full snapshot (self-healing under deep
+    /// loss or link reset).
+    #[test]
+    fn need_full_nack_heals_the_link() {
+        let mut tx = DeltaTx::new();
+        let mut rx = DeltaRx::new();
+        let params = vec![1.0f32; 8];
+        let body = tx.encode(2, false, 1, &params);
+        rx.decode(1, &body).unwrap();
+        tx.on_ack(&rx.ack());
+
+        // The receiver is reset mid-stream (churn rejoin).
+        rx.reset();
+        let body = tx.encode(2, false, 2, &params);
+        assert!(matches!(body, DeltaBody::Sparse { .. }));
+        assert!(rx.decode(2, &body).is_none(), "no base -> undecodable");
+        let ack = rx.ack();
+        assert!(ack.need_full && !ack.have);
+        tx.on_ack(&ack);
+        assert!(tx.acked.is_none(), "have=false must drop the stale base");
+
+        let body = tx.encode(2, false, 3, &params);
+        assert!(matches!(body, DeltaBody::Full(_)), "NACK must force a snapshot");
+        assert_eq!(rx.decode(3, &body).unwrap(), params);
+        assert!(!rx.ack().need_full, "snapshot clears the NACK");
+    }
+
+    /// The receiver pins the sender's in-use base: even when acks stall
+    /// for longer than the retention window, sparse bodies keep decoding.
+    #[test]
+    fn stalled_acks_keep_the_base_pinned() {
+        let mut rng = Rng::new(3);
+        let mut tx = DeltaTx::new();
+        let mut rx = DeltaRx::new();
+        let mut params: Vec<f32> = (0..16).map(|_| rng.normal()).collect();
+        let body = tx.encode(3, false, 1, &params);
+        rx.decode(1, &body).unwrap();
+        tx.on_ack(&rx.ack());
+        // No acks delivered for 3x the history window: every message
+        // deltas against round 1, which the receiver must keep pinned.
+        for round in 2..=(3 * HISTORY as u32 + 2) {
+            for p in params.iter_mut() {
+                *p += 0.01 * rng.normal();
+            }
+            let body = tx.encode(3, false, round, &params);
+            assert!(matches!(body, DeltaBody::Sparse { base_round: 1, .. }));
+            let recon = rx.decode(round, &body).expect("pinned base must decode");
+            assert_eq!(&recon, &tx.last_sent().unwrap().1, "round {round}");
+        }
+    }
+
+    #[test]
+    fn wire_roundtrip_property() {
+        forall(
+            0xD317A,
+            60,
+            |r| {
+                let dim = 1 + r.below(300);
+                let sparse = r.below(3) > 0;
+                let body = if !sparse {
+                    DeltaBody::Full((0..dim).map(|_| r.normal()).collect())
+                } else {
+                    let k = 1 + r.below(dim.min(16));
+                    let mut idx: Vec<u32> = (0..dim as u32).collect();
+                    // deterministic subset: keep every index with prob k/dim
+                    idx.retain(|_| r.below(dim) < k);
+                    if r.below(2) == 0 {
+                        DeltaBody::Sparse {
+                            base_round: r.next_u32() % 1000,
+                            dim: dim as u32,
+                            vals: SparseVals::F32(idx.iter().map(|_| r.normal()).collect()),
+                            idx,
+                        }
+                    } else {
+                        DeltaBody::Sparse {
+                            base_round: r.next_u32() % 1000,
+                            dim: dim as u32,
+                            vals: SparseVals::Q16 {
+                                lo: -1.0,
+                                scale: 2.0,
+                                q: idx.iter().map(|_| r.next_u32() as u16).collect(),
+                            },
+                            idx,
+                        }
+                    }
+                };
+                DeltaMsg {
+                    sender: r.next_u32() % 64,
+                    round: r.next_u32() % 10_000,
+                    terminate: r.below(2) == 1,
+                    weight: 0.1 + r.f32() * 10.0,
+                    ack: Ack {
+                        round: r.next_u32() % 10_000,
+                        have: r.below(2) == 1,
+                        need_full: r.below(4) == 0,
+                    },
+                    body,
+                }
+            },
+            |dm| {
+                let mut buf = vec![0u8; dm.wire_len()];
+                let mut w = SliceWriter::new(&mut buf);
+                dm.encode_into(&mut w);
+                if w.written() != buf.len() {
+                    return Err(format!(
+                        "wire_len {} != written {}",
+                        buf.len(),
+                        w.written()
+                    ));
+                }
+                let got = DeltaMsg::decode(&mut Reader::new(&buf)).map_err(|e| e.to_string())?;
+                if &got == dm {
+                    Ok(())
+                } else {
+                    Err("roundtrip mismatch".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn decode_rejects_malformed_sparse() {
+        let good = DeltaMsg {
+            sender: 1,
+            round: 5,
+            terminate: false,
+            weight: 1.0,
+            ack: Ack::NONE,
+            body: DeltaBody::Sparse {
+                base_round: 4,
+                dim: 10,
+                idx: vec![1, 3, 7],
+                vals: SparseVals::F32(vec![0.5, -0.5, 2.0]),
+            },
+        };
+        let encode = |dm: &DeltaMsg| {
+            let mut buf = vec![0u8; dm.wire_len()];
+            dm.encode_into(&mut SliceWriter::new(&mut buf));
+            buf
+        };
+        assert!(DeltaMsg::decode(&mut Reader::new(&encode(&good))).is_ok());
+
+        // out-of-range index
+        let mut bad = good.clone();
+        if let DeltaBody::Sparse { idx, .. } = &mut bad.body {
+            idx[2] = 10;
+        }
+        assert!(DeltaMsg::decode(&mut Reader::new(&encode(&bad))).is_err());
+
+        // non-ascending (duplicate) indices
+        let mut bad = good.clone();
+        if let DeltaBody::Sparse { idx, .. } = &mut bad.body {
+            idx[1] = 1;
+        }
+        assert!(DeltaMsg::decode(&mut Reader::new(&encode(&bad))).is_err());
+
+        // invalid aggregation weight — same trust boundary as Msg::Update
+        for w in [f32::NAN, 0.0, -2.0] {
+            let mut bad = good.clone();
+            bad.weight = w;
+            assert!(DeltaMsg::decode(&mut Reader::new(&encode(&bad))).is_err());
+        }
+
+        // count > dim must be rejected before any allocation
+        let mut buf = Vec::new();
+        {
+            let mut tmp = vec![0u8; 64];
+            let mut w = SliceWriter::new(&mut tmp);
+            w.u8(BODY_SPARSE);
+            w.u32(0); // base_round
+            w.u32(4); // dim
+            w.u32(u32::MAX); // claimed count
+            let n = w.written();
+            buf.extend_from_slice(&tmp[..n]);
+        }
+        assert!(DeltaBody::decode(&mut Reader::new(&buf)).is_err());
+    }
+
+    #[test]
+    fn dense_wire_size_matches_update_encoding() {
+        use crate::model::ParamVector;
+        use crate::net::message::ModelUpdate;
+        for dim in [0usize, 1, 330, 1056] {
+            let msg = Msg::Update(ModelUpdate {
+                sender: 3,
+                round: 9,
+                terminate: false,
+                weight: 1.0,
+                params: ParamVector(vec![0.5; dim]),
+            });
+            assert_eq!(msg.encode().len(), dense_wire_size(dim), "dim {dim}");
+        }
+    }
+
+    #[test]
+    fn codec_accounting_classifies_messages() {
+        let full = Msg::Delta(DeltaMsg {
+            sender: 0,
+            round: 1,
+            terminate: false,
+            weight: 1.0,
+            ack: Ack::NONE,
+            body: DeltaBody::Full(vec![0.0; 100]),
+        });
+        let wire = full.encode();
+        let (saved, was_full) = codec_accounting(&full, wire.len()).unwrap();
+        assert!(was_full);
+        assert_eq!(saved, 0, "a snapshot saves nothing over dense");
+
+        let sparse = Msg::Delta(DeltaMsg {
+            sender: 0,
+            round: 2,
+            terminate: false,
+            weight: 1.0,
+            ack: Ack::NONE,
+            body: DeltaBody::Sparse {
+                base_round: 1,
+                dim: 100,
+                idx: vec![4, 10],
+                vals: SparseVals::F32(vec![1.0, 2.0]),
+            },
+        });
+        let wire = sparse.encode();
+        let (saved, was_full) = codec_accounting(&sparse, wire.len()).unwrap();
+        assert!(!was_full);
+        assert_eq!(saved as usize, dense_wire_size(100) - wire.len());
+        assert!(saved > 300, "2 of 100 coords must save most of the payload");
+
+        assert!(codec_accounting(&Msg::Hello { sender: 1 }, 5).is_none());
+    }
+}

@@ -61,12 +61,27 @@ struct NetCounters {
     sent: AtomicU64,
     delivered: AtomicU64,
     bytes: AtomicU64,
+    bytes_saved: AtomicU64,
+    delta_hits: AtomicU64,
+    delta_full: AtomicU64,
 }
 
 impl NetCounters {
-    fn count_send(&self, bytes: usize) {
+    fn count_send(&self, msg: &Msg, bytes: usize) {
         self.sent.fetch_add(1, Ordering::Relaxed);
         self.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        // Delta-codec accounting (DESIGN.md §13): what the sparse/flag
+        // encodings kept off the wire versus the dense `Msg::Update` they
+        // replace.  Dense traffic returns `None` — all three counters stay
+        // untouched, so `--codec dense` reports exact zeros.
+        if let Some((saved, was_full)) = super::delta::codec_accounting(msg, bytes) {
+            self.bytes_saved.fetch_add(saved, Ordering::Relaxed);
+            if was_full {
+                self.delta_full.fetch_add(1, Ordering::Relaxed);
+            } else {
+                self.delta_hits.fetch_add(1, Ordering::Relaxed);
+            }
+        }
     }
 
     fn count_delivered(&self) {
@@ -86,6 +101,9 @@ impl NetCounters {
             // Severed-edge accounting is schedule-side, not hub-side:
             // `sim::run` fills it from the validated splits + overlay.
             edges_severed: 0,
+            bytes_saved: self.bytes_saved.load(Ordering::Relaxed),
+            delta_hits: self.delta_hits.load(Ordering::Relaxed),
+            delta_full: self.delta_full.load(Ordering::Relaxed),
         }
     }
 }
@@ -678,7 +696,7 @@ impl Transport for Endpoint {
         // pure, so doing it before the loss checks only feeds the traffic
         // counters — the schedule is untouched).
         let wire = msg.encode();
-        self.shared.stats.count_send(wire.len());
+        self.shared.stats.count_send(msg, wire.len());
         if self.shared.blocked.lock().unwrap().contains(&(self.id, to)) {
             return Ok(()); // injected link failure: message lost
         }
@@ -934,9 +952,9 @@ impl VirtualEndpoint {
     /// sampling, then an event post on the shared clock.  Sharing the
     /// encoded bytes is what keeps a broadcast to 10 000 peers at one
     /// encode + n refcounts instead of n copies of the model.
-    fn send_encoded(&self, to: ClientId, wire: &Arc<[u8]>) {
+    fn send_encoded(&self, to: ClientId, msg: &Msg, wire: &Arc<[u8]>) {
         let sh = &self.shared;
-        sh.stats.count_send(wire.len());
+        sh.stats.count_send(msg, wire.len());
         if sh.blocked.lock().unwrap().contains(&(self.id, to)) {
             return; // injected link failure: message lost
         }
@@ -985,8 +1003,8 @@ impl Transport for VirtualEndpoint {
     }
 
     fn send(&self, to: ClientId, msg: &Msg) -> Result<()> {
-        let wire: Arc<[u8]> = msg.encode().into();
-        self.send_encoded(to, &wire);
+        let wire = msg.encode_arc();
+        self.send_encoded(to, msg, &wire);
         Ok(())
     }
 
@@ -997,9 +1015,9 @@ impl Transport for VirtualEndpoint {
     /// Under a graph-fault schedule the neighborhood is read at send
     /// time, so a broadcast never reaches across a cut that is open *now*.
     fn broadcast(&self, msg: &Msg) -> Result<()> {
-        let wire: Arc<[u8]> = msg.encode().into();
+        let wire = msg.encode_arc();
         self.shared.overlay.for_each_neighbor(self.shared.clock.now_for(self.id), self.id, |p| {
-            self.send_encoded(p, &wire);
+            self.send_encoded(p, msg, &wire);
         });
         Ok(())
     }
@@ -1106,6 +1124,53 @@ mod tests {
         assert_eq!(stats.msgs_delivered, 2);
         assert_eq!(stats.msgs_dropped, 0);
         assert_eq!(stats.bytes_sent, 2 * update(0, 1).encode().len() as u64);
+    }
+
+    #[test]
+    fn delta_codec_sends_feed_savings_counters() {
+        use crate::net::delta::{dense_wire_size, Ack, DeltaBody, DeltaMsg, SparseVals};
+        let hub = InProcHub::new(2, NetworkModel::ideal());
+        let a = hub.endpoint(0);
+        let _b = hub.endpoint(1);
+        // Dense traffic must leave every codec counter at zero.
+        a.send(1, &update(0, 1)).unwrap();
+        let stats = hub.net_stats();
+        assert_eq!((stats.bytes_saved, stats.delta_hits, stats.delta_full), (0, 0, 0));
+        // A sparse delta counts as a hit and books dense − wire bytes.
+        let sparse = Msg::Delta(DeltaMsg {
+            sender: 0,
+            round: 1,
+            terminate: false,
+            weight: 1.0,
+            ack: Ack::NONE,
+            body: DeltaBody::Sparse {
+                base_round: 0,
+                dim: 100,
+                idx: vec![1, 7],
+                vals: SparseVals::F32(vec![0.5, -0.5]),
+            },
+        });
+        let sparse_wire = sparse.encode().len() as u64;
+        a.send(1, &sparse).unwrap();
+        let stats = hub.net_stats();
+        assert_eq!(stats.delta_hits, 1);
+        assert_eq!(stats.delta_full, 0);
+        assert_eq!(stats.bytes_saved, dense_wire_size(100) as u64 - sparse_wire);
+        // A full snapshot counts as a fallback; its wire is a shade larger
+        // than dense (the ack piggyback), so it books zero savings.
+        let full = Msg::Delta(DeltaMsg {
+            sender: 0,
+            round: 2,
+            terminate: false,
+            weight: 1.0,
+            ack: Ack::NONE,
+            body: DeltaBody::Full(vec![0.0; 100]),
+        });
+        a.send(1, &full).unwrap();
+        let stats = hub.net_stats();
+        assert_eq!(stats.delta_full, 1);
+        assert_eq!(stats.bytes_saved, dense_wire_size(100) as u64 - sparse_wire);
+        assert!(stats.delta_hit_rate() > 0.49 && stats.delta_hit_rate() < 0.51);
     }
 
     #[test]

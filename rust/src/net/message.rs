@@ -5,10 +5,14 @@
 //! Client-Responsive Termination flag that piggybacks on every broadcast
 //! after a client learns of termination.
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
 use crate::model::ParamVector;
-use crate::util::codec::{Reader, Writer};
+use crate::util::codec::{Reader, SliceWriter};
+
+use super::delta::{DeltaMsg, FlagMsg};
 
 pub type ClientId = u32;
 
@@ -34,25 +38,51 @@ pub enum Msg {
     Hello { sender: ClientId },
     /// Graceful leave (distinct from a crash, which is silence).
     Bye { sender: ClientId },
+    /// Delta-codec model broadcast (`--codec delta:K[,q16]`, DESIGN.md
+    /// §13): sparse top-K against a per-link acked base, or a full
+    /// snapshot, plus the anti-entropy piggyback.
+    Delta(DeltaMsg),
+    /// Compact Client-Responsive Termination flag relay (delta mode):
+    /// replaces the dense path's full-model forward.
+    Flag(FlagMsg),
 }
 
 const TAG_UPDATE: u8 = 1;
 const TAG_HELLO: u8 = 2;
 const TAG_BYE: u8 = 3;
+const TAG_DELTA: u8 = 4;
+const TAG_FLAG: u8 = 5;
 
 impl Msg {
     pub fn sender(&self) -> ClientId {
         match self {
             Msg::Update(u) => u.sender,
             Msg::Hello { sender } | Msg::Bye { sender } => *sender,
+            Msg::Delta(d) => d.sender,
+            Msg::Flag(f) => f.sender,
         }
     }
 
-    pub fn encode(&self) -> Vec<u8> {
-        let mut w = Writer::with_capacity(match self {
-            Msg::Update(u) => u.params.len() * 4 + 32,
-            _ => 16,
-        });
+    /// Exact encoded size, computed from the same layout [`encode_into`]
+    /// walks — what lets both [`encode`] and [`encode_arc`] write into a
+    /// buffer allocated once at its final size.
+    ///
+    /// [`encode_into`]: Msg::encode_into
+    /// [`encode`]: Msg::encode
+    /// [`encode_arc`]: Msg::encode_arc
+    fn encoded_len(&self) -> usize {
+        1 + match self {
+            Msg::Update(u) => 4 + 4 + 1 + 4 + (4 + u.params.len() * 4),
+            Msg::Hello { .. } | Msg::Bye { .. } => 4,
+            Msg::Delta(d) => d.wire_len(),
+            Msg::Flag(f) => f.wire_len(),
+        }
+    }
+
+    /// The one encoder: writes the message into `buf` (which must be
+    /// exactly [`encoded_len`](Msg::encoded_len) bytes).
+    fn encode_into(&self, buf: &mut [u8]) {
+        let mut w = SliceWriter::new(buf);
         match self {
             Msg::Update(u) => {
                 w.u8(TAG_UPDATE);
@@ -60,7 +90,7 @@ impl Msg {
                 w.u32(u.round);
                 w.bool(u.terminate);
                 w.f32(u.weight);
-                u.params.encode(&mut w);
+                w.f32_slice(&u.params.0);
             }
             Msg::Hello { sender } => {
                 w.u8(TAG_HELLO);
@@ -70,8 +100,33 @@ impl Msg {
                 w.u8(TAG_BYE);
                 w.u32(*sender);
             }
+            Msg::Delta(d) => {
+                w.u8(TAG_DELTA);
+                d.encode_into(&mut w);
+            }
+            Msg::Flag(f) => {
+                w.u8(TAG_FLAG);
+                f.encode_into(&mut w);
+            }
         }
-        w.into_bytes()
+        debug_assert_eq!(w.written(), buf.len(), "encoded_len out of sync with encode_into");
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = vec![0u8; self.encoded_len()];
+        self.encode_into(&mut buf);
+        buf
+    }
+
+    /// Encode straight into a single `Arc<[u8]>` allocation — the
+    /// broadcast hubs share one encoded buffer across all receivers, and
+    /// the old `encode().into()` path paid a second allocation plus a
+    /// copy to re-home the `Vec` behind the `Arc` header.
+    pub fn encode_arc(&self) -> Arc<[u8]> {
+        let mut arc: Arc<[u8]> = std::iter::repeat(0u8).take(self.encoded_len()).collect();
+        let buf = Arc::get_mut(&mut arc).expect("freshly collected Arc is unique");
+        self.encode_into(buf);
+        arc
     }
 
     pub fn decode(bytes: &[u8]) -> Result<Msg> {
@@ -99,6 +154,8 @@ impl Msg {
             }
             TAG_HELLO => Msg::Hello { sender: r.u32()? },
             TAG_BYE => Msg::Bye { sender: r.u32()? },
+            TAG_DELTA => Msg::Delta(DeltaMsg::decode(&mut r)?),
+            TAG_FLAG => Msg::Flag(FlagMsg::decode(&mut r)?),
             t => bail!("unknown message tag {t}"),
         };
         if r.remaining() != 0 {
@@ -165,6 +222,60 @@ mod tests {
             params: ParamVector(vec![1.0]),
         });
         assert!(Msg::decode(&msg.encode()).is_ok());
+    }
+
+    #[test]
+    fn encode_arc_matches_encode() {
+        use crate::net::delta::{Ack, DeltaBody, SparseVals};
+        let msgs = [
+            Msg::Hello { sender: 9 },
+            Msg::Bye { sender: 0 },
+            Msg::Update(ModelUpdate {
+                sender: 3,
+                round: 17,
+                terminate: true,
+                weight: 2.5,
+                params: ParamVector(vec![1.0, -2.0, 0.5]),
+            }),
+            Msg::Delta(DeltaMsg {
+                sender: 4,
+                round: 6,
+                terminate: false,
+                weight: 1.0,
+                ack: Ack { round: 5, have: true, need_full: false },
+                body: DeltaBody::Sparse {
+                    base_round: 5,
+                    dim: 8,
+                    idx: vec![0, 3],
+                    vals: SparseVals::F32(vec![0.25, -4.0]),
+                },
+            }),
+            Msg::Flag(FlagMsg { sender: 2, origin: 7, round: 11, ack: Ack::NONE }),
+        ];
+        for msg in msgs {
+            assert_eq!(&*msg.encode_arc(), &msg.encode()[..], "{msg:?}");
+        }
+    }
+
+    #[test]
+    fn delta_and_flag_roundtrip() {
+        use crate::net::delta::{Ack, DeltaBody, SparseVals};
+        let msg = Msg::Delta(DeltaMsg {
+            sender: 12,
+            round: 40,
+            terminate: true,
+            weight: 3.0,
+            ack: Ack { round: 39, have: true, need_full: true },
+            body: DeltaBody::Full(vec![1.0, f32::MIN_POSITIVE, -0.0]),
+        });
+        assert_eq!(Msg::decode(&msg.encode()).unwrap(), msg);
+        let msg = Msg::Flag(FlagMsg {
+            sender: 1,
+            origin: 30,
+            round: 9,
+            ack: Ack { round: 8, have: true, need_full: false },
+        });
+        assert_eq!(Msg::decode(&msg.encode()).unwrap(), msg);
     }
 
     #[test]

@@ -19,12 +19,14 @@
 //! Clients obtain their time source from [`Transport::clock`], so protocol
 //! code is identical under wall and virtual time.
 
+pub mod delta;
 pub mod inproc;
 pub mod message;
 pub mod overlay;
 pub mod tcp;
 pub mod topology;
 
+pub use delta::CodecSpec;
 pub use inproc::{
     GilbertElliott, InProcHub, NetPreset, NetSplit, NetworkModel, VirtualEndpoint, VirtualHub,
 };

@@ -58,6 +58,17 @@ impl MockTrainer {
         t
     }
 
+    /// Wide variant for codec measurements: 32 classes grow the model to
+    /// 1056 params, so a dense update dwarfs a top-K sparse delta and the
+    /// bytes/round ratio actually shows the codec, not framing overhead.
+    pub fn wide_with_k_max(k_max: usize) -> Self {
+        let mut t = MockTrainer::tiny();
+        t.meta.classes = 32;
+        t.meta.n_params = t.check_params();
+        t.meta.k_max = k_max;
+        t
+    }
+
     /// Feature count: mean-pooled channels (img*img*C -> 32 buckets).
     fn n_features(&self) -> usize {
         32

@@ -397,6 +397,10 @@ pub fn run(trainer: &(dyn Trainer + Sync), cfg: &SimConfig) -> Result<SimResult>
         cfg.adversaries.is_empty() || !cfg.sync,
         "Phase 1 (sync) assumes a fault-free system; Byzantine adversaries need Phase 2"
     );
+    anyhow::ensure!(
+        !cfg.protocol.codec.is_delta() || !cfg.sync,
+        "Phase 1 (sync) exchanges dense round-tagged models; --codec delta needs Phase 2"
+    );
     // Byzantine roster compiled (and validated: ids in range, no double
     // role) once, shared by both executors (DESIGN.md §11).
     let adversary_roles = compile_adversaries(&cfg.adversaries, cfg.n_clients)?;

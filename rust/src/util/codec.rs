@@ -72,6 +72,10 @@ impl Writer {
         self.buf.push(v as u8);
     }
 
+    pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
     pub fn u32(&mut self, v: u32) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
@@ -116,6 +120,74 @@ impl Writer {
     }
 }
 
+/// Cursor writing typed little-endian values into a preallocated buffer —
+/// the zero-realloc twin of [`Writer`], used where the exact encoded size
+/// is known up front (e.g. `Msg::encode_arc` writing straight into a
+/// single `Arc<[u8]>` allocation).  Writing past the end panics: callers
+/// size the buffer from the same layout the encoder walks, so an overrun
+/// is an encoder bug, not an input condition.
+pub struct SliceWriter<'a> {
+    buf: &'a mut [u8],
+    pos: usize,
+}
+
+impl<'a> SliceWriter<'a> {
+    pub fn new(buf: &'a mut [u8]) -> Self {
+        SliceWriter { buf, pos: 0 }
+    }
+
+    fn put(&mut self, bytes: &[u8]) {
+        self.buf[self.pos..self.pos + bytes.len()].copy_from_slice(bytes);
+        self.pos += bytes.len();
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.put(&[v]);
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.put(&[v as u8]);
+    }
+
+    pub fn u16(&mut self, v: u16) {
+        self.put(&v.to_le_bytes());
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.put(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.put(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.put(&v.to_le_bytes());
+    }
+
+    /// Length-prefixed f32 slice; bulk-copied as raw LE bytes (same layout
+    /// as [`Writer::f32_slice`]).
+    pub fn f32_slice(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        #[cfg(target_endian = "little")]
+        {
+            let bytes =
+                unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) };
+            self.put(bytes);
+        }
+        #[cfg(target_endian = "big")]
+        for &x in v {
+            self.put(&x.to_le_bytes());
+        }
+    }
+
+    /// Bytes written so far (the encoder asserts this against the layout's
+    /// computed size when it finishes).
+    pub fn written(&self) -> usize {
+        self.pos
+    }
+}
+
 /// Cursor over a received payload with typed little-endian readers.
 pub struct Reader<'a> {
     buf: &'a [u8],
@@ -148,6 +220,10 @@ impl<'a> Reader<'a> {
         Ok(self.u8()? != 0)
     }
 
+    pub fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
     pub fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
@@ -162,7 +238,21 @@ impl<'a> Reader<'a> {
 
     pub fn f32_vec(&mut self) -> Result<Vec<f32>> {
         let n = self.u32()? as usize;
-        let bytes = self.take(n * 4)?;
+        // Validate the length prefix against the bytes actually present
+        // BEFORE sizing any allocation: a corrupt or adversarial frame can
+        // claim a multi-GiB vector in 4 bytes, and `n * 4` itself can wrap
+        // on 32-bit targets (turning a huge claim into a tiny take that
+        // then mis-frames everything after it).
+        let need = n
+            .checked_mul(4)
+            .ok_or_else(|| anyhow::anyhow!("codec: f32 vec length {n} overflows"))?;
+        if need > self.remaining() {
+            bail!(
+                "codec: f32 vec claims {n} elements ({need} bytes) but only {} bytes remain",
+                self.remaining()
+            );
+        }
+        let bytes = self.take(need)?;
         let mut out = vec![0f32; n];
         #[cfg(target_endian = "little")]
         unsafe {
@@ -318,5 +408,72 @@ mod tests {
     fn reader_underrun_errors() {
         let mut r = Reader::new(&[1, 2]);
         assert!(r.u32().is_err());
+    }
+
+    #[test]
+    fn slice_writer_matches_writer_bytes() {
+        let mut w = Writer::new();
+        w.u8(7);
+        w.bool(true);
+        w.u16(0xBEEF);
+        w.u32(0xDEADBEEF);
+        w.u64(u64::MAX - 3);
+        w.f32(-1.25);
+        w.f32_slice(&[1.0, 2.5, -3.75]);
+        let reference = w.into_bytes();
+
+        let mut buf = vec![0u8; reference.len()];
+        let mut sw = SliceWriter::new(&mut buf);
+        sw.u8(7);
+        sw.bool(true);
+        sw.u16(0xBEEF);
+        sw.u32(0xDEADBEEF);
+        sw.u64(u64::MAX - 3);
+        sw.f32(-1.25);
+        sw.f32_slice(&[1.0, 2.5, -3.75]);
+        assert_eq!(sw.written(), reference.len());
+        assert_eq!(buf, reference);
+    }
+
+    #[test]
+    fn u16_roundtrip() {
+        let mut w = Writer::new();
+        w.u16(0);
+        w.u16(0xBEEF);
+        w.u16(u16::MAX);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.u16().unwrap(), 0);
+        assert_eq!(r.u16().unwrap(), 0xBEEF);
+        assert_eq!(r.u16().unwrap(), u16::MAX);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    /// A malformed frame whose f32-vec length prefix claims far more
+    /// elements than the payload holds must be rejected up front — the
+    /// prefix is attacker-controlled and must never size an allocation.
+    #[test]
+    fn f32_vec_rejects_lying_length_prefix() {
+        // Claims u32::MAX elements (a 16 GiB vector) with 4 trailing bytes.
+        let mut w = Writer::new();
+        w.u32(u32::MAX);
+        w.f32(1.0);
+        let bytes = w.into_bytes();
+        let err = Reader::new(&bytes).f32_vec().unwrap_err().to_string();
+        assert!(err.contains("f32 vec"), "wrong error: {err}");
+
+        // Off-by-one: claims 3 elements over 2 elements of payload.
+        let mut w = Writer::new();
+        w.u32(3);
+        w.f32(1.0);
+        w.f32(2.0);
+        let bytes = w.into_bytes();
+        assert!(Reader::new(&bytes).f32_vec().is_err());
+
+        // The boundary itself still parses.
+        let mut w = Writer::new();
+        w.f32_slice(&[1.0, 2.0]);
+        let bytes = w.into_bytes();
+        assert_eq!(Reader::new(&bytes).f32_vec().unwrap(), vec![1.0, 2.0]);
     }
 }

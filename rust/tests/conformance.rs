@@ -16,7 +16,7 @@ use std::time::Duration;
 use common::fingerprint;
 use dfl::coordinator::fault::{AdversarySpec, GraphFault};
 use dfl::coordinator::{ProtocolConfig, QuorumSpec};
-use dfl::net::{NetworkModel, TopologySpec};
+use dfl::net::{CodecSpec, NetworkModel, TopologySpec};
 use dfl::runtime::{AggregationRule, MockTrainer, Trainer};
 use dfl::sim::{self, ExecMode, SimConfig};
 
@@ -59,6 +59,7 @@ fn cell_cfg(seed: u64, topo: &str, net: &str, scenario: Scenario) -> SimConfig {
         crt_enabled: true,
         quorum: QuorumSpec::STRICT,
         agg: AggregationRule::FedAvg,
+        codec: CodecSpec::Dense,
     };
     cfg.train_n = 60 * 8;
     cfg.seed = seed;
@@ -147,6 +148,22 @@ fn parallel_matches_events_under_poison_and_trimmed_mean() {
     }
 }
 
+/// Delta-codec cells (DESIGN.md §13) across the same diagonal: per-link
+/// Tx/Rx shadow state, ack piggybacking, and the compact flag relay must
+/// be invariant to which shard hosts each endpoint of a link — drops and
+/// the resulting `need_full` resyncs replay identically from shard threads.
+#[test]
+fn parallel_matches_events_under_the_delta_codec() {
+    for (i, &seed) in SEEDS.iter().enumerate() {
+        let topo = TOPOLOGIES[i % TOPOLOGIES.len()];
+        let net = NETS[i % NETS.len()];
+        let mut cfg = cell_cfg(seed, topo, net, Scenario::Clean);
+        cfg.protocol.codec = CodecSpec::Delta { k: 32, q16: false };
+        let cell = format!("seed {seed}, {topo}, {net}, clean, delta:32");
+        assert_identical(&cfg, ExecMode::Events, ExecMode::Parallel { shards: 3 }, &cell);
+    }
+}
+
 /// Shard count must never matter: 1 (degenerate fast path), 2, 5, and 16
 /// (more shards than clients — clamped to singletons) all reproduce the
 /// reference on the hardest cell we have.
@@ -195,5 +212,30 @@ fn full_three_executor_matrix_is_byte_identical() {
                 }
             }
         }
+    }
+}
+
+/// Delta-codec diagonal across all three executors — every seed, cycling
+/// overlay × net × scenario and alternating u16 quantization — the
+/// delta-codec leg of `scripts/tier1.sh` (skipped by `--fast`):
+///
+/// ```sh
+/// cargo test -q --release --test conformance -- --ignored
+/// ```
+#[test]
+#[ignore = "delta-codec executor diagonal (minutes); run by scripts/tier1.sh"]
+fn delta_codec_diagonal_is_byte_identical_across_executors() {
+    for (i, &seed) in SEEDS.iter().enumerate() {
+        let topo = TOPOLOGIES[i % TOPOLOGIES.len()];
+        let net = NETS[i % NETS.len()];
+        let scenario = SCENARIOS[i % SCENARIOS.len()];
+        let mut cfg = cell_cfg(seed, topo, net, scenario);
+        cfg.protocol.codec = CodecSpec::Delta { k: 32, q16: i % 2 == 1 };
+        let cell = format!(
+            "seed {seed}, {topo}, {net}, {scenario:?}, delta:32 q16={}",
+            i % 2 == 1
+        );
+        assert_identical(&cfg, ExecMode::Events, ExecMode::Threads, &cell);
+        assert_identical(&cfg, ExecMode::Events, ExecMode::Parallel { shards: 3 }, &cell);
     }
 }

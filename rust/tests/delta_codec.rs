@@ -1,0 +1,122 @@
+//! Delta-codec acceptance (ISSUE 8 / DESIGN.md §13): the wire-efficiency
+//! claim, measured.  `delta:64` on the k-regular:6 LAN deployment must cut
+//! `NetStats` bytes/round by ≥5× against `dense` while producing the same
+//! final-accuracy table, and the codec's savings counters must agree with
+//! the story the byte totals tell.
+//!
+//! The wide mock trainer (32 classes → 1056 params) makes the dense
+//! payload dominate framing overhead, so the ratio measures the codec and
+//! not the message headers.  A high `min_rounds` floor keeps both runs in
+//! the regime where sparse deltas ride an acked base nearly every round —
+//! a quick CCC exit after one Full snapshot would measure boot, not
+//! steady state.
+
+use std::time::Duration;
+
+use dfl::coordinator::{ProtocolConfig, QuorumSpec};
+use dfl::net::{CodecSpec, NetworkModel, TopologySpec};
+use dfl::runtime::{AggregationRule, MockTrainer, Trainer};
+use dfl::sim::{self, SimConfig};
+
+fn codec_cfg(trainer: &MockTrainer, codec: CodecSpec) -> SimConfig {
+    let n = 8;
+    let seed = 4242u64;
+    let mut cfg = SimConfig::for_meta(n, trainer.meta());
+    cfg.protocol = ProtocolConfig {
+        timeout: Duration::from_millis(80),
+        // Hold both runs to ≥14 rounds: the steady-state regime where
+        // every delta-mode send after the first Full rides a sparse body.
+        min_rounds: 14,
+        count_threshold: 2,
+        conv_threshold_rel: 0.12,
+        max_rounds: 16,
+        lr: 0.08,
+        model_seed: 42,
+        weight_by_samples: false,
+        early_window_exit: true,
+        crt_enabled: true,
+        quorum: QuorumSpec::STRICT,
+        agg: AggregationRule::FedAvg,
+        codec,
+    };
+    cfg.train_n = 60 * n;
+    cfg.net = NetworkModel::lan(seed);
+    cfg.topology = TopologySpec::KRegular { d: 6 };
+    cfg.seed = seed;
+    cfg.virtual_time = true;
+    cfg.train_cost = Duration::from_millis(5);
+    cfg
+}
+
+/// Final-accuracy table at the precision every experiment table prints
+/// (2 decimal places of percent), per client in id order.
+fn accuracy_table(res: &dfl::sim::SimResult) -> Vec<String> {
+    res.reports
+        .iter()
+        .map(|r| match r.final_accuracy {
+            Some(a) => format!("{:.2}", a * 100.0),
+            None => "-".into(),
+        })
+        .collect()
+}
+
+#[test]
+fn delta64_cuts_bytes_per_round_5x_on_k_regular_lan() {
+    let trainer = MockTrainer::wide_with_k_max(16);
+
+    let dense = sim::run(&trainer, &codec_cfg(&trainer, CodecSpec::Dense))
+        .expect("dense run");
+    let delta = sim::run(
+        &trainer,
+        &codec_cfg(&trainer, CodecSpec::Delta { k: 64, q16: false }),
+    )
+    .expect("delta run");
+
+    // Learning quality survives the sparse exchange: same accuracy table.
+    assert_eq!(
+        accuracy_table(&dense),
+        accuracy_table(&delta),
+        "delta:64 changed the final-accuracy table"
+    );
+
+    // The headline claim: ≥5× fewer bytes per round on the wire.
+    let dense_bpr = dense.net.bytes_per_round(dense.rounds());
+    let delta_bpr = delta.net.bytes_per_round(delta.rounds());
+    assert!(
+        dense_bpr >= 5.0 * delta_bpr,
+        "delta:64 saved only {:.1}x (dense {dense_bpr:.0} B/round, \
+         delta {delta_bpr:.0} B/round)",
+        dense_bpr / delta_bpr
+    );
+
+    // The savings counters must corroborate the byte totals: dense runs
+    // never touch them, delta runs mostly ride sparse bodies.
+    assert_eq!(dense.net.bytes_saved, 0, "dense run booked codec savings");
+    assert_eq!(dense.net.delta_hit_rate(), 0.0, "dense run booked codec hits");
+    assert!(delta.net.bytes_saved > 0, "delta run saved no bytes");
+    assert!(
+        delta.net.delta_hit_rate() > 0.5,
+        "full-snapshot fallback dominated a lossless LAN run: hit rate {:.2}",
+        delta.net.delta_hit_rate()
+    );
+    assert!(
+        delta.net.bytes_sent + delta.net.bytes_saved >= dense.net.bytes_sent,
+        "savings accounting lost bytes: {} sent + {} saved < {} dense",
+        delta.net.bytes_sent,
+        delta.net.bytes_saved,
+        dense.net.bytes_sent
+    );
+}
+
+/// Same deployment, same seed, run twice under delta:64 — the per-link
+/// Tx/Rx shadow state is part of the determinism contract.
+#[test]
+fn delta_runs_are_seed_deterministic() {
+    let trainer = MockTrainer::wide_with_k_max(16);
+    let cfg = codec_cfg(&trainer, CodecSpec::Delta { k: 64, q16: false });
+    let a = sim::run(&trainer, &cfg).expect("first run");
+    let b = sim::run(&trainer, &cfg).expect("second run");
+    assert_eq!(accuracy_table(&a), accuracy_table(&b));
+    assert_eq!(a.net, b.net, "NetStats must reproduce under one seed");
+    assert_eq!(a.wall, b.wall, "virtual wall must reproduce under one seed");
+}

@@ -122,24 +122,45 @@ fn scenario_matrix_sweeps_every_preset_and_is_deterministic() {
     let table = exp::scenarios(&t, scale());
     let md = table.markdown();
     let rows: Vec<&str> = md.lines().skip(2).collect();
-    assert!(rows.len() >= 4, "matrix must cover at least 4 presets:\n{md}");
+    assert!(rows.len() >= 6, "presets + codec-comparison rows:\n{md}");
     for name in ["ideal", "lan", "wan", "asym", "lossy-burst"] {
         assert!(md.contains(name), "missing preset {name}:\n{md}");
     }
+    let cells_of = |row: &str| -> Vec<String> {
+        row.trim_matches('|').split('|').map(|c| c.trim().to_string()).collect()
+    };
     for row in &rows {
-        let cells: Vec<&str> = row.trim_matches('|').split('|').map(str::trim).collect();
-        assert_eq!(cells.len(), 6, "{row}");
-        let acc = parse_pct(cells[1]);
+        let cells = cells_of(row);
+        assert_eq!(cells.len(), 8, "{row}");
+        let acc = parse_pct(&cells[1]);
         assert!((0.0..=100.0).contains(&acc), "{row}");
         assert!(cells[3].parse::<f32>().unwrap() >= 0.0, "virtual time: {row}");
         cells[5].parse::<usize>().expect("false-suspicion count");
+        assert!(cells[7].parse::<f64>().unwrap() > 0.0, "kB/round: {row}");
     }
     // the ideal row is fault- and latency-free: nothing can look crashed,
     // and every client must end adaptively
-    let ideal = rows.iter().find(|r| r.contains("ideal")).unwrap();
-    let cells: Vec<&str> = ideal.trim_matches('|').split('|').map(str::trim).collect();
+    let ideal = rows.iter().find(|r| cells_of(r)[0] == "ideal").unwrap();
+    let cells = cells_of(ideal);
     assert_eq!(cells[5], "0", "false suspicions on an ideal network: {ideal}");
-    assert_eq!(parse_pct(cells[4]), 100.0, "non-adaptive ending on ideal: {ideal}");
+    assert_eq!(parse_pct(&cells[4]), 100.0, "non-adaptive ending on ideal: {ideal}");
+    // codec-comparison rows (DESIGN.md §13): the delta:64 re-runs of the
+    // two heaviest presets must put measurably fewer bytes on the wire
+    // than their dense counterparts
+    for preset in ["wan", "lossy-burst"] {
+        let dense = rows.iter().find(|r| cells_of(r)[0] == preset).unwrap();
+        let delta = rows
+            .iter()
+            .find(|r| cells_of(r)[0] == format!("{preset}+delta:64"))
+            .unwrap_or_else(|| panic!("missing {preset}+delta:64 row:\n{md}"));
+        assert_eq!(cells_of(delta)[6], "delta:64", "codec column: {delta}");
+        let dense_kb: f64 = cells_of(dense)[7].parse().unwrap();
+        let delta_kb: f64 = cells_of(delta)[7].parse().unwrap();
+        assert!(
+            delta_kb < dense_kb,
+            "{preset}: delta:64 {delta_kb} kB/round not below dense {dense_kb}"
+        );
+    }
     // network-only variation: same seed ⇒ the whole table reproduces
     assert_eq!(md, exp::scenarios(&t, scale()).markdown());
 }
@@ -160,10 +181,14 @@ fn topology_sweep_measures_the_message_volume_gap() {
     let mut full_volume = None;
     for row in &rows {
         let cells = cells_of(row);
-        assert_eq!(cells.len(), 7, "{row}");
+        assert_eq!(cells.len(), 9, "{row}");
         let degree: usize = cells[1].parse().unwrap();
         let volume: f64 = cells[2].parse().unwrap();
         assert!(volume > 0.0, "empty counter: {row}");
+        // default sweep runs the dense codec: the savings columns must
+        // read zero (they only move under a `--codec delta:K` override)
+        assert_eq!(cells[7].parse::<f64>().unwrap(), 0.0, "dense saved kB: {row}");
+        assert_eq!(cells[8], "0", "dense Δ-hit rate: {row}");
         // fault-free LAN: every overlay must still terminate adaptively
         // (on the sparse rows that exercises the CRT relay)
         assert_eq!(parse_pct(&cells[5]), 100.0, "non-adaptive ending: {row}");

@@ -13,7 +13,7 @@ use std::time::Duration;
 use dfl::coordinator::fault::{variable_crash_schedule, FaultPlan};
 use dfl::coordinator::termination::TerminationCause;
 use dfl::coordinator::{ProtocolConfig, QuorumSpec};
-use dfl::net::NetworkModel;
+use dfl::net::{CodecSpec, NetworkModel};
 use dfl::runtime::{AggregationRule, MockTrainer, Trainer};
 use dfl::sim::{self, Partition, SimConfig};
 use dfl::util::Rng;
@@ -37,6 +37,7 @@ fn base_cfg(n: usize, seed: u64) -> SimConfig {
         crt_enabled: true,
         quorum: QuorumSpec::STRICT,
         agg: AggregationRule::FedAvg,
+        codec: CodecSpec::Dense,
     };
     cfg.train_n = 60 * n;
     cfg.net = NetworkModel::lan(seed);

@@ -11,7 +11,7 @@ use std::time::Duration;
 use common::fingerprint;
 use dfl::coordinator::fault::{AdversaryKind, AdversarySpec};
 use dfl::coordinator::{ProtocolConfig, QuorumSpec};
-use dfl::net::{NetworkModel, TopologySpec};
+use dfl::net::{CodecSpec, NetworkModel, TopologySpec};
 use dfl::runtime::{AggregationRule, MockTrainer, Trainer};
 use dfl::sim::{self, ExecMode, SimConfig};
 use dfl::util::quickcheck::forall;
@@ -33,6 +33,7 @@ fn base_cfg(n: usize, seed: u64) -> SimConfig {
         crt_enabled: true,
         quorum: QuorumSpec::STRICT,
         agg: AggregationRule::FedAvg,
+        codec: CodecSpec::Dense,
     };
     cfg.train_n = 60 * n;
     cfg.net = NetworkModel::lan(seed);

@@ -17,7 +17,7 @@ use common::fingerprint;
 use dfl::coordinator::fault::{variable_crash_schedule, GraphFault};
 use dfl::coordinator::termination::TerminationCause;
 use dfl::coordinator::{ProtocolConfig, QuorumSpec};
-use dfl::net::{NetworkModel, TopologySpec};
+use dfl::net::{CodecSpec, NetworkModel, TopologySpec};
 use dfl::runtime::{AggregationRule, MockTrainer, Trainer};
 use dfl::sim::{self, ExecMode, Partition, SimConfig};
 use dfl::util::Rng;
@@ -37,6 +37,7 @@ fn scale_cfg(trainer: &MockTrainer, n: usize, seed: u64) -> SimConfig {
         crt_enabled: true,
         quorum: QuorumSpec::STRICT,
         agg: AggregationRule::FedAvg,
+        codec: CodecSpec::Dense,
     };
     cfg.train_n = 20 * n;
     cfg.net = NetworkModel::lan(seed);
@@ -318,6 +319,7 @@ fn ten_thousand_clients_event_executor_with_crashes_and_drops() {
         crt_enabled: true,
         quorum: QuorumSpec::STRICT,
         agg: AggregationRule::FedAvg,
+        codec: CodecSpec::Dense,
     };
     // Tiny independent chunks: partitioning 10k clients must not dominate
     // the benchmark, and every client needs a non-empty slice.

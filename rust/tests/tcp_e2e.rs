@@ -12,7 +12,7 @@ use dfl::coordinator::fault::FaultPlan;
 use dfl::coordinator::termination::TerminationCause;
 use dfl::coordinator::{ProtocolConfig, QuorumSpec};
 use dfl::data::{dirichlet_partition, Dataset};
-use dfl::net::TcpTransport;
+use dfl::net::{CodecSpec, TcpTransport};
 use dfl::runtime::{AggregationRule, MockTrainer, Trainer};
 use dfl::util::Rng;
 
@@ -46,6 +46,7 @@ fn four_tcp_clients_with_one_crash_terminate() {
         crt_enabled: true,
         quorum: QuorumSpec::STRICT,
         agg: AggregationRule::FedAvg,
+        codec: CodecSpec::Dense,
     };
 
     let reports: Vec<_> = std::thread::scope(|scope| {

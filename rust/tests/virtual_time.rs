@@ -11,7 +11,7 @@ use common::fingerprint;
 use dfl::coordinator::fault::{FaultPlan, GraphFault};
 use dfl::coordinator::termination::TerminationCause;
 use dfl::coordinator::{ProtocolConfig, QuorumSpec};
-use dfl::net::{NetSplit, NetworkModel, TopologySpec};
+use dfl::net::{CodecSpec, NetSplit, NetworkModel, TopologySpec};
 use dfl::runtime::{AggregationRule, MockTrainer, Trainer};
 use dfl::sim::{self, ExecMode, SimConfig};
 
@@ -31,6 +31,7 @@ fn base_cfg(n: usize, seed: u64) -> SimConfig {
         crt_enabled: true,
         quorum: QuorumSpec::STRICT,
         agg: AggregationRule::FedAvg,
+        codec: CodecSpec::Dense,
     };
     cfg.train_n = 60 * n;
     cfg.net = NetworkModel::lan(seed);

@@ -53,8 +53,10 @@ cargo bench --no-run
 
 # Executor-matrix leg: the full cross-executor conformance product
 # (events | threads | parallel over every seed × overlay × net ×
-# scenario cell).  Release mode keeps the ~600 small deployments quick.
-echo "==> cargo test -q --release --test conformance -- --ignored   (executor matrix)"
+# scenario cell) plus the delta-codec diagonal (per-link codec state and
+# flag relays under delta:32, alternating q16, across all three
+# executors).  Release mode keeps the ~600 small deployments quick.
+echo "==> cargo test -q --release --test conformance -- --ignored   (executor matrix + delta-codec diagonal)"
 cargo test -q --release --test conformance -- --ignored
 
 if [[ "$SCALE" == "1" ]]; then
