@@ -10,11 +10,13 @@ mod common;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use dfl::metrics::AllocStats;
 use dfl::model::ParamVector;
 use dfl::net::delta::{DeltaMsg, DeltaRx, DeltaTx};
 use dfl::net::{InProcHub, Msg, ModelUpdate, NetworkModel, Transport};
-use dfl::runtime::Trainer;
+use dfl::runtime::{AggScratch, AggregationRule, TrainScratch, Trainer};
 use dfl::util::benchkit::{bench_for, black_box};
+use dfl::util::pool;
 use dfl::util::time::VirtualClock;
 use dfl::util::Rng;
 
@@ -158,6 +160,40 @@ fn main() {
     let rows: Vec<(&[f32], f32)> = (0..8).map(|_| (params.as_slice(), 1.0)).collect();
     bench_for("pjrt/aggregate_8", budget, || {
         black_box(engine.aggregate(&rows).unwrap());
+    });
+
+    // --- pooled buffers & scratch kernels (DESIGN.md §14) -------------------
+    // alloc/* rows are the malloc baseline; pool/* rows are the pooled or
+    // scratch-based counterpart of a row above (same inputs, reused buffers).
+    bench_for("alloc/vec_f32_4k", budget, || {
+        black_box(vec![0.0f32; 4096]);
+    });
+    bench_for("alloc/stats_snapshot", budget, || {
+        black_box(AllocStats::snapshot());
+    });
+    bench_for("pool/take_recycle_4k", budget, || {
+        let mut v = pool::take_f32(4096);
+        v.resize(4096, 0.0);
+        pool::recycle_f32(black_box(v));
+    });
+    let src: Vec<f32> = (0..4096).map(|_| rng.normal()).collect();
+    bench_for("pool/copy_of_4k", budget, || {
+        pool::recycle_f32(black_box(pool::copy_of(&src)));
+    });
+
+    // Same start point every iteration (like pjrt/train_round), refreshed by
+    // copy instead of allocation, so the row isolates the kernel cost.
+    let mut scratch = TrainScratch::default();
+    let mut sp = params.clone();
+    bench_for("pool/train_round_scratch", budget, || {
+        sp.clear();
+        sp.extend_from_slice(&params);
+        black_box(engine.train_round_scratch(&mut sp, &xs, &ys, 0.05, &mut scratch).unwrap());
+    });
+    let mut agg = AggScratch::default();
+    bench_for("pool/aggregate_scratch_8", budget, || {
+        engine.aggregate_with_scratch(&rows, &AggregationRule::FedAvg, &mut agg).unwrap();
+        black_box(agg.out.as_slice());
     });
 
     // --- codec at model size -------------------------------------------------

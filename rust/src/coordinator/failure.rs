@@ -79,6 +79,12 @@ impl IdSet {
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
+
+    /// Remove every id, keeping the bitset's allocation for reuse.
+    pub fn clear(&mut self) {
+        self.bits.iter_mut().for_each(|w| *w = 0);
+        self.len = 0;
+    }
 }
 
 impl FromIterator<ClientId> for IdSet {
@@ -256,12 +262,20 @@ impl PeerTable {
     /// intermediate `Vec` on the once-per-round path).
     pub fn alive_ids(&self) -> IdSet {
         let mut set = IdSet::new();
+        self.alive_ids_into(&mut set);
+        set
+    }
+
+    /// [`PeerTable::alive_ids`] into a caller-owned set: clears `set` and
+    /// refills it, reusing its bitset allocation (the window-reopen path
+    /// calls this every round).
+    pub fn alive_ids_into(&self, set: &mut IdSet) {
+        set.clear();
         for (id, s) in self.status.iter().enumerate() {
             if *s == Some(PeerStatus::Alive) {
                 set.insert(id as ClientId);
             }
         }
-        set
     }
 
     /// How many peers are currently believed alive (O(1); the per-round
@@ -438,6 +452,24 @@ mod tests {
         // a restored-crashed peer can still revive by speaking
         assert!(t.record_message(1, 5, false));
         assert_eq!(t.status(1), Some(PeerStatus::Alive));
+    }
+
+    #[test]
+    fn idset_clear_keeps_capacity_and_alive_ids_into_matches() {
+        let mut s = IdSet::new();
+        s.insert(3);
+        s.insert(200);
+        s.clear();
+        assert!(s.is_empty());
+        assert!(!s.contains(3) && !s.contains(200));
+        let mut t = PeerTable::new(&[1, 2, 3]);
+        t.mark_missing(0, &ids([2]));
+        t.alive_ids_into(&mut s);
+        assert_eq!(
+            (s.contains(1), s.contains(2), s.contains(3), s.len()),
+            (false, true, true, 2),
+            "refill must match a fresh alive_ids()"
+        );
     }
 
     #[test]

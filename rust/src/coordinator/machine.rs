@@ -100,9 +100,10 @@ use super::termination::{
 };
 use crate::metrics::{ClientReport, RoundRecord};
 use crate::model::ParamVector;
-use crate::net::delta::{DeltaMsg, DeltaRx, DeltaTx, FlagMsg};
+use crate::net::delta::{DeltaBody, DeltaMsg, DeltaRx, DeltaTx, FlagMsg, SparseVals};
 use crate::net::{ClientId, CodecSpec, ModelUpdate, Msg, Transport};
-use crate::runtime::{Meta, Trainer};
+use crate::runtime::{AggScratch, Meta, TrainScratch, Trainer};
+use crate::util::pool;
 use crate::util::time::{Clock, SimTime};
 use crate::util::Rng;
 
@@ -229,21 +230,22 @@ struct Window {
     /// early-exit check.
     awaiting: usize,
     /// Latest updates of the `k_max − 1` lowest-id senders — the only
-    /// payloads aggregation can consume.
-    kept: BTreeMap<ClientId, ModelUpdate>,
+    /// payloads aggregation can consume.  Kept sorted ascending by sender
+    /// id, so iteration matches the `BTreeMap` this used to be, while the
+    /// backing storage survives window reuse (DESIGN.md §14): a cleared
+    /// `Vec` keeps its capacity where a cleared `BTreeMap` frees its nodes.
+    kept: Vec<(ClientId, ModelUpdate)>,
 }
 
 impl Window {
-    fn open(deadline: SimTime, peer_table: &PeerTable) -> Window {
-        let awaited = peer_table.alive_ids();
-        let awaiting = awaited.len();
+    fn empty() -> Window {
         Window {
-            deadline,
+            deadline: SimTime::ZERO,
             heard: IdSet::new(),
-            awaited,
+            awaited: IdSet::new(),
             resolved: IdSet::new(),
-            awaiting,
-            kept: BTreeMap::new(),
+            awaiting: 0,
+            kept: Vec::new(),
         }
     }
 
@@ -258,25 +260,34 @@ impl Window {
     /// lowest-id senders.  Once the prefix is full, only a lower id can
     /// displace its maximum, and a displaced id can never re-enter (the
     /// lowest-`cap` set of a growing id set only ever moves down) — so the
-    /// surviving values are exactly what the unbounded map's
-    /// `values().take(cap)` would have produced.
+    /// surviving values are exactly what an unbounded map's ascending
+    /// prefix would have produced.  Every payload that leaves the prefix
+    /// (overwritten, displaced, or refused) goes back to the buffer pool —
+    /// decode checked it out, so the stash is where its ownership ends.
     fn stash(&mut self, sender: ClientId, u: ModelUpdate, cap: usize) {
         if cap == 0 {
+            pool::recycle_f32(u.params.0);
             return;
         }
-        if let Some(slot) = self.kept.get_mut(&sender) {
-            *slot = u; // latest update per sender wins
-            return;
-        }
-        if self.kept.len() < cap {
-            self.kept.insert(sender, u);
-            return;
-        }
-        let evict = self.kept.keys().next_back().copied();
-        if let Some(max_id) = evict {
-            if sender < max_id {
-                self.kept.remove(&max_id);
-                self.kept.insert(sender, u);
+        match self.kept.binary_search_by_key(&sender, |(id, _)| *id) {
+            Ok(i) => {
+                // latest update per sender wins
+                let old = std::mem::replace(&mut self.kept[i].1, u);
+                pool::recycle_f32(old.params.0);
+            }
+            Err(i) => {
+                if self.kept.len() < cap {
+                    self.kept.insert(i, (sender, u));
+                    return;
+                }
+                let max_id = self.kept.last().map_or(sender, |(id, _)| *id);
+                if sender < max_id {
+                    let (_, old) = self.kept.pop().expect("prefix is full, cap > 0");
+                    pool::recycle_f32(old.params.0);
+                    self.kept.insert(i, (sender, u));
+                } else {
+                    pool::recycle_f32(u.params.0);
+                }
             }
         }
     }
@@ -351,6 +362,18 @@ pub struct AsyncMachine<'a> {
     state: AsyncState,
     started: SimTime,
     params: Vec<f32>,
+    /// Reusable training scratch (logits/softmax buffers; DESIGN.md §14).
+    scratch: TrainScratch,
+    /// Reusable aggregation scratch (accumulator + column buffers).
+    agg: AggScratch,
+    /// Round train tensors, rebuilt in place each round.
+    train_xs: Vec<f32>,
+    train_ys: Vec<i32>,
+    /// Shuffle order for `Dataset::gather_round_into`.
+    gather_order: Vec<usize>,
+    /// The previous round's window carcass, reopened instead of rebuilt so
+    /// its id-sets and stash storage keep their allocations.
+    spare: Option<Window>,
     peer_table: PeerTable,
     /// Overlay change counter last seen ([`Transport::topology_generation`]):
     /// a mismatch at the top of a round means graph faults rewired the
@@ -435,6 +458,12 @@ impl<'a> AsyncMachine<'a> {
             state: AsyncState::Boot,
             started: SimTime::ZERO,
             params: Vec::new(),
+            scratch: TrainScratch::default(),
+            agg: AggScratch::default(),
+            train_xs: Vec::new(),
+            train_ys: Vec::new(),
+            gather_order: Vec::new(),
+            spare: None,
             peer_table,
             overlay_gen: 0,
             overlay_dynamic,
@@ -522,14 +551,21 @@ impl<'a> AsyncMachine<'a> {
     /// charge.
     fn train(&mut self) -> Result<Flow> {
         let t_train = self.clock.now();
-        let (xs, ys) = self.data.train.gather_round(
+        self.data.train.gather_round_into(
             &self.data.indices,
             self.meta.nb_train * self.meta.batch,
             &mut self.rng,
+            &mut self.train_xs,
+            &mut self.train_ys,
+            &mut self.gather_order,
         );
-        let (new_params, train_loss) =
-            self.trainer.train_round(&self.params, &xs, &ys, self.cfg.lr)?;
-        self.params = new_params;
+        let train_loss = self.trainer.train_round_scratch(
+            &mut self.params,
+            &self.train_xs,
+            &self.train_ys,
+            self.cfg.lr,
+            &mut self.scratch,
+        )?;
         self.last_train_loss = train_loss;
         // `Some(cost)` (virtual time) charges a deterministic modeled cost;
         // `None` (wall clock) measures real training time and sleeps
@@ -605,12 +641,27 @@ impl<'a> AsyncMachine<'a> {
         // through the window (pacing its rounds, catching the rejoin)
         // instead of spinning straight to the round cap.
         if self.peer_table.tracked() == 0 && !self.overlay_dynamic {
-            let w = Window::open(self.clock.now(), &self.peer_table);
+            let w = self.open_window(self.clock.now());
             return self.close_window(w);
         }
         let deadline = self.clock.now() + self.cfg.timeout;
-        let w = Window::open(deadline, &self.peer_table);
+        let w = self.open_window(deadline);
         self.window_poll(w)
+    }
+
+    /// A window for the current round: the previous round's carcass with
+    /// its id-sets cleared (keeping their bit-vector storage) and the
+    /// awaited set rebuilt from the live peer table, or a fresh one on the
+    /// first round.  Same observable state as building from scratch.
+    fn open_window(&mut self, deadline: SimTime) -> Window {
+        let mut w = self.spare.take().unwrap_or_else(Window::empty);
+        w.deadline = deadline;
+        w.heard.clear();
+        w.resolved.clear();
+        self.peer_table.alive_ids_into(&mut w.awaited);
+        w.awaiting = w.awaited.len();
+        debug_assert!(w.kept.is_empty(), "close_window drains the stash");
+        w
     }
 
     /// One turn of the wait-window loop: close on deadline or early exit,
@@ -695,6 +746,10 @@ impl<'a> AsyncMachine<'a> {
             if revived && !carried_flag {
                 self.rearm_relay(sender);
             }
+        } else {
+            // Untracked or duplicate-flagged payload: decode checked this
+            // buffer out of the pool; hand it back instead of dropping it.
+            pool::recycle_f32(u.params.0);
         }
     }
 
@@ -864,27 +919,38 @@ impl<'a> AsyncMachine<'a> {
 
     /// End of window: suspect sweep, aggregate, evaluate, CCC — the
     /// synchronous tail of Algorithm 2's round.
-    fn close_window(&mut self, w: Window) -> Result<Flow> {
+    fn close_window(&mut self, mut w: Window) -> Result<Flow> {
         // Crash detection (Alg. 2 lines 14-19).
         let newly_crashed = self.peer_table.mark_missing(self.round, &w.heard);
         // Aggregate own + received (Alg. 2 lines 20-21), through the
         // configured rule: `fedavg` is the trainer's weighted mean
         // (byte-identical pre-rule path); the robust rules bound what a
-        // Byzantine row can do to the result (DESIGN.md §11).
-        let (aggregated, new_params) = {
-            let mut rows: Vec<(&[f32], f32)> = vec![(&self.params, self.my_weight)];
-            for u in w.kept.values() {
+        // Byzantine row can do to the result (DESIGN.md §11).  The result
+        // lands in the reusable accumulator and is swapped into `params`;
+        // the stash's pooled payloads go back to the pool.
+        let aggregated = {
+            let mut rows: Vec<(&[f32], f32)> = Vec::with_capacity(1 + w.kept.len());
+            rows.push((&self.params, self.my_weight));
+            for (_, u) in &w.kept {
                 rows.push((u.params.as_slice(), u.weight.max(0.0)));
             }
-            (rows.len(), self.trainer.aggregate_with(&rows, &self.cfg.agg)?)
+            let trainer = self.trainer;
+            trainer.aggregate_with_scratch(&rows, &self.cfg.agg, &mut self.agg)?;
+            rows.len()
         };
-        self.params = new_params;
+        std::mem::swap(&mut self.params, &mut self.agg.out);
+        for (_, u) in w.kept.drain(..) {
+            pool::recycle_f32(u.params.0);
+        }
+        // Park the carcass: next round's `open_window` reuses its storage.
+        self.spare = Some(w);
         // Evaluate (Alg. 2 line 22).
-        let (correct, _eval_loss) = self.trainer.eval(
+        let (correct, _eval_loss) = self.trainer.eval_scratch(
             &self.params,
             &self.data.eval.eval_xs,
             &self.data.eval.eval_ys,
             false,
+            &mut self.scratch,
         )?;
         let probe_acc = correct as f32 / self.data.eval.eval_ys.len() as f32;
         // CCC check (Alg. 2 lines 23-34), condition (a) generalized to the
@@ -912,8 +978,7 @@ impl<'a> AsyncMachine<'a> {
         if self.overlay_dynamic && tracked == 0 {
             crash_free = false;
         }
-        let avg = ParamVector(self.params.clone());
-        let ccc = self.monitor.observe(&avg, crash_free, aggregated);
+        let ccc = self.monitor.observe_slice(&self.params, crash_free, aggregated);
         self.history.push(RoundRecord {
             round: self.round,
             train_loss: self.last_train_loss,
@@ -1017,25 +1082,48 @@ impl<'a> AsyncMachine<'a> {
                             body,
                         });
                         let _ = self.transport.send(peer, &msg);
+                        // `send` serialized the body; its pooled payload
+                        // (full snapshot or raw sparse values) goes back.
+                        let Msg::Delta(dm) = msg else { unreachable!("built as a delta") };
+                        match dm.body {
+                            DeltaBody::Full(v) => pool::recycle_f32(v),
+                            DeltaBody::Sparse { vals: SparseVals::F32(v), .. } => {
+                                pool::recycle_f32(v)
+                            }
+                            DeltaBody::Sparse { .. } => {}
+                        }
                     }
                 } else {
-                    let msg = update(self.params.clone(), self.id, self.round, self.my_weight);
+                    // Shuttle `params` through the message instead of
+                    // cloning it: `broadcast` only borrows, so the buffer
+                    // comes straight back.
+                    let msg =
+                        update(std::mem::take(&mut self.params), self.id, self.round, self.my_weight);
                     let _ = self.transport.broadcast(&msg);
+                    let Msg::Update(u) = msg else { unreachable!("built as an update") };
+                    self.params = u.params.0;
                 }
             }
             // Every coordinate scaled (negative = inverted direction):
             // dominates a mean, gets trimmed/out-voted by robust rules.
             Some(AdversaryKind::Poison { scale }) => {
-                let lie: Vec<f32> = self.params.iter().map(|v| v * scale).collect();
+                let mut lie = pool::take_f32(self.params.len());
+                lie.extend(self.params.iter().map(|v| v * scale));
                 let msg = update(lie, self.id, self.round, self.my_weight);
                 let _ = self.transport.broadcast(&msg);
+                let Msg::Update(u) = msg else { unreachable!("built as an update") };
+                pool::recycle_f32(u.params.0);
             }
             // The first model ever broadcast, frozen, re-sent under this
             // round's fresh tag — freshness checks pass, content is stale.
+            // One clone ever (freezing round): afterwards the frozen buffer
+            // shuttles through the message and back.
             Some(AdversaryKind::StaleReplay) => {
-                let stale = self.stale_params.get_or_insert_with(|| self.params.clone()).clone();
+                let stale = self.stale_params.take().unwrap_or_else(|| self.params.clone());
                 let msg = update(stale, self.id, self.round, self.my_weight);
                 let _ = self.transport.broadcast(&msg);
+                let Msg::Update(u) = msg else { unreachable!("built as an update") };
+                self.stale_params = Some(u.params.0);
             }
             // A different lie to every neighbor: each gets the true model
             // scaled by an independent draw from this client's own seeded
@@ -1043,9 +1131,12 @@ impl<'a> AsyncMachine<'a> {
             Some(AdversaryKind::Equivocate) => {
                 for peer in self.transport.neighbors() {
                     let factor = self.rng.range_f32(-2.0, 2.0);
-                    let lie: Vec<f32> = self.params.iter().map(|v| v * factor).collect();
+                    let mut lie = pool::take_f32(self.params.len());
+                    lie.extend(self.params.iter().map(|v| v * factor));
                     let msg = update(lie, self.id, self.round, self.my_weight);
                     let _ = self.transport.send(peer, &msg);
+                    let Msg::Update(u) = msg else { unreachable!("built as an update") };
+                    pool::recycle_f32(u.params.0);
                 }
             }
             // Manufactured suspicion churn: the true model, but only to
@@ -1055,12 +1146,15 @@ impl<'a> AsyncMachine<'a> {
             // each fresh suspicion resets the CCC streak; `--quorum auto`
             // learns the flap rate instead (DESIGN.md §11).
             Some(AdversaryKind::ForgeSuspicion) => {
-                let msg = update(self.params.clone(), self.id, self.round, self.my_weight);
+                let msg =
+                    update(std::mem::take(&mut self.params), self.id, self.round, self.my_weight);
                 for (idx, peer) in self.transport.neighbors().into_iter().enumerate() {
                     if (idx as u32 + self.round) % 2 == 0 {
                         let _ = self.transport.send(peer, &msg);
                     }
                 }
+                let Msg::Update(u) = msg else { unreachable!("built as an update") };
+                self.params = u.params.0;
             }
         }
     }
@@ -1108,6 +1202,13 @@ pub struct SyncMachine<'a> {
     state: SyncState,
     started: SimTime,
     params: Vec<f32>,
+    /// Reusable training / aggregation scratch and round train tensors —
+    /// same hot-loop discipline as the async machine (DESIGN.md §14).
+    scratch: TrainScratch,
+    agg: AggScratch,
+    train_xs: Vec<f32>,
+    train_ys: Vec<i32>,
+    gather_order: Vec<usize>,
     monitor: ConvergenceMonitor,
     history: Vec<RoundRecord>,
     last_train_loss: f32,
@@ -1144,6 +1245,11 @@ impl<'a> SyncMachine<'a> {
             state: SyncState::Boot,
             started: SimTime::ZERO,
             params: Vec::new(),
+            scratch: TrainScratch::default(),
+            agg: AggScratch::default(),
+            train_xs: Vec::new(),
+            train_ys: Vec::new(),
+            gather_order: Vec::new(),
             monitor,
             history: Vec::new(),
             last_train_loss: 0.0,
@@ -1208,14 +1314,21 @@ impl<'a> SyncMachine<'a> {
         }
         // Local update.
         let t_train = self.clock.now();
-        let (xs, ys) = self.data.train.gather_round(
+        self.data.train.gather_round_into(
             &self.data.indices,
             self.meta.nb_train * self.meta.batch,
             &mut self.rng,
+            &mut self.train_xs,
+            &mut self.train_ys,
+            &mut self.gather_order,
         );
-        let (new_params, train_loss) =
-            self.trainer.train_round(&self.params, &xs, &ys, self.cfg.lr)?;
-        self.params = new_params;
+        let train_loss = self.trainer.train_round_scratch(
+            &mut self.params,
+            &self.train_xs,
+            &self.train_ys,
+            self.cfg.lr,
+            &mut self.scratch,
+        )?;
         self.last_train_loss = train_loss;
         let charge = match self.train_cost {
             Some(cost) => Some(cost.mul_f32(1.0 + self.slowdown.max(0.0))),
@@ -1236,14 +1349,18 @@ impl<'a> SyncMachine<'a> {
     /// Broadcast ⟨M_i, round⟩ (terminate flag set if our CCC fired last
     /// round — the "mutual agreement" carrier), then open the barrier.
     fn after_train(&mut self) -> Result<Flow> {
+        // Shuttle `params` through the message instead of cloning it —
+        // `broadcast` only borrows (see the async machine's honest path).
         let msg = Msg::Update(ModelUpdate {
             sender: self.id,
             round: self.round,
             terminate: self.want_terminate,
             weight: self.my_weight,
-            params: ParamVector(self.params.clone()),
+            params: ParamVector(std::mem::take(&mut self.params)),
         });
         let _ = self.transport.broadcast(&msg);
+        let Msg::Update(own) = msg else { unreachable!("built as an update") };
+        self.params = own.params.0;
         let mut terminate_seen = self.want_terminate;
         let mut got: BTreeMap<ClientId, ModelUpdate> = BTreeMap::new();
         let round = self.round;
@@ -1297,24 +1414,28 @@ impl<'a> SyncMachine<'a> {
         terminate_seen: bool,
     ) -> Result<Flow> {
         // Aggregate own + all peers (Algorithm 1 line 12), through the
-        // configured rule (fedavg default = the pre-rule weighted mean).
-        let (aggregated, new_params) = {
-            let mut rows: Vec<(&[f32], f32)> = vec![(&self.params, self.my_weight)];
+        // configured rule (fedavg default = the pre-rule weighted mean),
+        // into the reusable accumulator.
+        let aggregated = {
+            let mut rows: Vec<(&[f32], f32)> = Vec::with_capacity(self.meta.k_max);
+            rows.push((&self.params, self.my_weight));
             for u in got.values().take(self.meta.k_max - 1) {
                 rows.push((u.params.as_slice(), u.weight.max(0.0)));
             }
-            (rows.len(), self.trainer.aggregate_with(&rows, &self.cfg.agg)?)
+            let trainer = self.trainer;
+            trainer.aggregate_with_scratch(&rows, &self.cfg.agg, &mut self.agg)?;
+            rows.len()
         };
-        self.params = new_params;
-        let (correct, _) = self.trainer.eval(
+        std::mem::swap(&mut self.params, &mut self.agg.out);
+        let (correct, _) = self.trainer.eval_scratch(
             &self.params,
             &self.data.eval.eval_xs,
             &self.data.eval.eval_ys,
             false,
+            &mut self.scratch,
         )?;
         let probe_acc = correct as f32 / self.data.eval.eval_ys.len() as f32;
-        let ccc =
-            self.monitor.observe(&ParamVector(self.params.clone()), true, aggregated);
+        let ccc = self.monitor.observe_slice(&self.params, true, aggregated);
         self.history.push(RoundRecord {
             round: self.round,
             train_loss: self.last_train_loss,

@@ -253,13 +253,32 @@ impl ConvergenceMonitor {
     /// fixed threshold fires prematurely at large n and never at small n.
     /// `conv_threshold_rel` is calibrated at 2 participants.
     pub fn observe(&mut self, avg: &ParamVector, crash_free: bool, participants: usize) -> bool {
+        self.observe_slice(&avg.0, crash_free, participants)
+    }
+
+    /// Slice-based [`ConvergenceMonitor::observe`]: identical arithmetic and
+    /// state transitions, but the retained previous model is overwritten in
+    /// place instead of replaced by a clone — the round loop can feed its
+    /// live parameter buffer without allocating (DESIGN.md §14).
+    pub fn observe_slice(&mut self, avg: &[f32], crash_free: bool, participants: usize) -> bool {
         let eff_threshold =
             self.conv_threshold_rel * (2.0 / participants.max(1) as f32).sqrt();
+        // Same float ops as ParamVector::l2_distance / l2_norm: per-coordinate
+        // f32 difference/square widened to f64 for the sum, sqrt back to f32.
         let stable = match &self.prev {
             None => false,
             Some(prev) => {
-                let delta = avg.l2_distance(prev);
-                let scale = avg.l2_norm().max(1.0);
+                let delta = avg
+                    .iter()
+                    .zip(&prev.0)
+                    .map(|(a, b)| {
+                        let d = a - b;
+                        (d * d) as f64
+                    })
+                    .sum::<f64>()
+                    .sqrt() as f32;
+                let scale =
+                    (avg.iter().map(|a| (a * a) as f64).sum::<f64>().sqrt() as f32).max(1.0);
                 self.last_delta_rel = delta / scale;
                 self.last_delta_rel < eff_threshold
             }
@@ -269,7 +288,13 @@ impl ConvergenceMonitor {
         } else {
             self.counter = 0; // any instability or crash resets (Alg. 2 l.27)
         }
-        self.prev = Some(avg.clone());
+        match &mut self.prev {
+            Some(p) => {
+                p.0.clear();
+                p.0.extend_from_slice(avg);
+            }
+            None => self.prev = Some(ParamVector(avg.to_vec())),
+        }
         self.counter >= self.count_threshold
     }
 }

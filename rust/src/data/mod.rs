@@ -68,16 +68,39 @@ impl Dataset {
         count: usize,
         rng: &mut Rng,
     ) -> (Vec<f32>, Vec<i32>) {
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        let mut order = Vec::new();
+        self.gather_round_into(indices, count, rng, &mut xs, &mut ys, &mut order);
+        (xs, ys)
+    }
+
+    /// [`Dataset::gather_round`] into caller-owned buffers, so the per-round
+    /// train tensors reuse their capacity.  `order` is rebuilt from `indices`
+    /// every call before shuffling — the RNG consumes exactly the same draws
+    /// as the allocating path, so round data stays bit-identical.
+    pub fn gather_round_into(
+        &self,
+        indices: &[usize],
+        count: usize,
+        rng: &mut Rng,
+        xs: &mut Vec<f32>,
+        ys: &mut Vec<i32>,
+        order: &mut Vec<usize>,
+    ) {
         assert!(!indices.is_empty(), "empty partition");
         let l = self.img_len();
-        let mut xs = Vec::with_capacity(count * l);
-        let mut ys = Vec::with_capacity(count);
-        let mut order: Vec<usize> = indices.to_vec();
-        rng.shuffle(&mut order);
+        xs.clear();
+        xs.reserve(count * l);
+        ys.clear();
+        ys.reserve(count);
+        order.clear();
+        order.extend_from_slice(indices);
+        rng.shuffle(order);
         let mut pos = 0;
         for _ in 0..count {
             if pos == order.len() {
-                rng.shuffle(&mut order);
+                rng.shuffle(order);
                 pos = 0;
             }
             let idx = order[pos];
@@ -85,7 +108,6 @@ impl Dataset {
             xs.extend_from_slice(self.image(idx));
             ys.push(self.ys[idx]);
         }
-        (xs, ys)
     }
 
     /// First `count` examples as flat buffers (deterministic eval tensors).
@@ -148,6 +170,24 @@ mod tests {
         // all labels must come from the partition
         let allowed: Vec<i32> = indices.iter().map(|&i| train.ys[i]).collect();
         assert!(ys.iter().all(|y| allowed.contains(y)));
+    }
+
+    #[test]
+    fn gather_round_into_matches_gather_round_and_rng_stream() {
+        let m = meta();
+        let (train, _) = Dataset::synthetic_pair(&m, 50, 10, 1);
+        let indices = vec![3, 4, 5, 11, 20];
+        let mut rng_a = Rng::new(9);
+        let mut rng_b = Rng::new(9);
+        let (mut xs, mut ys, mut order) = (Vec::new(), Vec::new(), vec![usize::MAX; 99]);
+        for _ in 0..3 {
+            let (pxs, pys) = train.gather_round(&indices, 32, &mut rng_a);
+            train.gather_round_into(&indices, 32, &mut rng_b, &mut xs, &mut ys, &mut order);
+            assert_eq!(pxs, xs, "reused buffers must reproduce the allocating path");
+            assert_eq!(pys, ys);
+        }
+        // identical RNG consumption: both streams land in the same state
+        assert_eq!(rng_a.below(1 << 30), rng_b.below(1 << 30));
     }
 
     #[test]

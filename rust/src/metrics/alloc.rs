@@ -1,0 +1,144 @@
+//! Allocation audit (the `alloc-audit` feature, DESIGN.md §14).
+//!
+//! When the feature is enabled this module installs a counting
+//! [`GlobalAlloc`](std::alloc::GlobalAlloc) that wraps the system
+//! allocator with four relaxed atomic counters.  [`AllocStats`] is the
+//! read side: diff two snapshots around a workload to measure its
+//! allocator traffic (`tests/alloc_budget.rs` pins the steady-state round
+//! loop this way).  Without the feature nothing is installed, the type
+//! still exists, and every snapshot is zero — callers never need their own
+//! `cfg` gates.
+
+/// Snapshot of the process-wide allocation counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AllocStats {
+    /// Allocator acquisitions since process start (`alloc`, `alloc_zeroed`,
+    /// and the new block of every successful `realloc`).
+    pub allocs: u64,
+    /// Releases since process start (`dealloc` and the old block of every
+    /// successful `realloc`).
+    pub frees: u64,
+    /// Bytes currently live (allocated minus freed).
+    pub live_bytes: u64,
+    /// High-water mark of `live_bytes`.
+    pub peak_bytes: u64,
+}
+
+impl AllocStats {
+    /// Is the counting allocator compiled in?
+    pub fn enabled() -> bool {
+        cfg!(feature = "alloc-audit")
+    }
+
+    /// Current counters (all zero without the `alloc-audit` feature).
+    pub fn snapshot() -> AllocStats {
+        #[cfg(feature = "alloc-audit")]
+        {
+            audit::snapshot()
+        }
+        #[cfg(not(feature = "alloc-audit"))]
+        {
+            AllocStats::default()
+        }
+    }
+
+    /// Allocator acquisitions between this snapshot and a `later` one.
+    pub fn allocs_since(&self, later: &AllocStats) -> u64 {
+        later.allocs.saturating_sub(self.allocs)
+    }
+}
+
+#[cfg(feature = "alloc-audit")]
+mod audit {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    use super::AllocStats;
+
+    static ALLOCS: AtomicU64 = AtomicU64::new(0);
+    static FREES: AtomicU64 = AtomicU64::new(0);
+    static LIVE: AtomicU64 = AtomicU64::new(0);
+    static PEAK: AtomicU64 = AtomicU64::new(0);
+
+    fn on_alloc(size: usize) {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        let live = LIVE.fetch_add(size as u64, Ordering::Relaxed) + size as u64;
+        PEAK.fetch_max(live, Ordering::Relaxed);
+    }
+
+    fn on_free(size: usize) {
+        FREES.fetch_add(1, Ordering::Relaxed);
+        LIVE.fetch_sub(size as u64, Ordering::Relaxed);
+    }
+
+    /// The counting wrapper.  Counters update *after* the system call so a
+    /// failed (null) allocation is never counted.
+    struct Counting;
+
+    unsafe impl GlobalAlloc for Counting {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            let p = System.alloc(layout);
+            if !p.is_null() {
+                on_alloc(layout.size());
+            }
+            p
+        }
+
+        unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+            let p = System.alloc_zeroed(layout);
+            if !p.is_null() {
+                on_alloc(layout.size());
+            }
+            p
+        }
+
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            System.dealloc(ptr, layout);
+            on_free(layout.size());
+        }
+
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+            let p = System.realloc(ptr, layout, new_size);
+            if !p.is_null() {
+                // One allocator round-trip: the old block is gone, a new
+                // (possibly same) block exists — count both sides so a
+                // Vec growing in place still shows up as allocator traffic.
+                on_free(layout.size());
+                on_alloc(new_size);
+            }
+            p
+        }
+    }
+
+    #[global_allocator]
+    static AUDIT: Counting = Counting;
+
+    pub(super) fn snapshot() -> AllocStats {
+        AllocStats {
+            allocs: ALLOCS.load(Ordering::Relaxed),
+            frees: FREES.load(Ordering::Relaxed),
+            live_bytes: LIVE.load(Ordering::Relaxed),
+            peak_bytes: PEAK.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_is_coherent() {
+        let a = AllocStats::snapshot();
+        if AllocStats::enabled() {
+            // Force allocator traffic and observe it.
+            let v: Vec<u64> = Vec::with_capacity(1024);
+            drop(std::hint::black_box(v));
+            let b = AllocStats::snapshot();
+            assert!(a.allocs_since(&b) >= 1, "an allocation must be counted");
+            assert!(b.peak_bytes >= b.live_bytes.min(b.peak_bytes));
+        } else {
+            assert_eq!(a, AllocStats::default(), "feature off means zeros");
+        }
+    }
+}

@@ -1,5 +1,9 @@
 //! Per-round metrics, client reports and CSV emission.
 
+mod alloc;
+
+pub use alloc::AllocStats;
+
 use std::io::Write as _;
 use std::path::Path;
 

@@ -73,8 +73,11 @@ impl ParamVector {
         w.f32_slice(&self.0);
     }
 
+    /// Decode into a pooled buffer (`util::pool`) — bit-identical to the
+    /// allocating reader; whoever ends the vector's life may recycle it
+    /// (dropping it instead is always safe, just a missed reuse).
     pub fn decode(r: &mut Reader) -> Result<Self> {
-        Ok(ParamVector(r.f32_vec()?))
+        Ok(ParamVector(r.f32_vec_pooled()?))
     }
 }
 

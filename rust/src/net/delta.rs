@@ -39,6 +39,7 @@ use std::collections::VecDeque;
 use anyhow::{bail, Result};
 
 use crate::util::codec::{Reader, SliceWriter};
+use crate::util::pool;
 
 use super::message::{ClientId, Msg};
 
@@ -475,11 +476,13 @@ impl DeltaTx {
     /// the new base.
     pub fn encode(&mut self, k: usize, q16: bool, round: u32, params: &[f32]) -> DeltaBody {
         let body = self.encode_inner(k, q16, params);
+        // Shadows live in pooled buffers: encode checks them out, eviction
+        // and ack promotion hand them back (DESIGN.md §14).
         let recon = match &body {
-            DeltaBody::Full(p) => p.clone(),
+            DeltaBody::Full(p) => pool::copy_of(p),
             DeltaBody::Sparse { idx, vals, .. } => {
                 let (_, base) = self.acked.as_ref().expect("sparse requires a base");
-                let mut recon = base.clone();
+                let mut recon = pool::copy_of(base);
                 apply_sparse(&mut recon, idx, vals);
                 recon
             }
@@ -489,20 +492,24 @@ impl DeltaTx {
         }
         self.sent.push_back((round, recon));
         while self.sent.len() > HISTORY {
-            self.sent.pop_front();
+            if let Some((_, v)) = self.sent.pop_front() {
+                pool::recycle_f32(v);
+            }
         }
         body
     }
 
     fn encode_inner(&self, k: usize, q16: bool, params: &[f32]) -> DeltaBody {
+        // Full snapshots ride in pooled buffers; the broadcast path recycles
+        // them after serialization.
         let (base_round, base) = match &self.acked {
             Some(b) if !self.need_full && b.1.len() == params.len() => (b.0, &b.1),
-            _ => return DeltaBody::Full(params.to_vec()),
+            _ => return DeltaBody::Full(pool::copy_of(params)),
         };
         if k >= params.len() {
             // A "sparse" body covering every coordinate is strictly larger
             // than the full snapshot.
-            return DeltaBody::Full(params.to_vec());
+            return DeltaBody::Full(pool::copy_of(params));
         }
         let idx = top_k_indices(params, base, k);
         if q16 {
@@ -515,11 +522,12 @@ impl DeltaTx {
                 },
                 // Non-finite values don't survive affine quantization;
                 // the full snapshot carries their exact bits instead.
-                None => DeltaBody::Full(params.to_vec()),
+                None => DeltaBody::Full(pool::copy_of(params)),
             }
         } else {
-            let vals = SparseVals::F32(idx.iter().map(|&i| params[i as usize]).collect());
-            DeltaBody::Sparse { base_round, dim: params.len() as u32, idx, vals }
+            let mut v = pool::take_f32(idx.len());
+            v.extend(idx.iter().map(|&i| params[i as usize]));
+            DeltaBody::Sparse { base_round, dim: params.len() as u32, idx, vals: SparseVals::F32(v) }
         }
     }
 
@@ -533,7 +541,9 @@ impl DeltaTx {
             // The receiver reports no reconstructed state at all — it was
             // reset (churn rejoin, cut heal).  Any base we hold is for a
             // link incarnation that no longer exists.
-            self.acked = None;
+            if let Some((_, v)) = self.acked.take() {
+                pool::recycle_f32(v);
+            }
             return;
         }
         if let Some((r, _)) = &self.acked {
@@ -543,9 +553,14 @@ impl DeltaTx {
         }
         while let Some((r, _)) = self.sent.front() {
             if *r < ack.round {
-                self.sent.pop_front();
+                if let Some((_, v)) = self.sent.pop_front() {
+                    pool::recycle_f32(v);
+                }
             } else if *r == ack.round {
-                self.acked = self.sent.pop_front();
+                let old = std::mem::replace(&mut self.acked, self.sent.pop_front());
+                if let Some((_, v)) = old {
+                    pool::recycle_f32(v);
+                }
                 break;
             } else {
                 // The acked round predates our retained window (it was
@@ -655,10 +670,13 @@ impl DeltaRx {
     /// link) — the caller drops the update and the piggybacked NACK
     /// requests a full snapshot.
     pub fn decode(&mut self, round: u32, body: &DeltaBody) -> Option<Vec<f32>> {
+        // Reconstructions live in pooled buffers: the returned one is the
+        // caller's to recycle (the update stash does), the retained copy is
+        // recycled on eviction or retransmit replacement.
         let recon = match body {
             DeltaBody::Full(p) => {
                 self.need_full = false;
-                p.clone()
+                pool::copy_of(p)
             }
             DeltaBody::Sparse { base_round, dim, idx, vals } => {
                 let base = self
@@ -669,14 +687,18 @@ impl DeltaRx {
                     self.need_full = true;
                     return None;
                 };
-                let mut recon = base.clone();
+                let mut recon = pool::copy_of(base);
                 apply_sparse(&mut recon, idx, vals);
                 self.pinned = Some(*base_round);
                 recon
             }
         };
-        self.entries.retain(|(r, _)| *r != round);
-        self.entries.push_back((round, recon.clone()));
+        if let Some(pos) = self.entries.iter().position(|(r, _)| *r == round) {
+            if let Some((_, old)) = self.entries.remove(pos) {
+                pool::recycle_f32(old);
+            }
+        }
+        self.entries.push_back((round, pool::copy_of(&recon)));
         self.highest = Some(self.highest.map_or(round, |h| h.max(round)));
         // Evict oldest unpinned entries beyond the retention window.
         while self.entries.len() > HISTORY {
@@ -687,7 +709,9 @@ impl DeltaRx {
             if pos + 1 == self.entries.len() {
                 break; // only the newest is unpinned; keep it
             }
-            self.entries.remove(pos);
+            if let Some((_, v)) = self.entries.remove(pos) {
+                pool::recycle_f32(v);
+            }
         }
         Some(recon)
     }

@@ -9,7 +9,7 @@
 
 use anyhow::Result;
 
-use super::{check_aggregate_rows, Meta, Trainer};
+use super::{check_rows_shape, Meta, TrainScratch, Trainer};
 
 /// Mock trainer with the same static-shape discipline as the PJRT engine.
 pub struct MockTrainer {
@@ -79,30 +79,33 @@ impl MockTrainer {
         self.meta.classes * (self.n_features() + 1)
     }
 
-    fn featurize(&self, img: &[f32]) -> Vec<f32> {
+    /// Scratch-filling `featurize`: `out` is fully overwritten
+    /// (`clear` + `resize`), so reuse is bit-identical to a fresh `vec!`.
+    fn featurize_into(&self, img: &[f32], out: &mut Vec<f32>) {
         let f = self.n_features();
-        let mut out = vec![0.0f32; f];
+        out.clear();
+        out.resize(f, 0.0);
         let chunk = img.len().div_ceil(f);
         for (i, v) in img.iter().enumerate() {
             out[(i / chunk).min(f - 1)] += v;
         }
         let norm = (chunk as f32).max(1.0);
-        for o in &mut out {
+        for o in out.iter_mut() {
             *o /= norm;
         }
-        out
     }
 
-    fn scores(&self, params: &[f32], feat: &[f32]) -> Vec<f32> {
+    /// Scratch-filling per-class linear scores: same arithmetic and push
+    /// order as the old collecting version.
+    fn scores_into(&self, params: &[f32], feat: &[f32], out: &mut Vec<f32>) {
         let f = self.n_features();
-        (0..self.meta.classes)
-            .map(|c| {
-                let base = c * (f + 1);
-                let w = &params[base..base + f];
-                let b = params[base + f];
-                w.iter().zip(feat).map(|(a, x)| a * x).sum::<f32>() + b
-            })
-            .collect()
+        out.clear();
+        for c in 0..self.meta.classes {
+            let base = c * (f + 1);
+            let w = &params[base..base + f];
+            let b = params[base + f];
+            out.push(w.iter().zip(feat).map(|(a, x)| a * x).sum::<f32>() + b);
+        }
     }
 }
 
@@ -125,38 +128,65 @@ impl Trainer for MockTrainer {
         ys: &[i32],
         lr: f32,
     ) -> Result<(Vec<f32>, f32)> {
+        let mut p = params.to_vec();
+        let loss = self.train_round_scratch(&mut p, xs, ys, lr, &mut TrainScratch::default())?;
+        Ok((p, loss))
+    }
+
+    fn train_round_scratch(
+        &self,
+        params: &mut Vec<f32>,
+        xs: &[f32],
+        ys: &[i32],
+        lr: f32,
+        scratch: &mut TrainScratch,
+    ) -> Result<f32> {
         let m = &self.meta;
         anyhow::ensure!(params.len() == self.check_params(), "mock param len");
         anyhow::ensure!(xs.len() == m.train_x_len(), "mock xs len");
         anyhow::ensure!(ys.len() == m.train_y_len(), "mock ys len");
         let img_len = m.img * m.img * m.channels;
         let f = self.n_features();
-        let mut p = params.to_vec();
         let mut loss_sum = 0.0f64;
         let n = ys.len();
         for (i, &label) in ys.iter().enumerate() {
-            let feat = self.featurize(&xs[i * img_len..(i + 1) * img_len]);
-            let s = self.scores(&p, &feat);
+            self.featurize_into(&xs[i * img_len..(i + 1) * img_len], &mut scratch.feat);
+            self.scores_into(params, &scratch.feat, &mut scratch.scores);
             // softmax xent + gradient step on the one example
-            let mx = s.iter().cloned().fold(f32::MIN, f32::max);
-            let exps: Vec<f32> = s.iter().map(|v| (v - mx).exp()).collect();
-            let z: f32 = exps.iter().sum();
+            let mx = scratch.scores.iter().cloned().fold(f32::MIN, f32::max);
+            scratch.exps.clear();
+            scratch.exps.extend(scratch.scores.iter().map(|v| (v - mx).exp()));
+            let z: f32 = scratch.exps.iter().sum();
             let label = label as usize % m.classes;
-            loss_sum += -((exps[label] / z).max(1e-9).ln()) as f64;
+            loss_sum += -((scratch.exps[label] / z).max(1e-9).ln()) as f64;
             for c in 0..m.classes {
-                let prob = exps[c] / z;
+                let prob = scratch.exps[c] / z;
                 let g = prob - if c == label { 1.0 } else { 0.0 };
                 let base = c * (f + 1);
-                for (j, x) in feat.iter().enumerate() {
-                    p[base + j] -= lr * self.lr_scale * g * x;
+                // `lr * lr_scale * g * x` associates left, so hoisting the
+                // loop-invariant prefix is bit-exact.
+                let step = lr * self.lr_scale * g;
+                for (j, x) in scratch.feat.iter().enumerate() {
+                    params[base + j] -= step * x;
                 }
-                p[base + f] -= lr * self.lr_scale * g;
+                params[base + f] -= step;
             }
         }
-        Ok((p, (loss_sum / n as f64) as f32))
+        Ok((loss_sum / n as f64) as f32)
     }
 
     fn eval(&self, params: &[f32], xs: &[f32], ys: &[i32], full: bool) -> Result<(u32, f32)> {
+        self.eval_scratch(params, xs, ys, full, &mut TrainScratch::default())
+    }
+
+    fn eval_scratch(
+        &self,
+        params: &[f32],
+        xs: &[f32],
+        ys: &[i32],
+        full: bool,
+        scratch: &mut TrainScratch,
+    ) -> Result<(u32, f32)> {
         let m = &self.meta;
         anyhow::ensure!(xs.len() == m.eval_x_len(full), "mock eval xs len");
         anyhow::ensure!(ys.len() == m.eval_y_len(full), "mock eval ys len");
@@ -164,8 +194,9 @@ impl Trainer for MockTrainer {
         let mut correct = 0u32;
         let mut loss_sum = 0.0f64;
         for (i, &label) in ys.iter().enumerate() {
-            let feat = self.featurize(&xs[i * img_len..(i + 1) * img_len]);
-            let s = self.scores(params, &feat);
+            self.featurize_into(&xs[i * img_len..(i + 1) * img_len], &mut scratch.feat);
+            self.scores_into(params, &scratch.feat, &mut scratch.scores);
+            let s = &scratch.scores;
             let pred = s
                 .iter()
                 .enumerate()
@@ -184,23 +215,28 @@ impl Trainer for MockTrainer {
     }
 
     fn aggregate(&self, rows: &[(&[f32], f32)]) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.aggregate_into(rows, &mut out)?;
+        Ok(out)
+    }
+
+    fn aggregate_into(&self, rows: &[(&[f32], f32)], out: &mut Vec<f32>) -> Result<()> {
         // The mock bypasses the n_params check of the real meta (its param
         // count is check_params()), but keeps weight/row-count validation.
-        let mut meta = self.meta.clone();
-        meta.n_params = self.check_params();
-        check_aggregate_rows(&meta, rows)?;
+        check_rows_shape(self.check_params(), self.meta.k_max, rows)?;
         let n = rows[0].0.len();
         let wsum: f32 = rows.iter().map(|(_, w)| w).sum();
-        let mut out = vec![0.0f32; n];
+        out.clear();
+        out.resize(n, 0.0);
         if wsum <= 0.0 {
-            return Ok(out);
+            return Ok(());
         }
         for (p, w) in rows {
             for (o, x) in out.iter_mut().zip(*p) {
                 *o += w / wsum * x;
             }
         }
-        Ok(out)
+        Ok(())
     }
 }
 
@@ -259,6 +295,58 @@ mod tests {
         assert!(out.iter().all(|&x| (x - 2.0).abs() < 1e-6));
         let out = t.aggregate(&[(&a, 3.0), (&b, 1.0)]).unwrap();
         assert!(out.iter().all(|&x| (x - 1.5).abs() < 1e-6));
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical() {
+        let t = MockTrainer::tiny();
+        let m = t.meta().clone();
+        let mut rng = Rng::new(9);
+        let p0 = t.init(1).unwrap();
+        let (xs, ys) = data(&m, &mut rng, m.nb_train * m.batch);
+        let (xs2, ys2) = data(&m, &mut rng, m.nb_train * m.batch);
+
+        // Fresh scratch per call vs one scratch reused across calls.
+        let mut a = p0.clone();
+        let la1 =
+            t.train_round_scratch(&mut a, &xs, &ys, 0.07, &mut TrainScratch::default()).unwrap();
+        let la2 =
+            t.train_round_scratch(&mut a, &xs2, &ys2, 0.07, &mut TrainScratch::default()).unwrap();
+        let mut b = p0.clone();
+        let mut s = TrainScratch::default();
+        let lb1 = t.train_round_scratch(&mut b, &xs, &ys, 0.07, &mut s).unwrap();
+        let lb2 = t.train_round_scratch(&mut b, &xs2, &ys2, 0.07, &mut s).unwrap();
+        assert_eq!(a, b, "reused scratch must not perturb params");
+        assert_eq!((la1.to_bits(), la2.to_bits()), (lb1.to_bits(), lb2.to_bits()));
+
+        // The allocating wrappers agree bit-for-bit with the scratch path.
+        let (c, lc) = t.train_round(&p0, &xs, &ys, 0.07).unwrap();
+        let mut d = p0.clone();
+        let ld = t.train_round_scratch(&mut d, &xs, &ys, 0.07, &mut s).unwrap();
+        assert_eq!(c, d);
+        assert_eq!(lc.to_bits(), ld.to_bits());
+
+        let (exs, eys) = data(&m, &mut rng, m.nb_eval_round * m.batch);
+        let plain = t.eval(&c, &exs, &eys, false).unwrap();
+        let pooled = t.eval_scratch(&c, &exs, &eys, false, &mut s).unwrap();
+        assert_eq!(plain.0, pooled.0);
+        assert_eq!(plain.1.to_bits(), pooled.1.to_bits());
+    }
+
+    #[test]
+    fn aggregate_into_matches_aggregate_and_reuses_capacity() {
+        let t = MockTrainer::tiny();
+        let n = t.check_params();
+        let a = vec![1.0f32; n];
+        let b = vec![3.0f32; n];
+        let rows: [(&[f32], f32); 2] = [(&a, 3.0), (&b, 1.0)];
+        let plain = t.aggregate(&rows).unwrap();
+        let mut out = vec![f32::NAN; n + 7]; // stale junk must be overwritten
+        t.aggregate_into(&rows, &mut out).unwrap();
+        assert_eq!(plain, out);
+        let cap = out.capacity();
+        t.aggregate_into(&rows, &mut out).unwrap();
+        assert_eq!(out.capacity(), cap, "second call must reuse the buffer");
     }
 
     #[test]

@@ -102,6 +102,35 @@ impl Meta {
     }
 }
 
+/// Reusable per-client training/eval scratch (DESIGN.md §14): the softmax
+/// working buffers the mock kernel hoists out of its per-sample loop.
+/// Callers hold one per client and pass it to [`Trainer::train_round_scratch`]
+/// / [`Trainer::eval_scratch`]; contents are meaningless between calls — the
+/// kernels fully rewrite whatever they read.
+#[derive(Debug, Default)]
+pub struct TrainScratch {
+    /// Per-sample feature vector (`featurize` output).
+    pub feat: Vec<f32>,
+    /// Per-class linear scores (logits).
+    pub scores: Vec<f32>,
+    /// Per-class shifted exponentials for the softmax.
+    pub exps: Vec<f32>,
+}
+
+/// Reusable aggregation scratch (DESIGN.md §14): the output accumulator plus
+/// the per-coordinate column / per-candidate distance buffers the robust
+/// rules need.  [`Trainer::aggregate_with_scratch`] leaves the aggregated
+/// model in `out`; the other buffers are internal working space.
+#[derive(Debug, Default)]
+pub struct AggScratch {
+    /// Aggregated model (the call's result).
+    pub out: Vec<f32>,
+    /// One coordinate across all rows (trimmed-mean / median sort column).
+    pub col: Vec<f32>,
+    /// Pairwise squared distances (krum score column).
+    pub dists: Vec<f64>,
+}
+
 /// The compute interface the coordinator drives.  One local round of
 /// Algorithm 2 is exactly: `train_round` → broadcast → collect →
 /// `aggregate` → `eval_round`.
@@ -141,19 +170,84 @@ pub trait Trainer: Send + Sync {
             }
         }
     }
+
+    /// Scratch-based variant of [`Trainer::train_round`]: updates `params`
+    /// in place and returns the mean loss.  The default delegates to the
+    /// allocating kernel, so every Trainer keeps working unchanged;
+    /// implementations that override it (the mock) must stay bit-identical
+    /// to their `train_round` for the same inputs.
+    fn train_round_scratch(
+        &self,
+        params: &mut Vec<f32>,
+        xs: &[f32],
+        ys: &[i32],
+        lr: f32,
+        scratch: &mut TrainScratch,
+    ) -> Result<f32> {
+        let _ = scratch;
+        let (new_params, loss) = self.train_round(params, xs, ys, lr)?;
+        *params = new_params;
+        Ok(loss)
+    }
+
+    /// Scratch-based variant of [`Trainer::eval`]; same bit-identity
+    /// contract as [`Trainer::train_round_scratch`].
+    fn eval_scratch(
+        &self,
+        params: &[f32],
+        xs: &[f32],
+        ys: &[i32],
+        full: bool,
+        scratch: &mut TrainScratch,
+    ) -> Result<(u32, f32)> {
+        let _ = scratch;
+        self.eval(params, xs, ys, full)
+    }
+
+    /// Accumulator variant of [`Trainer::aggregate`]: leaves the aggregated
+    /// model in `out` (fully overwritten), reusing its capacity.
+    fn aggregate_into(&self, rows: &[(&[f32], f32)], out: &mut Vec<f32>) -> Result<()> {
+        *out = self.aggregate(rows)?;
+        Ok(())
+    }
+
+    /// Scratch-based variant of [`Trainer::aggregate_with`]: the result
+    /// lands in `scratch.out`.  Bit-identical to [`Trainer::aggregate_with`]
+    /// for the same rows and rule.
+    fn aggregate_with_scratch(
+        &self,
+        rows: &[(&[f32], f32)],
+        rule: &AggregationRule,
+        scratch: &mut AggScratch,
+    ) -> Result<()> {
+        match rule {
+            AggregationRule::FedAvg => self.aggregate_into(rows, &mut scratch.out),
+            _ => {
+                check_aggregate_rows(self.meta(), rows)?;
+                robust::apply_into(rows, rule, scratch)
+            }
+        }
+    }
 }
 
 /// Validate row shapes shared by both Trainer impls.
 pub(crate) fn check_aggregate_rows(meta: &Meta, rows: &[(&[f32], f32)]) -> Result<()> {
+    check_rows_shape(meta.n_params, meta.k_max, rows)
+}
+
+/// Shape validation against explicit dimensions — the mock's param count
+/// differs from its meta's `n_params`, and cloning a patched `Meta` per
+/// aggregation would put a `String` allocation in the hot loop.
+pub(crate) fn check_rows_shape(n_params: usize, k_max: usize, rows: &[(&[f32], f32)]) -> Result<()> {
     if rows.is_empty() {
         bail!("aggregate called with zero rows");
     }
-    if rows.len() > meta.k_max {
-        bail!("aggregate rows {} exceed k_max {}", rows.len(), meta.k_max);
+    if rows.len() > k_max {
+        bail!("aggregate rows {} exceed k_max {}", rows.len(), k_max);
     }
     for (i, (p, w)) in rows.iter().enumerate() {
-        if p.len() != meta.n_params {
-            bail!("aggregate row {i} has {} params, want {}", p.len(), meta.n_params);
+        if p.len() != n_params {
+            bail!("aggregate row {i} has {} params, want {}", p.len(), n_params);
         }
         if !w.is_finite() || *w < 0.0 {
             bail!("aggregate row {i} has invalid weight {w}");

@@ -21,6 +21,8 @@
 
 use anyhow::{bail, Result};
 
+use super::AggScratch;
+
 /// How the wait-window rows are combined (`ProtocolConfig::agg`,
 /// `dfl sim --agg`).  Parsed/printed via [`AggregationRule::parse`] /
 /// [`AggregationRule::name`] like [`crate::coordinator::QuorumSpec`].
@@ -98,11 +100,24 @@ fn check_rows(rows: &[(&[f32], f32)]) -> Result<usize> {
 /// [`crate::runtime::Trainer::aggregate_with`], which routes FedAvg to
 /// the trainer instead.
 pub(crate) fn apply(rows: &[(&[f32], f32)], rule: &AggregationRule) -> Result<Vec<f32>> {
+    let mut s = AggScratch::default();
+    apply_into(rows, rule, &mut s)?;
+    Ok(s.out)
+}
+
+/// Scratch-reusing [`apply`]: the result lands in `s.out`, and the column /
+/// distance working buffers keep their capacity across rounds.  Bit-identical
+/// to [`apply`] — every buffer is fully overwritten before it is read.
+pub(crate) fn apply_into(
+    rows: &[(&[f32], f32)],
+    rule: &AggregationRule,
+    s: &mut AggScratch,
+) -> Result<()> {
     match *rule {
         AggregationRule::FedAvg => bail!("fedavg is handled by the trainer, not the robust path"),
-        AggregationRule::TrimmedMean { f } => trimmed_mean(rows, f),
-        AggregationRule::CoordMedian => coord_median(rows),
-        AggregationRule::Krum { f } => krum(rows, f),
+        AggregationRule::TrimmedMean { f } => trimmed_mean_into(rows, f, &mut s.out, &mut s.col),
+        AggregationRule::CoordMedian => coord_median_into(rows, &mut s.out, &mut s.col),
+        AggregationRule::Krum { f } => krum_into(rows, f, &mut s.out, &mut s.dists),
     }
 }
 
@@ -111,12 +126,26 @@ pub(crate) fn apply(rows: &[(&[f32], f32)], rule: &AggregationRule) -> Result<Ve
 /// configured tolerance degrades toward the median instead of erroring,
 /// which matters because wait-window sizes vary round to round.
 pub fn trimmed_mean(rows: &[(&[f32], f32)], f: usize) -> Result<Vec<f32>> {
+    let mut out = Vec::new();
+    let mut col = Vec::new();
+    trimmed_mean_into(rows, f, &mut out, &mut col)?;
+    Ok(out)
+}
+
+fn trimmed_mean_into(
+    rows: &[(&[f32], f32)],
+    f: usize,
+    out: &mut Vec<f32>,
+    col: &mut Vec<f32>,
+) -> Result<()> {
     let dim = check_rows(rows)?;
     let n = rows.len();
     let f = f.min((n - 1) / 2);
     let keep = (n - 2 * f) as f32;
-    let mut out = vec![0.0f32; dim];
-    let mut col = vec![0.0f32; n];
+    out.clear();
+    out.resize(dim, 0.0);
+    col.clear();
+    col.resize(n, 0.0);
     for (j, o) in out.iter_mut().enumerate() {
         for (i, (p, _)) in rows.iter().enumerate() {
             col[i] = p[j];
@@ -126,15 +155,24 @@ pub fn trimmed_mean(rows: &[(&[f32], f32)], f: usize) -> Result<Vec<f32>> {
         col.sort_unstable_by(f32::total_cmp);
         *o = col[f..n - f].iter().sum::<f32>() / keep;
     }
-    Ok(out)
+    Ok(())
 }
 
 /// Per-coordinate median; even row counts average the two middle values.
 pub fn coord_median(rows: &[(&[f32], f32)]) -> Result<Vec<f32>> {
+    let mut out = Vec::new();
+    let mut col = Vec::new();
+    coord_median_into(rows, &mut out, &mut col)?;
+    Ok(out)
+}
+
+fn coord_median_into(rows: &[(&[f32], f32)], out: &mut Vec<f32>, col: &mut Vec<f32>) -> Result<()> {
     let dim = check_rows(rows)?;
     let n = rows.len();
-    let mut out = vec![0.0f32; dim];
-    let mut col = vec![0.0f32; n];
+    out.clear();
+    out.resize(dim, 0.0);
+    col.clear();
+    col.resize(n, 0.0);
     for (j, o) in out.iter_mut().enumerate() {
         for (i, (p, _)) in rows.iter().enumerate() {
             col[i] = p[j];
@@ -142,21 +180,36 @@ pub fn coord_median(rows: &[(&[f32], f32)]) -> Result<Vec<f32>> {
         col.sort_unstable_by(f32::total_cmp);
         *o = if n % 2 == 1 { col[n / 2] } else { (col[n / 2 - 1] + col[n / 2]) / 2.0 };
     }
-    Ok(out)
+    Ok(())
 }
 
 /// Krum: return the row with the smallest summed squared distance to its
 /// `max(1, n − f − 2)` nearest peers (clamped to the `n − 1` available).
 /// Ties break toward the lower row index, so the result is deterministic.
 pub fn krum(rows: &[(&[f32], f32)], f: usize) -> Result<Vec<f32>> {
+    let mut out = Vec::new();
+    let mut dists = Vec::new();
+    krum_into(rows, f, &mut out, &mut dists)?;
+    Ok(out)
+}
+
+fn krum_into(
+    rows: &[(&[f32], f32)],
+    f: usize,
+    out: &mut Vec<f32>,
+    dists: &mut Vec<f64>,
+) -> Result<()> {
     check_rows(rows)?;
     let n = rows.len();
     if n == 1 {
-        return Ok(rows[0].0.to_vec());
+        out.clear();
+        out.extend_from_slice(rows[0].0);
+        return Ok(());
     }
     let closest = n.saturating_sub(f + 2).max(1).min(n - 1);
     let mut best: Option<(f64, usize)> = None;
-    let mut dists = vec![0.0f64; n - 1];
+    dists.clear();
+    dists.resize(n - 1, 0.0);
     for i in 0..n {
         let mut k = 0;
         for j in 0..n {
@@ -181,7 +234,9 @@ pub fn krum(rows: &[(&[f32], f32)], f: usize) -> Result<Vec<f32>> {
             best = Some((score, i));
         }
     }
-    Ok(rows[best.expect("n >= 2 rows scored").1].0.to_vec())
+    out.clear();
+    out.extend_from_slice(rows[best.expect("n >= 2 rows scored").1].0);
+    Ok(())
 }
 
 #[cfg(test)]
@@ -253,6 +308,31 @@ mod tests {
         // single row: trivially itself
         let one: Vec<(&[f32], f32)> = vec![(rows[0].as_slice(), 1.0)];
         assert_eq!(krum(&one, 1).unwrap(), rows[0]);
+    }
+
+    #[test]
+    fn apply_into_with_dirty_scratch_matches_apply() {
+        let rows: Vec<Vec<f32>> = vec![
+            vec![1.0, -4.0, 2.5],
+            vec![1.2, -3.8, 2.4],
+            vec![0.8, -4.1, 2.7],
+            vec![50.0, 9.0, -1.0],
+        ];
+        let refs: Vec<(&[f32], f32)> = rows.iter().map(|r| (r.as_slice(), 1.0)).collect();
+        let mut s = AggScratch::default();
+        // Poison the scratch so any read-before-write would show up.
+        s.out = vec![f32::NAN; 17];
+        s.col = vec![f32::NAN; 3];
+        s.dists = vec![f64::NAN; 9];
+        for rule in [
+            AggregationRule::TrimmedMean { f: 1 },
+            AggregationRule::CoordMedian,
+            AggregationRule::Krum { f: 1 },
+        ] {
+            let plain = apply(&refs, &rule).unwrap();
+            apply_into(&refs, &rule, &mut s).unwrap();
+            assert_eq!(plain, s.out, "{}", rule.name());
+        }
     }
 
     #[test]

@@ -236,13 +236,14 @@ impl<'a> Reader<'a> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    pub fn f32_vec(&mut self) -> Result<Vec<f32>> {
+    /// Validated length-prefixed f32 block: the element count and its raw
+    /// little-endian bytes.  The length prefix is checked against the bytes
+    /// actually present BEFORE anything sizes an allocation: a corrupt or
+    /// adversarial frame can claim a multi-GiB vector in 4 bytes, and
+    /// `n * 4` itself can wrap on 32-bit targets (turning a huge claim into
+    /// a tiny take that then mis-frames everything after it).
+    fn f32_block(&mut self) -> Result<(usize, &'a [u8])> {
         let n = self.u32()? as usize;
-        // Validate the length prefix against the bytes actually present
-        // BEFORE sizing any allocation: a corrupt or adversarial frame can
-        // claim a multi-GiB vector in 4 bytes, and `n * 4` itself can wrap
-        // on 32-bit targets (turning a huge claim into a tiny take that
-        // then mis-frames everything after it).
         let need = n
             .checked_mul(4)
             .ok_or_else(|| anyhow::anyhow!("codec: f32 vec length {n} overflows"))?;
@@ -253,7 +254,13 @@ impl<'a> Reader<'a> {
             );
         }
         let bytes = self.take(need)?;
-        let mut out = vec![0f32; n];
+        Ok((n, bytes))
+    }
+
+    /// Overwrite an empty `out` with `n` f32s decoded from `bytes`.
+    fn fill_f32(out: &mut Vec<f32>, n: usize, bytes: &[u8]) {
+        debug_assert!(out.is_empty());
+        out.resize(n, 0.0);
         #[cfg(target_endian = "little")]
         unsafe {
             std::ptr::copy_nonoverlapping(bytes.as_ptr(), out.as_mut_ptr() as *mut u8, n * 4);
@@ -262,6 +269,24 @@ impl<'a> Reader<'a> {
         for (i, c) in bytes.chunks_exact(4).enumerate() {
             out[i] = f32::from_le_bytes(c.try_into().unwrap());
         }
+    }
+
+    pub fn f32_vec(&mut self) -> Result<Vec<f32>> {
+        let (n, bytes) = self.f32_block()?;
+        let mut out = Vec::with_capacity(n);
+        Self::fill_f32(&mut out, n, bytes);
+        Ok(out)
+    }
+
+    /// [`Reader::f32_vec`] decoded into a buffer from the calling thread's
+    /// pool (`util::pool`): same validation, same bytes, same values —
+    /// every element is overwritten — but the steady-state decode path
+    /// stops touching the global allocator.  Ownership of recycling passes
+    /// to the caller.
+    pub fn f32_vec_pooled(&mut self) -> Result<Vec<f32>> {
+        let (n, bytes) = self.f32_block()?;
+        let mut out = crate::util::pool::take_f32(n);
+        Self::fill_f32(&mut out, n, bytes);
         Ok(out)
     }
 
@@ -475,5 +500,31 @@ mod tests {
         w.f32_slice(&[1.0, 2.0]);
         let bytes = w.into_bytes();
         assert_eq!(Reader::new(&bytes).f32_vec().unwrap(), vec![1.0, 2.0]);
+
+        // The pooled variant enforces the same trust boundary.
+        let mut w = Writer::new();
+        w.u32(3);
+        w.f32(1.0);
+        let bytes = w.into_bytes();
+        assert!(Reader::new(&bytes).f32_vec_pooled().is_err());
+    }
+
+    /// The pooled decode is bit-identical to the allocating one, even when
+    /// it reuses a buffer with stale contents.
+    #[test]
+    fn f32_vec_pooled_matches_f32_vec() {
+        use crate::util::pool;
+        let mut w = Writer::new();
+        w.f32_slice(&[1.0, -2.5, f32::NAN, 0.0]);
+        let bytes = w.into_bytes();
+        let plain = Reader::new(&bytes).f32_vec().unwrap();
+        // Poison a recycled buffer so stale contents would be caught.
+        let mut poisoned = pool::take_f32(64);
+        poisoned.resize(64, f32::MAX);
+        pool::recycle_f32(poisoned);
+        let pooled = Reader::new(&bytes).f32_vec_pooled().unwrap();
+        assert_eq!(plain.len(), pooled.len());
+        assert!(plain.iter().zip(&pooled).all(|(a, b)| a.to_bits() == b.to_bits()));
+        pool::recycle_f32(pooled);
     }
 }

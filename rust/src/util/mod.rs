@@ -7,6 +7,7 @@
 pub mod benchkit;
 pub mod cli;
 pub mod codec;
+pub mod pool;
 pub mod quickcheck;
 pub mod rng;
 pub mod time;

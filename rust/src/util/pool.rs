@@ -1,0 +1,273 @@
+//! Deterministic, thread-local buffer pools for the steady-state round loop
+//! (DESIGN.md §14).
+//!
+//! Each OS thread owns an independent pool (`thread_local!`), so the events
+//! executor has exactly one, the sharded parallel executor has one per shard
+//! worker, and the thread-backed executor has one per client.  Pooling is
+//! therefore invisible to scheduling: no locks, no cross-thread hand-off, no
+//! effect on event order, and no effect on any RNG stream.  Buffers carry no
+//! values across uses — `take_*` returns an *empty* vector (length 0) whose
+//! capacity is at least the requested size, and every call-site fully
+//! overwrites what it later reads — so a pooled run computes bit-identical
+//! results to an unpooled one (`tests/conformance.rs` pins this across all
+//! three executors).
+//!
+//! Size-classed free lists: capacities round up to the next power of two
+//! (minimum 64 elements), one LIFO stack per class, at most `PER_CLASS`
+//! buffers retained per class; anything beyond that is handed back to the
+//! global allocator.
+
+use std::cell::RefCell;
+
+/// Smallest pooled capacity, in elements.  Requests below this round up to it.
+const MIN_CLASS: usize = 64;
+/// log2 of [`MIN_CLASS`].
+const MIN_CLASS_LOG2: u32 = 6;
+/// Number of size classes: 64, 128, …, 64·2^(CLASSES−1) elements.
+const CLASSES: usize = 26;
+/// Retained buffers per size class before recycles fall through to `drop`.
+///
+/// Sized for the events executor, where one thread hosts the whole fleet
+/// and synchronized rounds recycle in bursts of ~clients × degree buffers
+/// (window close) that must all be served back on the next round's decode
+/// path.  4096 absorbs a four-digit-client deployment; a workload that
+/// overflows it degrades to plain allocation, never to an error.
+const PER_CLASS: usize = 4096;
+
+/// Cumulative counters for the calling thread's pool.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// `take_*` calls served from a free list.
+    pub hits: u64,
+    /// `take_*` calls that fell through to a fresh allocation.
+    pub misses: u64,
+    /// `recycle_*` calls that parked the buffer for reuse.
+    pub recycled: u64,
+    /// `recycle_*` calls that dropped the buffer (class full or too small).
+    pub dropped: u64,
+}
+
+/// One element type's size-classed free lists.
+struct Shelf<T> {
+    classes: [Vec<Vec<T>>; CLASSES],
+}
+
+impl<T> Shelf<T> {
+    fn new() -> Self {
+        Shelf { classes: std::array::from_fn(|_| Vec::new()) }
+    }
+
+    /// Pop an empty buffer with capacity ≥ `cap`, or allocate one.
+    fn take(&mut self, cap: usize, stats: &mut PoolStats) -> Vec<T> {
+        let want = cap.max(MIN_CLASS).next_power_of_two();
+        let idx = (want.trailing_zeros() - MIN_CLASS_LOG2) as usize;
+        if let Some(list) = self.classes.get_mut(idx) {
+            if let Some(buf) = list.pop() {
+                debug_assert!(buf.is_empty() && buf.capacity() >= cap);
+                stats.hits += 1;
+                return buf;
+            }
+        }
+        stats.misses += 1;
+        Vec::with_capacity(want.max(cap))
+    }
+
+    /// Park `buf` for reuse.  Classification uses the largest power of two
+    /// the capacity covers, so a parked buffer always satisfies any request
+    /// that rounds up into its class.
+    fn recycle(&mut self, mut buf: Vec<T>, stats: &mut PoolStats) {
+        let cap = buf.capacity();
+        if cap < MIN_CLASS {
+            stats.dropped += 1;
+            return;
+        }
+        let idx = ((usize::BITS - 1 - cap.leading_zeros()) - MIN_CLASS_LOG2) as usize;
+        if idx >= CLASSES {
+            stats.dropped += 1;
+            return;
+        }
+        let list = &mut self.classes[idx];
+        if list.len() >= PER_CLASS {
+            stats.dropped += 1;
+            return;
+        }
+        buf.clear();
+        stats.recycled += 1;
+        list.push(buf);
+    }
+
+    /// Drop retained buffers beyond `keep` per class.
+    fn trim(&mut self, keep: usize, stats: &mut PoolStats) {
+        for list in &mut self.classes {
+            while list.len() > keep {
+                list.pop();
+                stats.dropped += 1;
+            }
+        }
+    }
+}
+
+struct Pool {
+    f32s: Shelf<f32>,
+    u8s: Shelf<u8>,
+    stats: PoolStats,
+}
+
+thread_local! {
+    static POOL: RefCell<Pool> = RefCell::new(Pool {
+        f32s: Shelf::new(),
+        u8s: Shelf::new(),
+        stats: PoolStats::default(),
+    });
+}
+
+/// Check out an **empty** `Vec<f32>` with capacity ≥ `cap`.
+pub fn take_f32(cap: usize) -> Vec<f32> {
+    POOL.with(|p| {
+        let mut p = p.borrow_mut();
+        let Pool { f32s, stats, .. } = &mut *p;
+        f32s.take(cap, stats)
+    })
+}
+
+/// Return a `Vec<f32>` to this thread's pool for later reuse.
+pub fn recycle_f32(buf: Vec<f32>) {
+    POOL.with(|p| {
+        let mut p = p.borrow_mut();
+        let Pool { f32s, stats, .. } = &mut *p;
+        f32s.recycle(buf, stats);
+    });
+}
+
+/// Check out an **empty** `Vec<u8>` with capacity ≥ `cap`.
+pub fn take_u8(cap: usize) -> Vec<u8> {
+    POOL.with(|p| {
+        let mut p = p.borrow_mut();
+        let Pool { u8s, stats, .. } = &mut *p;
+        u8s.take(cap, stats)
+    })
+}
+
+/// Return a `Vec<u8>` to this thread's pool for later reuse.
+pub fn recycle_u8(buf: Vec<u8>) {
+    POOL.with(|p| {
+        let mut p = p.borrow_mut();
+        let Pool { u8s, stats, .. } = &mut *p;
+        u8s.recycle(buf, stats);
+    });
+}
+
+/// Pooled clone: an exact element-for-element copy of `src` in a buffer
+/// checked out of this thread's pool.
+pub fn copy_of(src: &[f32]) -> Vec<f32> {
+    let mut buf = take_f32(src.len());
+    buf.extend_from_slice(src);
+    buf
+}
+
+/// Explicit trim hook between runs or epochs: halves the retention cap of
+/// every class so long-lived processes shed peak-sized buffers.  Never called
+/// from the round loop itself — trimming frees memory, and the steady state
+/// is supposed to touch the allocator not at all.
+pub fn epoch_tick() {
+    POOL.with(|p| {
+        let mut p = p.borrow_mut();
+        let Pool { f32s, u8s, stats } = &mut *p;
+        f32s.trim(PER_CLASS / 2, stats);
+        u8s.trim(PER_CLASS / 2, stats);
+    });
+}
+
+/// The calling thread's cumulative pool counters.
+pub fn stats() -> PoolStats {
+    POOL.with(|p| p.borrow().stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The test harness runs every #[test] on its own thread, so each test
+    // below sees a fresh thread-local pool and clean counters.
+
+    #[test]
+    fn take_recycle_take_reuses_the_same_buffer() {
+        let mut a = take_f32(100);
+        assert!(a.is_empty() && a.capacity() >= 100);
+        a.extend_from_slice(&[1.0, 2.0, 3.0]);
+        let ptr = a.as_ptr();
+        recycle_f32(a);
+        let b = take_f32(100);
+        assert!(b.is_empty(), "recycled buffers come back cleared");
+        assert_eq!(b.as_ptr(), ptr, "LIFO free list hands back the same allocation");
+        let s = stats();
+        assert_eq!((s.hits, s.misses, s.recycled), (1, 1, 1));
+    }
+
+    #[test]
+    fn size_classes_round_up_and_classify_by_floor() {
+        // A capacity-100 buffer floors into the 64-class, so a 64-element
+        // request (which rounds up to exactly 64) can reuse it...
+        recycle_f32(Vec::with_capacity(100));
+        let b = take_f32(64);
+        assert!(b.capacity() >= 100);
+        assert_eq!(stats().hits, 1);
+        // ...while a 100-element request rounds up to the 128-class and
+        // must not see it (class-64 buffers only guarantee ≥ 64).
+        recycle_f32(b);
+        let c = take_f32(100);
+        assert_eq!(stats().misses, 1);
+        assert!(c.capacity() >= 100);
+    }
+
+    #[test]
+    fn undersized_buffers_are_dropped_not_parked() {
+        recycle_f32(Vec::with_capacity(8));
+        assert_eq!(stats().dropped, 1);
+        assert_eq!(stats().recycled, 0);
+    }
+
+    #[test]
+    fn per_class_retention_is_bounded() {
+        for _ in 0..(PER_CLASS + 3) {
+            recycle_f32(Vec::with_capacity(64));
+        }
+        let s = stats();
+        assert_eq!(s.recycled, PER_CLASS as u64);
+        assert_eq!(s.dropped, 3);
+    }
+
+    #[test]
+    fn u8_shelf_is_independent_of_f32_shelf() {
+        recycle_u8(Vec::with_capacity(64));
+        let b = take_f32(64);
+        assert_eq!(stats().misses, 1, "f32 take must not raid the u8 shelf");
+        recycle_f32(b);
+        let c = take_u8(64);
+        assert_eq!(stats().hits, 1);
+        assert!(c.capacity() >= 64);
+    }
+
+    #[test]
+    fn copy_of_is_an_exact_copy() {
+        let src = [1.5f32, -2.25, 0.0, f32::MIN_POSITIVE];
+        let c = copy_of(&src);
+        assert_eq!(c.as_slice(), &src);
+        // Poison a recycled buffer, then copy again: values must be
+        // identical to the first copy — reuse never leaks stale contents.
+        let mut poisoned = take_f32(64);
+        poisoned.resize(64, f32::NAN);
+        recycle_f32(poisoned);
+        let d = copy_of(&src);
+        assert_eq!(d.as_slice(), &src);
+    }
+
+    #[test]
+    fn epoch_tick_halves_retention() {
+        for _ in 0..PER_CLASS {
+            recycle_f32(Vec::with_capacity(64));
+        }
+        epoch_tick();
+        assert_eq!(stats().dropped, (PER_CLASS - PER_CLASS / 2) as u64);
+    }
+}

@@ -1,0 +1,102 @@
+//! Steady-state allocation budget (DESIGN.md §14, `alloc-audit` feature).
+//!
+//! The hot round loop — train, broadcast, decode, stash, aggregate,
+//! evaluate, CCC — is supposed to run out of pooled buffers and reusable
+//! scratch, touching the global allocator only a constant number of times
+//! per client-round (the encoded broadcast's `Arc<[u8]>`, the aggregation
+//! row list, and amortized history growth).  This suite pins that: it runs
+//! the same 200-client deployment twice, identical except for the round
+//! count, and asserts the *marginal* allocations of the extra rounds stay
+//! under a small per-client-round budget.  Differencing two runs cancels
+//! everything that is not steady state — dataset synthesis, topology
+//! construction, executor spin-up, and the first-round pool warm-up, which
+//! both runs pay equally.
+//!
+//! Run with:
+//!
+//! ```sh
+//! cargo test -q --release --features alloc-audit --test alloc_budget
+//! ```
+#![cfg(feature = "alloc-audit")]
+
+use std::time::Duration;
+
+use dfl::coordinator::{ProtocolConfig, QuorumSpec};
+use dfl::metrics::AllocStats;
+use dfl::net::{CodecSpec, NetworkModel, TopologySpec};
+use dfl::runtime::{AggregationRule, MockTrainer, Trainer};
+use dfl::sim::{self, ExecMode, SimConfig};
+
+const CLIENTS: usize = 200;
+
+/// Steady-state allocator acquisitions allowed per client-round.
+const BUDGET: f64 = 4.0;
+
+/// A fixed-length deployment: `min_rounds == max_rounds` keeps adaptive
+/// termination from firing, so every client completes exactly `rounds`
+/// rounds and the two measurement runs differ in nothing else.
+fn fixed_length_cfg(rounds: u32, exec: ExecMode) -> SimConfig {
+    let trainer = MockTrainer::tiny();
+    let mut cfg = SimConfig::for_meta(CLIENTS, trainer.meta());
+    cfg.protocol = ProtocolConfig {
+        timeout: Duration::from_millis(80),
+        min_rounds: rounds,
+        count_threshold: 2,
+        conv_threshold_rel: 0.12,
+        max_rounds: rounds,
+        lr: 0.08,
+        model_seed: 42,
+        weight_by_samples: false,
+        early_window_exit: true,
+        crt_enabled: true,
+        quorum: QuorumSpec::STRICT,
+        agg: AggregationRule::FedAvg,
+        codec: CodecSpec::Dense,
+    };
+    cfg.train_n = 20 * CLIENTS;
+    cfg.seed = 7;
+    cfg.virtual_time = true;
+    cfg.train_cost = Duration::from_millis(5);
+    cfg.topology = TopologySpec::parse("k-regular:6").expect("k-regular overlay");
+    cfg.net = NetworkModel::preset("ideal", 7).expect("ideal net preset");
+    cfg.exec = exec;
+    cfg
+}
+
+/// Allocator acquisitions across one full deployment.
+fn allocs_for(rounds: u32, exec: ExecMode) -> u64 {
+    let trainer = MockTrainer::tiny();
+    let cfg = fixed_length_cfg(rounds, exec);
+    let before = AllocStats::snapshot();
+    let out = sim::run(&trainer, &cfg).expect("budget deployment must complete");
+    let after = AllocStats::snapshot();
+    assert_eq!(out.reports.len(), CLIENTS);
+    for r in &out.reports {
+        assert_eq!(
+            r.rounds_completed, rounds,
+            "client {} exited early — the two runs are no longer comparable",
+            r.id
+        );
+    }
+    before.allocs_since(&after)
+}
+
+/// One test (not one per executor) so the process-global counters are
+/// never read by two measurements at once.
+#[test]
+fn steady_state_allocations_per_client_round_stay_under_budget() {
+    assert!(AllocStats::enabled(), "suite requires --features alloc-audit");
+    const R_SHORT: u32 = 6;
+    const R_LONG: u32 = 12;
+    for exec in [ExecMode::Events, ExecMode::Parallel { shards: 2 }] {
+        let short = allocs_for(R_SHORT, exec);
+        let long = allocs_for(R_LONG, exec);
+        let extra_rounds = (R_LONG - R_SHORT) as f64 * CLIENTS as f64;
+        let per_client_round = long.saturating_sub(short) as f64 / extra_rounds;
+        assert!(
+            per_client_round <= BUDGET,
+            "{exec:?}: {per_client_round:.2} allocations per client-round \
+             (runs: {short} vs {long}) exceeds the steady-state budget of {BUDGET}"
+        );
+    }
+}

@@ -59,6 +59,14 @@ cargo bench --no-run
 echo "==> cargo test -q --release --test conformance -- --ignored   (executor matrix + delta-codec diagonal)"
 cargo test -q --release --test conformance -- --ignored
 
+# Allocation-budget leg (DESIGN.md §14): rebuilds with the counting global
+# allocator — a separate feature set, so it cannot share the cache of the
+# runs above — and pins the steady-state allocations per client-round of
+# the events and parallel executors.  Release mode keeps the two
+# 200-client deployments per executor quick.
+echo "==> cargo test -q --release --features alloc-audit --test alloc_budget   (steady-state allocation budget)"
+cargo test -q --release --features alloc-audit --test alloc_budget
+
 if [[ "$SCALE" == "1" ]]; then
   echo "==> cargo test -q -- --ignored --test-threads=1   (scale tests)"
   cargo test -q -- --ignored --test-threads=1
