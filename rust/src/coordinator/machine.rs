@@ -282,6 +282,7 @@ impl Window {
                 }
                 let max_id = self.kept.last().map_or(sender, |(id, _)| *id);
                 if sender < max_id {
+                    // dfl-lint: allow(no-panic-hot-path) — max_id came from kept.last(), so kept is provably non-empty on this branch
                     let (_, old) = self.kept.pop().expect("prefix is full, cap > 0");
                     pool::recycle_f32(old.params.0);
                     self.kept.insert(i, (sender, u));

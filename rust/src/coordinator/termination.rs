@@ -27,18 +27,11 @@
 use crate::model::ParamVector;
 use crate::net::ClientId;
 
-/// Why a client's main loop ended.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum TerminationCause {
-    /// CCC triggered locally: this client initiated termination.
-    Converged,
-    /// CRT: terminate flag received from a peer.
-    Signaled,
-    /// Hit `R_PRIME` (the hard round cap).
-    MaxRounds,
-    /// Injected crash (the client fell silent mid-run).
-    Crashed,
-}
+// Defined beside `metrics::ClientReport` (its long-term home in every
+// report row) so the metrics layer never has to look upward at the
+// coordinator — module-layering DAG, DESIGN.md §15.  Protocol code keeps
+// addressing it by this path.
+pub use crate::metrics::TerminationCause;
 
 /// Local termination flag + bookkeeping (who/when), per client.
 #[derive(Clone, Debug, Default)]

@@ -9,8 +9,25 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::termination::TerminationCause;
 use crate::net::ClientId;
+
+/// Why a client's main loop ended.
+///
+/// Defined here — where [`ClientReport`] records it — rather than in
+/// `coordinator::termination` (which re-exports it), so that the metrics
+/// layer has no upward dependency on the protocol layer (module-layering
+/// DAG, DESIGN.md §15).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TerminationCause {
+    /// CCC triggered locally: this client initiated termination.
+    Converged,
+    /// CRT: terminate flag received from a peer.
+    Signaled,
+    /// Hit `R_PRIME` (the hard round cap).
+    MaxRounds,
+    /// Injected crash (the client fell silent mid-run).
+    Crashed,
+}
 
 /// One row of a client's training log.
 #[derive(Clone, Debug)]

@@ -481,6 +481,7 @@ impl DeltaTx {
         let recon = match &body {
             DeltaBody::Full(p) => pool::copy_of(p),
             DeltaBody::Sparse { idx, vals, .. } => {
+                // dfl-lint: allow(no-panic-hot-path) — encode_inner only returns Sparse when self.acked is Some; the branch cannot be reached base-less
                 let (_, base) = self.acked.as_ref().expect("sparse requires a base");
                 let mut recon = pool::copy_of(base);
                 apply_sparse(&mut recon, idx, vals);

@@ -34,7 +34,7 @@
 //!   are swallowed silently, matching the paper's benign crash model.
 
 use std::cmp::Reverse;
-use std::collections::{BTreeMap, BinaryHeap, HashSet};
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -522,7 +522,7 @@ struct HubShared {
     /// Global tie-break counter for the timer queue (per-link seqs are not
     /// globally unique).
     seq: Mutex<u64>,
-    blocked: Mutex<HashSet<(ClientId, ClientId)>>,
+    blocked: Mutex<BTreeSet<(ClientId, ClientId)>>,
     /// Hub creation time: the reference point for `NetSplit` windows and
     /// the overlay's graph-fault schedule.
     epoch: Instant,
@@ -583,7 +583,8 @@ impl InProcHub {
             model,
             links: Mutex::new(BTreeMap::new()),
             seq: Mutex::new(0),
-            blocked: Mutex::new(HashSet::new()),
+            blocked: Mutex::new(BTreeSet::new()),
+            // dfl-lint: allow(wall-clock) — real-time InProcHub: this hub IS the wall-clock regime (DESIGN.md §3.3); the virtual path uses VirtualHub below
             epoch: Instant::now(),
             overlay,
             stats: NetCounters::default(),
@@ -639,6 +640,7 @@ fn timer_loop(shared: &HubShared) {
         if shared.shutdown.load(Ordering::SeqCst) {
             return;
         }
+        // dfl-lint: allow(wall-clock) — real-time delivery timer thread: latencies here are meant to elapse for real
         let now = Instant::now();
         if let Some(Reverse(front)) = queue.peek() {
             if front.due <= now {
@@ -720,6 +722,7 @@ impl Transport for Endpoint {
                 *s
             };
             self.shared.queue.lock().unwrap().push(Reverse(Scheduled {
+                // dfl-lint: allow(wall-clock) — real-time hub schedules deliveries on the actual clock by design
                 due: Instant::now() + delay,
                 seq,
                 to: to as usize,
@@ -804,7 +807,7 @@ struct VirtualHubShared {
     model: NetworkModel,
     clock: ClockBinding,
     links: Mutex<BTreeMap<(ClientId, ClientId), LinkState>>,
-    blocked: Mutex<HashSet<(ClientId, ClientId)>>,
+    blocked: Mutex<BTreeSet<(ClientId, ClientId)>>,
     /// Peer overlay: which peers each endpoint's broadcasts reach —
     /// time-aware (on the shared virtual clock) when a graph-fault
     /// schedule is attached.
@@ -885,7 +888,7 @@ impl VirtualHub {
                 model,
                 clock,
                 links: Mutex::new(BTreeMap::new()),
-                blocked: Mutex::new(HashSet::new()),
+                blocked: Mutex::new(BTreeSet::new()),
                 overlay,
                 stats: NetCounters::default(),
             }),

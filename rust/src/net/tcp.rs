@@ -8,6 +8,8 @@
 //! not errors). Incoming connections are accepted on a background thread,
 //! one reader thread per connection feeding a shared inbox.
 
+// dfl-lint: allow-file(wall-clock) — real-socket transport: reconnect backoff and polling sleep on the actual clock; never on the deterministic executor path
+// dfl-lint: allow-file(hash-iter-order) — connection/peer caches are keyed lookups only; nothing here feeds the seeded RNG streams or the virtual event order
 use std::collections::{BTreeMap, HashMap};
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};

@@ -155,7 +155,7 @@ impl TopologySpec {
     }
 
     /// The simplest strictly-smaller spec along the degree axis, if any
-    /// (the shrink dimension `util::quickcheck::shrink_sim_config` walks
+    /// (the shrink dimension `sim::shrink::shrink_sim_config` walks
     /// before falling back to `Full`).
     pub fn shrink_degree(self) -> Option<TopologySpec> {
         match self {

@@ -148,6 +148,7 @@ impl<'a> Pump<'a> {
             }
         };
         let machine =
+            // dfl-lint: allow(no-panic-hot-path) — executor invariant: the clock only grants turns to tokens it registered, and every registered token owns a machine
             self.machines[token].as_mut().expect("turn granted to a token without a machine");
         loop {
             match machine.step(input) {
@@ -312,6 +313,7 @@ pub(super) fn run_parallel(
         // no windows, no extra threads — the reference pump on this
         // shard's clock.
         let clock = &clocks[0];
+        // dfl-lint: allow(no-panic-hot-path) — s == 1 on this branch, so exactly one pump was just built
         let mut pump = pumps.pop().expect("one shard");
         while let Some(token) = clock.driver_next() {
             pump.pump(clock, token);
@@ -349,6 +351,7 @@ pub(super) fn run_parallel(
                     }
                     pump
                 })
+                // dfl-lint: allow(no-panic-hot-path) — OS refusing to spawn a thread is unrecoverable for the run; aborting the sim is the correct response
                 .expect("spawn shard worker");
             handles.push(handle);
         }
@@ -373,6 +376,7 @@ pub(super) fn run_parallel(
                 }
             }
         }
+        // dfl-lint: allow(no-panic-hot-path) — join() only errs if the worker already panicked; re-raising on the coordinator surfaces that panic instead of deadlocking the barrier
         handles.into_iter().map(|h| h.join().expect("shard worker panicked")).collect()
     });
     finish(pumps, &hub, n)

@@ -59,6 +59,9 @@ use crate::util::time::VirtualClock;
 use crate::util::Rng;
 
 pub mod exec;
+pub mod shrink;
+
+pub use shrink::{shrink_sim_config, Shrunk};
 
 /// How client data is split (paper settings).
 #[derive(Clone, Copy, Debug)]
@@ -447,6 +450,7 @@ pub fn run(trainer: &(dyn Trainer + Sync), cfg: &SimConfig) -> Result<SimResult>
     let eval = EvalTensors::new(&test, &meta);
 
     // --- executors ----------------------------------------------------------
+    // dfl-lint: allow(wall-clock) — harness-side stopwatch for the real-time regime; virtual runs overwrite SimResult::wall with virtual durations
     let t0 = Instant::now();
     let (reports, mut net) = match (cfg.virtual_time, cfg.exec) {
         (true, ExecMode::Events) => {

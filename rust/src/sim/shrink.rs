@@ -1,0 +1,452 @@
+//! [`SimConfig`] shrinker — minimal failing repros, exploiting determinism.
+//!
+//! Because a virtual-time deployment is a pure function of its
+//! [`SimConfig`], a failing configuration can be *minimized* instead of
+//! debugged at full size: [`shrink_sim_config`] bisects the client count
+//! and prunes the fault list against any reproducible predicate, handing
+//! back the smallest deployment that still exhibits the failure.
+//!
+//! Lives beside the simulator (not in `util`) because it is inherently a
+//! consumer of the sim layer: the module-layering DAG (DESIGN.md §15)
+//! keeps `util` free of upward dependencies.  The seeded property-test
+//! runner it pairs with is [`crate::util::quickcheck::forall`].
+
+use crate::coordinator::fault::FaultPlan;
+use crate::net::TopologySpec;
+
+use super::{ExecMode, SimConfig};
+
+/// Outcome of [`shrink_sim_config`]: the smallest failing configuration
+/// found, plus how many predicate evaluations (= deterministic re-runs)
+/// the search spent.
+#[derive(Debug)]
+pub struct Shrunk {
+    pub config: SimConfig,
+    pub tests_run: usize,
+}
+
+/// Minimize a failing [`SimConfig`] against `fails` (true = the failure
+/// still reproduces).  Six passes, all preserving the `faults` invariant
+/// (empty or one plan per client) and never leaving a graph fault
+/// dangling off the end of the client range:
+///
+/// 1. **Client bisection** — binary-search the smallest prefix of clients
+///    (faults truncated alongside, graph faults referencing dropped
+///    clients removed) that still fails.
+/// 2. **Fault pruning** — try clearing the fault list outright, else
+///    disable surviving fault plans one at a time.
+/// 3. **Graph-fault pruning** — try clearing the graph-fault schedule
+///    outright (a failure independent of the overlay dynamics is the
+///    cheapest repro), else drop surviving cut/churn entries one at a
+///    time.
+/// 4. **Adversary pruning** — try clearing the Byzantine roster
+///    outright, else drop surviving specs one at a time, then thin each
+///    surviving spec's client list client by client (a one-adversary
+///    repro beats a six-adversary one).
+/// 5. **Topology shrinking** — halve the overlay degree while the failure
+///    holds ([`TopologySpec::shrink_degree`]), then try the trivial
+///    preset (`full`) outright: a failure that survives on the mesh is
+///    independent of the overlay, which is the most useful thing a
+///    repro can learn.
+/// 6. **Executor shrinking** — for [`ExecMode::Parallel`] configs, first
+///    try the single-threaded [`ExecMode::Events`] reference outright (a
+///    failure that survives there is a simulator bug, not an executor
+///    race, and replays with zero threads), else halve the shard count
+///    toward 1 while the failure holds: a two-shard repro of a window
+///    race beats a sixteen-shard one.
+///
+/// Like every shrinker this is greedy: for non-monotone predicates the
+/// result is a local minimum (still failing, never larger than the
+/// input).  If `cfg` does not fail at all it is returned unchanged.
+pub fn shrink_sim_config<F>(cfg: &SimConfig, mut fails: F) -> Shrunk
+where
+    F: FnMut(&SimConfig) -> bool,
+{
+    fn truncate_clients(cfg: &SimConfig, n: usize) -> SimConfig {
+        let mut cand = cfg.clone();
+        cand.n_clients = n;
+        if !cand.faults.is_empty() {
+            cand.faults.truncate(n);
+        }
+        // A graph fault naming a client beyond the shrunken range would
+        // make the candidate invalid, not smaller.
+        cand.graph_faults.retain(|f| f.fits(n));
+        // Adversary specs are per-client lists: drop the out-of-range ids
+        // (and any spec emptied by that) instead of the whole roster, so
+        // a failure needing one low-id adversary survives the bisection.
+        for a in &mut cand.adversaries {
+            a.clients.retain(|&c| (c as usize) < n);
+        }
+        cand.adversaries.retain(|a| !a.clients.is_empty());
+        cand
+    }
+
+    let mut best = cfg.clone();
+    let mut tests_run = 1;
+    if !fails(&best) {
+        return Shrunk { config: best, tests_run };
+    }
+
+    // 1. Bisect n_clients: invariant `best` fails and every count below
+    // `lo` has been ruled out (under monotonicity).
+    let mut lo = 1usize;
+    while lo < best.n_clients {
+        let mid = (lo + best.n_clients) / 2;
+        let cand = truncate_clients(&best, mid);
+        tests_run += 1;
+        if fails(&cand) {
+            best = cand;
+        } else {
+            lo = mid + 1;
+        }
+    }
+
+    // 2. Prune the fault list.
+    if best.faults.iter().any(|f| f.crash.is_some()) {
+        let mut cand = best.clone();
+        cand.faults.clear();
+        tests_run += 1;
+        if fails(&cand) {
+            best = cand;
+        } else {
+            for i in 0..best.faults.len() {
+                if best.faults[i].crash.is_none() {
+                    continue;
+                }
+                let mut cand = best.clone();
+                cand.faults[i] = FaultPlan::none();
+                tests_run += 1;
+                if fails(&cand) {
+                    best = cand;
+                }
+            }
+        }
+    }
+
+    // 3. Prune the graph-fault schedule.
+    if !best.graph_faults.is_empty() {
+        let mut cand = best.clone();
+        cand.graph_faults.clear();
+        tests_run += 1;
+        if fails(&cand) {
+            best = cand;
+        } else {
+            let mut i = 0;
+            while i < best.graph_faults.len() {
+                let mut cand = best.clone();
+                cand.graph_faults.remove(i);
+                tests_run += 1;
+                if fails(&cand) {
+                    best = cand; // entry was irrelevant; same index now names the next one
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+
+    // 4. Prune the Byzantine roster: schedule, then specs, then clients.
+    if !best.adversaries.is_empty() {
+        let mut cand = best.clone();
+        cand.adversaries.clear();
+        tests_run += 1;
+        if fails(&cand) {
+            best = cand;
+        } else {
+            let mut i = 0;
+            while i < best.adversaries.len() {
+                let mut cand = best.clone();
+                cand.adversaries.remove(i);
+                tests_run += 1;
+                if fails(&cand) {
+                    best = cand;
+                } else {
+                    i += 1;
+                }
+            }
+            // thin each surviving spec: every client whose removal keeps
+            // the failure is noise (specs never shrink to empty — the
+            // spec-removal pass above already ruled that out)
+            for s in 0..best.adversaries.len() {
+                let mut c = 0;
+                while best.adversaries[s].clients.len() > 1
+                    && c < best.adversaries[s].clients.len()
+                {
+                    let mut cand = best.clone();
+                    cand.adversaries[s].clients.remove(c);
+                    tests_run += 1;
+                    if fails(&cand) {
+                        best = cand;
+                    } else {
+                        c += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    // 5. Shrink the topology: degree first, then the preset toward `full`.
+    while let Some(smaller) = best.topology.shrink_degree() {
+        let mut cand = best.clone();
+        cand.topology = smaller;
+        tests_run += 1;
+        if fails(&cand) {
+            best = cand;
+        } else {
+            break;
+        }
+    }
+    if best.topology != TopologySpec::Full {
+        let mut cand = best.clone();
+        cand.topology = TopologySpec::Full;
+        tests_run += 1;
+        if fails(&cand) {
+            best = cand;
+        }
+    }
+
+    // 6. Shrink the executor: reference first, then halve the shards.
+    if let ExecMode::Parallel { shards } = best.exec {
+        let mut cand = best.clone();
+        cand.exec = ExecMode::Events;
+        tests_run += 1;
+        if fails(&cand) {
+            best = cand; // executor-independent: the zero-thread repro wins
+        } else {
+            let mut s = shards;
+            while s > 1 {
+                let mut cand = best.clone();
+                cand.exec = ExecMode::Parallel { shards: s / 2 };
+                tests_run += 1;
+                if fails(&cand) {
+                    s /= 2;
+                    best = cand;
+                } else {
+                    break;
+                }
+            }
+        }
+    }
+    Shrunk { config: best, tests_run }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::fault::GraphFault;
+
+    /// A seeded "failure": the bug needs at least `min_clients` clients
+    /// and both planted faults to manifest.  The shrinker must walk a
+    /// 64-client, fully-faulted config down to exactly that minimum.
+    #[test]
+    fn shrinks_seeded_sim_config_failure() {
+        let mut rng = crate::util::Rng::new(31);
+        let idx_a = rng.below(8) as u32;
+        let idx_b = 8 + rng.below(8) as u32; // distinct from idx_a by range
+        let min_clients = idx_b as usize + 1;
+
+        let mut cfg = SimConfig::new(64, 128);
+        cfg.faults = vec![FaultPlan::none(); 64];
+        cfg.faults[idx_a as usize] = FaultPlan::at_round(3);
+        cfg.faults[idx_b as usize] = FaultPlan::at_round(5);
+        let fails = |c: &SimConfig| {
+            c.n_clients >= min_clients
+                && c.faults.iter().filter(|f| f.crash.is_some()).count() >= 2
+        };
+        assert!(fails(&cfg), "the seeded failure must reproduce at full size");
+
+        let shrunk = shrink_sim_config(&cfg, fails);
+        assert!(fails(&shrunk.config), "shrinking must preserve the failure");
+        assert_eq!(shrunk.config.n_clients, min_clients, "client bisection");
+        assert_eq!(
+            shrunk.config.faults.iter().filter(|f| f.crash.is_some()).count(),
+            2,
+            "both load-bearing faults kept, all idle plans prunable"
+        );
+        assert_eq!(
+            shrunk.config.faults.len(),
+            min_clients,
+            "faults invariant: one plan per surviving client"
+        );
+        assert!(shrunk.tests_run > 5, "the search must actually have run");
+    }
+
+    #[test]
+    fn shrink_returns_non_failing_config_unchanged() {
+        let cfg = SimConfig::new(12, 128);
+        let shrunk = shrink_sim_config(&cfg, |_| false);
+        assert_eq!(shrunk.config.n_clients, 12);
+        assert_eq!(shrunk.tests_run, 1);
+    }
+
+    #[test]
+    fn shrink_clears_irrelevant_fault_list_outright() {
+        let mut cfg = SimConfig::new(16, 128);
+        cfg.faults = (0..16).map(|_| FaultPlan::at_round(2)).collect();
+        // Failure depends only on the client count.
+        let shrunk = shrink_sim_config(&cfg, |c| c.n_clients >= 4);
+        assert_eq!(shrunk.config.n_clients, 4);
+        assert!(
+            shrunk.config.faults.is_empty(),
+            "faults play no role and must be cleared"
+        );
+    }
+
+    #[test]
+    fn shrink_prunes_graph_fault_lists() {
+        let mut cfg = SimConfig::new(32, 128);
+        cfg.topology = TopologySpec::KRegular { d: 4 };
+        cfg.graph_faults = vec![
+            GraphFault::parse("graph-cut:0.1-0.5:mincut").unwrap(),
+            GraphFault::parse("churn:3:0.2-0.6").unwrap(),
+            GraphFault::parse("churn:30:0.2").unwrap(), // dangles below 31 clients
+        ];
+        // The "bug" needs >= 8 clients and at least one churn entry; the
+        // cut and the out-of-range churn are noise the shrinker must drop.
+        let fails = |c: &SimConfig| {
+            c.n_clients >= 8
+                && c.graph_faults.iter().any(|f| matches!(f, GraphFault::Churn { .. }))
+        };
+        let shrunk = shrink_sim_config(&cfg, fails);
+        assert!(fails(&shrunk.config), "shrinking must preserve the failure");
+        assert_eq!(shrunk.config.n_clients, 8, "client bisection still runs first");
+        assert_eq!(
+            shrunk.config.graph_faults,
+            vec![GraphFault::parse("churn:3:0.2-0.6").unwrap()],
+            "only the load-bearing graph fault survives"
+        );
+        // every surviving graph fault fits the shrunken client range
+        assert!(shrunk.config.graph_faults.iter().all(|f| f.fits(8)));
+    }
+
+    #[test]
+    fn shrink_clears_irrelevant_graph_fault_schedule_outright() {
+        let mut cfg = SimConfig::new(16, 128);
+        cfg.graph_faults = vec![
+            GraphFault::parse("churn:1:0.2").unwrap(),
+            GraphFault::parse("churn:2:0.3").unwrap(),
+        ];
+        let shrunk = shrink_sim_config(&cfg, |c| c.n_clients >= 4);
+        assert_eq!(shrunk.config.n_clients, 4);
+        assert!(
+            shrunk.config.graph_faults.is_empty(),
+            "graph faults play no role and must be cleared"
+        );
+    }
+
+    #[test]
+    fn shrink_prunes_adversary_rosters() {
+        use crate::coordinator::fault::AdversarySpec;
+        let mut cfg = SimConfig::new(32, 128);
+        cfg.adversaries = vec![
+            AdversarySpec::parse("poison:-10:C2,C6,C10,C30").unwrap(),
+            AdversarySpec::parse("equivocate:C5,C13").unwrap(),
+        ];
+        // The "bug" needs >= 8 clients and at least one poisoner; the
+        // equivocators, the out-of-range id 30, and all but one poisoner
+        // are noise the shrinker must drop.
+        let fails = |c: &SimConfig| {
+            use crate::coordinator::fault::AdversaryKind;
+            c.n_clients >= 8
+                && c.adversaries
+                    .iter()
+                    .any(|a| matches!(a.kind, AdversaryKind::Poison { .. }))
+        };
+        let shrunk = shrink_sim_config(&cfg, fails);
+        assert!(fails(&shrunk.config), "shrinking must preserve the failure");
+        assert_eq!(shrunk.config.n_clients, 8, "client bisection still runs first");
+        assert_eq!(shrunk.config.adversaries.len(), 1, "equivocate spec pruned");
+        assert_eq!(
+            shrunk.config.adversaries[0].clients.len(),
+            1,
+            "poison roster thinned to a single client"
+        );
+        assert!(
+            shrunk.config.adversaries[0].fits(8),
+            "surviving adversary fits the shrunken client range"
+        );
+    }
+
+    #[test]
+    fn shrink_clears_irrelevant_adversaries_outright() {
+        use crate::coordinator::fault::AdversarySpec;
+        let mut cfg = SimConfig::new(16, 128);
+        cfg.adversaries = vec![AdversarySpec::parse("stale-replay:C1,C2").unwrap()];
+        let shrunk = shrink_sim_config(&cfg, |c| c.n_clients >= 4);
+        assert_eq!(shrunk.config.n_clients, 4);
+        assert!(
+            shrunk.config.adversaries.is_empty(),
+            "adversaries play no role and must be cleared"
+        );
+    }
+
+    #[test]
+    fn shrink_walks_topology_degree_down_to_the_failing_minimum() {
+        let mut cfg = SimConfig::new(64, 128);
+        cfg.topology = TopologySpec::KRegular { d: 16 };
+        // The "bug" needs a sparse overlay of degree >= 4: the shrinker
+        // must halve 16 -> 8 -> 4, reject 2, and reject `full`.
+        let fails = |c: &SimConfig| {
+            c.n_clients >= 8
+                && matches!(c.topology, TopologySpec::KRegular { d } if d >= 4)
+        };
+        let shrunk = shrink_sim_config(&cfg, fails);
+        assert!(fails(&shrunk.config), "shrinking must preserve the failure");
+        assert_eq!(shrunk.config.n_clients, 8, "client bisection still runs first");
+        assert_eq!(
+            shrunk.config.topology,
+            TopologySpec::KRegular { d: 4 },
+            "degree must shrink to the smallest failing value"
+        );
+    }
+
+    #[test]
+    fn shrink_replaces_irrelevant_overlay_with_full() {
+        let mut cfg = SimConfig::new(32, 128);
+        cfg.topology = TopologySpec::SmallWorld { d: 8, p: 0.1 };
+        // Failure depends only on the client count: the overlay must be
+        // walked all the way back to the trivial mesh.
+        let shrunk = shrink_sim_config(&cfg, |c| c.n_clients >= 6);
+        assert_eq!(shrunk.config.n_clients, 6);
+        assert_eq!(
+            shrunk.config.topology,
+            TopologySpec::Full,
+            "an overlay the failure does not need must shrink to full"
+        );
+    }
+
+    #[test]
+    fn shrink_halves_parallel_shards_toward_the_failing_minimum() {
+        let mut cfg = SimConfig::new(16, 128);
+        cfg.exec = ExecMode::Parallel { shards: 16 };
+        // The "bug" is a window race needing real parallelism: it must
+        // not reproduce on the reference, and needs at least two shards.
+        let fails = |c: &SimConfig| {
+            c.n_clients >= 4
+                && matches!(c.exec, ExecMode::Parallel { shards } if shards >= 2)
+        };
+        let shrunk = shrink_sim_config(&cfg, fails);
+        assert!(fails(&shrunk.config), "shrinking must preserve the failure");
+        assert_eq!(shrunk.config.n_clients, 4, "client bisection still runs first");
+        assert_eq!(
+            shrunk.config.exec,
+            ExecMode::Parallel { shards: 2 },
+            "shards must halve 16 -> 8 -> 4 -> 2 and stop before 1"
+        );
+    }
+
+    #[test]
+    fn shrink_collapses_irrelevant_executor_to_the_reference() {
+        let mut cfg = SimConfig::new(16, 128);
+        cfg.exec = ExecMode::Parallel { shards: 8 };
+        // Failure depends only on the client count: the executor must be
+        // walked all the way back to the zero-thread reference.
+        let shrunk = shrink_sim_config(&cfg, |c| c.n_clients >= 4);
+        assert_eq!(shrunk.config.n_clients, 4);
+        assert_eq!(
+            shrunk.config.exec,
+            ExecMode::Events,
+            "an executor the failure does not need must shrink to events"
+        );
+    }
+}

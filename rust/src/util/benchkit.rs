@@ -4,6 +4,7 @@
 //! table printer the per-figure experiment benches use to emit paper-shaped
 //! rows. Benches are built with `harness = false` and call these directly.
 
+// dfl-lint: allow-file(wall-clock) — measuring wall time is this module's entire job (bench harness); it never runs inside a deployment
 use std::time::{Duration, Instant};
 
 /// Summary statistics over per-iteration wallclock samples.

@@ -1,0 +1,20 @@
+#!/usr/bin/env python3
+"""dfl-lint entrypoint — tier-1's first gate (no cargo, no third-party deps).
+
+    python3 scripts/dfllint.py rust/src            # lint the crate
+    python3 scripts/dfllint.py --list-rules        # what is enforced
+    python3 scripts/dfllint.py rust/src --json     # machine-readable report
+
+See scripts/dfllint/ for the implementation and DESIGN.md §15 for the
+invariant catalog this enforces.
+"""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+
+from dfllint.cli import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

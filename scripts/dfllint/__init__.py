@@ -1,0 +1,17 @@
+"""dfl-lint — toolchain-free determinism & invariant linter for the dfl repo.
+
+A dependency-free Python 3 static analyzer over the Rust sources.  It does
+not parse Rust; it *lexes the surface* (strings, chars, raw strings,
+comments, attributes) so that rules only ever fire on real code, then runs
+a small catalog of deny-by-default rules transcribing the DESIGN.md
+invariants (wall-clock bans, seeded RNG, iteration-order hygiene,
+panic-free hot paths, feature-gate consistency, wire-tag uniqueness,
+CLI/doc parity, module layering).
+
+Entry point: ``scripts/dfllint.py`` (or ``python3 -m dfllint`` with
+``scripts/`` on the path).  See ``dfllint.cli`` for flags and exit codes,
+``dfllint.rules`` for the catalog, and DESIGN.md §15 for the invariant ↔
+rule mapping and the suppression-pragma syntax.
+"""
+
+__version__ = "1.0.0"

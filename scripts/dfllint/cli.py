@@ -1,0 +1,143 @@
+"""dfl-lint command line.
+
+Usage::
+
+    dfllint.py [PATH ...] [--json] [--list-rules] [--allow RULE[,RULE…]]
+               [--manifest CARGO_TOML] [--readme README_MD] [--quiet]
+
+Exit codes (CI contract):
+
+* ``0`` — no unsuppressed deny findings,
+* ``1`` — at least one deny finding,
+* ``2`` — usage or I/O error.
+
+Output is stable and machine-diffable: one ``path:line rule message``
+per finding, sorted by (path, line, rule, message).  ``--json`` switches
+to a single JSON document for automation.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+from . import __version__
+from .engine import load_project, run
+from .rules import CATALOG, META_RULES
+
+USAGE = (
+    "usage: dfllint.py [PATH ...] [--json] [--list-rules] "
+    "[--allow RULE[,RULE...]] [--manifest PATH] [--readme PATH] [--quiet]"
+)
+
+
+def list_rules() -> str:
+    lines = [f"dfl-lint {__version__} — rule catalog (all deny-by-default)", ""]
+    width = max(len(r.id) for r in CATALOG)
+    for r in CATALOG:
+        lines.append(f"  {r.id:<{width}}  [{r.severity}]  {r.summary}")
+    lines.append("")
+    lines.append("  engine meta-rules (not suppressible):")
+    for rid, summary in META_RULES:
+        lines.append(f"  {rid:<{width}}  [deny]  {summary}")
+    lines.append("")
+    lines.append(
+        "  suppress: `// dfl-lint: allow(<rule>) — <justification>` on or "
+        "above the line;\n  `allow-file(<rule>)` for the whole file.  "
+        "See DESIGN.md §15."
+    )
+    return "\n".join(lines)
+
+
+def main(argv: list[str]) -> int:
+    paths: list[str] = []
+    as_json = False
+    quiet = False
+    manifest: str | None = None
+    readme: str | None = None
+    disabled: set[str] = set()
+
+    it = iter(argv)
+    for arg in it:
+        if arg in ("-h", "--help"):
+            print(USAGE)
+            print()
+            print(list_rules())
+            return 0
+        if arg == "--version":
+            print(f"dfl-lint {__version__}")
+            return 0
+        if arg == "--list-rules":
+            print(list_rules())
+            return 0
+        if arg == "--json":
+            as_json = True
+        elif arg in ("-q", "--quiet"):
+            quiet = True
+        elif arg == "--allow":
+            value = next(it, None)
+            if value is None:
+                print(f"{USAGE}\n--allow requires a rule list", file=sys.stderr)
+                return 2
+            disabled.update(r.strip() for r in value.split(",") if r.strip())
+        elif arg == "--manifest":
+            manifest = next(it, None)
+            if manifest is None:
+                print(f"{USAGE}\n--manifest requires a path", file=sys.stderr)
+                return 2
+        elif arg == "--readme":
+            readme = next(it, None)
+            if readme is None:
+                print(f"{USAGE}\n--readme requires a path", file=sys.stderr)
+                return 2
+        elif arg.startswith("-"):
+            print(f"{USAGE}\nunknown flag {arg}", file=sys.stderr)
+            return 2
+        else:
+            paths.append(arg)
+
+    if not paths:
+        print(f"{USAGE}\nno paths given", file=sys.stderr)
+        return 2
+
+    known = {r.id for r in CATALOG}
+    bogus = disabled - known
+    if bogus:
+        print(f"--allow names unknown rule(s): {', '.join(sorted(bogus))}", file=sys.stderr)
+        return 2
+
+    try:
+        project = load_project(paths, manifest=manifest, readme=readme)
+    except OSError as e:
+        print(f"dfl-lint: {e}", file=sys.stderr)
+        return 2
+
+    findings = run(project, CATALOG, disabled=disabled)
+    denies = [f for f in findings if f.severity == "deny"]
+
+    if as_json:
+        print(
+            json.dumps(
+                {
+                    "version": __version__,
+                    "files_scanned": len(project.files),
+                    "rules_disabled": sorted(disabled),
+                    "findings": [f.as_dict() for f in findings],
+                    "deny_count": len(denies),
+                },
+                indent=2,
+            )
+        )
+    else:
+        for note in project.notes:
+            print(f"dfl-lint: note: {note}", file=sys.stderr)
+        for f in findings:
+            print(f.render())
+        if not quiet:
+            status = "clean" if not denies else f"{len(denies)} finding(s)"
+            print(
+                f"dfl-lint: {len(project.files)} file(s), {status}",
+                file=sys.stderr,
+            )
+
+    return 1 if denies else 0

@@ -1,0 +1,309 @@
+"""Rule engine: file discovery, pragma suppression, report assembly.
+
+The engine walks the target paths, lexes every ``.rs`` file once
+(:mod:`dfllint.lexer`), hands the lexed files plus project context
+(Cargo manifest, README) to each enabled rule, then applies the
+suppression pragmas and the pragma-hygiene meta-rules.
+
+Pragma syntax (DESIGN.md §15)::
+
+    // dfl-lint: allow(rule-a, rule-b) — justification text
+    // dfl-lint: allow-file(rule-a) — justification text
+
+``allow(...)`` suppresses matching findings on its own line, or — when
+the comment stands alone on a line — on the next non-blank line.
+``allow-file(...)`` suppresses the rule for the whole file.  A pragma
+**must** carry a justification (any non-empty text after the closing
+paren, conventionally set off with an em-dash) and **must** name known
+rules, else it is itself a deny finding (``bad-pragma``).  A pragma that
+no longer suppresses anything has *expired* and is reported
+(``unused-pragma``) so stale exemptions cannot outlive their reason.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+from dataclasses import dataclass, field
+
+from .lexer import Lexed, lex
+
+_PRAGMA = re.compile(r"dfl-lint\s*:\s*(allow(?:-file)?)\s*\(([^)]*)\)(.*)")
+
+# Meta-rules owned by the engine itself (not suppressible, not listable
+# as catalog rules but documented alongside them).
+BAD_PRAGMA = "bad-pragma"
+UNUSED_PRAGMA = "unused-pragma"
+
+
+@dataclass(frozen=True, order=True)
+class Finding:
+    path: str
+    line: int
+    rule: str
+    message: str
+    severity: str = "deny"
+
+    def render(self) -> str:
+        sev = "" if self.severity == "deny" else f" [{self.severity}]"
+        return f"{self.path}:{self.line} {self.rule}{sev} {self.message}"
+
+    def as_dict(self) -> dict:
+        return {
+            "path": self.path,
+            "line": self.line,
+            "rule": self.rule,
+            "severity": self.severity,
+            "message": self.message,
+        }
+
+
+@dataclass
+class Pragma:
+    path: str
+    line: int
+    rules: tuple[str, ...]
+    file_wide: bool
+    justification: str
+    target_line: int  # line the pragma covers (== line for trailing form)
+    used: bool = False
+
+
+@dataclass
+class SourceFile:
+    """One lexed file plus its repo-relative module path.
+
+    ``module_rel`` is the path below the crate's ``src/`` directory
+    (``net/tcp.rs``); rules scope themselves with it.  Files outside any
+    ``src/`` directory fall back to the path relative to the scan root.
+    """
+
+    lexed: Lexed
+    rel: str  # path as reported in findings
+    module_rel: str
+    pragmas: list[Pragma] = field(default_factory=list)
+
+    @property
+    def top_module(self) -> str | None:
+        """First directory under src/ (``net``), None for src-root files."""
+        parts = self.module_rel.split("/")
+        return parts[0] if len(parts) > 1 else None
+
+
+@dataclass
+class Project:
+    """Everything rules may look at beyond the file in hand."""
+
+    files: list[SourceFile]
+    manifest_path: str | None = None
+    manifest_features: list[str] = field(default_factory=list)
+    readme_path: str | None = None
+    readme_text: str = ""
+    notes: list[str] = field(default_factory=list)  # stderr-bound context notes
+
+
+def _module_rel(abspath: str, root: str) -> str:
+    rel = os.path.relpath(abspath, root).replace(os.sep, "/")
+    parts = rel.split("/")
+    if "src" in parts:
+        idx = len(parts) - 1 - parts[::-1].index("src")  # last 'src' wins
+        below = parts[idx + 1 :]
+        if below:
+            return "/".join(below)
+    return rel
+
+
+def discover(paths: list[str]) -> list[tuple[str, str]]:
+    """Expand targets into (abspath, display-path) pairs for ``.rs`` files."""
+    out: list[tuple[str, str]] = []
+    for target in paths:
+        if os.path.isfile(target):
+            out.append((os.path.abspath(target), target))
+            continue
+        for dirpath, dirnames, filenames in os.walk(target):
+            dirnames.sort()
+            for name in sorted(filenames):
+                if name.endswith(".rs"):
+                    full = os.path.join(dirpath, name)
+                    out.append((os.path.abspath(full), os.path.normpath(full)))
+    seen: set[str] = set()
+    uniq = []
+    for ab, rel in out:
+        if ab not in seen:
+            seen.add(ab)
+            uniq.append((ab, rel))
+    return uniq
+
+
+def _find_upward(start_dir: str, name: str) -> str | None:
+    cur = os.path.abspath(start_dir)
+    while True:
+        cand = os.path.join(cur, name)
+        if os.path.isfile(cand):
+            return cand
+        parent = os.path.dirname(cur)
+        if parent == cur:
+            return None
+        cur = parent
+
+
+def parse_manifest_features(text: str) -> list[str]:
+    """Feature names from a Cargo.toml ``[features]`` table (no TOML dep)."""
+    features: list[str] = []
+    in_features = False
+    for raw in text.splitlines():
+        line = raw.split("#", 1)[0].strip()
+        if not line:
+            continue
+        if line.startswith("["):
+            in_features = line == "[features]"
+            continue
+        if in_features and "=" in line:
+            name = line.split("=", 1)[0].strip().strip('"')
+            if name:
+                features.append(name)
+    return features
+
+
+def load_project(
+    paths: list[str],
+    manifest: str | None = None,
+    readme: str | None = None,
+) -> Project:
+    pairs = discover(paths)
+    scan_root = os.path.abspath(paths[0]) if paths else os.getcwd()
+    if os.path.isfile(scan_root):
+        scan_root = os.path.dirname(scan_root)
+
+    files = []
+    for ab, rel in pairs:
+        with open(ab, encoding="utf-8", errors="replace") as f:
+            src = f.read()
+        lexed = lex(rel, src)
+        sf = SourceFile(lexed=lexed, rel=rel, module_rel=_module_rel(ab, scan_root))
+        sf.pragmas = _parse_pragmas(sf)
+        files.append(sf)
+
+    project = Project(files=files)
+
+    manifest = manifest or _find_upward(scan_root, "Cargo.toml")
+    if manifest and os.path.isfile(manifest):
+        project.manifest_path = manifest
+        with open(manifest, encoding="utf-8") as f:
+            project.manifest_features = parse_manifest_features(f.read())
+    else:
+        project.notes.append(
+            "no Cargo.toml found above the scan root; feature-gate checks skipped"
+        )
+
+    readme = readme or _find_upward(scan_root, "README.md")
+    if readme and os.path.isfile(readme):
+        project.readme_path = readme
+        with open(readme, encoding="utf-8", errors="replace") as f:
+            project.readme_text = f.read()
+    else:
+        project.notes.append(
+            "no README.md found above the scan root; cli-doc-parity checks skipped"
+        )
+    return project
+
+
+def _parse_pragmas(sf: SourceFile) -> list[Pragma]:
+    pragmas = []
+    lx = sf.lexed
+    for ln in range(1, lx.n_lines() + 1):
+        comment = lx.comments[ln - 1]
+        m = _PRAGMA.search(comment)
+        if not m:
+            continue
+        kind, rule_csv, tail = m.groups()
+        rules = tuple(r.strip() for r in rule_csv.split(",") if r.strip())
+        justification = tail.strip().lstrip("—–:- ").strip()
+        standalone = lx.sig[ln - 1].strip() == ""
+        target = ln
+        if standalone and not kind.endswith("file"):
+            for nxt in range(ln + 1, lx.n_lines() + 1):
+                if lx.sig[nxt - 1].strip():
+                    target = nxt
+                    break
+        pragmas.append(
+            Pragma(
+                path=sf.rel,
+                line=ln,
+                rules=rules,
+                file_wide=kind.endswith("file"),
+                justification=justification,
+                target_line=target,
+            )
+        )
+    return pragmas
+
+
+def run(
+    project: Project,
+    rules: list,
+    disabled: set[str] | None = None,
+) -> list[Finding]:
+    """Run ``rules`` over ``project``; returns sorted post-pragma findings."""
+    disabled = disabled or set()
+    active = [r for r in rules if r.id not in disabled]
+    known_ids = {r.id for r in rules}
+
+    raw: list[Finding] = []
+    for rule in active:
+        raw.extend(rule.check(project))
+
+    kept: list[Finding] = []
+    for f in sorted(set(raw)):
+        suppressed = False
+        sf = next((s for s in project.files if s.rel == f.path), None)
+        if sf is not None:
+            for p in sf.pragmas:
+                if f.rule not in p.rules:
+                    continue
+                if p.file_wide or p.target_line == f.line:
+                    p.used = True
+                    suppressed = True
+        if not suppressed:
+            kept.append(f)
+
+    # Pragma hygiene: malformed or expired pragmas are findings themselves,
+    # and deliberately cannot be suppressed by other pragmas.
+    for sf in project.files:
+        for p in sf.pragmas:
+            unknown = [r for r in p.rules if r not in known_ids]
+            if not p.rules:
+                kept.append(
+                    Finding(p.path, p.line, BAD_PRAGMA, "pragma names no rules")
+                )
+            elif unknown:
+                kept.append(
+                    Finding(
+                        p.path,
+                        p.line,
+                        BAD_PRAGMA,
+                        f"pragma names unknown rule(s): {', '.join(unknown)}",
+                    )
+                )
+            elif not p.justification:
+                kept.append(
+                    Finding(
+                        p.path,
+                        p.line,
+                        BAD_PRAGMA,
+                        "pragma carries no justification "
+                        "(write `// dfl-lint: allow(rule) — why`)",
+                    )
+                )
+            elif not p.used and not all(r in disabled for r in p.rules):
+                kept.append(
+                    Finding(
+                        p.path,
+                        p.line,
+                        UNUSED_PRAGMA,
+                        f"pragma suppresses nothing (allow({', '.join(p.rules)})) "
+                        "— the finding it excused is gone; delete it",
+                    )
+                )
+
+    return sorted(set(kept))

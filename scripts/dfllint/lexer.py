@@ -1,0 +1,256 @@
+"""Rust *surface* lexer: classify every byte of a source file.
+
+This is not a Rust parser.  It is the minimal single-pass scanner that
+lets lint rules regex over source text without ever firing inside a
+string literal, a char literal, a comment/doc, or (separately
+classified) an attribute.  It understands:
+
+* line comments (``//``, ``///``, ``//!``) and **nested** block comments
+  (``/* /* */ */``),
+* string literals with escapes (``"a\\"b"``), byte strings (``b"..."``),
+* raw strings with any guard arity (``r"..."``, ``r#"..."#``,
+  ``br##"..."##``) — no escapes, closed only by ``"`` + matching ``#``s,
+* char literals vs. lifetimes/labels (``'a'`` and ``'\\u{1F600}'`` are
+  literals; ``'static`` and ``'outer:`` are code),
+* attributes ``#[...]`` / ``#![...]`` with bracket matching that is
+  itself string-aware (a ``]`` inside ``#[doc = "]"]`` does not close
+  the attribute).
+
+Output is a :class:`Lexed` carrying parallel per-line *masks* (the line
+with all bytes outside the wanted classes replaced by spaces, so column
+numbers survive), the per-line comment text (for pragma parsing), and
+the set of lines under ``#[cfg(test)]`` items.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+# Byte classes.
+CODE = 0  # executable surface: idents, punctuation, keywords
+STR = 1  # string/char literal in code position (delimiters included)
+COM = 2  # comment or doc text (delimiters included)
+ATTR = 3  # attribute surface: `#[cfg(test)]` minus its string literals
+ASTR = 4  # string literal inside an attribute
+
+_CHAR_LIT = re.compile(
+    r"'(?:\\(?:x[0-9a-fA-F]{2}|u\{[0-9a-fA-F_]{1,6}\}|.)|[^\\'\n])'"
+)
+_RAW_START = re.compile(r'(?:b?r)(#*)"')
+_CFG_TEST = re.compile(r"\bcfg\s*\(\s*test\s*\)")
+
+
+@dataclass
+class Lexed:
+    """A classified source file (all line numbers are 1-based)."""
+
+    path: str
+    lines: list[str]  # original text, split on newlines
+    code: list[str]  # CODE bytes only, everything else blanked
+    sig: list[str]  # everything except comments (CODE|STR|ATTR|ASTR)
+    attrs: list[str]  # attribute bytes only (ATTR|ASTR)
+    comments: list[str]  # comment bytes only (COM, delimiters stripped of //)
+    test_lines: set[int] = field(default_factory=set)
+
+    def n_lines(self) -> int:
+        return len(self.lines)
+
+    def in_test(self, line: int) -> bool:
+        return line in self.test_lines
+
+    def code_text(self) -> str:
+        """The CODE mask joined back into one string (for multiline regexes)."""
+        return "\n".join(self.code)
+
+
+def _mask(lines: list[str], kinds: list[list[int]], keep: set[int]) -> list[str]:
+    out = []
+    for text, kind_row in zip(lines, kinds):
+        out.append(
+            "".join(ch if k in keep else " " for ch, k in zip(text, kind_row))
+        )
+    return out
+
+
+def lex(path: str, src: str) -> Lexed:
+    """Classify ``src`` byte-by-byte; never raises on malformed input.
+
+    Unterminated constructs (string/comment running off the end of the
+    file) keep their class to EOF — a lint pass must degrade gracefully
+    on code the compiler would reject anyway.
+    """
+    n = len(src)
+    kinds = [CODE] * n
+    i = 0
+    in_attr = False
+    attr_depth = 0
+
+    def classify(start: int, end: int, k: int) -> None:
+        for j in range(start, min(end, n)):
+            kinds[j] = k
+
+    while i < n:
+        c = src[i]
+        nxt = src[i + 1] if i + 1 < n else ""
+
+        # Comments win over everything else (valid in and out of attrs).
+        if c == "/" and nxt == "/":
+            end = src.find("\n", i)
+            end = n if end == -1 else end
+            classify(i, end, COM)
+            i = end
+            continue
+        if c == "/" and nxt == "*":
+            depth, j = 1, i + 2
+            while j < n and depth:
+                if src.startswith("/*", j):
+                    depth += 1
+                    j += 2
+                elif src.startswith("*/", j):
+                    depth -= 1
+                    j += 2
+                else:
+                    j += 1
+            classify(i, j, COM)
+            i = j
+            continue
+
+        # Attribute entry / exit bookkeeping.
+        if not in_attr and c == "#" and (nxt == "[" or src.startswith("![", i + 1)):
+            in_attr = True
+            attr_depth = 0
+            kinds[i] = ATTR
+            i += 1
+            continue
+        if in_attr:
+            if c == "[":
+                attr_depth += 1
+                kinds[i] = ATTR
+                i += 1
+                continue
+            if c == "]":
+                attr_depth -= 1
+                kinds[i] = ATTR
+                i += 1
+                if attr_depth == 0:
+                    in_attr = False
+                continue
+
+        str_kind = ASTR if in_attr else STR
+
+        # Raw / byte-raw strings: r"..", r#".."#, br##"..."## — check the
+        # prefix is not the tail of an identifier (`for"` is not `r"`).
+        if c in ("r", "b"):
+            m = _RAW_START.match(src, i)
+            if m and (i == 0 or not (src[i - 1].isalnum() or src[i - 1] == "_")):
+                guard = '"' + "#" * len(m.group(1))
+                end = src.find(guard, m.end())
+                end = n if end == -1 else end + len(guard)
+                classify(i, end, str_kind)
+                i = end
+                continue
+            if c == "b" and nxt == '"':
+                i0, j = i, i + 2
+                while j < n and src[j] != '"':
+                    j += 2 if src[j] == "\\" else 1
+                classify(i0, j + 1, str_kind)
+                i = j + 1
+                continue
+            if c == "b" and nxt == "'":
+                m2 = _CHAR_LIT.match(src, i + 1)
+                if m2 and (i == 0 or not (src[i - 1].isalnum() or src[i - 1] == "_")):
+                    classify(i, m2.end(), str_kind)
+                    i = m2.end()
+                    continue
+
+        if c == '"':
+            j = i + 1
+            while j < n and src[j] != '"':
+                j += 2 if src[j] == "\\" else 1
+            classify(i, j + 1, str_kind)
+            i = j + 1
+            continue
+
+        if c == "'":
+            m = _CHAR_LIT.match(src, i)
+            if m:
+                classify(i, m.end(), str_kind)
+                i = m.end()
+                continue
+            # Lifetime or loop label: the quote itself is code.
+            kinds[i] = ATTR if in_attr else CODE
+            i += 1
+            continue
+
+        kinds[i] = ATTR if in_attr else CODE
+        i += 1
+
+    # Split the flat classification back into per-line rows.
+    lines = src.split("\n")
+    kind_rows: list[list[int]] = []
+    pos = 0
+    for text in lines:
+        kind_rows.append(kinds[pos : pos + len(text)])
+        pos += len(text) + 1  # the split-away newline
+
+    lexed = Lexed(
+        path=path,
+        lines=lines,
+        code=_mask(lines, kind_rows, {CODE}),
+        sig=_mask(lines, kind_rows, {CODE, STR, ATTR, ASTR}),
+        attrs=_mask(lines, kind_rows, {ATTR, ASTR}),
+        comments=_mask(lines, kind_rows, {COM}),
+    )
+    lexed.test_lines = _find_test_lines(lexed)
+    return lexed
+
+
+def _find_test_lines(lx: Lexed) -> set[int]:
+    """Lines covered by ``#[cfg(test)]``-gated items.
+
+    For each outer ``#[cfg(test)]`` attribute, the gated item runs from
+    the attribute to either the first top-level ``;`` (a gated ``use`` or
+    tuple struct) or the close of the first top-level ``{...}`` (a gated
+    ``mod``/``fn``/``impl``) — brace matching on the CODE mask only, so
+    braces in strings, comments, and attribute args never miscount.
+    An inner ``#![cfg(test)]`` gates the rest of the file.
+    """
+    out: set[int] = set()
+    n = lx.n_lines()
+    for ln0 in range(n):
+        attr_text = lx.attrs[ln0]
+        if not _CFG_TEST.search(attr_text):
+            continue
+        # cfg_attr(test, ...) conditions on test but the item itself is
+        # not test-only; cfg(not(test)) is the opposite gate. Skip both.
+        if "cfg_attr" in attr_text or re.search(r"not\s*\(\s*test", attr_text):
+            continue
+        if "#!" in attr_text:  # inner attribute: gates the enclosing scope
+            out.update(range(ln0 + 1, n + 1))
+            continue
+        depth = 0
+        opened = False
+        end_line = n  # unterminated item degrades to end-of-file
+        start_col = lx.attrs[ln0].rindex("]") + 1 if "]" in lx.attrs[ln0] else 0
+        for ln in range(ln0, n):
+            row = lx.code[ln]
+            for col, ch in enumerate(row):
+                if ln == ln0 and col < start_col:
+                    continue
+                if ch == "{":
+                    depth += 1
+                    opened = True
+                elif ch == "}":
+                    depth -= 1
+                    if opened and depth == 0:
+                        end_line = ln + 1
+                        break
+                elif ch == ";" and not opened and depth == 0:
+                    end_line = ln + 1
+                    break
+            else:
+                continue
+            break
+        out.update(range(ln0 + 1, end_line + 1))
+    return out

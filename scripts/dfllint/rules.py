@@ -1,0 +1,386 @@
+"""The dfl-lint rule catalog — DESIGN.md invariants as executable checks.
+
+Every rule is deny-by-default: it fails the build unless the finding is
+fixed or excused with a justified pragma.  Rules receive the whole
+:class:`~dfllint.engine.Project` so cross-file rules (feature gates,
+wire tags, CLI parity, layering) see everything at once, but findings
+are always anchored to one ``path:line``.
+
+Scoping conventions:
+
+* *hot-path* and *module* scopes match on the path below ``src/``
+  (``SourceFile.module_rel``), so the catalog works unchanged on the
+  real tree and on test fixtures.
+* ``#[cfg(test)]`` regions are exempt from the path-scoped determinism
+  rules (tests deliberately measure wall time and panic on assertion
+  failure); the RNG rule applies even there — a test drawing from the
+  OS entropy pool is a flaky test.
+"""
+
+from __future__ import annotations
+
+import bisect
+import re
+from dataclasses import dataclass
+from typing import Callable, Iterable, Iterator
+
+from .engine import Finding, Project, SourceFile
+
+
+@dataclass(frozen=True)
+class Rule:
+    id: str
+    severity: str
+    summary: str
+    check: Callable[[Project], Iterable[Finding]]
+
+
+# --------------------------------------------------------------------------
+# Shared helpers
+# --------------------------------------------------------------------------
+
+
+def _scan_lines(
+    sf: SourceFile,
+    pattern: re.Pattern,
+    *,
+    mask: str = "code",
+    skip_tests: bool = True,
+) -> Iterator[tuple[int, str]]:
+    """Yield (line, matched-text) for every pattern hit on the given mask."""
+    rows = getattr(sf.lexed, mask)
+    for ln, row in enumerate(rows, start=1):
+        if skip_tests and sf.lexed.in_test(ln):
+            continue
+        for m in pattern.finditer(row):
+            yield ln, m.group(0) if not m.groups() else m.group(1)
+
+
+def _line_of(offset: int, newlines: list[int]) -> int:
+    return bisect.bisect_right(newlines, offset) + 1
+
+
+_CRATE_REF = re.compile(r"(?<![\w$])crate\s*::\s*")
+_IDENT = re.compile(r"[A-Za-z_][A-Za-z0-9_]*")
+
+
+def iter_crate_refs(code_text: str) -> Iterator[tuple[int, str]]:
+    """Yield (line, top_module) for every ``crate::<module>`` reference.
+
+    Handles plain paths (``crate::util::rng``), grouped imports
+    (``use crate::{net::ClientId, util::Rng}`` — yields each top-level
+    segment), and multiline groups; ``$crate`` in macros is skipped.
+    """
+    newlines = [i for i, c in enumerate(code_text) if c == "\n"]
+    for m in _CRATE_REF.finditer(code_text):
+        start = m.end()
+        if start < len(code_text) and code_text[start] == "{":
+            depth, j, seg_start = 0, start, start + 1
+            segments = []
+            while j < len(code_text):
+                c = code_text[j]
+                if c == "{":
+                    depth += 1
+                elif c == "}":
+                    depth -= 1
+                    if depth == 0:
+                        segments.append((seg_start, code_text[seg_start:j]))
+                        break
+                elif c == "," and depth == 1:
+                    segments.append((seg_start, code_text[seg_start:j]))
+                    seg_start = j + 1
+                j += 1
+            for seg_off, seg in segments:
+                im = _IDENT.search(seg)
+                if im:
+                    yield _line_of(seg_off + im.start(), newlines), im.group(0)
+        else:
+            im = _IDENT.match(code_text, start)
+            if im:
+                yield _line_of(m.start(), newlines), im.group(0)
+
+
+# --------------------------------------------------------------------------
+# wall-clock
+# --------------------------------------------------------------------------
+
+_WALL = re.compile(r"\bInstant\s*::\s*now\b|\bSystemTime\b|\bthread\s*::\s*sleep\b")
+_WALL_EXEMPT = "util/time.rs"
+
+
+def check_wall_clock(project: Project) -> Iterator[Finding]:
+    for sf in project.files:
+        if sf.module_rel == _WALL_EXEMPT:
+            continue
+        for ln, text in _scan_lines(sf, _WALL):
+            yield Finding(
+                sf.rel,
+                ln,
+                "wall-clock",
+                f"`{text.strip()}` outside {_WALL_EXEMPT} — wall-clock reads "
+                "break virtual-time determinism; route through `Clock` "
+                "(DESIGN.md §2) or justify with a pragma",
+            )
+
+
+# --------------------------------------------------------------------------
+# unseeded-rng
+# --------------------------------------------------------------------------
+
+_RNG = re.compile(
+    r"\bthread_rng\b|\bfrom_entropy\b|\brand\s*::\s*random\b|\bOsRng\b|\bgetrandom\b"
+)
+
+
+def check_unseeded_rng(project: Project) -> Iterator[Finding]:
+    for sf in project.files:
+        for ln, text in _scan_lines(sf, _RNG, skip_tests=False):
+            yield Finding(
+                sf.rel,
+                ln,
+                "unseeded-rng",
+                f"`{text.strip()}` draws OS entropy — every stream must come "
+                "from the seeded `util::rng` hierarchy (same seed ⇒ "
+                "byte-identical run)",
+            )
+
+
+# --------------------------------------------------------------------------
+# hash-iter-order
+# --------------------------------------------------------------------------
+
+_HASH = re.compile(r"\bHashMap\b|\bHashSet\b")
+_HASH_MODULES = {"coordinator", "sim", "net"}
+
+
+def check_hash_iter_order(project: Project) -> Iterator[Finding]:
+    for sf in project.files:
+        if sf.top_module not in _HASH_MODULES:
+            continue
+        for ln, text in _scan_lines(sf, _HASH):
+            yield Finding(
+                sf.rel,
+                ln,
+                "hash-iter-order",
+                f"`{text.strip()}` in `{sf.top_module}/` — randomized iteration "
+                "order can leak into event order or RNG draws; use "
+                "BTreeMap/BTreeSet, or add a pragma justifying why order "
+                "never escapes",
+            )
+
+
+# --------------------------------------------------------------------------
+# no-panic-hot-path
+# --------------------------------------------------------------------------
+
+_PANIC = re.compile(
+    r"\.\s*unwrap\s*\(|\.\s*expect\s*\(|\bpanic!|\btodo!|\bunimplemented!"
+)
+_HOT_FILES = {
+    "coordinator/machine.rs",
+    "sim/exec.rs",
+    "net/delta.rs",
+    "net/overlay.rs",
+}
+
+
+def check_no_panic_hot_path(project: Project) -> Iterator[Finding]:
+    for sf in project.files:
+        if sf.module_rel not in _HOT_FILES:
+            continue
+        for ln, text in _scan_lines(sf, _PANIC):
+            yield Finding(
+                sf.rel,
+                ln,
+                "no-panic-hot-path",
+                f"`{text.strip()}` in hot path {sf.module_rel} — a panic here "
+                "kills a client/shard mid-protocol; return an error, or "
+                "justify the invariant with a pragma",
+            )
+
+
+# --------------------------------------------------------------------------
+# feature-gate-consistency
+# --------------------------------------------------------------------------
+
+_FEATURE = re.compile(r"\bfeature\s*=\s*\"([^\"]+)\"")
+
+
+def check_feature_gate(project: Project) -> Iterator[Finding]:
+    if project.manifest_path is None:
+        return
+    declared = set(project.manifest_features)
+    for sf in project.files:
+        for ln, name in _scan_lines(sf, _FEATURE, mask="sig", skip_tests=False):
+            if name not in declared:
+                yield Finding(
+                    sf.rel,
+                    ln,
+                    "feature-gate",
+                    f'`feature = "{name}"` names a feature not declared in '
+                    f"{project.manifest_path} [features] "
+                    f"({', '.join(sorted(declared)) or 'none declared'}) — "
+                    "an uncompiled typo here silently disables the gated code",
+                )
+
+
+# --------------------------------------------------------------------------
+# wire-tag-uniqueness
+# --------------------------------------------------------------------------
+
+_WIRE_TAG = re.compile(r"\bconst\s+(TAG_[A-Z0-9_]+)\s*:\s*u8\s*=\s*(\d+)")
+_WIRE_FILE = "net/message.rs"
+
+
+def check_wire_tags(project: Project) -> Iterator[Finding]:
+    for sf in project.files:
+        if sf.module_rel != _WIRE_FILE:
+            continue
+        seen: dict[str, tuple[str, int]] = {}
+        for ln, row in enumerate(sf.lexed.code, start=1):
+            for m in _WIRE_TAG.finditer(row):
+                name, value = m.group(1), m.group(2)
+                if value in seen:
+                    first_name, first_ln = seen[value]
+                    yield Finding(
+                        sf.rel,
+                        ln,
+                        "wire-tag",
+                        f"wire tag {name} = {value} collides with {first_name} "
+                        f"(line {first_ln}) — decode would route one message "
+                        "kind into the other",
+                    )
+                else:
+                    seen[value] = (name, ln)
+
+
+# --------------------------------------------------------------------------
+# cli-doc-parity
+# --------------------------------------------------------------------------
+
+_CLI_REG = re.compile(r"\.\s*(?:opt|switch)\s*\(\s*\"([^\"]+)\"")
+
+
+def check_cli_doc_parity(project: Project) -> Iterator[Finding]:
+    if project.readme_path is None:
+        return
+    for sf in project.files:
+        for ln, name in _scan_lines(sf, _CLI_REG, mask="sig"):
+            if f"--{name}" not in project.readme_text:
+                yield Finding(
+                    sf.rel,
+                    ln,
+                    "cli-doc-parity",
+                    f"flag `--{name}` is registered here but never mentioned "
+                    f"in {project.readme_path} — undocumented knobs rot; add "
+                    "it to the README flag reference",
+                )
+
+
+# --------------------------------------------------------------------------
+# module-layering
+# --------------------------------------------------------------------------
+
+# The architecture DAG (DESIGN.md §15): higher layers may use lower (or
+# same-layer) modules, never the reverse.
+LAYERS = {
+    "util": 0,
+    "net": 1,
+    "metrics": 1,
+    "model": 1,
+    "data": 1,
+    "runtime": 1,
+    "coordinator": 2,
+    "sim": 3,
+    "exp": 4,
+}
+
+
+def check_module_layering(project: Project) -> Iterator[Finding]:
+    for sf in project.files:
+        src_mod = sf.top_module
+        if src_mod not in LAYERS:
+            continue  # src-root files (main.rs, lib.rs) sit above the DAG
+        src_layer = LAYERS[src_mod]
+        # Strip cfg(test) lines from the joined code before extracting
+        # refs: integration-style test modules may reach across layers.
+        rows = [
+            row if not sf.lexed.in_test(ln) else ""
+            for ln, row in enumerate(sf.lexed.code, start=1)
+        ]
+        for ln, target in iter_crate_refs("\n".join(rows)):
+            if target not in LAYERS:
+                continue  # crate-root re-exports (crate::ProtocolConfig, …)
+            if LAYERS[target] > src_layer:
+                yield Finding(
+                    sf.rel,
+                    ln,
+                    "module-layering",
+                    f"upward edge {src_mod} → {target} (layer {src_layer} → "
+                    f"{LAYERS[target]}) violates the DAG util ← {{net, "
+                    "metrics, model, data, runtime} ← coordinator ← sim ← "
+                    "exp — move the shared type down or the dependent code up",
+                )
+
+
+# --------------------------------------------------------------------------
+# Catalog
+# --------------------------------------------------------------------------
+
+CATALOG: list[Rule] = [
+    Rule(
+        "wall-clock",
+        "deny",
+        "Instant::now / SystemTime / thread::sleep outside util/time.rs",
+        check_wall_clock,
+    ),
+    Rule(
+        "unseeded-rng",
+        "deny",
+        "thread_rng / from_entropy / rand::random / OsRng anywhere",
+        check_unseeded_rng,
+    ),
+    Rule(
+        "hash-iter-order",
+        "deny",
+        "HashMap/HashSet in coordinator/, sim/, net/ (iteration-order leak)",
+        check_hash_iter_order,
+    ),
+    Rule(
+        "no-panic-hot-path",
+        "deny",
+        "unwrap/expect/panic!/todo! in machine.rs, sim/exec.rs, net/delta.rs, "
+        "net/overlay.rs (outside #[cfg(test)])",
+        check_no_panic_hot_path,
+    ),
+    Rule(
+        "feature-gate",
+        "deny",
+        'every cfg(feature = "…") names a feature declared in Cargo.toml',
+        check_feature_gate,
+    ),
+    Rule(
+        "wire-tag",
+        "deny",
+        "message wire tags in net/message.rs pairwise distinct",
+        check_wire_tags,
+    ),
+    Rule(
+        "cli-doc-parity",
+        "deny",
+        "every registered --flag appears in README.md",
+        check_cli_doc_parity,
+    ),
+    Rule(
+        "module-layering",
+        "deny",
+        "use-crate graph respects util ← {net,metrics,model,data,runtime} ← "
+        "coordinator ← sim ← exp",
+        check_module_layering,
+    ),
+]
+
+META_RULES: list[tuple[str, str]] = [
+    ("bad-pragma", "pragma is malformed, names unknown rules, or lacks a justification"),
+    ("unused-pragma", "pragma suppresses nothing — it has expired; delete it"),
+]

@@ -1,0 +1,131 @@
+"""Shared fixture plumbing for the dfl-lint test suite.
+
+Builds throwaway crate-shaped trees (``<tmp>/src/...`` + ``Cargo.toml``
++ ``README.md``) and runs the engine over them in-process, so each rule
+test is a few lines: write a positive fixture, assert the finding;
+write the negative twin, assert silence.
+"""
+
+from __future__ import annotations
+
+import os
+import pathlib
+import sys
+
+# Make `import dfllint` work under both pytest (any rootdir) and
+# `python3 -m unittest` from anywhere: the package root is scripts/.
+SCRIPTS_DIR = pathlib.Path(__file__).resolve().parents[2]
+if str(SCRIPTS_DIR) not in sys.path:
+    sys.path.insert(0, str(SCRIPTS_DIR))
+
+from dfllint.engine import load_project, run  # noqa: E402
+from dfllint.rules import CATALOG  # noqa: E402
+
+REPO_ROOT = SCRIPTS_DIR.parent
+
+CARGO_TOML = """\
+[package]
+name = "fixture"
+version = "0.0.0"
+
+[features]
+default = []
+pjrt = []
+alloc-audit = []
+"""
+
+README = """\
+# fixture
+Documented flags: --seed and --clients.
+"""
+
+
+def make_crate(tmp: pathlib.Path, files: dict[str, str], readme: str = README) -> pathlib.Path:
+    """Write ``files`` (paths relative to ``src/``) plus manifest+README."""
+    (tmp / "Cargo.toml").write_text(CARGO_TOML)
+    (tmp / "README.md").write_text(readme)
+    for rel, text in files.items():
+        path = tmp / "src" / rel
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(text)
+    return tmp / "src"
+
+
+def lint(src_dir: pathlib.Path, disabled: set[str] | None = None):
+    """Run the full catalog; returns the post-pragma finding list."""
+    cwd = os.getcwd()
+    try:
+        os.chdir(src_dir.parent)  # findings get stable relative paths
+        project = load_project(["src"])
+        return run(project, CATALOG, disabled=disabled)
+    finally:
+        os.chdir(cwd)
+
+
+def rules_of(findings) -> list[str]:
+    return sorted({f.rule for f in findings})
+
+
+# One minimal positive fixture per catalog rule: each tree, scanned on its
+# own, must make dfl-lint report exactly that rule (engine-level in
+# test_rules.py, exit-code-level in test_selfcheck.py).
+POSITIVE: dict[str, dict[str, str]] = {
+    "wall-clock": {
+        "sim/clock_use.rs": (
+            "pub fn tick() -> std::time::Instant {\n"
+            "    std::time::Instant::now()\n"
+            "}\n"
+        ),
+    },
+    "unseeded-rng": {
+        "model/init.rs": (
+            "pub fn noise() -> f64 {\n"
+            "    let mut rng = rand::thread_rng();\n"
+            "    rng.gen()\n"
+            "}\n"
+        ),
+    },
+    "hash-iter-order": {
+        "net/routing.rs": (
+            "use std::collections::HashMap;\n"
+            "pub struct Routes {\n"
+            "    pub next_hop: HashMap<u32, u32>,\n"
+            "}\n"
+        ),
+    },
+    "no-panic-hot-path": {
+        "coordinator/machine.rs": (
+            "pub fn step(x: Option<u32>) -> u32 {\n"
+            "    x.unwrap()\n"
+            "}\n"
+        ),
+    },
+    "feature-gate": {
+        "runtime/backend.rs": (
+            '#[cfg(feature = "definitely-not-declared")]\n'
+            "pub fn accel() {}\n"
+        ),
+    },
+    "wire-tag": {
+        "net/message.rs": (
+            "pub const TAG_MODEL: u8 = 1;\n"
+            "pub const TAG_FLAG: u8 = 2;\n"
+            "pub const TAG_ACK: u8 = 1;\n"
+        ),
+    },
+    "cli-doc-parity": {
+        "exp/cli.rs": (
+            "pub fn build(args: Args) -> Args {\n"
+            '    args.opt("undocumented-knob", "u", "mystery flag")\n'
+            "}\n"
+        ),
+    },
+    "module-layering": {
+        "util/helper.rs": (
+            "use crate::sim::SimConfig;\n"
+            "pub fn peek(c: &SimConfig) -> usize {\n"
+            "    c.rounds\n"
+            "}\n"
+        ),
+    },
+}

@@ -1,0 +1,155 @@
+"""Lexer fixtures: the tricky Rust surface forms the rules depend on."""
+
+import unittest
+
+from .helpers import SCRIPTS_DIR  # noqa: F401  (sys.path side effect)
+from dfllint.lexer import lex
+
+
+class NestedBlockComments(unittest.TestCase):
+    def test_nested_block_comment_masks_inner_code(self):
+        src = "let a = 1; /* outer /* Instant::now() */ still comment */ let b = 2;\n"
+        lx = lex("f.rs", src)
+        self.assertIn("let a = 1;", lx.code[0])
+        self.assertIn("let b = 2;", lx.code[0])
+        self.assertNotIn("Instant", lx.code[0])
+        self.assertIn("Instant::now()", lx.comments[0])
+
+    def test_multiline_block_comment_spans_lines(self):
+        src = "fn f() {}\n/* line one\n   thread_rng()\n*/\nfn g() {}\n"
+        lx = lex("f.rs", src)
+        self.assertNotIn("thread_rng", lx.code[2])
+        self.assertIn("thread_rng", lx.comments[2])
+        self.assertIn("fn g", lx.code[4])
+
+    def test_unterminated_block_comment_degrades_to_eof(self):
+        lx = lex("f.rs", "fn f() {}\n/* never closed\nSystemTime\n")
+        self.assertNotIn("SystemTime", lx.code[2])
+
+
+class RawStrings(unittest.TestCase):
+    def test_raw_string_contents_are_not_code(self):
+        src = 'let s = r#"Instant::now() and "quotes" inside"#; let t = 1;\n'
+        lx = lex("f.rs", src)
+        self.assertNotIn("Instant", lx.code[0])
+        self.assertIn("let t = 1;", lx.code[0])
+
+    def test_raw_string_guard_arity_must_match(self):
+        # The `"#` inside a `r##"..."##` string does not terminate it.
+        src = 'let s = r##"a "# b"##; let after = 9;\n'
+        lx = lex("f.rs", src)
+        self.assertIn("let after = 9;", lx.code[0])
+        self.assertNotIn('a "# b', lx.code[0])
+
+    def test_byte_and_byte_raw_strings(self):
+        src = 'let a = b"HashMap"; let b = br#"HashSet"#; let k = 0;\n'
+        lx = lex("f.rs", src)
+        self.assertNotIn("HashMap", lx.code[0])
+        self.assertNotIn("HashSet", lx.code[0])
+        self.assertIn("let k = 0;", lx.code[0])
+
+    def test_identifier_ending_in_r_is_not_raw_string(self):
+        src = 'let wider = wider_var; for_ = "x"; let z = 3;\n'
+        lx = lex("f.rs", src)
+        self.assertIn("let wider = wider_var;", lx.code[0])
+        self.assertIn("let z = 3;", lx.code[0])
+
+
+class CharLiteralsVsLifetimes(unittest.TestCase):
+    def test_char_literal_is_masked(self):
+        lx = lex("f.rs", "let c = 'x'; let esc = '\\n'; let u = '\\u{1F600}';\n")
+        self.assertNotIn("'x'", lx.code[0])
+        self.assertNotIn("\\n", lx.code[0])
+        self.assertNotIn("1F600", lx.code[0])
+
+    def test_lifetimes_and_labels_stay_code(self):
+        src = "fn f<'a>(x: &'a str) -> &'a str { 'outer: loop { break 'outer; } }\n"
+        lx = lex("f.rs", src)
+        self.assertIn("'a", lx.code[0])
+        self.assertIn("'outer:", lx.code[0])
+
+    def test_static_lifetime_not_swallowed(self):
+        # A naive quote-pairing lexer would treat 'static ... ' as a char
+        # literal and eat the code between two lifetimes.
+        src = "fn f(x: &'static str, y: &'static str) { x.unwrap_marker(); }\n"
+        lx = lex("f.rs", src)
+        self.assertIn("unwrap_marker", lx.code[0])
+
+
+class StringsAndAttributes(unittest.TestCase):
+    def test_string_with_escaped_quote(self):
+        lx = lex("f.rs", 'let s = "a\\"b Instant::now()"; let ok = 1;\n')
+        self.assertNotIn("Instant", lx.code[0])
+        self.assertIn("let ok = 1;", lx.code[0])
+
+    def test_bracket_inside_attr_string_does_not_close_attr(self):
+        src = '#[doc = "has ] bracket"]\nfn f() {}\n'
+        lx = lex("f.rs", src)
+        self.assertIn("doc", lx.attrs[0])
+        self.assertIn("fn f() {}", lx.code[1])
+        # Attribute surface is excluded from the code mask entirely.
+        self.assertNotIn("doc", lx.code[0])
+
+    def test_attr_string_visible_in_sig_mask_not_code(self):
+        src = '#[cfg(feature = "pjrt")]\nfn f() {}\n'
+        lx = lex("f.rs", src)
+        self.assertIn('feature = "pjrt"', lx.sig[0])
+        self.assertNotIn("feature", lx.code[0])
+
+
+class CfgTestRegions(unittest.TestCase):
+    def test_mod_tests_region(self):
+        src = (
+            "pub fn real() {}\n"
+            "#[cfg(test)]\n"
+            "mod tests {\n"
+            "    #[test]\n"
+            "    fn t() { assert!(true); }\n"
+            "}\n"
+            "pub fn after() {}\n"
+        )
+        lx = lex("f.rs", src)
+        self.assertFalse(lx.in_test(1))
+        self.assertTrue(lx.in_test(2))
+        self.assertTrue(lx.in_test(5))
+        self.assertTrue(lx.in_test(6))
+        self.assertFalse(lx.in_test(7))
+
+    def test_gated_use_statement_ends_at_semicolon(self):
+        src = "#[cfg(test)]\nuse std::collections::HashMap;\nfn live() {}\n"
+        lx = lex("f.rs", src)
+        self.assertTrue(lx.in_test(2))
+        self.assertFalse(lx.in_test(3))
+
+    def test_inner_cfg_test_gates_rest_of_file(self):
+        src = "#![cfg(test)]\nfn helper() {}\nfn more() {}\n"
+        lx = lex("f.rs", src)
+        self.assertTrue(lx.in_test(2))
+        self.assertTrue(lx.in_test(3))
+
+    def test_cfg_attr_and_not_test_are_not_gated(self):
+        src = (
+            "#[cfg_attr(test, derive(Debug))]\n"
+            "pub struct S;\n"
+            "#[cfg(not(test))]\n"
+            "pub fn prod_only() {}\n"
+        )
+        lx = lex("f.rs", src)
+        for ln in range(1, 5):
+            self.assertFalse(lx.in_test(ln), f"line {ln} wrongly gated")
+
+    def test_braces_in_strings_do_not_break_region_tracking(self):
+        src = (
+            "#[cfg(test)]\n"
+            "mod tests {\n"
+            '    const S: &str = "unbalanced } brace {";\n'
+            "}\n"
+            "pub fn live() {}\n"
+        )
+        lx = lex("f.rs", src)
+        self.assertTrue(lx.in_test(4))
+        self.assertFalse(lx.in_test(5))
+
+
+if __name__ == "__main__":
+    unittest.main()

@@ -1,0 +1,165 @@
+"""Pragma suppression, justification hygiene, and expiry behavior."""
+
+import tempfile
+import unittest
+from pathlib import Path
+
+from .helpers import lint, make_crate, rules_of
+
+WALL = "std::time::Instant::now()"
+
+
+class PragmaCase(unittest.TestCase):
+    def setUp(self):
+        self._tmp = tempfile.TemporaryDirectory()
+        self.tmp = Path(self._tmp.name)
+        self.addCleanup(self._tmp.cleanup)
+
+    def lint_files(self, files):
+        return lint(make_crate(self.tmp, files))
+
+
+class Suppression(PragmaCase):
+    def test_trailing_pragma_suppresses_same_line(self):
+        findings = self.lint_files({
+            "sim/mod.rs": (
+                f"pub fn t() {{ let _ = {WALL}; }} "
+                "// dfl-lint: allow(wall-clock) — harness stopwatch\n"
+            ),
+        })
+        self.assertEqual(findings, [], [f.render() for f in findings])
+
+    def test_standalone_pragma_covers_next_code_line(self):
+        findings = self.lint_files({
+            "sim/mod.rs": (
+                "// dfl-lint: allow(wall-clock) — harness stopwatch\n"
+                f"pub fn t() {{ let _ = {WALL}; }}\n"
+            ),
+        })
+        self.assertEqual(findings, [], [f.render() for f in findings])
+
+    def test_pragma_does_not_leak_to_other_lines(self):
+        findings = self.lint_files({
+            "sim/mod.rs": (
+                "// dfl-lint: allow(wall-clock) — covers only the next line\n"
+                f"pub fn a() {{ let _ = {WALL}; }}\n"
+                f"pub fn b() {{ let _ = {WALL}; }}\n"
+            ),
+        })
+        self.assertEqual(rules_of(findings), ["wall-clock"])
+        self.assertEqual([f.line for f in findings], [3])
+
+    def test_allow_file_suppresses_whole_file(self):
+        findings = self.lint_files({
+            "net/tcpish.rs": (
+                "// dfl-lint: allow-file(wall-clock) — real-socket transport\n"
+                f"pub fn a() {{ let _ = {WALL}; }}\n"
+                f"pub fn b() {{ let _ = {WALL}; }}\n"
+            ),
+        })
+        self.assertEqual(findings, [], [f.render() for f in findings])
+
+    def test_pragma_only_suppresses_named_rules(self):
+        findings = self.lint_files({
+            "net/mix.rs": (
+                "use std::collections::HashMap; "
+                f"pub fn t() -> std::time::Instant {{ {WALL} }} "
+                "// dfl-lint: allow(wall-clock) — stopwatch only\n"
+            ),
+        })
+        self.assertEqual(rules_of(findings), ["hash-iter-order"])
+
+    def test_one_pragma_may_name_several_rules(self):
+        findings = self.lint_files({
+            "net/mix.rs": (
+                "use std::collections::HashMap; "
+                f"pub fn t() -> std::time::Instant {{ {WALL} }} "
+                "// dfl-lint: allow(wall-clock, hash-iter-order) — bench shim\n"
+            ),
+        })
+        self.assertEqual(findings, [], [f.render() for f in findings])
+
+
+class Hygiene(PragmaCase):
+    def test_missing_justification_is_bad_pragma(self):
+        findings = self.lint_files({
+            "sim/mod.rs": (
+                f"pub fn t() {{ let _ = {WALL}; }} // dfl-lint: allow(wall-clock)\n"
+            ),
+        })
+        self.assertEqual(rules_of(findings), ["bad-pragma"])
+
+    def test_unknown_rule_is_bad_pragma(self):
+        findings = self.lint_files({
+            "sim/mod.rs": (
+                "pub fn t() {}\n"
+                "// dfl-lint: allow(no-such-rule) — typo\n"
+            ),
+        })
+        self.assertEqual(rules_of(findings), ["bad-pragma"])
+        self.assertIn("no-such-rule", findings[0].message)
+
+    def test_empty_rule_list_is_bad_pragma(self):
+        findings = self.lint_files({
+            "sim/mod.rs": "pub fn t() {}\n// dfl-lint: allow() — nothing\n",
+        })
+        self.assertEqual(rules_of(findings), ["bad-pragma"])
+
+    def test_meta_rules_cannot_be_suppressed(self):
+        # allow(bad-pragma) names a rule outside the catalog, which is
+        # itself a bad pragma — exemptions cannot excuse themselves.
+        findings = self.lint_files({
+            "sim/mod.rs": (
+                "pub fn t() {}\n"
+                "// dfl-lint: allow(bad-pragma) — trying to self-excuse\n"
+            ),
+        })
+        self.assertEqual(rules_of(findings), ["bad-pragma"])
+
+
+class Expiry(PragmaCase):
+    def test_stale_pragma_is_reported_unused(self):
+        # The offending call was fixed but the pragma stayed behind.
+        findings = self.lint_files({
+            "sim/mod.rs": (
+                "// dfl-lint: allow(wall-clock) — excuse for code long gone\n"
+                "pub fn t() {}\n"
+            ),
+        })
+        self.assertEqual(rules_of(findings), ["unused-pragma"])
+
+    def test_stale_allow_file_is_reported_unused(self):
+        findings = self.lint_files({
+            "net/quiet.rs": (
+                "// dfl-lint: allow-file(wall-clock) — excuse for code long gone\n"
+                "pub fn t() {}\n"
+            ),
+        })
+        self.assertEqual(rules_of(findings), ["unused-pragma"])
+
+    def test_used_pragma_is_not_reported(self):
+        findings = self.lint_files({
+            "sim/mod.rs": (
+                "// dfl-lint: allow(wall-clock) — harness stopwatch\n"
+                f"pub fn t() {{ let _ = {WALL}; }}\n"
+            ),
+        })
+        self.assertEqual(findings, [], [f.render() for f in findings])
+
+    def test_pragma_for_disabled_rule_is_not_expired(self):
+        # `--allow wall-clock` turns the rule off globally; pragmas for it
+        # must not suddenly read as stale.
+        findings = lint(
+            make_crate(self.tmp, {
+                "sim/mod.rs": (
+                    "// dfl-lint: allow(wall-clock) — harness stopwatch\n"
+                    f"pub fn t() {{ let _ = {WALL}; }}\n"
+                ),
+            }),
+            disabled={"wall-clock"},
+        )
+        self.assertEqual(findings, [], [f.render() for f in findings])
+
+
+if __name__ == "__main__":
+    unittest.main()

@@ -1,0 +1,165 @@
+"""One positive and one negative fixture per catalog rule."""
+
+import tempfile
+import unittest
+from pathlib import Path
+
+from .helpers import POSITIVE, lint, make_crate, rules_of
+
+
+class RuleFixtureCase(unittest.TestCase):
+    def setUp(self):
+        self._tmp = tempfile.TemporaryDirectory()
+        self.tmp = Path(self._tmp.name)
+        self.addCleanup(self._tmp.cleanup)
+
+    def lint_files(self, files, readme=None):
+        kwargs = {"readme": readme} if readme is not None else {}
+        return lint(make_crate(self.tmp, files, **kwargs))
+
+
+class PositiveFixtures(RuleFixtureCase):
+    """Each POSITIVE tree reports exactly its own rule."""
+
+    def test_every_rule_fires_on_its_positive_fixture(self):
+        for rule, files in POSITIVE.items():
+            with self.subTest(rule=rule):
+                tmp = tempfile.TemporaryDirectory()
+                self.addCleanup(tmp.cleanup)
+                findings = lint(make_crate(Path(tmp.name), files))
+                self.assertEqual(
+                    rules_of(findings), [rule],
+                    f"fixture for {rule} produced {findings}",
+                )
+
+    def test_unseeded_rng_fires_even_inside_cfg_test(self):
+        findings = self.lint_files({
+            "model/tests_mod.rs": (
+                "#[cfg(test)]\n"
+                "mod tests {\n"
+                "    #[test]\n"
+                "    fn flaky() { let _ = rand::thread_rng(); }\n"
+                "}\n"
+            ),
+        })
+        self.assertEqual(rules_of(findings), ["unseeded-rng"])
+
+    def test_module_layering_sees_grouped_multiline_use(self):
+        findings = self.lint_files({
+            "net/overlay2.rs": (
+                "use crate::{\n"
+                "    util::Rng,\n"
+                "    sim::SimConfig,\n"
+                "};\n"
+            ),
+        })
+        self.assertEqual(rules_of(findings), ["module-layering"])
+        # The finding anchors on the sim segment, not the use keyword.
+        self.assertEqual([f.line for f in findings], [3])
+
+
+class NegativeFixtures(RuleFixtureCase):
+    """The negative twins: same shapes, no findings."""
+
+    def test_clean_crate_is_clean(self):
+        findings = self.lint_files({
+            # wall-clock: allowed inside util/time.rs, and in test regions.
+            "util/time.rs": (
+                "pub fn now() -> std::time::Instant { std::time::Instant::now() }\n"
+            ),
+            "sim/mod.rs": (
+                "pub struct SimConfig { pub rounds: usize }\n"
+                "#[cfg(test)]\n"
+                "mod tests {\n"
+                "    #[test]\n"
+                "    fn timed() { let _ = std::time::Instant::now(); }\n"
+                "}\n"
+            ),
+            # unseeded-rng: seeded hierarchy is fine.
+            "model/init.rs": (
+                "pub fn noise(rng: &mut crate::util::Rng) -> f64 { rng.next_f64() }\n"
+            ),
+            # hash-iter-order: BTree in net/, Hash outside the scoped modules.
+            "net/routing.rs": (
+                "use std::collections::BTreeMap;\n"
+                "pub struct Routes { pub next_hop: BTreeMap<u32, u32> }\n"
+            ),
+            "util/cache.rs": (
+                "use std::collections::HashMap;\n"
+                "pub struct Cache { pub m: HashMap<u32, u32> }\n"
+            ),
+            # no-panic: unwrap is fine outside the hot files and in tests.
+            "coordinator/machine.rs": (
+                "pub fn step(x: Option<u32>) -> Option<u32> { x }\n"
+                "#[cfg(test)]\n"
+                "mod tests {\n"
+                "    #[test]\n"
+                "    fn t() { super::step(Some(1)).unwrap(); }\n"
+                "}\n"
+            ),
+            "coordinator/termination.rs": (
+                "pub fn get(x: Option<u32>) -> u32 { x.unwrap() }\n"
+            ),
+            # feature-gate: declared feature names pass.
+            "runtime/backend.rs": (
+                '#[cfg(feature = "pjrt")]\npub fn accel() {}\n'
+                '#[cfg(feature = "alloc-audit")]\npub fn audit() {}\n'
+            ),
+            # wire-tag: distinct values pass.
+            "net/message.rs": (
+                "pub const TAG_MODEL: u8 = 1;\n"
+                "pub const TAG_FLAG: u8 = 2;\n"
+            ),
+            # cli-doc-parity: --seed and --clients are in the fixture README.
+            "exp/cli.rs": (
+                "pub fn build(args: Args) -> Args {\n"
+                '    args.opt("seed", "s", "rng seed")\n'
+                '        .opt("clients", "c", "client count")\n'
+                "}\n"
+            ),
+            # module-layering: downward edges only.
+            "sim/exec.rs": (
+                "use crate::util::Rng;\n"
+                "use crate::coordinator::Machine;\n"
+                "pub fn run(_r: Rng, _m: Machine) {}\n"
+            ),
+        })
+        self.assertEqual(findings, [], [f.render() for f in findings])
+
+    def test_matches_inside_strings_and_comments_do_not_fire(self):
+        findings = self.lint_files({
+            "net/doc.rs": (
+                "// A comment naming HashMap and Instant::now() is fine.\n"
+                'pub const NOTE: &str = "HashMap thread_rng Instant::now()";\n'
+                'pub const RAW: &str = r#"SystemTime .unwrap()"#;\n'
+            ),
+        })
+        self.assertEqual(findings, [], [f.render() for f in findings])
+
+    def test_src_root_files_are_exempt_from_layering(self):
+        findings = self.lint_files({
+            "main.rs": (
+                "use crate::exp::Runner;\n"
+                "use crate::util::Rng;\n"
+                "fn main() {}\n"
+            ),
+        })
+        self.assertEqual(findings, [], [f.render() for f in findings])
+
+    def test_feature_gate_skipped_without_manifest(self):
+        # A bare tree with no Cargo.toml anywhere above it: the rule must
+        # skip rather than flag every gate.  TemporaryDirectory lives under
+        # /tmp, which has no Cargo.toml on the upward walk.
+        src = self.tmp / "src"
+        (src / "runtime").mkdir(parents=True)
+        (src / "runtime" / "backend.rs").write_text(
+            '#[cfg(feature = "whatever")]\npub fn f() {}\n'
+        )
+        findings = lint(src)
+        self.assertEqual(
+            [f for f in findings if f.rule == "feature-gate"], [],
+        )
+
+
+if __name__ == "__main__":
+    unittest.main()

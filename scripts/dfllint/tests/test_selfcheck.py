@@ -1,0 +1,112 @@
+"""CLI exit-code contract and the repo-wide self-check.
+
+These tests shell out to ``scripts/dfllint.py`` exactly the way
+``scripts/tier1.sh`` does, pinning the acceptance criteria: exit 0 on
+the real tree (zero unsuppressed findings), exit 1 on every rule's
+positive fixture, exit 2 on usage errors, machine-readable ``--json``.
+"""
+
+import json
+import subprocess
+import sys
+import tempfile
+import unittest
+from pathlib import Path
+
+from .helpers import POSITIVE, REPO_ROOT, make_crate
+
+DFLLINT = REPO_ROOT / "scripts" / "dfllint.py"
+
+
+def run_cli(args, cwd):
+    return subprocess.run(
+        [sys.executable, str(DFLLINT), *args],
+        cwd=cwd,
+        capture_output=True,
+        text=True,
+        timeout=120,
+    )
+
+
+class RepoSelfCheck(unittest.TestCase):
+    """The tree this linter ships in must itself be clean."""
+
+    def test_rust_src_is_clean(self):
+        proc = run_cli(["rust/src"], cwd=REPO_ROOT)
+        self.assertEqual(
+            proc.returncode, 0,
+            f"dfl-lint found unsuppressed findings:\n{proc.stdout}{proc.stderr}",
+        )
+
+    def test_rust_src_json_reports_zero_denies(self):
+        proc = run_cli(["--json", "rust/src"], cwd=REPO_ROOT)
+        self.assertEqual(proc.returncode, 0, proc.stdout + proc.stderr)
+        doc = json.loads(proc.stdout)
+        self.assertEqual(doc["deny_count"], 0)
+        self.assertEqual(doc["findings"], [])
+        self.assertGreater(doc["files_scanned"], 0)
+
+
+class ExitCodes(unittest.TestCase):
+    def test_each_positive_fixture_exits_nonzero(self):
+        for rule, files in POSITIVE.items():
+            with self.subTest(rule=rule):
+                with tempfile.TemporaryDirectory() as tmp:
+                    make_crate(Path(tmp), files)
+                    proc = run_cli(["src"], cwd=tmp)
+                    self.assertEqual(
+                        proc.returncode, 1,
+                        f"{rule}: expected exit 1, got {proc.returncode}\n"
+                        f"{proc.stdout}{proc.stderr}",
+                    )
+                    self.assertIn(rule, proc.stdout)
+
+    def test_usage_error_exits_2(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            proc = run_cli(["--no-such-flag"], cwd=tmp)
+            self.assertEqual(proc.returncode, 2, proc.stdout + proc.stderr)
+
+    def test_allow_downgrades_exit_to_zero(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            make_crate(Path(tmp), POSITIVE["wall-clock"])
+            proc = run_cli(["--allow", "wall-clock", "src"], cwd=tmp)
+            self.assertEqual(proc.returncode, 0, proc.stdout + proc.stderr)
+
+
+class OutputModes(unittest.TestCase):
+    def test_list_rules_names_whole_catalog(self):
+        proc = run_cli(["--list-rules"], cwd=REPO_ROOT)
+        self.assertEqual(proc.returncode, 0, proc.stdout + proc.stderr)
+        for rule in list(POSITIVE) + ["bad-pragma", "unused-pragma"]:
+            self.assertIn(rule, proc.stdout)
+        self.assertIn("allow-file", proc.stdout)  # pragma syntax footer
+
+    def test_json_findings_are_structured(self):
+        with tempfile.TemporaryDirectory() as tmp:
+            make_crate(Path(tmp), POSITIVE["wire-tag"])
+            proc = run_cli(["--json", "src"], cwd=tmp)
+            self.assertEqual(proc.returncode, 1)
+            doc = json.loads(proc.stdout)
+            self.assertEqual(doc["deny_count"], len(doc["findings"]))
+            f = doc["findings"][0]
+            for key in ("path", "line", "rule", "severity", "message"):
+                self.assertIn(key, f)
+            self.assertEqual(f["rule"], "wire-tag")
+
+    def test_findings_output_is_sorted_and_stable(self):
+        files = {}
+        files.update(POSITIVE["wire-tag"])
+        files.update(POSITIVE["hash-iter-order"])
+        with tempfile.TemporaryDirectory() as tmp:
+            make_crate(Path(tmp), files)
+            first = run_cli(["src"], cwd=tmp)
+            second = run_cli(["src"], cwd=tmp)
+            self.assertEqual(first.stdout, second.stdout)
+            lines = [
+                l for l in first.stdout.splitlines() if l and not l.startswith("dfl-lint")
+            ]
+            self.assertEqual(lines, sorted(lines))
+
+
+if __name__ == "__main__":
+    unittest.main()

@@ -2,9 +2,9 @@
 # Tier-1 verify sequence — the whole CI story in one entrypoint.
 # Referenced by README.md ("Build, test, docs") and ROADMAP.md.
 #
-#   scripts/tier1.sh            # build + tests + doc check + bench build
-#                               # + executor conformance matrix
-#   scripts/tier1.sh --fast     # build + unit tests only (inner-loop mode)
+#   scripts/tier1.sh            # dfl-lint + build + tests + doc check
+#                               # + bench build + executor conformance matrix
+#   scripts/tier1.sh --fast     # dfl-lint + build + unit tests (inner loop)
 #   scripts/tier1.sh --scale    # additionally run the opt-in scale tests
 #                               # (200/1000/10000 clients; minutes)
 set -euo pipefail
@@ -19,6 +19,17 @@ for arg in "$@"; do
     *) echo "usage: scripts/tier1.sh [--fast|--scale]" >&2; exit 2 ;;
   esac
 done
+
+# Static-analysis gate (DESIGN.md §15): dfl-lint runs before any cargo
+# leg because it needs no toolchain — on images without rustc it is the
+# one tier-1 gate that can still fail the build.  Deny-by-default: any
+# unsuppressed finding exits 1 and stops the sequence here.
+if command -v python3 >/dev/null 2>&1; then
+  echo "==> dfl-lint rust/src     (static determinism & invariant gate, DESIGN.md §15)"
+  python3 scripts/dfllint.py rust/src
+else
+  echo "==> dfl-lint: python3 not found, SKIPPING the static invariant gate" >&2
+fi
 
 echo "==> cargo build --release"
 cargo build --release
